@@ -1,0 +1,93 @@
+//! End-to-end driver (Table I): the full three-layer stack on a real
+//! workload.
+//!
+//! Loads the AOT-compiled quantized MobileNetV1 inference graphs (L2 JAX +
+//! L1 Pallas kernels, lowered to HLO text by `make artifacts`), executes
+//! them on the PJRT CPU client from rust (L3), measures the accuracy of
+//! each Table-I case on the held-out synthetic test set, and combines it
+//! with the simulated latency bound — the complete
+//! accuracy/latency/resource trade-off the paper's design loop screens.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_accuracy`
+
+use aladin::coordinator::Pipeline;
+use aladin::dse::{best_feasible, pareto_front, Candidate};
+use aladin::models;
+use aladin::platform::presets;
+use aladin::runtime::{evaluate, Engine, Manifest};
+
+fn main() -> aladin::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&artifacts)?;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform_name());
+    let testset = manifest.load_testset()?;
+    println!(
+        "test set: {} examples of {:?}",
+        testset.header.n, testset.header.image_shape
+    );
+
+    let platform = presets::gap8();
+    let mut candidates = Vec::new();
+
+    println!(
+        "\n{:<8} {:>9} {:>12} {:>12} {:>11} {:>10}",
+        "case", "accuracy", "imgs/sec", "cycles", "latency ms", "paper acc"
+    );
+    for m in &manifest.models {
+        // accuracy: real execution of the quantized graph via PJRT
+        let compiled = engine.load_hlo_text(manifest.dir.join(&m.hlo))?;
+        let report = evaluate(&m.name, &compiled, &m.input_shape, &testset)?;
+
+        // latency: the ALADIN analysis pipeline on the same configuration
+        let case = match m.name.as_str() {
+            "case1" => models::case1(),
+            "case2" => models::case2(),
+            "case3" => models::case3(),
+            other => {
+                println!("{other:<8} (no analysis model)");
+                continue;
+            }
+        };
+        let (g, cfg) = case.build();
+        let analysis = Pipeline::new(platform.clone(), cfg).analyze(g)?;
+        let paper = models::PAPER_ACCURACY
+            .iter()
+            .find(|(n, _)| *n == m.name)
+            .map(|(_, a)| *a)
+            .unwrap_or(f64::NAN);
+
+        println!(
+            "{:<8} {:>9.4} {:>12.0} {:>12} {:>11.3} {:>10.2}",
+            m.name,
+            report.accuracy,
+            report.throughput,
+            analysis.latency.total_cycles,
+            analysis.latency.latency_s * 1e3,
+            paper
+        );
+
+        candidates.push(Candidate {
+            name: m.name.clone(),
+            accuracy: report.accuracy,
+            latency_cycles: analysis.latency.total_cycles,
+            peak_mem_bytes: analysis.peak_l2,
+        });
+    }
+
+    // the design loop: Pareto screening + best-feasible-under-deadline
+    let front = pareto_front(&candidates);
+    println!(
+        "\nPareto-optimal cases: {:?}",
+        front.iter().map(|c| c.name.as_str()).collect::<Vec<_>>()
+    );
+    let deadline_cycles = (0.120 * platform.clock_hz) as u64; // 120 ms budget
+    match best_feasible(&candidates, deadline_cycles) {
+        Some(c) => println!(
+            "best feasible under a 120 ms deadline: {} (accuracy {:.4})",
+            c.name, c.accuracy
+        ),
+        None => println!("no case satisfies the 120 ms deadline"),
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: run the full ALADIN workflow (paper Fig. 3) on a small QNN.
+//!
+//! Builds a quantized LeNet-style CNN, writes its QONNX-dialect file and an
+//! implementation configuration (Listing-1 style), then analyzes it on the
+//! GAP8 preset and screens a 5 ms deadline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use aladin::analysis::Feasibility;
+use aladin::coordinator::Pipeline;
+use aladin::graph::qonnx;
+use aladin::impl_aware::{ImplConfig, NodeImplSpec};
+use aladin::models;
+use aladin::platform::presets;
+
+fn main() -> aladin::Result<()> {
+    // 1. a canonical QONNX model (normally produced by Brevitas/QKeras +
+    //    export; here built programmatically)
+    let (graph, _) = models::lenet(4, (3, 32, 32), 10);
+    println!("model: {} ({} nodes)", graph.name, graph.nodes.len());
+
+    // round-trip through the on-disk QONNX dialect to show the file flow
+    let dir = std::env::temp_dir().join("aladin-quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("lenet.qonnx.json");
+    qonnx::export(&graph).to_file(&model_path)?;
+    println!("wrote {}", model_path.display());
+
+    // 2. an implementation configuration (Listing 1): LUT the second conv,
+    //    threshold-tree the first requant
+    let mut cfg = ImplConfig::default();
+    cfg.set_node(
+        "Conv_1",
+        NodeImplSpec {
+            implementation: Some("lut".into()),
+            ..Default::default()
+        },
+    );
+    cfg.set_node(
+        "Quant_0",
+        NodeImplSpec {
+            implementation: Some("thresholds".into()),
+            ..Default::default()
+        },
+    );
+
+    // 3. analyze on GAP8
+    let pipe = Pipeline::new(presets::gap8(), cfg);
+    let analysis = pipe.analyze_file(&model_path)?;
+
+    println!("\nper-layer bottlenecks (top 3):");
+    for (name, cycles, share) in analysis.latency.bottlenecks(3) {
+        println!("  {name:<12} {cycles:>10} cycles  ({:.1}%)", share * 100.0);
+    }
+    println!(
+        "\nlatency bound: {} cycles = {:.3} ms; peak L1 {:.1} kB, peak L2 {:.1} kB",
+        analysis.latency.total_cycles,
+        analysis.latency.latency_s * 1e3,
+        analysis.peak_l1 as f64 / 1024.0,
+        analysis.peak_l2 as f64 / 1024.0,
+    );
+
+    // 4. deadline screening (paper §V step 4)
+    match analysis.feasibility(0.005) {
+        Feasibility::Feasible { slack_s } => {
+            println!("5 ms deadline: FEASIBLE (slack {:.3} ms)", slack_s * 1e3)
+        }
+        Feasibility::DeadlineMiss { overrun_s } => {
+            println!("5 ms deadline: MISS (overrun {:.3} ms)", overrun_s * 1e3)
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT export: train (cached) -> PTQ-quantize per Table-I case -> lower the
+integer inference graph (with its Pallas kernels, interpret=True) to HLO
+*text* -> write artifacts/ for the rust runtime.
+
+HLO text, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--batch 64]
+       [--steps 400] [--cases case1,case2,case3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # int64 dyadic requant path
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big
+    # weight tensors as `{...}`, which the text parser on the rust side
+    # would reject/zero — the artifact must be self-contained.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_case(q: dict, batch: int, out_path: Path) -> dict:
+    """Lower one quantized model to HLO text; returns its manifest entry."""
+    cfg = q["cfg"]
+
+    def fn(x):
+        return (model.quantized_forward(q, x),)
+
+    spec = jax.ShapeDtypeStruct((batch,) + data.IMAGE_SHAPE, jnp.float32)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    out_path.write_text(text)
+    print(f"  {cfg.name}: wrote {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s",
+          flush=True)
+    return {
+        "name": cfg.name,
+        "hlo": out_path.name,
+        "input_shape": [batch, *data.IMAGE_SHAPE],
+        "output_shape": [batch, data.NUM_CLASSES],
+    }
+
+
+def export_testset(xte: np.ndarray, yte: np.ndarray, out_dir: Path) -> None:
+    bin_path = out_dir / "testset.bin"
+    bin_path.write_bytes(np.ascontiguousarray(xte, dtype="<f4").tobytes())
+    header = {
+        "n": int(xte.shape[0]),
+        "image_shape": list(xte.shape[1:]),
+        "images_bin": "testset.bin",
+        "labels": [int(v) for v in yte],
+    }
+    (out_dir / "testset.json").write_text(json.dumps(header))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=str(Path(__file__).parents[2] / "artifacts"))
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--n-test", type=int, default=512)
+    ap.add_argument("--cases", default="case1,case2,case3")
+    ap.add_argument("--sanity", action="store_true",
+                    help="also report python-side quantized accuracy")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    params, float_acc = train.load_or_train(width=args.width, steps=args.steps)
+
+    _, _, xte, yte = data.train_test()
+    xte, yte = xte[: args.n_test], yte[: args.n_test]
+    xtr, _, _, _ = data.train_test(n_train=256, n_test=1)
+    stats = model.calibrate(params, jnp.asarray(xtr[:256]), width=args.width)
+
+    export_testset(xte, yte, out_dir)
+
+    entries = []
+    for name in args.cases.split(","):
+        cfg = model.ALL_CASES[name.strip()](width=args.width)
+        q = model.quantize_model(params, stats, cfg)
+        entries.append(export_case(q, args.batch, out_dir / f"{cfg.name}.hlo.txt"))
+        if args.sanity:
+            logits = model.quantized_forward(q, jnp.asarray(xte[:128]))
+            acc = float(jnp.mean(jnp.argmax(logits, 1) == jnp.asarray(yte[:128])))
+            print(f"  {cfg.name}: python-side quantized acc (128 ex) = {acc:.4f}",
+                  flush=True)
+
+    manifest = {"models": entries, "testset": "testset.json"}
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"manifest with {len(entries)} models -> {out_dir / 'manifest.json'}")
+    print(f"(float reference accuracy: {float_acc:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Synthetic CIFAR-10-shaped dataset (DESIGN.md substitution: real CIFAR-10
+is not available offline; a 10-class separable-but-noisy image distribution
+exercises the identical quantized inference code path).
+
+Each class has a smooth random "prototype" 32x32x3 image (low-frequency
+random field); samples are prototype + structured noise. Difficulty is
+tuned via the noise level so that quantization-induced accuracy loss is
+visible (int8 > int4 > int2 ordering, as in Table I).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMAGE_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+
+def _smooth_field(rng: np.random.Generator, shape, cutoff: int = 6) -> np.ndarray:
+    """Low-frequency random field via truncated 2D Fourier synthesis."""
+    h, w, c = shape
+    field = np.zeros(shape, dtype=np.float64)
+    for ch in range(c):
+        coeff = np.zeros((h, w), dtype=np.complex128)
+        coeff[:cutoff, :cutoff] = rng.normal(size=(cutoff, cutoff)) + 1j * rng.normal(
+            size=(cutoff, cutoff)
+        )
+        img = np.fft.ifft2(coeff).real
+        img = (img - img.mean()) / (img.std() + 1e-9)
+        field[..., ch] = img
+    return field.astype(np.float32)
+
+
+def class_prototypes(seed: int = 1234) -> np.ndarray:
+    """[NUM_CLASSES, 32, 32, 3] smooth prototypes, deterministic."""
+    rng = np.random.default_rng(seed)
+    return np.stack([_smooth_field(rng, IMAGE_SHAPE) for _ in range(NUM_CLASSES)])
+
+
+def make_split(
+    n: int, seed: int, noise: float = 3.0, proto_seed: int = 1234
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` examples: returns (images [n,32,32,3] f32 in ~[-3,3],
+    labels [n] int32). Noise mixes white noise and a smooth distractor
+    field so the task needs more than average color."""
+    protos = class_prototypes(proto_seed)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    images = np.empty((n,) + IMAGE_SHAPE, dtype=np.float32)
+    for i, y in enumerate(labels):
+        white = rng.normal(scale=noise, size=IMAGE_SHAPE).astype(np.float32)
+        smooth = _smooth_field(rng, IMAGE_SHAPE) * (noise * 0.5)
+        images[i] = protos[y] + white + smooth
+    return images, labels
+
+
+def train_test(
+    n_train: int = 4096, n_test: int = 1024, noise: float = 3.0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """The canonical train/test split used by train.py and aot.py."""
+    xtr, ytr = make_split(n_train, seed=7, noise=noise)
+    xte, yte = make_split(n_test, seed=1007, noise=noise)
+    return xtr, ytr, xte, yte

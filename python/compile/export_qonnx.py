@@ -1,0 +1,146 @@
+"""Export the JAX MobileNetV1 case configurations as QONNX-dialect JSON —
+the same dialect `rust/src/graph/qonnx.rs` imports. Closes the toolchain
+loop: the exact network that is trained/quantized/AOT-compiled in python
+can be re-analyzed by the rust pipeline from a file.
+
+Usage: python -m compile.export_qonnx [--out-dir ../artifacts] [--width 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from . import model
+
+
+def _tensor(name, dims, bits, signed=True, initializer=False):
+    return {
+        "name": name,
+        "dims": list(dims),
+        "bits": int(bits),
+        "signed": signed,
+        "initializer": initializer,
+    }
+
+
+def export_case(cfg: model.CaseConfig) -> dict:
+    """Build the QONNX-dialect document for one Table-I case."""
+    pilot_c, blocks = model.channel_plan(cfg.width_mult)
+    tensors = [_tensor("x0", (3, 32, 32), 8)]
+    nodes = []
+    edge = "x0"
+    h = w = 32
+    counter = [0]
+
+    def fresh(prefix):
+        counter[0] += 1
+        return f"{prefix}_{counter[0]}"
+
+    def conv(name, cin, cout, k, stride, pad, groups, w_bits, acc_bits, out_bits):
+        nonlocal edge, h, w
+        wname, bname = f"{name}.weight", f"{name}.bias"
+        tensors.append(_tensor(wname, (cout, cin // groups, k, k), w_bits, initializer=True))
+        tensors.append(_tensor(bname, (cout,), acc_bits, initializer=True))
+        oh = (h + 2 * pad - k) // stride + 1
+        ow = (w + 2 * pad - k) // stride + 1
+        acc_edge = fresh("acc")
+        tensors.append(_tensor(acc_edge, (cout, oh, ow), acc_bits))
+        nodes.append({
+            "name": name,
+            "op_type": "Conv",
+            "inputs": [edge, wname, bname],
+            "outputs": [acc_edge],
+            "attributes": {
+                "kernel_shape": [k, k], "strides": [stride, stride],
+                "pads": [pad, pad], "group": groups,
+            },
+        })
+        # relu
+        r_edge = fresh("r")
+        tensors.append(_tensor(r_edge, (cout, oh, ow), acc_bits))
+        nodes.append({
+            "name": name.replace("Conv", "Relu").replace("Gemm", "Relu"),
+            "op_type": "Relu", "inputs": [acc_edge], "outputs": [r_edge],
+            "attributes": {},
+        })
+        # quant
+        q_edge = fresh("q")
+        tensors.append(_tensor(q_edge, (cout, oh, ow), out_bits))
+        nodes.append({
+            "name": name.replace("Conv", "Quant"),
+            "op_type": "Quant", "inputs": [r_edge], "outputs": [q_edge],
+            "attributes": {"bits": out_bits, "signed": True, "channelwise": True},
+        })
+        edge, h, w = q_edge, oh, ow
+        return cout
+
+    def acc_of(bits):
+        return 16 if bits < 8 else 32
+
+    cin = conv("Conv_pilot", 3, pilot_c, 3, 1, 1, 1,
+               cfg.pilot_bits, acc_of(cfg.pilot_bits), cfg.pilot_bits)
+    for i, (cout, stride) in enumerate(blocks, start=1):
+        bits = cfg.block_bits[i - 1]
+        cin = conv(f"Conv_dw{i}", cin, cin, 3, stride, 1, cin, bits, acc_of(bits), bits)
+        cin = conv(f"Conv_pw{i}", cin, cout, 1, 1, 0, 1, bits, acc_of(bits), bits)
+
+    # global average pool + flatten + classifier
+    pool_out = fresh("pool")
+    tensors.append(_tensor(pool_out, (cin, 1, 1), cfg.block_bits[-1]))
+    nodes.append({
+        "name": "AvgPool_head", "op_type": "AveragePool",
+        "inputs": [edge], "outputs": [pool_out],
+        "attributes": {"kernel_shape": [h, w]},
+    })
+    flat = fresh("flat")
+    tensors.append(_tensor(flat, (cin,), cfg.block_bits[-1]))
+    nodes.append({
+        "name": "Flatten_head", "op_type": "Flatten",
+        "inputs": [pool_out], "outputs": [flat], "attributes": {},
+    })
+    cb = cfg.classifier_bits
+    tensors.append(_tensor("Gemm_classifier.weight", (10, cin), cb, initializer=True))
+    tensors.append(_tensor("Gemm_classifier.bias", (10,), acc_of(cb), initializer=True))
+    logits = fresh("logits")
+    tensors.append(_tensor(logits, (10,), acc_of(cb)))
+    nodes.append({
+        "name": "Gemm_classifier", "op_type": "Gemm",
+        "inputs": [flat, "Gemm_classifier.weight", "Gemm_classifier.bias"],
+        "outputs": [logits], "attributes": {},
+    })
+    q_logits = fresh("qlogits")
+    tensors.append(_tensor(q_logits, (10,), 8))
+    nodes.append({
+        "name": "Quant_classifier", "op_type": "Quant",
+        "inputs": [logits], "outputs": [q_logits],
+        "attributes": {"bits": 8, "signed": True, "channelwise": False},
+    })
+
+    return {
+        "name": cfg.name,
+        "graph_inputs": ["x0"],
+        "graph_outputs": [q_logits],
+        "tensors": tensors,
+        "nodes": nodes,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=str(Path(__file__).parents[2] / "artifacts"))
+    ap.add_argument("--width", type=float, default=1.0)
+    args = ap.parse_args()
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    for name, factory in model.ALL_CASES.items():
+        cfg = factory(width=args.width)
+        doc = export_case(cfg)
+        path = out / f"{name}.qonnx.json"
+        path.write_text(json.dumps(doc, indent=1))
+        print(f"wrote {path} ({len(doc['nodes'])} nodes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True) + their pure-jnp oracles."""
+
+from . import lut_matmul, qmatmul, ref, requant  # noqa: F401

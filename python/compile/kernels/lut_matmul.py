@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: LUT-based quantized matmul (paper §II-B, §VI-A).
+
+Partial products come from a pre-computed `2^(Lw+La)`-entry table instead
+of multiplier hardware: a MAC becomes a table gather + accumulate. On the
+paper's platform the table lives in the shared L1 scratchpad; here the
+table lives in VMEM next to each block (the TPU analogue — DESIGN.md §6),
+and the gather exercises the same trade of multiplier work for memory.
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Smaller M-tile than qmatmul: the [BLOCK_M, N, K] gather intermediate is
+# the VMEM limiter for the LUT path.
+BLOCK_M = 32
+
+
+def _lut_kernel(lut_ref, x_ref, w_ref, b_ref, m_ref, o_ref, *,
+                x_levels, x_lo, w_lo, shift, lo, hi):
+    """One M-tile: gather partial products from the LUT and accumulate."""
+    lut = lut_ref[...]
+    xi = x_ref[...].astype(jnp.int32) - x_lo          # [bm, K]
+    wi = w_ref[...].astype(jnp.int32) - w_lo          # [K, N]
+    # index of (w, x) in the flattened table
+    idx = wi.T[None, :, :] * x_levels + xi[:, None, :]  # [bm, N, K]
+    prods = jnp.take(lut, idx, axis=0)
+    acc = prods.sum(axis=-1).astype(jnp.int32) + b_ref[...][None, :]
+    prod = acc.astype(jnp.int64) * m_ref[...][None, :].astype(jnp.int64)
+    out = (prod + (jnp.int64(1) << (shift - 1))) >> shift
+    o_ref[...] = jnp.clip(out, lo, hi).astype(jnp.int32)
+
+
+def lut_matmul(x_q, w_q, lut, x_levels: int, x_lo: int, w_lo: int,
+               bias_q, m_mult, shift: int, lo: int, hi: int):
+    """LUT-based [M, K] @ [K, N] -> [M, N] int32 in [lo, hi].
+
+    `lut` is the flat `[w_levels * x_levels]` int32 product table from
+    `ref.build_mul_lut`. Bit-exact vs `ref.lut_matmul_ref` (and therefore
+    vs `qmatmul` when the LUT encodes exact products).
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    m_vec = jnp.broadcast_to(jnp.asarray(m_mult, dtype=jnp.int32), (n,))
+    pad = (-m) % BLOCK_M
+    if pad:
+        x_q = jnp.pad(x_q, ((0, pad), (0, 0)))
+    padded_m = m + pad
+    t = lut.shape[0]
+
+    kernel = functools.partial(
+        _lut_kernel,
+        x_levels=x_levels, x_lo=x_lo, w_lo=w_lo,
+        shift=shift, lo=lo, hi=hi,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded_m // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_m, n), jnp.int32),
+        interpret=True,
+    )(lut.astype(jnp.int32), x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+      bias_q.astype(jnp.int32), m_vec)
+    return out[:m]

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: quantized matmul + bias + dyadic requantization.
+
+The compute hot-spot of the quantized inference path (paper §VI-A: im2col
+turns every convolution into exactly this matmul). TPU hardware-adaptation
+note (DESIGN.md §6): the kernel tiles the M dimension via BlockSpec — the
+VMEM analogue of the L1 tiling Dory performs — accumulates in int32
+(MXU-friendly), and fuses the dyadic requantization so accumulators never
+round-trip to HBM. interpret=True everywhere: the CPU PJRT client cannot
+run Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# M-dimension tile (output pixels per block). 128 keeps the x-block +
+# out-block VMEM footprint small (< 0.5 MiB for K,N <= 576) while filling
+# the 128-lane dimension of the MXU.
+BLOCK_M = 128
+
+
+def _qmatmul_kernel(x_ref, w_ref, b_ref, m_ref, o_ref, *, shift, lo, hi):
+    """One M-tile: int32 matmul + bias + per-channel dyadic requant + clip."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + b_ref[...][None, :].astype(jnp.int32)
+    # dyadic rescale: (acc * M_c + 2^(n-1)) >> n, round-to-nearest;
+    # M is per output channel (filter-wise quantization, paper §II-A)
+    prod = acc.astype(jnp.int64) * m_ref[...][None, :].astype(jnp.int64)
+    out = (prod + (jnp.int64(1) << (shift - 1))) >> shift
+    o_ref[...] = jnp.clip(out, lo, hi).astype(jnp.int32)
+
+
+def qmatmul(x_q, w_q, bias_q, m_mult, shift: int, lo: int, hi: int):
+    """Quantized matmul: [M, K] @ [K, N] -> [M, N] int32 in [lo, hi].
+
+    `m_mult` is a scalar (per-tensor) or a [N] vector (per-channel dyadic
+    multipliers). Bit-exact vs `ref.qmatmul_ref`. M is padded to a BLOCK_M
+    multiple; K and N are kept whole per block (they are small for the
+    CIFAR-scale MobileNet: K <= 576, N <= 1024).
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert bias_q.shape == (n,)
+    m_vec = jnp.broadcast_to(jnp.asarray(m_mult, dtype=jnp.int32), (n,))
+
+    pad = (-m) % BLOCK_M
+    if pad:
+        x_q = jnp.pad(x_q, ((0, pad), (0, 0)))
+    padded_m = m + pad
+
+    kernel = functools.partial(_qmatmul_kernel, shift=shift, lo=lo, hi=hi)
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded_m // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_m, n), jnp.int32),
+        interpret=True,
+    )(x_q.astype(jnp.int32), w_q.astype(jnp.int32), bias_q.astype(jnp.int32), m_vec)
+    return out[:m]

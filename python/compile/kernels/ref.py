@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its reference here bit-exactly on
+integer outputs (pytest + hypothesis enforce it).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dyadic_requant_ref(acc, m_mult, shift: int, lo: int, hi: int):
+    """Integer dyadic rescale (paper §VI-C): round-to-nearest
+    `(acc * M + 2^(n-1)) >> n`, clipped into [lo, hi].
+
+    acc: int32 array. `m_mult` is a scalar (per-tensor) or an array
+    broadcastable against `acc` (per-channel / filter-wise quantization,
+    §II-A). Returns int32.
+    """
+    m = jnp.asarray(m_mult, dtype=jnp.int64)
+    prod = acc.astype(jnp.int64) * m
+    biased = prod + (jnp.int64(1) << (shift - 1))
+    out = biased >> shift
+    return jnp.clip(out, lo, hi).astype(jnp.int32)
+
+
+def qmatmul_ref(x_q, w_q, bias_q, m_mult, shift: int, lo: int, hi: int):
+    """Quantized matmul + bias + dyadic requant.
+
+    x_q: [M, K] int32 (values within the activation bit range)
+    w_q: [K, N] int32 (values within the weight bit range)
+    bias_q: [N] int32; m_mult scalar or [N] (per-channel)
+    Returns [M, N] int32 in [lo, hi].
+    """
+    acc = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32) + bias_q[None, :]
+    return dyadic_requant_ref(acc, m_mult, shift, lo, hi)
+
+
+def lut_matmul_ref(x_q, w_q, lut, x_levels: int, x_lo: int, w_lo: int,
+                   bias_q, m_mult, shift: int, lo: int, hi: int):
+    """LUT-based matmul (paper §II-B): partial products come from a
+    pre-computed table indexed by (weight, activation) instead of a MAC.
+
+    lut: [w_levels * x_levels] int32 flattened table with
+         lut[(w - w_lo) * x_levels + (x - x_lo)] == w * x.
+    Must equal qmatmul_ref numerically when the LUT encodes products.
+    """
+    xi = (x_q - x_lo).astype(jnp.int32)          # [M, K]
+    wi = (w_q - w_lo).astype(jnp.int32)          # [K, N]
+    idx = wi.T[None, :, :] * x_levels + xi[:, None, :]   # [M, N, K]
+    prods = lut[idx]                              # gather
+    acc = prods.sum(axis=-1).astype(jnp.int32) + bias_q[None, :]
+    return dyadic_requant_ref(acc, m_mult, shift, lo, hi)
+
+
+def threshold_requant_ref(acc, thresholds, lo: int):
+    """Threshold-tree requantization (paper §VI-C / Eq. 8-9 structure):
+    output level = lo + #{i : acc >= thr_i}, thresholds ascending."""
+    cmp = acc[..., None] >= thresholds  # [..., T]
+    return (lo + cmp.sum(axis=-1)).astype(jnp.int32)
+
+
+def build_mul_lut(w_bits: int, x_bits: int):
+    """Materialize the product table for signed w/x of the given widths.
+    Returns (flat_lut int32 [2^(w_bits+x_bits)], x_levels, x_lo, w_lo)."""
+    w_lo, w_hi = -(1 << (w_bits - 1)), (1 << (w_bits - 1)) - 1
+    x_lo, x_hi = -(1 << (x_bits - 1)), (1 << (x_bits - 1)) - 1
+    w_vals = jnp.arange(w_lo, w_hi + 1, dtype=jnp.int32)
+    x_vals = jnp.arange(x_lo, x_hi + 1, dtype=jnp.int32)
+    lut = (w_vals[:, None] * x_vals[None, :]).reshape(-1)
+    return lut, int(x_vals.shape[0]), x_lo, w_lo

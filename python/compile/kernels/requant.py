@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: threshold-tree requantization (paper §VI-C).
+
+Maps accumulator values to `2^Ly` output levels by counting how many of the
+`T = 2^Ly - 1` ascending thresholds each value passes — the vectorized
+equivalent of the balanced comparator tree (`O(log T)` depth in hardware;
+a data-parallel compare-and-sum here).
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _threshold_kernel(acc_ref, thr_ref, o_ref, *, lo):
+    acc = acc_ref[...]
+    thr = thr_ref[...]
+    cmp = acc[:, None] >= thr[None, :]
+    o_ref[...] = (lo + cmp.sum(axis=-1)).astype(jnp.int32)
+
+
+def threshold_requant(acc, thresholds, lo: int):
+    """Requantize a flat int32 array through ascending `thresholds`.
+
+    Returns int32 levels in [lo, lo + T]. Bit-exact vs
+    `ref.threshold_requant_ref`.
+    """
+    (n,) = acc.shape
+    (t,) = thresholds.shape
+    pad = (-n) % BLOCK
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+    padded = n + pad
+
+    kernel = functools.partial(_threshold_kernel, lo=lo)
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
+        interpret=True,
+    )(acc.astype(jnp.int32), thresholds.astype(jnp.int32))
+    return out[:n]

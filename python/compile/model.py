@@ -1,0 +1,358 @@
+"""L2: MobileNetV1 (CIFAR-scale) in JAX — float training forward and the
+mixed-precision integer inference forward that calls the L1 Pallas kernels.
+
+Mirrors `rust/src/models/mobilenet.rs`: pilot conv + 10 depthwise-separable
+blocks + global average pooling + FC classifier (paper Table I). The
+quantized forward is integer end-to-end: activations/weights at the
+per-block precision, int32 accumulators, dyadic requantization — with the
+pointwise/FC matmuls routed through `kernels.qmatmul` (im2col) or
+`kernels.lut_matmul` (LUT blocks), exactly the implementation choices the
+rust analysis pipeline models.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lut_matmul as lut_mod
+from .kernels import qmatmul as qm_mod
+from .kernels import ref as kref
+
+# (pointwise out-channels, depthwise stride) per block — same plan as
+# rust/src/models/mobilenet.rs::BLOCK_PLAN.
+BLOCK_PLAN = [
+    (64, 1), (128, 2), (128, 1), (256, 2), (256, 1),
+    (512, 2), (512, 1), (512, 1), (1024, 2), (1024, 1),
+]
+PILOT_CHANNELS = 32
+NUM_CLASSES = 10
+
+
+@dataclass
+class CaseConfig:
+    """One Table-I column: per-block (bits, impl) plus pilot/classifier."""
+
+    name: str
+    pilot_bits: int = 8
+    block_bits: list = field(default_factory=lambda: [8] * 10)
+    block_impl: list = field(default_factory=lambda: ["im2col"] * 10)
+    classifier_bits: int = 8
+    classifier_impl: str = "im2col"
+    width_mult: float = 0.25
+
+
+def case1(width: float = 0.25) -> CaseConfig:
+    return CaseConfig(name="case1", width_mult=width)
+
+
+def case2(width: float = 0.25) -> CaseConfig:
+    return CaseConfig(
+        name="case2",
+        block_bits=[4] * 10,
+        block_impl=["im2col"] * 7 + ["lut"] * 3,
+        width_mult=width,
+    )
+
+
+def case3(width: float = 0.25) -> CaseConfig:
+    return CaseConfig(
+        name="case3",
+        block_bits=[8, 4, 4, 4, 4, 4, 4, 4, 4, 2],
+        block_impl=["im2col"] * 5 + ["lut"] * 5,
+        classifier_bits=4,
+        classifier_impl="lut",
+        width_mult=width,
+    )
+
+
+ALL_CASES = {"case1": case1, "case2": case2, "case3": case3}
+
+
+def _ch(c: int, width: float) -> int:
+    return max(8, int(round(c * width)))
+
+
+def channel_plan(width: float):
+    """(pilot_channels, [(block_out_channels, stride)])."""
+    pilot = _ch(PILOT_CHANNELS, width)
+    blocks = [(_ch(c, width), s) for c, s in BLOCK_PLAN]
+    return pilot, blocks
+
+
+# --------------------------------------------------------------------------
+# float model (training path)
+# --------------------------------------------------------------------------
+
+
+def init_params(seed: int = 0, width: float = 0.25) -> dict:
+    """He-init float parameters. Layout:
+    conv kernels [kh, kw, cin, cout] (depthwise: [kh, kw, c, 1]),
+    biases [cout], fc weight [k, classes]."""
+    rng = np.random.default_rng(seed)
+    pilot, blocks = channel_plan(width)
+
+    def conv(kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        return rng.normal(scale=math.sqrt(2.0 / fan_in), size=(kh, kw, cin, cout)).astype(
+            np.float32
+        )
+
+    params = {
+        "pilot/w": conv(3, 3, 3, pilot),
+        "pilot/b": np.zeros(pilot, np.float32),
+    }
+    cin = pilot
+    for i, (cout, _stride) in enumerate(blocks, start=1):
+        # HWIO depthwise layout: [3, 3, 1, C] (in-features per group = 1)
+        params[f"dw{i}/w"] = conv(3, 3, 1, cin)
+        params[f"dw{i}/b"] = np.zeros(cin, np.float32)
+        params[f"pw{i}/w"] = conv(1, 1, cin, cout)
+        params[f"pw{i}/b"] = np.zeros(cout, np.float32)
+        cin = cout
+    params["fc/w"] = rng.normal(scale=math.sqrt(1.0 / cin), size=(cin, NUM_CLASSES)).astype(
+        np.float32
+    )
+    params["fc/b"] = np.zeros(NUM_CLASSES, np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def _conv(x, w, stride, groups=1):
+    # Explicit symmetric (1,1) padding for 3x3 kernels — NOT lax "SAME",
+    # whose stride-2 padding is asymmetric (0,1) and would misalign the
+    # integer im2col path used by the quantized forward.
+    pad = (1, 1) if w.shape[0] > 1 else (0, 0)
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[pad, pad],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def float_forward(params, x, width: float = 0.25, collect=None):
+    """Float inference. `collect`, if a dict, receives pre-quant activation
+    tensors per layer name (for PTQ calibration)."""
+    _, blocks = channel_plan(width)
+
+    def note(name, h):
+        if collect is not None:
+            collect[name] = h
+        return h
+
+    h = jax.nn.relu(_conv(x, params["pilot/w"], 1) + params["pilot/b"])
+    h = note("pilot", h)
+    for i, (_cout, stride) in enumerate(blocks, start=1):
+        c = h.shape[-1]
+        h = jax.nn.relu(_conv(h, params[f"dw{i}/w"], stride, groups=c) + params[f"dw{i}/b"])
+        h = note(f"dw{i}", h)
+        h = jax.nn.relu(_conv(h, params[f"pw{i}/w"], 1) + params[f"pw{i}/b"])
+        h = note(f"pw{i}", h)
+    h = h.mean(axis=(1, 2))  # global average pooling
+    h = note("pool", h)
+    return h @ params["fc/w"] + params["fc/b"]
+
+
+# --------------------------------------------------------------------------
+# quantization (PTQ) + integer inference
+# --------------------------------------------------------------------------
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def _dyadic(scale: float, max_n: int = 31):
+    """Fit M/2^n ≈ scale (paper §VI-C) — same algorithm as
+    rust/src/quant/dyadic.rs."""
+    n = max_n
+    while n > 1:
+        m = round(scale * (1 << n))
+        if m <= 0x7FFFFFFF:
+            return max(1, int(m)), n
+        n -= 1
+    return max(1, int(round(scale * 2))), 1
+
+
+def _quantize_tensor(w, bits: int):
+    """Symmetric per-tensor weight quantization. Returns (w_q int32, scale)."""
+    s = float(np.max(np.abs(np.asarray(w)))) / _qmax(bits)
+    s = max(s, 1e-12)
+    w_q = np.clip(np.round(np.asarray(w) / s), -_qmax(bits) - 1, _qmax(bits)).astype(np.int32)
+    return w_q, s
+
+
+def _quantize_perchannel(w, bits: int):
+    """Symmetric per-output-channel ("filter-wise", paper §II-A) weight
+    quantization over the last axis. Returns (w_q int32, scales [Cout])."""
+    arr = np.asarray(w)
+    flat = arr.reshape(-1, arr.shape[-1])
+    s = np.abs(flat).max(axis=0) / _qmax(bits)
+    s = np.maximum(s, 1e-12)
+    w_q = np.clip(np.round(arr / s), -_qmax(bits) - 1, _qmax(bits)).astype(np.int32)
+    return w_q, s
+
+
+def calibrate(params, x_calib, width: float = 0.25) -> dict:
+    """Per-layer post-ReLU activation max (PTQ calibration stats)."""
+    acts: dict = {}
+    float_forward(params, x_calib, width=width, collect=acts)
+    stats = {k: float(jnp.max(jnp.abs(v))) for k, v in acts.items()}
+    stats["input"] = float(jnp.max(jnp.abs(x_calib)))
+    return stats
+
+
+def quantize_model(params, stats: dict, cfg: CaseConfig) -> dict:
+    """Build the integer parameter set for one Table-I case.
+
+    Per layer: w_q (int), bias_q (int32, scale s_x*s_w), dyadic (M, n)
+    realizing s_x*s_w/s_y, and the activation clip range of the output."""
+    width = cfg.width_mult
+    _, blocks = channel_plan(width)
+    q: dict = {"cfg": cfg}
+
+    def act_scale(name: str, bits: int) -> float:
+        return max(stats[name], 1e-12) / _qmax(bits)
+
+    # activation precision entering each layer: pilot sees int8 input
+    s_in = act_scale("input", 8)
+    q["input_scale"] = s_in
+
+    # Shared shift for the per-channel dyadic multipliers: M_c = r_c * 2^n
+    # with r_c = s_x * s_w_c / s_y (filter-wise quantization, paper §II-A).
+    SHIFT = 22
+
+    def prep(layer: str, w_key: str, b_key: str, w_bits: int, s_x: float,
+             out_name: str, out_bits: int):
+        w_q, s_w = _quantize_perchannel(params[w_key], w_bits)
+        s_y = act_scale(out_name, out_bits)
+        bias_q = np.round(np.asarray(params[b_key]) / (s_x * s_w)).astype(np.int32)
+        r = s_x * s_w / s_y  # [Cout]
+        m = np.maximum(1, np.round(r * (1 << SHIFT))).astype(np.int64)
+        assert m.max() < 2**31, f"{layer}: dyadic multiplier overflow"
+        q[layer] = {
+            "w_q": jnp.asarray(w_q),
+            "bias_q": jnp.asarray(bias_q),
+            "m": jnp.asarray(m, dtype=jnp.int32),
+            "n": SHIFT,
+            "out_hi": _qmax(out_bits),
+            "s_y": s_y,
+        }
+        return s_y
+
+    s_x = prep("pilot", "pilot/w", "pilot/b", cfg.pilot_bits, s_in, "pilot", cfg.pilot_bits)
+    for i in range(1, 11):
+        bits = cfg.block_bits[i - 1]
+        s_x = prep(f"dw{i}", f"dw{i}/w", f"dw{i}/b", bits, s_x, f"dw{i}", bits)
+        s_x = prep(f"pw{i}", f"pw{i}/w", f"pw{i}/b", bits, s_x, f"pw{i}", bits)
+    # classifier: per-tensor (per-class scales would distort the argmax);
+    # logits stay at int32 accumulator scale (dequantized after)
+    w_q, s_w = _quantize_tensor(params["fc/w"], cfg.classifier_bits)
+    bias_q = np.round(np.asarray(params["fc/b"]) / (s_x * s_w)).astype(np.int32)
+    q["fc"] = {
+        "w_q": jnp.asarray(w_q),
+        "bias_q": jnp.asarray(bias_q),
+        "s_out": s_x * s_w,
+        "s_x": s_x,
+    }
+    if cfg.classifier_impl == "lut" or "lut" in cfg.block_impl:
+        pass  # LUTs are built lazily in quantized_forward (static shapes)
+    return q
+
+
+def _im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """Integer im2col: x [B,H,W,C] -> patches [B*OH*OW, kh*kw*C] with
+    k-index order (kh, kw, c) matching `w.reshape(kh*kw*cin, cout)`."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    b, h, w_, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w_ - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :])
+    patches = jnp.stack(cols, axis=3)  # [B, OH, OW, kh*kw, C]
+    return patches.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def _dw_conv_int(x_q, w_q, stride: int):
+    """Integer depthwise 3x3 conv: x [B,H,W,C] int32, w [3,3,C,1] int32."""
+    patches, (b, oh, ow) = _im2col(x_q, 3, 3, stride, 1)
+    c = x_q.shape[-1]
+    patches = patches.reshape(b * oh * ow, 9, c)
+    w = w_q.reshape(9, c)
+    acc = jnp.einsum("mkc,kc->mc", patches, w, preferred_element_type=jnp.int32)
+    return acc.reshape(b, oh, ow, c)
+
+
+def _linear_int(x2d, layer, impl: str, relu: bool, w_bits: int, x_bits: int):
+    """Dispatch a quantized matmul to the configured L1 kernel."""
+    w_q, bias_q = layer["w_q"], layer["bias_q"]
+    lo = 0 if relu else -layer["out_hi"] - 1
+    hi = layer["out_hi"]
+    if impl == "lut":
+        lut, x_levels, x_lo, w_lo = kref.build_mul_lut(w_bits, x_bits)
+        return lut_mod.lut_matmul(
+            x2d, w_q, lut, x_levels, x_lo, w_lo, bias_q, layer["m"], layer["n"], lo, hi
+        )
+    return qm_mod.qmatmul(x2d, w_q, bias_q, layer["m"], layer["n"], lo, hi)
+
+
+def quantized_forward(q: dict, x):
+    """Integer inference of one Table-I case. `x` is float [B,32,32,3];
+    returns float logits [B, 10] (dequantized classifier accumulators)."""
+    cfg: CaseConfig = q["cfg"]
+    width = cfg.width_mult
+    _, blocks = channel_plan(width)
+
+    # input quantization (int8, symmetric)
+    x_q = jnp.clip(jnp.round(x / q["input_scale"]), -128, 127).astype(jnp.int32)
+
+    # pilot: standard 3x3 conv via im2col + Pallas qmatmul (always im2col)
+    layer = q["pilot"]
+    patches, (b, oh, ow) = _im2col(x_q, 3, 3, 1, 1)
+    w2d = layer["w_q"].reshape(-1, layer["w_q"].shape[-1])
+    h = _linear_int(patches, {**layer, "w_q": w2d}, "im2col", True, cfg.pilot_bits, 8)
+    h = h.reshape(b, oh, ow, -1)
+    x_bits = cfg.pilot_bits
+
+    for i, (_cout, stride) in enumerate(blocks, start=1):
+        bits = cfg.block_bits[i - 1]
+        impl = cfg.block_impl[i - 1]
+        # depthwise 3x3 (integer direct conv) + fused relu/requant
+        dw = q[f"dw{i}"]
+        acc = _dw_conv_int(h, dw["w_q"], stride) + dw["bias_q"][None, None, None, :]
+        h = kref.dyadic_requant_ref(acc, dw["m"], dw["n"], 0, dw["out_hi"])
+        # pointwise 1x1 through the configured kernel
+        pw = q[f"pw{i}"]
+        b_, oh_, ow_, c = h.shape
+        x2d = h.reshape(b_ * oh_ * ow_, c)
+        w2d = pw["w_q"].reshape(c, -1)
+        h = _linear_int(x2d, {**pw, "w_q": w2d}, impl, True, bits, bits)
+        h = h.reshape(b_, oh_, ow_, -1)
+        x_bits = bits
+
+    # global average pooling in the integer domain (shift-free mean; the
+    # platform uses a power-of-two shift — here spatial is 2x2 = exact)
+    h = h.sum(axis=(1, 2)) // (h.shape[1] * h.shape[2])
+
+    # classifier: integer matmul (MAC or LUT gather), logits dequantized
+    fc = q["fc"]
+    h = h.astype(jnp.int32)
+    if cfg.classifier_impl == "lut":
+        # partial products from the pre-computed table (paper §II-B)
+        lut, x_levels, x_lo, w_lo = kref.build_mul_lut(cfg.classifier_bits, x_bits)
+        xi = h - x_lo                                     # [B, K]
+        wi = fc["w_q"].astype(jnp.int32) - w_lo           # [K, 10]
+        idx = wi.T[None, :, :] * x_levels + xi[:, None, :]
+        acc = lut[idx].sum(axis=-1).astype(jnp.int32) + fc["bias_q"][None, :]
+    else:
+        acc = h @ fc["w_q"].astype(jnp.int32) + fc["bias_q"][None, :]
+    return acc.astype(jnp.float32) * fc["s_out"]

@@ -1,0 +1,103 @@
+"""Build-time training of the float MobileNetV1 on the synthetic dataset
+(the DESIGN.md substitution for the paper's Brevitas QAT on CIFAR-10).
+
+Pure-JAX SGD with momentum + cosine decay; weights are cached in
+`python/compile/_cache/weights.npz` so `make artifacts` re-runs are fast.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+CACHE = Path(__file__).parent / "_cache"
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels) -> float:
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == labels))
+
+
+def train(
+    width: float = 0.25,
+    steps: int = 400,
+    batch: int = 128,
+    lr: float = 2e-3,
+    weight_decay: float = 1e-5,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    """Train with Adam (hand-rolled — no optax in the offline image) and
+    return (params, test_accuracy)."""
+    xtr, ytr, xte, yte = data.train_test()
+    xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr)
+    params = model.init_params(seed=seed, width=width)
+    m_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def loss_fn(p, xb, yb):
+        logits = model.float_forward(p, xb, width=width)
+        wd = sum(jnp.sum(v * v) for k, v in p.items() if k.endswith("/w"))
+        return cross_entropy(logits, yb) + weight_decay * wd
+
+    @jax.jit
+    def step(p, m, v, xb, yb, lr_t, t):
+        lr_t = lr_t.astype(jnp.float32)  # keep params f32 under x64 mode
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        m = {k: b1 * m[k] + (1 - b1) * grads[k] for k in p}
+        v = {k: b2 * v[k] + (1 - b2) * grads[k] ** 2 for k in p}
+        tf = t.astype(jnp.float32) + 1.0
+        mhat = {k: m[k] / (1 - b1 ** tf) for k in p}
+        vhat = {k: v[k] / (1 - b2 ** tf) for k in p}
+        p = {k: p[k] - lr_t * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in p}
+        return p, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    n = xtr.shape[0]
+    for t in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * t / steps))
+        params, m_state, v_state, loss = step(
+            params, m_state, v_state, xtr[idx], ytr[idx],
+            jnp.asarray(lr_t), jnp.asarray(t),
+        )
+        if verbose and (t % 50 == 0 or t == steps - 1):
+            print(f"step {t:4d}  loss {float(loss):.4f}  lr {lr_t:.4f}", flush=True)
+
+    logits = model.float_forward(params, jnp.asarray(xte), width=width)
+    acc = accuracy(logits, jnp.asarray(yte))
+    if verbose:
+        print(f"float test accuracy: {acc:.4f}", flush=True)
+    return params, acc
+
+
+def load_or_train(width: float = 0.25, steps: int = 400, verbose: bool = True):
+    """Cached training: reuse `_cache/weights.npz` when present."""
+    CACHE.mkdir(exist_ok=True)
+    path = CACHE / f"weights_w{width}_s{steps}.npz"
+    if path.exists():
+        blob = np.load(path)
+        params = {k: jnp.asarray(blob[k]) for k in blob.files if k != "__acc"}
+        acc = float(blob["__acc"]) if "__acc" in blob.files else -1.0
+        if verbose:
+            print(f"loaded cached weights from {path} (float acc {acc:.4f})", flush=True)
+        return params, acc
+    params, acc = train(width=width, steps=steps, verbose=verbose)
+    np.savez(path, __acc=np.float64(acc), **{k: np.asarray(v) for k, v in params.items()})
+    return params, acc
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    load_or_train()

@@ -1,0 +1,4 @@
+import jax
+
+# int64 is used by the dyadic requantization path; enable before any trace.
+jax.config.update("jax_enable_x64", True)

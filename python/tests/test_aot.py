@@ -1,0 +1,48 @@
+"""AOT export tests: HLO text generation for the quantized graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, model
+
+
+@pytest.fixture(scope="module")
+def tiny_q():
+    params = model.init_params(seed=0, width=0.25)
+    x, _ = data.make_split(8, seed=3)
+    stats = model.calibrate(params, jnp.asarray(x), width=0.25)
+    return model.quantize_model(params, stats, model.case1(width=0.25))
+
+
+def test_to_hlo_text_simple():
+    def fn(a, b):
+        return (jnp.matmul(a, b) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_quantized_model_lowers_to_hlo(tiny_q, tmp_path):
+    entry = aot.export_case(tiny_q, batch=4, out_path=tmp_path / "m.hlo.txt")
+    text = (tmp_path / "m.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert entry["input_shape"] == [4, 32, 32, 3]
+    assert entry["output_shape"] == [4, 10]
+    # the quantized graph is integer-dominant: int32 tensors must appear
+    assert "s32" in text
+
+
+def test_export_testset_round_trip(tmp_path):
+    x, y = data.make_split(8, seed=2)
+    aot.export_testset(x, y, tmp_path)
+    import json
+
+    header = json.loads((tmp_path / "testset.json").read_text())
+    assert header["n"] == 8
+    raw = np.frombuffer((tmp_path / "testset.bin").read_bytes(), dtype="<f4")
+    np.testing.assert_allclose(raw.reshape(x.shape), x, rtol=0, atol=0)
+    assert header["labels"] == [int(v) for v in y]

@@ -1,0 +1,51 @@
+"""Synthetic dataset tests: determinism, shapes, separability."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_shapes_and_dtypes():
+    x, y = data.make_split(32, seed=1)
+    assert x.shape == (32, 32, 32, 3)
+    assert x.dtype == np.float32
+    assert y.shape == (32,)
+    assert set(np.unique(y)).issubset(set(range(10)))
+
+
+def test_deterministic():
+    x1, y1 = data.make_split(16, seed=5)
+    x2, y2 = data.make_split(16, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = data.make_split(16, seed=6)
+    assert not np.array_equal(x1, x3)
+
+
+def test_prototypes_distinct():
+    protos = data.class_prototypes()
+    assert protos.shape == (10, 32, 32, 3)
+    # pairwise distances well away from zero
+    for i in range(10):
+        for j in range(i + 1, 10):
+            d = np.linalg.norm(protos[i] - protos[j])
+            assert d > 1.0, (i, j, d)
+
+
+def test_nearest_prototype_is_informative():
+    """A trivial nearest-prototype classifier must beat chance by a wide
+    margin — the dataset is learnable."""
+    protos = data.class_prototypes().reshape(10, -1)
+    x, y = data.make_split(256, seed=11)
+    flat = x.reshape(256, -1)
+    d = ((flat[:, None, :] - protos[None, :, :]) ** 2).sum(-1)
+    pred = d.argmin(1)
+    acc = (pred == y).mean()
+    assert acc > 0.5, acc
+
+
+def test_train_test_disjoint_seeds():
+    xtr, ytr, xte, yte = data.train_test(n_train=64, n_test=64)
+    assert xtr.shape[0] == 64 and xte.shape[0] == 64
+    # different seeds: first train image differs from first test image
+    assert not np.allclose(xtr[0], xte[0])

@@ -1,0 +1,194 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Bit-exact equality is required (integer outputs), across randomized shapes
+and bit-widths via hypothesis.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lut_matmul, qmatmul, ref, requant
+
+RNG = np.random.default_rng(42)
+
+
+def rand_int(shape, bits, rng=RNG):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.asarray(rng.integers(lo, hi + 1, size=shape), dtype=jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# qmatmul
+# --------------------------------------------------------------------------
+
+
+def test_qmatmul_matches_ref_basic():
+    x = rand_int((200, 27), 8)
+    w = rand_int((27, 16), 8)
+    b = rand_int((16,), 16)
+    want = ref.qmatmul_ref(x, w, b, 123_456, 20, -128, 127)
+    got = qmatmul.qmatmul(x, w, b, 123_456, 20, -128, 127)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qmatmul_relu_fusion_via_lo_zero():
+    x = rand_int((64, 9), 8)
+    w = rand_int((9, 8), 4)
+    b = jnp.zeros(8, jnp.int32)
+    got = qmatmul.qmatmul(x, w, b, 1 << 20, 21, 0, 127)
+    assert int(jnp.min(got)) >= 0
+
+
+def test_qmatmul_m_not_multiple_of_block():
+    # exercises padding/truncation around BLOCK_M
+    for m in [1, 127, 128, 129, 300]:
+        x = rand_int((m, 5), 8)
+        w = rand_int((5, 3), 8)
+        b = rand_int((3,), 8)
+        want = ref.qmatmul_ref(x, w, b, 999, 10, -8, 7)
+        got = qmatmul.qmatmul(x, w, b, 999, 10, -8, 7)
+        assert got.shape == (m, 3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 64),
+    n=st.integers(1, 32),
+    x_bits=st.sampled_from([2, 4, 8]),
+    w_bits=st.sampled_from([2, 4, 8]),
+    shift=st.integers(8, 30),
+    seed=st.integers(0, 2**31),
+)
+def test_qmatmul_property(m, k, n, x_bits, w_bits, shift, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_int((m, k), x_bits, rng)
+    w = rand_int((k, n), w_bits, rng)
+    b = rand_int((n,), 16, rng)
+    m_mult = int(rng.integers(1, 1 << 24))
+    lo, hi = -(1 << (x_bits - 1)), (1 << (x_bits - 1)) - 1
+    want = ref.qmatmul_ref(x, w, b, m_mult, shift, lo, hi)
+    got = qmatmul.qmatmul(x, w, b, m_mult, shift, lo, hi)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# lut_matmul
+# --------------------------------------------------------------------------
+
+
+def test_lut_matmul_matches_ref_and_mac():
+    lut, xl, xlo, wlo = ref.build_mul_lut(4, 8)
+    x = rand_int((50, 27), 8)
+    w = rand_int((27, 16), 4)
+    b = rand_int((16,), 16)
+    args = (999_999, 19, -8, 7)
+    want_ref = ref.lut_matmul_ref(x, w, lut, xl, xlo, wlo, b, *args)
+    want_mac = ref.qmatmul_ref(x, w, b, *args)
+    got = lut_matmul.lut_matmul(x, w, lut, xl, xlo, wlo, b, *args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_ref))
+    # the LUT encodes exact products: LUT path == MAC path (paper §II-B)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_mac))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 32),
+    n=st.integers(1, 16),
+    w_bits=st.sampled_from([2, 4]),
+    x_bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_lut_matmul_property(m, k, n, w_bits, x_bits, seed):
+    rng = np.random.default_rng(seed)
+    lut, xl, xlo, wlo = ref.build_mul_lut(w_bits, x_bits)
+    x = rand_int((m, k), x_bits, rng)
+    w = rand_int((k, n), w_bits, rng)
+    b = rand_int((n,), 12, rng)
+    m_mult = int(rng.integers(1, 1 << 20))
+    lo, hi = -(1 << (x_bits - 1)), (1 << (x_bits - 1)) - 1
+    want = ref.qmatmul_ref(x, w, b, m_mult, 16, lo, hi)
+    got = lut_matmul.lut_matmul(x, w, lut, xl, xlo, wlo, b, m_mult, 16, lo, hi)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lut_table_layout():
+    lut, xl, xlo, wlo = ref.build_mul_lut(2, 3)
+    assert lut.shape == (4 * 8,)
+    assert xl == 8 and xlo == -4 and wlo == -2
+    # spot-check: lut[(w - wlo) * xl + (x - xlo)] == w * x
+    for w in range(-2, 2):
+        for x in range(-4, 4):
+            assert int(lut[(w - wlo) * xl + (x - xlo)]) == w * x
+
+
+# --------------------------------------------------------------------------
+# threshold requant
+# --------------------------------------------------------------------------
+
+
+def test_threshold_requant_matches_ref():
+    acc = rand_int((5000,), 16)
+    thr = jnp.asarray(np.sort(RNG.choice(np.arange(-30000, 30000), 15, replace=False)),
+                      dtype=jnp.int32)
+    want = ref.threshold_requant_ref(acc, thr, -8)
+    got = requant.threshold_requant(acc, thr, -8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_requant_monotone():
+    acc = jnp.arange(-1000, 1000, dtype=jnp.int32)
+    thr = jnp.asarray([-500, -100, 0, 100, 400, 600, 900], dtype=jnp.int32)
+    out = np.asarray(requant.threshold_requant(acc, thr, -4))
+    assert (np.diff(out) >= 0).all()
+    assert out.min() == -4 and out.max() == 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    out_bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_threshold_requant_property(n, out_bits, seed):
+    rng = np.random.default_rng(seed)
+    acc = rand_int((n,), 16, rng)
+    t = (1 << out_bits) - 1
+    thr = jnp.asarray(
+        np.sort(rng.choice(np.arange(-40000, 40000), t, replace=False)), dtype=jnp.int32
+    )
+    lo = -(1 << (out_bits - 1))
+    want = ref.threshold_requant_ref(acc, thr, lo)
+    got = requant.threshold_requant(acc, thr, lo)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# dyadic requant reference self-checks
+# --------------------------------------------------------------------------
+
+
+def test_dyadic_requant_rounds_to_nearest():
+    acc = jnp.asarray([-3, -2, -1, 0, 1, 2, 3], dtype=jnp.int32)
+    # m/2^n = 1/2
+    out = np.asarray(ref.dyadic_requant_ref(acc, 1, 1, -128, 127))
+    np.testing.assert_array_equal(out, [-1, -1, 0, 0, 1, 1, 2])
+
+
+def test_dyadic_requant_approximates_float_scale():
+    rng = np.random.default_rng(3)
+    acc = jnp.asarray(rng.integers(-100000, 100000, size=2000), dtype=jnp.int32)
+    scale = 0.00734
+    m, n = 123, 14  # not the best fit; just consistent
+    m = round(scale * (1 << 24)); n = 24
+    out = np.asarray(ref.dyadic_requant_ref(acc, m, n, -(1 << 20), 1 << 20))
+    want = np.round(np.asarray(acc) * scale)
+    assert np.max(np.abs(out - want)) <= 1
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

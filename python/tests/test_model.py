@@ -1,0 +1,148 @@
+"""L2 model tests: shapes, float/integer consistency, PTQ behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+WIDTH = 0.25
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=0, width=WIDTH)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = data.make_split(16, seed=99)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_channel_plan_width():
+    pilot, blocks = model.channel_plan(0.25)
+    assert pilot == 8
+    assert blocks[0] == (16, 1)
+    assert blocks[-1] == (256, 1)
+    pilot_full, blocks_full = model.channel_plan(1.0)
+    assert pilot_full == 32
+    assert blocks_full[-1] == (1024, 1)
+
+
+def test_float_forward_shapes(params, batch):
+    x, _ = batch
+    logits = model.float_forward(params, x, width=WIDTH)
+    assert logits.shape == (16, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_float_forward_collect(params, batch):
+    x, _ = batch
+    acts = {}
+    model.float_forward(params, x, width=WIDTH, collect=acts)
+    assert "pilot" in acts and "dw10" in acts and "pw10" in acts and "pool" in acts
+    # stride plan: 32 -> 16 -> 8 -> 4 -> 2 spatial
+    assert acts["pw10"].shape[1:3] == (2, 2)
+
+
+def test_im2col_matches_lax_conv(params, batch):
+    """The integer im2col + matmul path must agree with lax convolution."""
+    x, _ = batch
+    xi = jnp.round(x * 10).astype(jnp.int32)
+    w = jnp.asarray(
+        np.random.default_rng(1).integers(-8, 8, size=(3, 3, 3, 8)), dtype=jnp.int32
+    )
+    patches, (b, oh, ow) = model._im2col(xi, 3, 3, 1, 1)
+    got = (patches @ w.reshape(-1, 8)).reshape(b, oh, ow, 8)
+    want = jax.lax.conv_general_dilated(
+        xi.astype(jnp.float32),
+        w.astype(jnp.float32),
+        (1, 1),
+        [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_stride2():
+    x = jnp.arange(2 * 8 * 8 * 3, dtype=jnp.int32).reshape(2, 8, 8, 3)
+    patches, (b, oh, ow) = model._im2col(x, 3, 3, 2, 1)
+    assert (b, oh, ow) == (2, 4, 4)
+    assert patches.shape == (2 * 16, 27)
+
+
+def test_dw_conv_int_matches_lax(params):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(-100, 100, size=(2, 8, 8, 4)), dtype=jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, size=(3, 3, 1, 4)), dtype=jnp.int32)
+    got = model._dw_conv_int(x, w, 1)
+    want = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        (1, 1),
+        [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=4,
+    ).astype(jnp.int32)
+
+    # stride-2 alignment: the historic SAME-vs-symmetric-padding bug
+    got2 = model._dw_conv_int(x, w, 2)
+    want2 = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        (2, 2),
+        [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=4,
+    ).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_calibration_stats_complete(params, batch):
+    x, _ = batch
+    stats = model.calibrate(params, x, width=WIDTH)
+    assert stats["input"] > 0
+    for i in range(1, 11):
+        assert stats[f"dw{i}"] >= 0
+        assert stats[f"pw{i}"] >= 0
+
+
+def test_dyadic_fit_accuracy():
+    for scale in [1e-4, 0.017, 0.3, 1.0, 3.7]:
+        m, n = model._dyadic(scale)
+        approx = m / (1 << n)
+        assert abs(approx - scale) / scale < 1e-5, scale
+
+
+@pytest.mark.parametrize("case_name", ["case1", "case2", "case3"])
+def test_quantized_forward_runs(params, batch, case_name):
+    x, _ = batch
+    cfg = model.ALL_CASES[case_name](width=WIDTH)
+    stats = model.calibrate(params, x, width=WIDTH)
+    q = model.quantize_model(params, stats, cfg)
+    logits = model.quantized_forward(q, x[:4])
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_int8_quantization_close_to_float(params, batch):
+    """Case-1 (int8) logits should broadly agree with float logits in
+    ranking: top-1 match on most examples of an easy batch."""
+    x, _ = batch
+    stats = model.calibrate(params, x, width=WIDTH)
+    q = model.quantize_model(params, stats, model.case1(width=WIDTH))
+    ql = model.quantized_forward(q, x)
+    fl = model.float_forward(params, x, width=WIDTH)
+    agree = float(jnp.mean(jnp.argmax(ql, 1) == jnp.argmax(fl, 1)))
+    assert agree >= 0.75, f"int8 top-1 agreement with float only {agree}"
+
+
+def test_weight_quantization_ranges(params):
+    for bits in (2, 4, 8):
+        w_q, s = model._quantize_tensor(params["pilot/w"], bits)
+        hi = (1 << (bits - 1)) - 1
+        assert w_q.max() <= hi and w_q.min() >= -hi - 1
+        assert s > 0

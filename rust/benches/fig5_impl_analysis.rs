@@ -1,0 +1,57 @@
+//! Bench: Fig. 5 — implementation-aware analysis of Cases 1-3.
+//!
+//! Regenerates the layer-wise MACs / memory / BOPs series of paper Fig. 5
+//! and times the decoration pass (the platform-independent half of the
+//! pipeline).
+
+use aladin::impl_aware::{decorate, layer_summaries};
+use aladin::models;
+use aladin::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Fig. 5: implementation-aware analysis ===");
+
+    for case in models::all_cases() {
+        let name = case.name.clone();
+        let (g, cfg) = case.build();
+        let decorated = decorate(g.clone(), &cfg).expect("decoration failed");
+        let rows = layer_summaries(&decorated);
+
+        // the figure's three series
+        println!("\n-- {name} --");
+        println!(
+            "{:<18} {:>14} {:>12} {:>16}",
+            "layer", "MACs(eq5)", "mem kB", "BOPs"
+        );
+        for r in &rows {
+            if r.op == "Relu" || r.op == "Flatten" {
+                continue;
+            }
+            println!(
+                "{:<18} {:>14} {:>12.1} {:>16}",
+                r.name,
+                r.macs,
+                r.total_mem_kb(),
+                r.bops
+            );
+        }
+        println!(
+            "totals: MACs(eq5) {}  physical MACs {}  BOPs {}  params {:.1} kB",
+            decorated.total_macs(),
+            rows.iter().map(|r| r.macs_physical).sum::<u64>(),
+            decorated.total_bops(),
+            decorated.total_param_bits() as f64 / 8192.0
+        );
+
+        bench(&format!("fig5/decorate/{name}"), 3, 20, || {
+            let (g, cfg) = {
+                // rebuild to include graph construction in a fair end-to-end
+                // measurement of the user-facing operation
+                black_box(())
+                ;
+                (g.clone(), cfg.clone())
+            };
+            decorate(g, &cfg).unwrap()
+        });
+    }
+}

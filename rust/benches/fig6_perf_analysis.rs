@@ -1,0 +1,59 @@
+//! Bench: Fig. 6 — platform-aware simulation of Cases 1-3 on GAP8.
+//!
+//! Regenerates the per-layer cycles + L1/L2 utilization comparison of
+//! paper Fig. 6 and times the platform-aware half of the pipeline
+//! (fusion + tiling + scheduling + cycle simulation).
+
+use aladin::coordinator::Pipeline;
+use aladin::impl_aware::decorate;
+use aladin::models;
+use aladin::platform::presets;
+use aladin::platform_aware::{build_schedule, fuse};
+use aladin::sim::{report, simulate};
+use aladin::util::bench::bench;
+
+fn main() {
+    println!("=== Fig. 6: platform-aware performance analysis (GAP8) ===");
+
+    let mut sims = Vec::new();
+    for case in models::all_cases() {
+        let (g, cfg) = case.build();
+        let a = Pipeline::new(presets::gap8(), cfg).analyze(g).unwrap();
+        sims.push(a.sim);
+    }
+    let refs: Vec<&aladin::sim::SimResult> = sims.iter().collect();
+    print!(
+        "{}",
+        report::render_comparison(&["case1", "case2", "case3"], &refs)
+    );
+
+    // the §VIII-B headline comparisons
+    let cyc = |i: usize, layer: &str| {
+        sims[i]
+            .layers
+            .iter()
+            .find(|l| l.name == layer)
+            .map(|l| l.cycles)
+            .unwrap_or(0)
+    };
+    println!(
+        "\nint4-vs-int8 im2col (RC_2): case2/case1 = {:.2} (paper: ~1, unpack overhead)",
+        cyc(1, "RC_2") as f64 / cyc(0, "RC_2") as f64
+    );
+    println!(
+        "2-bit vs 4-bit LUT (RC_21): case3/case2 = {:.2} (paper: ~1, shared-LUT contention)",
+        cyc(2, "RC_21") as f64 / cyc(1, "RC_21").max(1) as f64
+    );
+
+    // timing: the simulation half alone, per case
+    for case in models::all_cases() {
+        let name = case.name.clone();
+        let (g, cfg) = case.build();
+        let decorated = decorate(g, &cfg).unwrap();
+        let platform = presets::gap8();
+        bench(&format!("fig6/fuse+tile+simulate/{name}"), 3, 20, || {
+            let schedule = build_schedule(fuse(&decorated).unwrap(), &platform).unwrap();
+            simulate(&schedule).total_cycles()
+        });
+    }
+}

@@ -1,0 +1,57 @@
+//! Bench: Fig. 7 — hardware design-space exploration grid (Case 2).
+//!
+//! Regenerates the 3x3 cores x L2 grid of paper Fig. 7 (total cycles per
+//! point + tiling configurations) and times the full grid search — the
+//! operation whose cost determines how much of the design space a user can
+//! screen interactively.
+
+use aladin::dse::{speedups, GridSearch};
+use aladin::models;
+use aladin::platform::presets;
+use aladin::util::bench::bench;
+
+fn main() {
+    println!("=== Fig. 7: HW design-space exploration (Case 2) ===");
+
+    let (g, cfg) = models::case2().build();
+    let grid = GridSearch::fig7(presets::gap8());
+    let points = grid.run_canonical(g.clone(), &cfg).unwrap();
+
+    println!(
+        "{:>5} {:>7} {:>14} {:>9} {:>12}",
+        "cores", "L2 kB", "cycles", "speedup", "L3 traf kB"
+    );
+    for (p, (_, _, s)) in points.iter().zip(speedups(&points)) {
+        println!(
+            "{:>5} {:>7} {:>14} {:>8.2}x {:>12.1}",
+            p.cores, p.l2_kb, p.total_cycles, s, p.l3_traffic_kb
+        );
+    }
+
+    let t = |c: usize, l2: u64| {
+        points
+            .iter()
+            .find(|p| p.cores == c && p.l2_kb == l2)
+            .unwrap()
+            .total_cycles as f64
+    };
+    println!(
+        "\ncore-scaling saturation @256kB: 2->4 {:.2}x, 4->8 {:.2}x (paper: saturates beyond 4)",
+        t(2, 256) / t(4, 256),
+        t(4, 256) / t(8, 256)
+    );
+
+    bench("fig7/grid_search_9pts/case2", 2, 10, || {
+        grid.run_canonical(g.clone(), &cfg).unwrap().len()
+    });
+
+    // a denser grid to show DSE throughput at scale
+    let dense = GridSearch {
+        base: presets::gap8(),
+        cores: vec![1, 2, 3, 4, 6, 8],
+        l2_kb: vec![128, 192, 256, 320, 384, 448, 512],
+    };
+    bench("fig7/grid_search_42pts/case2", 1, 5, || {
+        dense.run_canonical(g.clone(), &cfg).unwrap().len()
+    });
+}

@@ -1,0 +1,63 @@
+//! Microbenchmarks of the analysis pipeline stages — the §Perf
+//! (EXPERIMENTS.md) measurement harness: decoration, fusion, tiling,
+//! simulation, and the end-to-end pipeline, on the full-width Case 1.
+
+use aladin::coordinator::Pipeline;
+use aladin::impl_aware::decorate;
+use aladin::models;
+use aladin::platform::presets;
+use aladin::platform_aware::{build_schedule, fuse, plan_layer};
+use aladin::sim::simulate;
+use aladin::util::bench::bench;
+
+fn main() {
+    println!("=== pipeline stage microbenchmarks (Case 1, width 1.0) ===");
+    let case = models::case1();
+    let (g, cfg) = case.build();
+    let platform = presets::gap8();
+
+    bench("stage/build_graph", 3, 30, || models::case1().build().0.nodes.len());
+
+    bench("stage/decorate", 3, 30, || {
+        decorate(g.clone(), &cfg).unwrap().nodes.len()
+    });
+
+    let decorated = decorate(g.clone(), &cfg).unwrap();
+    bench("stage/fuse", 3, 50, || fuse(&decorated).unwrap().len());
+
+    let layers = fuse(&decorated).unwrap();
+    bench("stage/tiling_all_layers", 3, 50, || {
+        layers
+            .iter()
+            .map(|l| plan_layer(l, &platform).unwrap().n_tiles())
+            .sum::<usize>()
+    });
+
+    bench("stage/build_schedule", 3, 50, || {
+        build_schedule(layers.clone(), &platform).unwrap().layers.len()
+    });
+
+    let schedule = build_schedule(layers.clone(), &platform).unwrap();
+    bench("stage/simulate", 3, 50, || simulate(&schedule).total_cycles());
+
+    bench("e2e/full_pipeline_case1", 2, 20, || {
+        let (g, cfg) = models::case1().build();
+        Pipeline::new(platform.clone(), cfg)
+            .analyze(g)
+            .unwrap()
+            .latency
+            .total_cycles
+    });
+
+    // worst case for the tiling solver: very wide layer on a tiny L1
+    let mut small = presets::gap8();
+    small.l1_bytes = 8 * 1024;
+    small.l1_banks = 8;
+    bench("stage/tiling_tiny_l1", 2, 10, || {
+        layers
+            .iter()
+            .filter_map(|l| plan_layer(l, &small).ok())
+            .map(|p| p.n_tiles())
+            .sum::<usize>()
+    });
+}

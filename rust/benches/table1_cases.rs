@@ -1,0 +1,76 @@
+//! Bench: Table I — the three mixed-precision/implementation cases.
+//!
+//! Regenerates the Table-I structure, the model-derived columns (parameter
+//! memory, latency bound), and — when `artifacts/` exists — the measured
+//! accuracy column via the PJRT runtime. Times the full per-case pipeline.
+
+use aladin::coordinator::Pipeline;
+use aladin::models;
+use aladin::platform::presets;
+use aladin::runtime;
+use aladin::util::bench::bench;
+
+fn main() {
+    println!("=== Table I: cases, accuracy, latency ===\n");
+    println!(
+        "{:<12} {:>14} {:>14} {:>14}",
+        "Block", "Case 1", "Case 2", "Case 3"
+    );
+    for r in models::table1_rows() {
+        println!(
+            "{:<12} {:>14} {:>14} {:>14}",
+            r.block, r.case1, r.case2, r.case3
+        );
+    }
+
+    // measured accuracy (Table I bottom row) if artifacts are built
+    let accuracy: Vec<Option<f64>> = match runtime::Manifest::load("artifacts")
+        .and_then(|m| runtime::Engine::cpu().and_then(|e| runtime::evaluate_all(&e, &m)))
+    {
+        Ok(reports) => ["case1", "case2", "case3"]
+            .iter()
+            .map(|n| reports.iter().find(|r| &r.model == n).map(|r| r.accuracy))
+            .collect(),
+        Err(e) => {
+            println!("\n(accuracy column skipped: {e})");
+            vec![None, None, None]
+        }
+    };
+
+    let mut row_acc = String::from("Accuracy    ");
+    let mut row_paper = String::from("Paper acc.  ");
+    for (i, (name, paper)) in models::PAPER_ACCURACY.iter().enumerate() {
+        let _ = name;
+        match accuracy[i] {
+            Some(a) => row_acc.push_str(&format!(" {a:>13.4}")),
+            None => row_acc.push_str(&format!(" {:>13}", "-")),
+        }
+        row_paper.push_str(&format!(" {paper:>13.2}"));
+    }
+    println!("{row_acc}\n{row_paper}");
+
+    println!("\nmodel-derived columns:");
+    println!(
+        "{:<8} {:>12} {:>14} {:>12}",
+        "case", "params kB", "cycles", "latency ms"
+    );
+    for case in models::all_cases() {
+        let name = case.name.clone();
+        let (g, cfg) = case.build();
+        let a = Pipeline::new(presets::gap8(), cfg.clone()).analyze(g.clone()).unwrap();
+        println!(
+            "{:<8} {:>12.1} {:>14} {:>12.3}",
+            name,
+            a.impl_summary.iter().map(|r| r.param_mem_bits).sum::<u64>() as f64 / 8192.0,
+            a.latency.total_cycles,
+            a.latency.latency_s * 1e3
+        );
+        bench(&format!("table1/full_pipeline/{name}"), 2, 10, || {
+            Pipeline::new(presets::gap8(), cfg.clone())
+                .analyze(g.clone())
+                .unwrap()
+                .latency
+                .total_cycles
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Latency bounding and deadline screening (paper §I, §VII: "ALADIN
+//! outputs the inference latency experienced by a model inference instance,
+//! which can be compared with its deadline to assess the satisfaction of
+//! real-time constraints").
+
+use crate::platform::PlatformSpec;
+use crate::sim::SimResult;
+
+/// Latency bound of one inference pass.
+#[derive(Debug, Clone)]
+pub struct LatencyBound {
+    pub total_cycles: u64,
+    pub latency_s: f64,
+    /// Per-layer contributions (name, cycles, share of total).
+    pub breakdown: Vec<(String, u64, f64)>,
+}
+
+impl LatencyBound {
+    pub fn from_sim(sim: &SimResult, platform: &PlatformSpec) -> Self {
+        let total = sim.total_cycles();
+        let breakdown = sim
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    l.name.clone(),
+                    l.cycles,
+                    l.cycles as f64 / total.max(1) as f64,
+                )
+            })
+            .collect();
+        Self {
+            total_cycles: total,
+            latency_s: platform.cycles_to_seconds(total),
+            breakdown,
+        }
+    }
+
+    /// The layers dominating latency (top `n` by cycles) — the
+    /// "bottleneck uncovering" use case.
+    pub fn bottlenecks(&self, n: usize) -> Vec<(String, u64, f64)> {
+        let mut b = self.breakdown.clone();
+        b.sort_by(|a, c| c.1.cmp(&a.1));
+        b.truncate(n);
+        b
+    }
+}
+
+/// Deadline feasibility verdict for a candidate configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Feasibility {
+    /// Latency bound within the deadline.
+    Feasible { slack_s: f64 },
+    /// Latency bound exceeds the deadline.
+    DeadlineMiss { overrun_s: f64 },
+}
+
+/// Screen a latency bound against a deadline (seconds).
+pub fn check_deadline(bound: &LatencyBound, deadline_s: f64) -> Feasibility {
+    if bound.latency_s <= deadline_s {
+        Feasibility::Feasible {
+            slack_s: deadline_s - bound.latency_s,
+        }
+    } else {
+        Feasibility::DeadlineMiss {
+            overrun_s: bound.latency_s - deadline_s,
+        }
+    }
+}
+
+
+impl crate::util::ToJson for LatencyBound {
+    fn to_json(&self) -> crate::util::Value {
+        let breakdown: Vec<crate::util::Value> = self
+            .breakdown
+            .iter()
+            .map(|(name, cycles, share)| {
+                crate::util::Value::obj()
+                    .with("layer", name.clone())
+                    .with("cycles", *cycles)
+                    .with("share", *share)
+            })
+            .collect();
+        crate::util::Value::obj()
+            .with("total_cycles", self.total_cycles)
+            .with("latency_s", self.latency_s)
+            .with("breakdown", crate::util::Value::Arr(breakdown))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::{build_schedule, fuse};
+    use crate::sim::simulate;
+
+    fn bound() -> (LatencyBound, crate::platform::PlatformSpec) {
+        let p = presets::gap8();
+        let mut b = GraphBuilder::new(
+            "n",
+            TensorSpec::chw(3, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(32, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .conv("c1", ConvAttrs::standard(64, 3, 1, 1), ElemType::int(8))
+            .relu("r1")
+            .quant("q1", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let sim = simulate(&build_schedule(fuse(&g).unwrap(), &p).unwrap());
+        (LatencyBound::from_sim(&sim, &p), p)
+    }
+
+    #[test]
+    fn breakdown_shares_sum_to_one() {
+        let (b, _) = bound();
+        let sum: f64 = b.breakdown.iter().map(|x| x.2).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(b.latency_s > 0.0);
+    }
+
+    #[test]
+    fn bottlenecks_sorted_descending() {
+        let (b, _) = bound();
+        let top = b.bottlenecks(2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].1 >= top[1].1);
+    }
+
+    #[test]
+    fn deadline_screening() {
+        let (b, _) = bound();
+        match check_deadline(&b, b.latency_s * 2.0) {
+            Feasibility::Feasible { slack_s } => assert!(slack_s > 0.0),
+            other => panic!("{other:?}"),
+        }
+        match check_deadline(&b, b.latency_s / 2.0) {
+            Feasibility::DeadlineMiss { overrun_s } => assert!(overrun_s > 0.0),
+            other => panic!("{other:?}"),
+        }
+    }
+}

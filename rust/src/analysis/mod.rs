@@ -1,0 +1,7 @@
+//! Latency analysis and deadline screening of candidate configurations.
+
+pub mod latency;
+pub mod schedulability;
+
+pub use latency::{check_deadline, Feasibility, LatencyBound};
+pub use schedulability::{rta_nonpreemptive, schedulable, total_utilization, InferenceTask, TaskVerdict};

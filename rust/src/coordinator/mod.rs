@@ -1,0 +1,8 @@
+//! The ALADIN workflow coordinator (paper Fig. 3): canonical model →
+//! implementation-aware model → platform-aware model → simulation →
+//! analysis, as one composable pipeline. This is the public entry point a
+//! downstream user drives (directly or through the CLI).
+
+pub mod pipeline;
+
+pub use pipeline::{Analysis, Pipeline};

@@ -1,0 +1,170 @@
+//! The end-to-end analysis pipeline (paper Fig. 3).
+//!
+//! ```text
+//! QONNX model + impl config ──▶ implementation-aware model (§VI)
+//!                                    │
+//!              platform spec ──▶ platform-aware model (§VII)
+//!                                    │
+//!                              cycle simulation (GVSoC substitute)
+//!                                    │
+//!                    latency bound + deadline screening (§V step 4)
+//! ```
+
+use crate::analysis::{check_deadline, Feasibility, LatencyBound};
+use crate::error::Result;
+use crate::graph::ir::Graph;
+use crate::graph::{qonnx, validate};
+use crate::impl_aware::{decorate, layer_summaries, ImplConfig, LayerSummary};
+use crate::platform::PlatformSpec;
+use crate::platform_aware::{build_schedule, fuse, NetworkSchedule};
+use crate::sim::{simulate, SimResult};
+use std::path::Path;
+
+/// Everything ALADIN produces for one (model, impl config, platform)
+/// candidate.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// Model name.
+    pub model: String,
+    /// Platform name.
+    pub platform: String,
+    /// Fig.-5 data: per-layer MACs/BOPs/memory from the
+    /// implementation-aware model (platform-independent).
+    pub impl_summary: Vec<LayerSummary>,
+    /// Fig.-6 data: simulated per-layer cycles and L1/L2 utilization.
+    pub sim: SimResult,
+    /// End-to-end latency bound.
+    pub latency: LatencyBound,
+    /// Peak memory utilization (bytes).
+    pub peak_l1: u64,
+    pub peak_l2: u64,
+    /// Total L3 DMA traffic (bytes).
+    pub l3_traffic: u64,
+}
+
+impl Analysis {
+    /// Screen against a deadline in seconds.
+    pub fn feasibility(&self, deadline_s: f64) -> Feasibility {
+        check_deadline(&self.latency, deadline_s)
+    }
+}
+
+/// Pipeline driver holding the platform and implementation configuration.
+pub struct Pipeline {
+    pub platform: PlatformSpec,
+    pub impl_config: ImplConfig,
+}
+
+impl Pipeline {
+    pub fn new(platform: PlatformSpec, impl_config: ImplConfig) -> Self {
+        Self { platform, impl_config }
+    }
+
+    /// Run the full workflow on a canonical graph.
+    pub fn analyze(&self, canonical: Graph) -> Result<Analysis> {
+        validate::validate(&canonical)?;
+        let model = canonical.name.clone();
+
+        // step 1: implementation-aware model (§VI)
+        let decorated = decorate(canonical, &self.impl_config)?;
+        let impl_summary = layer_summaries(&decorated);
+
+        // step 2: platform-aware model (§VII)
+        let schedule = self.schedule(&decorated)?;
+
+        // step 3: cycle simulation (GVSoC substitute)
+        let sim = simulate(&schedule);
+        let latency = LatencyBound::from_sim(&sim, &self.platform);
+
+        Ok(Analysis {
+            model,
+            platform: self.platform.name.clone(),
+            impl_summary,
+            peak_l1: schedule.peak_l1(),
+            peak_l2: schedule.peak_l2(),
+            l3_traffic: schedule.l3_traffic(),
+            sim,
+            latency,
+        })
+    }
+
+    /// The platform-aware model alone (for inspection / DSE reuse).
+    pub fn schedule(&self, decorated: &Graph) -> Result<NetworkSchedule> {
+        build_schedule(fuse(decorated)?, &self.platform)
+    }
+
+    /// Load a QONNX-dialect JSON model and analyze it.
+    pub fn analyze_file(&self, path: impl AsRef<Path>) -> Result<Analysis> {
+        let doc = qonnx::QonnxModel::from_file(path)?;
+        self.analyze(doc.to_graph()?)
+    }
+}
+
+
+impl crate::util::ToJson for Analysis {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("model", self.model.clone())
+            .with("platform", self.platform.clone())
+            .with("impl_summary", crate::util::ToJson::to_json(&self.impl_summary))
+            .with("sim", crate::util::ToJson::to_json(&self.sim))
+            .with("latency", crate::util::ToJson::to_json(&self.latency))
+            .with("peak_l1", self.peak_l1)
+            .with("peak_l2", self.peak_l2)
+            .with("l3_traffic", self.l3_traffic)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::platform::presets;
+
+    #[test]
+    fn full_pipeline_on_case1() {
+        let mut case = models::case1();
+        case.width_mult = 0.25; // keep the test fast
+        let (g, cfg) = case.build();
+        let pipe = Pipeline::new(presets::gap8(), cfg);
+        let a = pipe.analyze(g).unwrap();
+        assert!(!a.impl_summary.is_empty());
+        assert!(a.latency.total_cycles > 0);
+        assert!(a.peak_l1 <= presets::gap8().l1_bytes);
+        assert!(a.peak_l2 <= presets::gap8().l2_bytes);
+        // MobileNet: 21 RC layers + RP + FC visible in the sim
+        let rc_count = a.sim.layers.iter().filter(|l| l.name.starts_with("RC")).count();
+        assert_eq!(rc_count, 21);
+    }
+
+    #[test]
+    fn feasibility_verdicts() {
+        let mut case = models::case1();
+        case.width_mult = 0.25;
+        let (g, cfg) = case.build();
+        let pipe = Pipeline::new(presets::gap8(), cfg);
+        let a = pipe.analyze(g).unwrap();
+        assert!(matches!(
+            a.feasibility(a.latency.latency_s * 10.0),
+            Feasibility::Feasible { .. }
+        ));
+        assert!(matches!(
+            a.feasibility(a.latency.latency_s / 10.0),
+            Feasibility::DeadlineMiss { .. }
+        ));
+    }
+
+    #[test]
+    fn qonnx_file_round_trip_through_pipeline() {
+        let mut case = models::case1();
+        case.width_mult = 0.25;
+        let (g, cfg) = case.build();
+        let doc = crate::graph::qonnx::export(&g);
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let path = dir.path().join("m.qonnx.json");
+        doc.to_file(&path).unwrap();
+        let pipe = Pipeline::new(presets::gap8(), cfg);
+        let a = pipe.analyze_file(&path).unwrap();
+        assert!(a.latency.total_cycles > 0);
+    }
+}

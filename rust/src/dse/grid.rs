@@ -1,0 +1,209 @@
+//! Hardware design-space exploration (paper §VIII-C, Fig. 7).
+//!
+//! Grid search over reconfigurable platform knobs (cluster core count, L2
+//! SRAM capacity) for a fixed model configuration, reporting per-layer and
+//! total cycles plus the tiling configurations chosen at each point.
+
+use crate::error::Result;
+use crate::graph::ir::Graph;
+use crate::impl_aware::{decorate, ImplConfig};
+use crate::platform::PlatformSpec;
+use crate::platform_aware::{build_schedule, fuse};
+use crate::sim::{simulate, SimResult};
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub cores: usize,
+    pub l2_kb: u64,
+    pub total_cycles: u64,
+    pub latency_s: f64,
+    pub peak_l1_kb: f64,
+    pub peak_l2_kb: f64,
+    pub l3_traffic_kb: f64,
+    pub sim: SimResult,
+    /// (layer, tiles_c, tiles_h, double_buffered) per layer — the Fig. 7
+    /// bottom-row "tiling configurations".
+    pub tilings: Vec<(String, usize, usize, bool)>,
+}
+
+/// Grid-search driver.
+pub struct GridSearch {
+    /// Base platform whose knobs are varied.
+    pub base: PlatformSpec,
+    pub cores: Vec<usize>,
+    pub l2_kb: Vec<u64>,
+}
+
+impl GridSearch {
+    /// The paper's Fig. 7 grid: cores x L2 in {2,4,8} x {256,320,512} kB.
+    pub fn fig7(base: PlatformSpec) -> Self {
+        Self {
+            base,
+            cores: vec![2, 4, 8],
+            l2_kb: vec![256, 320, 512],
+        }
+    }
+
+    /// Evaluate a decorated graph on every grid point (parallelized).
+    pub fn run(&self, decorated: &Graph) -> Result<Vec<DesignPoint>> {
+        let layers = fuse(decorated)?;
+        let points: Vec<(usize, u64)> = self
+            .cores
+            .iter()
+            .flat_map(|&c| self.l2_kb.iter().map(move |&l2| (c, l2)))
+            .collect();
+
+        // evaluate grid points on scoped threads (no rayon in the offline
+        // vendored set); each point is independent
+        let results: Vec<Result<DesignPoint>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = points
+                .iter()
+                .map(|&(cores, l2_kb)| {
+                    let layers = &layers;
+                    let base = &self.base;
+                    scope.spawn(move || -> Result<DesignPoint> {
+                        let platform = base.reconfigure(cores, l2_kb * 1024);
+                        let schedule = build_schedule(layers.clone(), &platform)?;
+                        let sim = simulate(&schedule);
+                        let tilings = schedule
+                            .layers
+                            .iter()
+                            .map(|l| {
+                                (
+                                    l.layer.name.clone(),
+                                    l.tile.tiles_c,
+                                    l.tile.tiles_h,
+                                    l.tile.double_buffered,
+                                )
+                            })
+                            .collect();
+                        Ok(DesignPoint {
+                            cores,
+                            l2_kb,
+                            total_cycles: sim.total_cycles(),
+                            latency_s: platform.cycles_to_seconds(sim.total_cycles()),
+                            peak_l1_kb: schedule.peak_l1() as f64 / 1024.0,
+                            peak_l2_kb: schedule.peak_l2() as f64 / 1024.0,
+                            l3_traffic_kb: schedule.l3_traffic() as f64 / 1024.0,
+                            sim,
+                            tilings,
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("dse worker panicked")).collect()
+        });
+        results.into_iter().collect()
+    }
+
+    /// Convenience: decorate a canonical graph with `cfg` then run.
+    pub fn run_canonical(&self, g: Graph, cfg: &ImplConfig) -> Result<Vec<DesignPoint>> {
+        let d = decorate(g, cfg)?;
+        self.run(&d)
+    }
+}
+
+/// Speed-up of each design point relative to the slowest point.
+pub fn speedups(points: &[DesignPoint]) -> Vec<(usize, u64, f64)> {
+    let worst = points.iter().map(|p| p.total_cycles).max().unwrap_or(1) as f64;
+    points
+        .iter()
+        .map(|p| (p.cores, p.l2_kb, worst / p.total_cycles as f64))
+        .collect()
+}
+
+
+impl crate::util::ToJson for DesignPoint {
+    fn to_json(&self) -> crate::util::Value {
+        let tilings: Vec<crate::util::Value> = self
+            .tilings
+            .iter()
+            .map(|(layer, tc, th, dbuf)| {
+                crate::util::Value::obj()
+                    .with("layer", layer.clone())
+                    .with("tiles_c", *tc)
+                    .with("tiles_h", *th)
+                    .with("double_buffered", *dbuf)
+            })
+            .collect();
+        crate::util::Value::obj()
+            .with("cores", self.cores)
+            .with("l2_kb", self.l2_kb)
+            .with("total_cycles", self.total_cycles)
+            .with("latency_s", self.latency_s)
+            .with("peak_l1_kb", self.peak_l1_kb)
+            .with("peak_l2_kb", self.peak_l2_kb)
+            .with("l3_traffic_kb", self.l3_traffic_kb)
+            .with("sim", crate::util::ToJson::to_json(&self.sim))
+            .with("tilings", crate::util::Value::Arr(tilings))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::platform::presets;
+
+    fn small_case2_points() -> Vec<DesignPoint> {
+        // width-reduced case-2 MobileNet for test speed
+        let mut c = models::case2();
+        c.width_mult = 0.25;
+        let (g, cfg) = c.build();
+        GridSearch::fig7(presets::gap8())
+            .run_canonical(g, &cfg)
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_produces_nine_points() {
+        let pts = small_case2_points();
+        assert_eq!(pts.len(), 9);
+        for p in &pts {
+            assert!(p.total_cycles > 0);
+            assert!(!p.tilings.is_empty());
+        }
+    }
+
+    #[test]
+    fn more_cores_never_slower_same_l2() {
+        let pts = small_case2_points();
+        for &l2 in &[256u64, 320, 512] {
+            let mut by_cores: Vec<&DesignPoint> =
+                pts.iter().filter(|p| p.l2_kb == l2).collect();
+            by_cores.sort_by_key(|p| p.cores);
+            for w in by_cores.windows(2) {
+                assert!(
+                    w[1].total_cycles <= w[0].total_cycles,
+                    "cores {}->{} at L2={l2}kB: {} -> {}",
+                    w[0].cores,
+                    w[1].cores,
+                    w[0].total_cycles,
+                    w[1].total_cycles
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_l2_never_slower_same_cores() {
+        let pts = small_case2_points();
+        for &cores in &[2usize, 4, 8] {
+            let mut by_l2: Vec<&DesignPoint> =
+                pts.iter().filter(|p| p.cores == cores).collect();
+            by_l2.sort_by_key(|p| p.l2_kb);
+            for w in by_l2.windows(2) {
+                assert!(w[1].total_cycles <= w[0].total_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn speedups_relative_to_worst() {
+        let pts = small_case2_points();
+        let s = speedups(&pts);
+        assert!(s.iter().any(|&(_, _, x)| (x - 1.0).abs() < 1e-9)); // the worst point
+        assert!(s.iter().all(|&(_, _, x)| x >= 1.0));
+    }
+}

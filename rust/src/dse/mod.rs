@@ -1,0 +1,10 @@
+//! Design-space exploration: hardware grid search (Fig. 7) and Pareto
+//! screening of candidate configurations.
+
+pub mod grid;
+pub mod pareto;
+pub mod quant_search;
+
+pub use grid::{speedups, DesignPoint, GridSearch};
+pub use pareto::{best_feasible, pareto_front, Candidate};
+pub use quant_search::{exhaustive_pareto, greedy_memory, QuantCandidate};

@@ -1,0 +1,92 @@
+//! Pareto filtering over candidate configurations (accuracy vs latency vs
+//! resources) — the screening step that closes the paper's design loop
+//! (§V step 4: screen candidates by deadline feasibility and trade-offs).
+
+
+/// A candidate configuration's evaluated metrics.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub name: String,
+    /// Classification accuracy in [0, 1] (higher better).
+    pub accuracy: f64,
+    /// Inference latency bound in cycles (lower better).
+    pub latency_cycles: u64,
+    /// Peak memory footprint in bytes (lower better).
+    pub peak_mem_bytes: u64,
+}
+
+impl Candidate {
+    /// True if `self` dominates `other` (no worse on all axes, strictly
+    /// better on at least one).
+    pub fn dominates(&self, other: &Candidate) -> bool {
+        let ge = self.accuracy >= other.accuracy
+            && self.latency_cycles <= other.latency_cycles
+            && self.peak_mem_bytes <= other.peak_mem_bytes;
+        let gt = self.accuracy > other.accuracy
+            || self.latency_cycles < other.latency_cycles
+            || self.peak_mem_bytes < other.peak_mem_bytes;
+        ge && gt
+    }
+}
+
+/// Return the Pareto-optimal subset (non-dominated candidates), preserving
+/// input order.
+pub fn pareto_front(candidates: &[Candidate]) -> Vec<Candidate> {
+    candidates
+        .iter()
+        .filter(|c| !candidates.iter().any(|o| o.dominates(c)))
+        .cloned()
+        .collect()
+}
+
+/// Filter candidates meeting a deadline (cycles), then return the
+/// accuracy-maximal one — the "best feasible configuration" query.
+pub fn best_feasible(candidates: &[Candidate], deadline_cycles: u64) -> Option<Candidate> {
+    candidates
+        .iter()
+        .filter(|c| c.latency_cycles <= deadline_cycles)
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands() -> Vec<Candidate> {
+        vec![
+            Candidate { name: "a".into(), accuracy: 0.83, latency_cycles: 1000, peak_mem_bytes: 100 },
+            Candidate { name: "b".into(), accuracy: 0.77, latency_cycles: 500, peak_mem_bytes: 80 },
+            Candidate { name: "c".into(), accuracy: 0.70, latency_cycles: 900, peak_mem_bytes: 90 }, // dominated by b
+            Candidate { name: "d".into(), accuracy: 0.78, latency_cycles: 600, peak_mem_bytes: 120 },
+        ]
+    }
+
+    #[test]
+    fn dominance() {
+        let c = cands();
+        assert!(c[1].dominates(&c[2]));
+        assert!(!c[0].dominates(&c[1]));
+        assert!(!c[1].dominates(&c[0]));
+        // no self-domination
+        assert!(!c[0].dominates(&c[0]));
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let f = pareto_front(&cands());
+        let names: Vec<&str> = f.iter().map(|c| c.name.as_str()).collect();
+        assert!(names.contains(&"a"));
+        assert!(names.contains(&"b"));
+        assert!(names.contains(&"d"));
+        assert!(!names.contains(&"c"));
+    }
+
+    #[test]
+    fn best_feasible_respects_deadline() {
+        let c = cands();
+        assert_eq!(best_feasible(&c, 550).unwrap().name, "b");
+        assert_eq!(best_feasible(&c, 2000).unwrap().name, "a");
+        assert!(best_feasible(&c, 100).is_none());
+    }
+}

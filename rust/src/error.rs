@@ -1,0 +1,56 @@
+//! Shared error type for the ALADIN library.
+
+use thiserror::Error;
+
+/// Errors produced across the analysis pipeline.
+#[derive(Debug, Error)]
+pub enum AladinError {
+    #[error("graph contains a cycle through node `{node}`")]
+    GraphCycle { node: String },
+
+    #[error("graph validation failed at `{at}`: {reason}")]
+    Validation { at: String, reason: String },
+
+    #[error("shape mismatch at `{at}`: expected {expected}, got {got}")]
+    ShapeMismatch {
+        at: String,
+        expected: String,
+        got: String,
+    },
+
+    #[error("implementation config error for `{node}`: {reason}")]
+    ImplConfig { node: String, reason: String },
+
+    #[error("unsupported: {0}")]
+    Unsupported(String),
+
+    #[error("layer `{layer}` cannot be tiled to fit L1 ({required} B required of {available} B available)")]
+    Infeasible {
+        layer: String,
+        required: u64,
+        available: u64,
+    },
+
+    #[error("platform model error: {0}")]
+    Platform(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("{0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("{0}")]
+    Yaml(#[from] crate::util::yamlish::YamlError),
+
+    #[error("parse error at `{at}`: {reason}")]
+    Parse { at: String, reason: String },
+}
+
+pub type Result<T> = std::result::Result<T, AladinError>;

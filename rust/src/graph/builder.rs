@@ -1,0 +1,280 @@
+//! Fluent builder for sequential QNN graphs with shape inference.
+//!
+//! The paper's workloads (MobileNetV1-class CNNs) are sequential chains of
+//! Conv/Gemm blocks interleaved with ReLU, Quant and pooling nodes. The
+//! builder tracks the current activation edge and its [`TensorSpec`],
+//! infers output shapes, and materializes parameter edges (weights, biases)
+//! in QONNX style.
+
+use super::ir::*;
+use super::tensor::{ElemType, TensorSpec};
+
+/// Incrementally builds a [`Graph`], threading the activation edge through
+/// successive layers.
+pub struct GraphBuilder {
+    g: Graph,
+    /// Current activation edge (output of the last added layer).
+    cur: EdgeId,
+    /// Accumulator precision used for linear-op outputs before requant.
+    acc: ElemType,
+    n_layers: usize,
+}
+
+impl GraphBuilder {
+    /// Start a graph with one input of the given spec. `acc` is the
+    /// accumulator type produced by linear ops (32-bit in the paper's
+    /// byte-precision configs, 16-bit for sub-byte ones, §VIII).
+    pub fn new(name: impl Into<String>, input: TensorSpec, acc: ElemType) -> Self {
+        let mut g = Graph::new(name);
+        let inp = g.add_node("input", Op::Input);
+        let e = g.add_edge("x0", input, EdgeKind::Activation);
+        g.connect_output(inp, e);
+        Self {
+            g,
+            cur: e,
+            acc,
+            n_layers: 0,
+        }
+    }
+
+    /// Spec of the current activation edge.
+    pub fn cur_spec(&self) -> &TensorSpec {
+        &self.g.edge(self.cur).spec
+    }
+
+    /// Change the accumulator precision for subsequent linear layers.
+    pub fn set_acc(&mut self, acc: ElemType) -> &mut Self {
+        self.acc = acc;
+        self
+    }
+
+    fn fresh_edge(&mut self, prefix: &str, spec: TensorSpec) -> EdgeId {
+        let name = format!("{}_{}", prefix, self.g.edges.len());
+        self.g.add_edge(name, spec, EdgeKind::Activation)
+    }
+
+    fn attach(&mut self, node: NodeId, out: EdgeId) {
+        self.g.connect_input(node, self.cur);
+        self.g.connect_output(node, out);
+        self.cur = out;
+        self.n_layers += 1;
+    }
+
+    /// Add a convolution with weights of element type `w`. Output precision
+    /// is the accumulator type (requantized by a following `quant`).
+    pub fn conv(&mut self, name: impl Into<String>, attrs: ConvAttrs, w: ElemType) -> &mut Self {
+        let name = name.into();
+        let in_spec = self.cur_spec().clone();
+        assert!(in_spec.dims.len() == 3, "conv expects [C,H,W] input");
+        let (cin, h, wd) = (in_spec.dims[0], in_spec.dims[1], in_spec.dims[2]);
+        assert!(
+            cin % attrs.groups == 0,
+            "in_channels {cin} not divisible by groups {}",
+            attrs.groups
+        );
+        let (oh, ow) = attrs.out_hw(h, wd);
+        let cout = attrs.out_channels;
+        let cpg = cin / attrs.groups;
+
+        let node = self.g.add_node(name.clone(), Op::Conv(attrs.clone()));
+        let w_edge = self.g.add_edge(
+            format!("{name}.weight"),
+            TensorSpec::new(vec![cout, cpg, attrs.kernel.0, attrs.kernel.1], w),
+            EdgeKind::Parameter,
+        );
+        let b_edge = self.g.add_edge(
+            format!("{name}.bias"),
+            TensorSpec::new(vec![cout], self.acc),
+            EdgeKind::Parameter,
+        );
+        let out = self.fresh_edge("x", TensorSpec::chw(cout, oh, ow, self.acc));
+        self.g.connect_input(node, w_edge);
+        self.g.connect_input(node, b_edge);
+        self.attach(node, out);
+        self
+    }
+
+    /// Add a fully-connected layer (expects a flattened `[F]` input).
+    pub fn gemm(&mut self, name: impl Into<String>, out_features: usize, w: ElemType) -> &mut Self {
+        let name = name.into();
+        let in_spec = self.cur_spec().clone();
+        assert!(in_spec.dims.len() == 1, "gemm expects flattened input");
+        let in_features = in_spec.dims[0];
+
+        let node = self
+            .g
+            .add_node(name.clone(), Op::Gemm(GemmAttrs { out_features }));
+        let w_edge = self.g.add_edge(
+            format!("{name}.weight"),
+            TensorSpec::new(vec![out_features, in_features], w),
+            EdgeKind::Parameter,
+        );
+        let b_edge = self.g.add_edge(
+            format!("{name}.bias"),
+            TensorSpec::new(vec![out_features], self.acc),
+            EdgeKind::Parameter,
+        );
+        let out = self.fresh_edge("x", TensorSpec::new(vec![out_features], self.acc));
+        self.g.connect_input(node, w_edge);
+        self.g.connect_input(node, b_edge);
+        self.attach(node, out);
+        self
+    }
+
+    /// Add a ReLU.
+    pub fn relu(&mut self, name: impl Into<String>) -> &mut Self {
+        let spec = self.cur_spec().clone();
+        let node = self.g.add_node(name, Op::Relu);
+        let out = self.fresh_edge("x", spec);
+        self.attach(node, out);
+        self
+    }
+
+    /// Add a requantization node converting to element type `to`.
+    pub fn quant(
+        &mut self,
+        name: impl Into<String>,
+        to: ElemType,
+        channelwise: bool,
+    ) -> &mut Self {
+        let mut spec = self.cur_spec().clone();
+        spec.elem = to;
+        let node = self
+            .g
+            .add_node(name, Op::Quant(QuantAttrs { to, channelwise }));
+        let out = self.fresh_edge("x", spec);
+        self.attach(node, out);
+        self
+    }
+
+    /// Add max pooling.
+    pub fn max_pool(&mut self, name: impl Into<String>, attrs: PoolAttrs) -> &mut Self {
+        let in_spec = self.cur_spec().clone();
+        let (oh, ow) = attrs.out_hw(in_spec.dims[1], in_spec.dims[2]);
+        let node = self.g.add_node(name, Op::MaxPool(attrs));
+        let out = self.fresh_edge("x", TensorSpec::chw(in_spec.dims[0], oh, ow, in_spec.elem));
+        self.attach(node, out);
+        self
+    }
+
+    /// Add average pooling (shift-approximated division, §VI-E).
+    pub fn avg_pool(&mut self, name: impl Into<String>, attrs: PoolAttrs) -> &mut Self {
+        let in_spec = self.cur_spec().clone();
+        let (oh, ow) = attrs.out_hw(in_spec.dims[1], in_spec.dims[2]);
+        let node = self.g.add_node(name, Op::AvgPool(attrs));
+        let out = self.fresh_edge("x", TensorSpec::chw(in_spec.dims[0], oh, ow, in_spec.elem));
+        self.attach(node, out);
+        self
+    }
+
+    /// Flatten `[C,H,W]` to `[C*H*W]`.
+    pub fn flatten(&mut self, name: impl Into<String>) -> &mut Self {
+        let in_spec = self.cur_spec().clone();
+        let node = self.g.add_node(name, Op::Flatten);
+        let out = self.fresh_edge(
+            "x",
+            TensorSpec::new(vec![in_spec.num_elems()], in_spec.elem),
+        );
+        self.attach(node, out);
+        self
+    }
+
+    /// Finish: add the Output node and return the graph.
+    pub fn finish(mut self) -> Graph {
+        let out = self.g.add_node("output", Op::Output);
+        self.g.connect_input(out, self.cur);
+        self.g
+    }
+
+    /// Number of compute layers added so far.
+    pub fn layer_count(&self) -> usize {
+        self.n_layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_conv_relu_quant_chain() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(3, 32, 32, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("conv0", ConvAttrs::standard(16, 3, 1, 1), ElemType::int(8))
+            .relu("relu0")
+            .quant("quant0", ElemType::int(8), true);
+        let g = b.finish();
+        // input + 3 compute + output
+        assert_eq!(g.nodes.len(), 5);
+        let conv = &g.nodes[1];
+        assert_eq!(conv.op.kind(), "Conv");
+        // conv output spec: 16x32x32 int32 accumulator
+        let out = g.output_edge(conv.id).unwrap();
+        assert_eq!(out.spec.dims, vec![16, 32, 32]);
+        assert_eq!(out.spec.elem, ElemType::int(32));
+        // quant output: back to int8
+        let q = &g.nodes[3];
+        assert_eq!(g.output_edge(q.id).unwrap().spec.elem, ElemType::int(8));
+    }
+
+    #[test]
+    fn depthwise_weight_shape() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(16, 8, 8, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv(
+            "dw",
+            ConvAttrs::depthwise(16, 3, 1, 1),
+            ElemType::int(4),
+        );
+        let g = b.finish();
+        let w = g.param_inputs(NodeId(1))[0];
+        // depthwise: [Cout, Cin/groups=1, kh, kw]
+        assert_eq!(w.spec.dims, vec![16, 1, 3, 3]);
+        assert_eq!(w.spec.elem, ElemType::int(4));
+    }
+
+    #[test]
+    fn gemm_after_flatten() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(4, 2, 2, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.flatten("flat").gemm("fc", 10, ElemType::int(8));
+        let g = b.finish();
+        let fc = &g.nodes[2];
+        let w = g.param_inputs(fc.id)[0];
+        assert_eq!(w.spec.dims, vec![10, 16]);
+        assert_eq!(g.output_edge(fc.id).unwrap().spec.dims, vec![10]);
+    }
+
+    #[test]
+    fn pooling_halves_spatial() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(8, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.max_pool("mp", PoolAttrs::square(2, 2));
+        let g = b.finish();
+        assert_eq!(g.output_edge(NodeId(1)).unwrap().spec.dims, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn stride2_conv_spatial() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(3, 32, 32, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c", ConvAttrs::standard(8, 3, 2, 1), ElemType::int(8));
+        let g = b.finish();
+        assert_eq!(g.output_edge(NodeId(1)).unwrap().spec.dims, vec![8, 16, 16]);
+    }
+}

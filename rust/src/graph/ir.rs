@@ -1,0 +1,521 @@
+//! The QONNX-style DAG intermediate representation.
+//!
+//! A QNN is a DAG `G = (V, E)` (paper §IV-B): nodes are operations
+//! (Quant, Conv, Gemm, Act, Pool, …), edges are data dependencies carrying
+//! tensors `<x_1,…,x_n>_b`. Parameters (weights, biases, thresholds, LUTs)
+//! are modelled as edges with no producer, mirroring ONNX initializers.
+//!
+//! The same structure serves all three refinement stages:
+//! - the *canonical* model (plain operations, no costs),
+//! - the *implementation-aware* model (node/edge annotations filled in by
+//!   [`crate::impl_aware::decorate`], Conv rewritten to MatMul under
+//!   im2col),
+//! - the *platform-aware* model (fused super-nodes, see
+//!   [`crate::platform_aware`]).
+
+use super::tensor::{ElemType, TensorSpec};
+use std::fmt;
+
+/// Index of a node within its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Index of an edge within its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub usize);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+impl fmt::Display for EdgeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+/// 2D convolution attributes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvAttrs {
+    pub out_channels: usize,
+    /// Kernel (height, width).
+    pub kernel: (usize, usize),
+    /// Stride (height, width).
+    pub stride: (usize, usize),
+    /// Symmetric zero padding (height, width).
+    pub padding: (usize, usize),
+    /// Number of groups; `groups == in_channels` is a depthwise
+    /// convolution (paper §VIII-A footnote 2).
+    pub groups: usize,
+}
+
+impl ConvAttrs {
+    /// Standard (dense) convolution.
+    pub fn standard(out_channels: usize, k: usize, stride: usize, padding: usize) -> Self {
+        Self {
+            out_channels,
+            kernel: (k, k),
+            stride: (stride, stride),
+            padding: (padding, padding),
+            groups: 1,
+        }
+    }
+
+    /// Depthwise convolution over `channels`.
+    pub fn depthwise(channels: usize, k: usize, stride: usize, padding: usize) -> Self {
+        Self {
+            out_channels: channels,
+            kernel: (k, k),
+            stride: (stride, stride),
+            padding: (padding, padding),
+            groups: channels,
+        }
+    }
+
+    /// Output spatial dims for an input of `(h, w)`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let oh = (h + 2 * self.padding.0 - self.kernel.0) / self.stride.0 + 1;
+        let ow = (w + 2 * self.padding.1 - self.kernel.1) / self.stride.1 + 1;
+        (oh, ow)
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.out_channels
+    }
+}
+
+/// Fully-connected (Gemm) attributes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmAttrs {
+    pub out_features: usize,
+}
+
+/// Pooling attributes (shared by max/avg pooling).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolAttrs {
+    pub kernel: (usize, usize),
+    pub stride: (usize, usize),
+    pub padding: (usize, usize),
+}
+
+impl PoolAttrs {
+    pub fn square(k: usize, stride: usize) -> Self {
+        Self {
+            kernel: (k, k),
+            stride: (stride, stride),
+            padding: (0, 0),
+        }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let oh = (h + 2 * self.padding.0 - self.kernel.0) / self.stride.0 + 1;
+        let ow = (w + 2 * self.padding.1 - self.kernel.1) / self.stride.1 + 1;
+        (oh, ow)
+    }
+}
+
+/// Requantization attributes: convert accumulator-precision values back to
+/// the target precision (paper §VI-C).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantAttrs {
+    /// Target element type of the output.
+    pub to: ElemType,
+    /// Channel-wise quantization parameters (one (S, Z) pair per output
+    /// channel) instead of per-tensor scalars.
+    pub channelwise: bool,
+}
+
+/// MatMul attributes — the result of the im2col rewrite of a Conv node
+/// (paper §VI-A: "the operation node is renamed to MatMul"). The original
+/// convolution geometry is retained so the platform-aware stage can tile it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatMulAttrs {
+    /// M dimension: output channels (rows of the reshaped filter matrix).
+    pub m: usize,
+    /// K dimension: `Cin/groups * kh * kw` (shared dimension).
+    pub k: usize,
+    /// N dimension: `Hout * Wout` spatial positions.
+    pub n: usize,
+    /// The convolution this MatMul was derived from, if any.
+    pub from_conv: Option<ConvAttrs>,
+}
+
+/// Operation performed by a node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    /// Graph output placeholder.
+    Output,
+    /// 2D convolution (canonical model only; rewritten to MatMul by the
+    /// implementation-aware pass when im2col is selected).
+    Conv(ConvAttrs),
+    /// Fully-connected layer.
+    Gemm(GemmAttrs),
+    /// Matrix multiplication (post-im2col form).
+    MatMul(MatMulAttrs),
+    /// Requantization.
+    Quant(QuantAttrs),
+    /// ReLU activation.
+    Relu,
+    /// Max pooling.
+    MaxPool(PoolAttrs),
+    /// Average pooling (division approximated by shift, §VI-E).
+    AvgPool(PoolAttrs),
+    /// Element-wise addition (residual connections).
+    Add,
+    /// Reshape `[C,H,W]` -> `[C*H*W]`.
+    Flatten,
+}
+
+impl Op {
+    /// Short operator mnemonic used in names and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input => "Input",
+            Op::Output => "Output",
+            Op::Conv(_) => "Conv",
+            Op::Gemm(_) => "Gemm",
+            Op::MatMul(_) => "MatMul",
+            Op::Quant(_) => "Quant",
+            Op::Relu => "Relu",
+            Op::MaxPool(_) => "MaxPool",
+            Op::AvgPool(_) => "AvgPool",
+            Op::Add => "Add",
+            Op::Flatten => "Flatten",
+        }
+    }
+
+    /// True for operations that carry learnable parameters.
+    pub fn has_params(&self) -> bool {
+        matches!(self, Op::Conv(_) | Op::Gemm(_) | Op::MatMul(_) | Op::Quant(_))
+    }
+
+    /// True for the compute-intensive linear operations.
+    pub fn is_linear(&self) -> bool {
+        matches!(self, Op::Conv(_) | Op::Gemm(_) | Op::MatMul(_))
+    }
+}
+
+/// Annotations attached to a node by the implementation-aware pass
+/// (paper §VI: "each node v_i is annotated with metadata such as the number
+/// of MACs and BOPs").
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeAnn {
+    /// MAC count following the paper's Eq. (5) convention:
+    /// `Cout * Cin * kh * kw` — per output pixel, groups-blind. This is the
+    /// quantity plotted in Fig. 5a (it makes depthwise convolutions read as
+    /// more MAC-intensive than pointwise ones, §VIII-A).
+    pub macs: u64,
+    /// Physically executed MACs for the whole layer:
+    /// `Cout * (Cin/groups) * kh * kw * Hout * Wout` — what the platform
+    /// simulator charges cycles for.
+    pub macs_physical: u64,
+    /// Bit operations (Eqs. 6, 9, 10, 11, 12).
+    pub bops: u64,
+    /// Parameter memory in bits, *including* implementation overheads
+    /// (LUT tables Eq. 7, threshold trees Eq. 8, dyadic scales).
+    pub param_mem_bits: u64,
+    /// Human-readable implementation label ("im2col", "lut",
+    /// "threshold-tree", "dyadic", "comparator", …).
+    pub impl_label: String,
+}
+
+/// Annotation attached to an edge: the amount of data produced by the
+/// source and consumed by the destination, in bits (paper §VI; Eqs. 2, 4).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EdgeAnn {
+    pub mem_bits: u64,
+}
+
+/// Whether an edge carries activations (produced at runtime) or parameters
+/// (constant initializers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    Activation,
+    Parameter,
+}
+
+/// A DAG node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    /// Incoming edges in positional order (data input first, then params).
+    pub inputs: Vec<EdgeId>,
+    /// Outgoing edges.
+    pub outputs: Vec<EdgeId>,
+    /// Implementation-aware annotation (None on the canonical model).
+    pub ann: Option<NodeAnn>,
+}
+
+/// A DAG edge.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub id: EdgeId,
+    pub name: String,
+    /// Producing node; `None` for graph inputs and parameters.
+    pub from: Option<NodeId>,
+    /// Consuming nodes (an edge may fan out).
+    pub to: Vec<NodeId>,
+    pub spec: TensorSpec,
+    pub kind: EdgeKind,
+    /// Implementation-aware annotation (None on the canonical model).
+    pub ann: Option<EdgeAnn>,
+}
+
+impl Edge {
+    pub fn is_param(&self) -> bool {
+        matches!(self.kind, EdgeKind::Parameter)
+    }
+}
+
+/// The QONNX-style DAG.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            nodes: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0]
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id.0]
+    }
+
+    pub fn edge_mut(&mut self, id: EdgeId) -> &mut Edge {
+        &mut self.edges[id.0]
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>, op: Op) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op,
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            ann: None,
+        });
+        id
+    }
+
+    pub fn add_edge(
+        &mut self,
+        name: impl Into<String>,
+        spec: TensorSpec,
+        kind: EdgeKind,
+    ) -> EdgeId {
+        let id = EdgeId(self.edges.len());
+        self.edges.push(Edge {
+            id,
+            name: name.into(),
+            from: None,
+            to: Vec::new(),
+            spec,
+            kind,
+            ann: None,
+        });
+        id
+    }
+
+    /// Wire `edge` as the next input of `node`.
+    pub fn connect_input(&mut self, node: NodeId, edge: EdgeId) {
+        self.nodes[node.0].inputs.push(edge);
+        self.edges[edge.0].to.push(node);
+    }
+
+    /// Wire `edge` as an output of `node`.
+    pub fn connect_output(&mut self, node: NodeId, edge: EdgeId) {
+        self.nodes[node.0].outputs.push(edge);
+        debug_assert!(self.edges[edge.0].from.is_none(), "edge already has a producer");
+        self.edges[edge.0].from = Some(node);
+    }
+
+    /// First activation (non-parameter) input edge of a node.
+    pub fn data_input(&self, node: NodeId) -> Option<&Edge> {
+        self.nodes[node.0]
+            .inputs
+            .iter()
+            .map(|e| self.edge(*e))
+            .find(|e| !e.is_param())
+    }
+
+    /// All parameter input edges of a node.
+    pub fn param_inputs(&self, node: NodeId) -> Vec<&Edge> {
+        self.nodes[node.0]
+            .inputs
+            .iter()
+            .map(|e| self.edge(*e))
+            .filter(|e| e.is_param())
+            .collect()
+    }
+
+    /// Primary output edge of a node.
+    pub fn output_edge(&self, node: NodeId) -> Option<&Edge> {
+        self.nodes[node.0].outputs.first().map(|e| self.edge(*e))
+    }
+
+    /// Iterate nodes that match a predicate on the op.
+    pub fn nodes_where<'a>(
+        &'a self,
+        pred: impl Fn(&Op) -> bool + 'a,
+    ) -> impl Iterator<Item = &'a Node> + 'a {
+        self.nodes.iter().filter(move |n| pred(&n.op))
+    }
+
+    /// Graph input nodes.
+    pub fn inputs(&self) -> Vec<NodeId> {
+        self.nodes_where(|op| matches!(op, Op::Input)).map(|n| n.id).collect()
+    }
+
+    /// Graph output nodes.
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.nodes_where(|op| matches!(op, Op::Output)).map(|n| n.id).collect()
+    }
+
+    /// Predecessor node of `node` along the activation path, if unique.
+    pub fn data_predecessor(&self, node: NodeId) -> Option<NodeId> {
+        self.data_input(node).and_then(|e| e.from)
+    }
+
+    /// Successor nodes along any activation edge.
+    pub fn successors(&self, node: NodeId) -> Vec<NodeId> {
+        self.nodes[node.0]
+            .outputs
+            .iter()
+            .flat_map(|e| self.edge(*e).to.iter().copied())
+            .collect()
+    }
+
+    /// Total parameter memory across the graph in bits, using annotations
+    /// when present and raw tensor sizes otherwise.
+    pub fn total_param_bits(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| {
+                n.ann.as_ref().map(|a| a.param_mem_bits).unwrap_or_else(|| {
+                    self.param_inputs(n.id).iter().map(|e| e.spec.bits()).sum()
+                })
+            })
+            .sum()
+    }
+
+    /// Total MACs across annotated nodes.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().filter_map(|n| n.ann.as_ref()).map(|a| a.macs).sum()
+    }
+
+    /// Total BOPs across annotated nodes.
+    pub fn total_bops(&self) -> u64 {
+        self.nodes.iter().filter_map(|n| n.ann.as_ref()).map(|a| a.bops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        // Input -> Conv -> Output with a weight parameter edge.
+        let mut g = Graph::new("tiny");
+        let inp = g.add_node("in", Op::Input);
+        let conv = g.add_node("conv0", Op::Conv(ConvAttrs::standard(8, 3, 1, 1)));
+        let out = g.add_node("out", Op::Output);
+
+        let e_in = g.add_edge(
+            "x",
+            TensorSpec::chw(3, 32, 32, ElemType::int(8)),
+            EdgeKind::Activation,
+        );
+        let e_w = g.add_edge(
+            "w",
+            TensorSpec::new(vec![8, 3, 3, 3], ElemType::int(8)),
+            EdgeKind::Parameter,
+        );
+        let e_out = g.add_edge(
+            "y",
+            TensorSpec::chw(8, 32, 32, ElemType::int(32)),
+            EdgeKind::Activation,
+        );
+
+        g.connect_output(inp, e_in);
+        g.connect_input(conv, e_in);
+        g.connect_input(conv, e_w);
+        g.connect_output(conv, e_out);
+        g.connect_input(out, e_out);
+        g
+    }
+
+    #[test]
+    fn wiring_round_trip() {
+        let g = tiny_graph();
+        let conv = NodeId(1);
+        assert_eq!(g.data_input(conv).unwrap().name, "x");
+        assert_eq!(g.param_inputs(conv).len(), 1);
+        assert_eq!(g.output_edge(conv).unwrap().name, "y");
+        assert_eq!(g.data_predecessor(conv), Some(NodeId(0)));
+        assert_eq!(g.successors(conv), vec![NodeId(2)]);
+        assert_eq!(g.inputs(), vec![NodeId(0)]);
+        assert_eq!(g.outputs(), vec![NodeId(2)]);
+    }
+
+    #[test]
+    fn conv_out_hw() {
+        let c = ConvAttrs::standard(8, 3, 1, 1);
+        assert_eq!(c.out_hw(32, 32), (32, 32));
+        let c2 = ConvAttrs::standard(8, 3, 2, 1);
+        assert_eq!(c2.out_hw(32, 32), (16, 16));
+        let c3 = ConvAttrs::standard(8, 1, 1, 0);
+        assert_eq!(c3.out_hw(7, 7), (7, 7));
+    }
+
+    #[test]
+    fn depthwise_detection() {
+        assert!(ConvAttrs::depthwise(16, 3, 1, 1).is_depthwise());
+        assert!(!ConvAttrs::standard(16, 3, 1, 1).is_depthwise());
+    }
+
+    #[test]
+    fn pool_out_hw() {
+        let p = PoolAttrs::square(2, 2);
+        assert_eq!(p.out_hw(32, 32), (16, 16));
+    }
+
+    #[test]
+    fn param_totals_fall_back_to_raw_sizes() {
+        let g = tiny_graph();
+        // weights: 8*3*3*3 = 216 int8 elements = 1728 bits
+        assert_eq!(g.total_param_bits(), 216 * 8);
+        assert_eq!(g.total_macs(), 0); // no annotations yet
+    }
+
+    #[test]
+    fn qonnx_round_trip_preserves_structure() {
+        let g = tiny_graph();
+        let doc = crate::graph::qonnx::export(&g);
+        let g2 = doc.to_graph().unwrap();
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+        assert_eq!(g2.edges.len(), g.edges.len());
+        assert_eq!(g2.node(NodeId(1)).op.kind(), "Conv");
+    }
+}

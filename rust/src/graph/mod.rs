@@ -1,0 +1,16 @@
+//! QONNX-style graph representation: tensors, DAG IR, builder, topological
+//! utilities, validation, and the JSON QONNX-dialect import/export.
+
+pub mod builder;
+pub mod ir;
+pub mod qonnx;
+pub mod tensor;
+pub mod topo;
+pub mod validate;
+
+pub use builder::GraphBuilder;
+pub use ir::{
+    ConvAttrs, Edge, EdgeAnn, EdgeId, EdgeKind, GemmAttrs, Graph, MatMulAttrs, Node, NodeAnn,
+    NodeId, Op, PoolAttrs, QuantAttrs,
+};
+pub use tensor::{ElemType, TensorSpec};

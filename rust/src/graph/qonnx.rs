@@ -1,0 +1,512 @@
+//! QONNX-dialect JSON import/export.
+//!
+//! The paper's workflow starts from a QONNX file (ONNX + arbitrary-precision
+//! Quant nodes). We do not link against protobuf-ONNX; instead we define a
+//! faithful JSON projection of the QONNX subset the paper uses (Quant, Conv,
+//! Gemm, Relu, MaxPool/AvgPool, Flatten, Add) and convert it to/from the
+//! internal [`Graph`]. `python/compile/export_qonnx.py` emits the same
+//! dialect from the JAX model, closing the toolchain loop.
+
+use super::ir::*;
+use super::tensor::{ElemType, TensorSpec};
+use super::validate;
+use crate::error::{AladinError, Result};
+use crate::util::json::Value;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One node of the on-disk QONNX-dialect document.
+#[derive(Debug, Clone)]
+pub struct QonnxNode {
+    pub name: String,
+    /// Operator type: "Quant" | "Conv" | "Gemm" | "Relu" | "MaxPool"
+    /// | "AveragePool" | "Flatten" | "Add".
+    pub op_type: String,
+    /// Names of input tensors (activations then initializers).
+    pub inputs: Vec<String>,
+    /// Names of output tensors.
+    pub outputs: Vec<String>,
+    /// Operator attributes (kernel_shape, strides, pads, group, bits, …).
+    pub attributes: HashMap<String, Value>,
+}
+
+/// Tensor type declaration.
+#[derive(Debug, Clone)]
+pub struct QonnxTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    /// Bit-width of each element.
+    pub bits: u8,
+    pub signed: bool,
+    /// True for constant initializers (weights, biases, thresholds).
+    pub initializer: bool,
+}
+
+/// On-disk QONNX-dialect document.
+#[derive(Debug, Clone)]
+pub struct QonnxModel {
+    pub name: String,
+    pub graph_inputs: Vec<String>,
+    pub graph_outputs: Vec<String>,
+    pub tensors: Vec<QonnxTensor>,
+    pub nodes: Vec<QonnxNode>,
+}
+
+fn attr_usize(n: &QonnxNode, key: &str) -> Option<usize> {
+    n.attributes.get(key).and_then(|v| v.as_u64()).map(|v| v as usize)
+}
+
+fn attr_pair(n: &QonnxNode, key: &str) -> Option<(usize, usize)> {
+    let arr = n.attributes.get(key)?.as_arr()?;
+    let a = arr.first()?.as_u64()? as usize;
+    let b = arr.get(1).and_then(|v| v.as_u64()).unwrap_or(a as u64) as usize;
+    Some((a, b))
+}
+
+impl QonnxModel {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    pub fn to_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Parse from the in-tree JSON document model.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let bad = |reason: &str| AladinError::Parse {
+            at: "qonnx".into(),
+            reason: reason.into(),
+        };
+        let strings = |key: &str| -> Result<Vec<String>> {
+            v.get(key)
+                .and_then(|a| a.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(String::from))
+                        .collect()
+                })
+                .ok_or_else(|| bad(&format!("missing `{key}` array")))
+        };
+        let tensors = v
+            .get("tensors")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| bad("missing `tensors`"))?
+            .iter()
+            .map(|t| {
+                Ok(QonnxTensor {
+                    name: t
+                        .str_field("name")
+                        .ok_or_else(|| bad("tensor missing name"))?
+                        .to_string(),
+                    dims: t
+                        .get("dims")
+                        .and_then(|d| d.as_arr())
+                        .ok_or_else(|| bad("tensor missing dims"))?
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    bits: t.u64_field("bits").ok_or_else(|| bad("tensor missing bits"))? as u8,
+                    signed: t.bool_field("signed").unwrap_or(true),
+                    initializer: t.bool_field("initializer").unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let nodes = v
+            .get("nodes")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| bad("missing `nodes`"))?
+            .iter()
+            .map(|n| {
+                let list = |key: &str| -> Vec<String> {
+                    n.get(key)
+                        .and_then(|a| a.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|s| s.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default()
+                };
+                let attributes = n
+                    .get("attributes")
+                    .and_then(|o| o.as_obj())
+                    .map(|pairs| pairs.iter().cloned().collect::<HashMap<_, _>>())
+                    .unwrap_or_default();
+                Ok(QonnxNode {
+                    name: n
+                        .str_field("name")
+                        .ok_or_else(|| bad("node missing name"))?
+                        .to_string(),
+                    op_type: n
+                        .str_field("op_type")
+                        .ok_or_else(|| bad("node missing op_type"))?
+                        .to_string(),
+                    inputs: list("inputs"),
+                    outputs: list("outputs"),
+                    attributes,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(QonnxModel {
+            name: v.str_field("name").unwrap_or("model").to_string(),
+            graph_inputs: strings("graph_inputs")?,
+            graph_outputs: strings("graph_outputs")?,
+            tensors,
+            nodes,
+        })
+    }
+
+    /// Render to the in-tree JSON document model.
+    pub fn to_json(&self) -> Value {
+        let tensors: Vec<Value> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                Value::obj()
+                    .with("name", t.name.clone())
+                    .with("dims", t.dims.clone())
+                    .with("bits", t.bits)
+                    .with("signed", t.signed)
+                    .with("initializer", t.initializer)
+            })
+            .collect();
+        let nodes: Vec<Value> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut attrs: Vec<(String, Value)> =
+                    n.attributes.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+                attrs.sort_by(|a, b| a.0.cmp(&b.0));
+                Value::obj()
+                    .with("name", n.name.clone())
+                    .with("op_type", n.op_type.clone())
+                    .with("inputs", n.inputs.clone())
+                    .with("outputs", n.outputs.clone())
+                    .with("attributes", Value::Obj(attrs))
+            })
+            .collect();
+        Value::obj()
+            .with("name", self.name.clone())
+            .with("graph_inputs", self.graph_inputs.clone())
+            .with("graph_outputs", self.graph_outputs.clone())
+            .with("tensors", Value::Arr(tensors))
+            .with("nodes", Value::Arr(nodes))
+    }
+
+    /// Convert to the internal graph representation and validate.
+    pub fn to_graph(&self) -> Result<Graph> {
+        let mut g = Graph::new(self.name.clone());
+        let mut edge_by_name: HashMap<&str, EdgeId> = HashMap::new();
+
+        for t in &self.tensors {
+            let kind = if t.initializer {
+                EdgeKind::Parameter
+            } else {
+                EdgeKind::Activation
+            };
+            let spec = TensorSpec::new(
+                t.dims.clone(),
+                ElemType {
+                    bits: t.bits,
+                    signed: t.signed,
+                },
+            );
+            let id = g.add_edge(t.name.clone(), spec, kind);
+            edge_by_name.insert(t.name.as_str(), id);
+        }
+
+        for gi in &self.graph_inputs {
+            let e = *edge_by_name.get(gi.as_str()).ok_or_else(|| AladinError::Validation {
+                at: gi.clone(),
+                reason: "graph input tensor not declared".into(),
+            })?;
+            let n = g.add_node(format!("input_{gi}"), Op::Input);
+            g.connect_output(n, e);
+        }
+
+        for qn in &self.nodes {
+            let op = self.parse_op(qn, &g, &edge_by_name)?;
+            let node = g.add_node(qn.name.clone(), op);
+            for inp in &qn.inputs {
+                let e = *edge_by_name.get(inp.as_str()).ok_or_else(|| {
+                    AladinError::Validation {
+                        at: qn.name.clone(),
+                        reason: format!("unknown input tensor `{inp}`"),
+                    }
+                })?;
+                g.connect_input(node, e);
+            }
+            for out in &qn.outputs {
+                let e = *edge_by_name.get(out.as_str()).ok_or_else(|| {
+                    AladinError::Validation {
+                        at: qn.name.clone(),
+                        reason: format!("unknown output tensor `{out}`"),
+                    }
+                })?;
+                g.connect_output(node, e);
+            }
+        }
+
+        for go in &self.graph_outputs {
+            let e = *edge_by_name.get(go.as_str()).ok_or_else(|| AladinError::Validation {
+                at: go.clone(),
+                reason: "graph output tensor not declared".into(),
+            })?;
+            let n = g.add_node(format!("output_{go}"), Op::Output);
+            g.connect_input(n, e);
+        }
+
+        validate::validate(&g)?;
+        Ok(g)
+    }
+
+    fn parse_op(
+        &self,
+        n: &QonnxNode,
+        g: &Graph,
+        edges: &HashMap<&str, EdgeId>,
+    ) -> Result<Op> {
+        match n.op_type.as_str() {
+            "Conv" => {
+                let kernel = attr_pair(n, "kernel_shape").unwrap_or((3, 3));
+                let stride = attr_pair(n, "strides").unwrap_or((1, 1));
+                let padding = attr_pair(n, "pads").unwrap_or((0, 0));
+                let groups = attr_usize(n, "group").unwrap_or(1);
+                // out_channels from the weight initializer's first dim
+                let w = n.inputs.get(1).and_then(|w| edges.get(w.as_str()));
+                let out_channels = match w {
+                    Some(&e) => g.edge(e).spec.dims[0],
+                    None => attr_usize(n, "out_channels").ok_or_else(|| {
+                        AladinError::Validation {
+                            at: n.name.clone(),
+                            reason: "Conv needs a weight tensor or out_channels attr".into(),
+                        }
+                    })?,
+                };
+                Ok(Op::Conv(ConvAttrs {
+                    out_channels,
+                    kernel,
+                    stride,
+                    padding,
+                    groups,
+                }))
+            }
+            "Gemm" | "MatMul" if n.inputs.len() >= 2 => {
+                let w = edges
+                    .get(n.inputs[1].as_str())
+                    .ok_or_else(|| AladinError::Validation {
+                        at: n.name.clone(),
+                        reason: "Gemm weight tensor missing".into(),
+                    })?;
+                Ok(Op::Gemm(GemmAttrs {
+                    out_features: g.edge(*w).spec.dims[0],
+                }))
+            }
+            "Quant" => {
+                let bits = attr_usize(n, "bits").unwrap_or(8) as u8;
+                let signed = n
+                    .attributes
+                    .get("signed")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(true);
+                let channelwise = n
+                    .attributes
+                    .get("channelwise")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                Ok(Op::Quant(QuantAttrs {
+                    to: ElemType { bits, signed },
+                    channelwise,
+                }))
+            }
+            "Relu" => Ok(Op::Relu),
+            "Add" => Ok(Op::Add),
+            "Flatten" | "Reshape" => Ok(Op::Flatten),
+            "MaxPool" => Ok(Op::MaxPool(pool_attrs(n))),
+            "AveragePool" | "GlobalAveragePool" => Ok(Op::AvgPool(pool_attrs(n))),
+            other => Err(AladinError::Unsupported(format!(
+                "QONNX op `{other}` (node `{}`)",
+                n.name
+            ))),
+        }
+    }
+}
+
+fn pool_attrs(n: &QonnxNode) -> PoolAttrs {
+    let kernel = attr_pair(n, "kernel_shape").unwrap_or((2, 2));
+    PoolAttrs {
+        kernel,
+        stride: attr_pair(n, "strides").unwrap_or(kernel),
+        padding: attr_pair(n, "pads").unwrap_or((0, 0)),
+    }
+}
+
+/// Export an internal graph back to the QONNX-dialect document.
+pub fn export(g: &Graph) -> QonnxModel {
+    let tensors = g
+        .edges
+        .iter()
+        .map(|e| QonnxTensor {
+            name: e.name.clone(),
+            dims: e.spec.dims.clone(),
+            bits: e.spec.elem.bits,
+            signed: e.spec.elem.signed,
+            initializer: e.is_param(),
+        })
+        .collect();
+
+    let mut nodes = Vec::new();
+    let mut graph_inputs = Vec::new();
+    let mut graph_outputs = Vec::new();
+    for n in &g.nodes {
+        match &n.op {
+            Op::Input => {
+                for e in &n.outputs {
+                    graph_inputs.push(g.edge(*e).name.clone());
+                }
+            }
+            Op::Output => {
+                for e in &n.inputs {
+                    graph_outputs.push(g.edge(*e).name.clone());
+                }
+            }
+            op => {
+                let mut attributes = HashMap::new();
+                let op_type = match op {
+                    Op::Conv(a) => {
+                        attributes.insert(
+                            "kernel_shape".into(),
+                            Value::from(vec![a.kernel.0, a.kernel.1]),
+                        );
+                        attributes.insert(
+                            "strides".into(),
+                            Value::from(vec![a.stride.0, a.stride.1]),
+                        );
+                        attributes.insert(
+                            "pads".into(),
+                            Value::from(vec![a.padding.0, a.padding.1]),
+                        );
+                        attributes.insert("group".into(), Value::from(a.groups));
+                        "Conv"
+                    }
+                    Op::Gemm(_) => "Gemm",
+                    Op::MatMul(_) => "MatMul",
+                    Op::Quant(a) => {
+                        attributes.insert("bits".into(), Value::from(a.to.bits));
+                        attributes.insert("signed".into(), Value::from(a.to.signed));
+                        attributes
+                            .insert("channelwise".into(), Value::from(a.channelwise));
+                        "Quant"
+                    }
+                    Op::Relu => "Relu",
+                    Op::Add => "Add",
+                    Op::Flatten => "Flatten",
+                    Op::MaxPool(a) => {
+                        attributes.insert(
+                            "kernel_shape".into(),
+                            Value::from(vec![a.kernel.0, a.kernel.1]),
+                        );
+                        attributes.insert(
+                            "strides".into(),
+                            Value::from(vec![a.stride.0, a.stride.1]),
+                        );
+                        "MaxPool"
+                    }
+                    Op::AvgPool(a) => {
+                        attributes.insert(
+                            "kernel_shape".into(),
+                            Value::from(vec![a.kernel.0, a.kernel.1]),
+                        );
+                        "AveragePool"
+                    }
+                    Op::Input | Op::Output => unreachable!(),
+                };
+                nodes.push(QonnxNode {
+                    name: n.name.clone(),
+                    op_type: op_type.to_string(),
+                    inputs: n.inputs.iter().map(|e| g.edge(*e).name.clone()).collect(),
+                    outputs: n.outputs.iter().map(|e| g.edge(*e).name.clone()).collect(),
+                    attributes,
+                });
+            }
+        }
+    }
+
+    QonnxModel {
+        name: g.name.clone(),
+        graph_inputs,
+        graph_outputs,
+        tensors,
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new(
+            "qx",
+            TensorSpec::chw(3, 8, 8, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(4, 3, 1, 1), ElemType::int(4))
+            .relu("r0")
+            .quant("q0", ElemType::int(4), true)
+            .flatten("f")
+            .gemm("fc", 10, ElemType::int(8));
+        b.finish()
+    }
+
+    #[test]
+    fn export_import_round_trip() {
+        let g = sample();
+        let doc = export(&g);
+        let g2 = doc.to_graph().unwrap();
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+        assert_eq!(g2.edges.len(), g.edges.len());
+        // op kinds preserved in order
+        for (a, b) in g.nodes.iter().zip(g2.nodes.iter()) {
+            assert_eq!(a.op.kind(), b.op.kind(), "node {}", a.name);
+        }
+        // quant precision preserved
+        let q = g2.nodes.iter().find(|n| n.name == "q0").unwrap();
+        if let Op::Quant(a) = &q.op {
+            assert_eq!(a.to, ElemType::int(4));
+            assert!(a.channelwise);
+        } else {
+            panic!("q0 not Quant");
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let g = sample();
+        let doc = export(&g);
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let path = dir.path().join("model.qonnx.json");
+        doc.to_file(&path).unwrap();
+        let doc2 = QonnxModel::from_file(&path).unwrap();
+        assert_eq!(doc2.nodes.len(), doc.nodes.len());
+        doc2.to_graph().unwrap();
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let mut doc = export(&sample());
+        doc.nodes[0].op_type = "Softmax".into();
+        assert!(doc.to_graph().is_err());
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        let mut doc = export(&sample());
+        doc.nodes[0].inputs[0] = "nope".into();
+        assert!(doc.to_graph().is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Tensor specifications carried on DAG edges.
+//!
+//! In the QONNX-style representation of the paper (§IV-B), data flowing
+//! between operations is a tensor `<x_1, …, x_n>_b` where `b` is the
+//! bit-width of each element. We additionally track signedness, which
+//! determines the representable integer range used by quantizers and by
+//! the threshold-tree construction.
+
+use std::fmt;
+
+/// Integer element type: a bit-width plus signedness.
+///
+/// Bit-widths are arbitrary (QONNX-style), not restricted to powers of two;
+/// the platform-aware refinement decides how sub-byte values are packed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ElemType {
+    /// Number of bits per element (1..=32).
+    pub bits: u8,
+    /// Whether the integer representation is signed (two's complement).
+    pub signed: bool,
+}
+
+impl ElemType {
+    /// Signed integer of `bits` bits (e.g. `int8`, `int4`).
+    pub const fn int(bits: u8) -> Self {
+        Self { bits, signed: true }
+    }
+
+    /// Unsigned integer of `bits` bits (e.g. `uint8`).
+    pub const fn uint(bits: u8) -> Self {
+        Self { bits, signed: false }
+    }
+
+    /// Smallest representable value.
+    pub fn min_value(&self) -> i64 {
+        if self.signed {
+            -(1i64 << (self.bits - 1))
+        } else {
+            0
+        }
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> i64 {
+        if self.signed {
+            (1i64 << (self.bits - 1)) - 1
+        } else {
+            (1i64 << self.bits) - 1
+        }
+    }
+
+    /// Number of distinct representable levels (`2^bits`).
+    pub fn levels(&self) -> u64 {
+        1u64 << self.bits
+    }
+
+    /// Clamp a wide integer into this type's range.
+    pub fn clamp(&self, v: i64) -> i64 {
+        v.clamp(self.min_value(), self.max_value())
+    }
+
+    /// True if `v` is representable without clipping.
+    pub fn contains(&self, v: i64) -> bool {
+        v >= self.min_value() && v <= self.max_value()
+    }
+}
+
+impl fmt::Display for ElemType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}int{}", if self.signed { "" } else { "u" }, self.bits)
+    }
+}
+
+/// Shape + element type of a tensor on an edge.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorSpec {
+    /// Dimensions, outermost first. CNN feature maps use `[C, H, W]`
+    /// (batch dimension implicit = 1, as in the paper's single-inference
+    /// latency analysis).
+    pub dims: Vec<usize>,
+    /// Element type.
+    pub elem: ElemType,
+}
+
+impl TensorSpec {
+    pub fn new(dims: Vec<usize>, elem: ElemType) -> Self {
+        Self { dims, elem }
+    }
+
+    /// `[C, H, W]` feature map helper.
+    pub fn chw(c: usize, h: usize, w: usize, elem: ElemType) -> Self {
+        Self::new(vec![c, h, w], elem)
+    }
+
+    /// Total number of elements.
+    pub fn num_elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Exact size in *bits* (no packing/padding assumptions).
+    pub fn bits(&self) -> u64 {
+        self.num_elems() as u64 * self.elem.bits as u64
+    }
+
+    /// Size in bytes with dense sub-byte packing, rounded up.
+    pub fn bytes_packed(&self) -> u64 {
+        self.bits().div_ceil(8)
+    }
+
+    /// Size in bytes if every element is stored byte-aligned (each element
+    /// occupies `ceil(bits/8)` bytes) — how unpacked buffers are laid out
+    /// in L1 for compute.
+    pub fn bytes_unpacked(&self) -> u64 {
+        self.num_elems() as u64 * (self.elem.bits as u64).div_ceil(8)
+    }
+
+    /// Channel count assuming `[C, H, W]` (or `[C]` / `[C, L]`) layout.
+    pub fn channels(&self) -> usize {
+        self.dims.first().copied().unwrap_or(1)
+    }
+
+    /// Spatial size `H*W` assuming `[C, H, W]`; 1 for vectors.
+    pub fn spatial(&self) -> usize {
+        if self.dims.len() >= 3 {
+            self.dims[1..].iter().product()
+        } else if self.dims.len() == 2 {
+            self.dims[1]
+        } else {
+            1
+        }
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "<{}>_{}", dims.join("x"), self.elem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_range() {
+        let t = ElemType::int(8);
+        assert_eq!(t.min_value(), -128);
+        assert_eq!(t.max_value(), 127);
+        assert_eq!(t.levels(), 256);
+    }
+
+    #[test]
+    fn int4_range() {
+        let t = ElemType::int(4);
+        assert_eq!(t.min_value(), -8);
+        assert_eq!(t.max_value(), 7);
+    }
+
+    #[test]
+    fn uint2_range() {
+        let t = ElemType::uint(2);
+        assert_eq!(t.min_value(), 0);
+        assert_eq!(t.max_value(), 3);
+        assert_eq!(t.levels(), 4);
+    }
+
+    #[test]
+    fn int32_range_no_overflow() {
+        let t = ElemType::int(32);
+        assert_eq!(t.min_value(), i32::MIN as i64);
+        assert_eq!(t.max_value(), i32::MAX as i64);
+    }
+
+    #[test]
+    fn clamp_clips_both_ends() {
+        let t = ElemType::int(8);
+        assert_eq!(t.clamp(1000), 127);
+        assert_eq!(t.clamp(-1000), -128);
+        assert_eq!(t.clamp(5), 5);
+    }
+
+    #[test]
+    fn tensor_sizes_packed_vs_unpacked() {
+        // 3 channels of 4x4 int4: 48 elements * 4 bits = 192 bits = 24 B packed,
+        // 48 B byte-aligned.
+        let t = TensorSpec::chw(3, 4, 4, ElemType::int(4));
+        assert_eq!(t.num_elems(), 48);
+        assert_eq!(t.bits(), 192);
+        assert_eq!(t.bytes_packed(), 24);
+        assert_eq!(t.bytes_unpacked(), 48);
+    }
+
+    #[test]
+    fn tensor_odd_bits_round_up() {
+        let t = TensorSpec::new(vec![3], ElemType::int(3));
+        assert_eq!(t.bits(), 9);
+        assert_eq!(t.bytes_packed(), 2);
+    }
+
+    #[test]
+    fn spatial_and_channels() {
+        let t = TensorSpec::chw(16, 8, 8, ElemType::int(8));
+        assert_eq!(t.channels(), 16);
+        assert_eq!(t.spatial(), 64);
+        let v = TensorSpec::new(vec![10], ElemType::int(32));
+        assert_eq!(v.channels(), 10);
+        assert_eq!(v.spatial(), 1);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(ElemType::int(8).to_string(), "int8");
+        assert_eq!(ElemType::uint(4).to_string(), "uint4");
+        let t = TensorSpec::chw(3, 32, 32, ElemType::int(8));
+        assert_eq!(t.to_string(), "<3x32x32>_int8");
+    }
+}

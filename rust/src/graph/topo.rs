@@ -1,0 +1,159 @@
+//! Topological ordering and reachability over the DAG.
+
+use super::ir::{Graph, NodeId};
+use crate::error::AladinError;
+use std::collections::VecDeque;
+
+/// Kahn's algorithm topological sort over activation+parameter edges.
+///
+/// Returns nodes in dependency order, or an error naming a node on a cycle
+/// (a malformed "DAG" — e.g. produced by a buggy import).
+pub fn topo_sort(g: &Graph) -> Result<Vec<NodeId>, AladinError> {
+    let n = g.nodes.len();
+    let mut indeg = vec![0usize; n];
+    for e in &g.edges {
+        if e.from.is_some() {
+            for &t in &e.to {
+                indeg[t.0] += 1;
+            }
+        }
+    }
+    let mut queue: VecDeque<NodeId> = (0..n)
+        .filter(|&i| indeg[i] == 0)
+        .map(NodeId)
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(u) = queue.pop_front() {
+        order.push(u);
+        for eid in &g.nodes[u.0].outputs {
+            for &t in &g.edges[eid.0].to {
+                indeg[t.0] -= 1;
+                if indeg[t.0] == 0 {
+                    queue.push_back(t);
+                }
+            }
+        }
+    }
+    if order.len() != n {
+        let stuck = (0..n).find(|&i| indeg[i] > 0).map(NodeId).unwrap();
+        return Err(AladinError::GraphCycle {
+            node: g.node(stuck).name.clone(),
+        });
+    }
+    Ok(order)
+}
+
+/// Nodes reachable from the graph inputs by following activation edges.
+pub fn reachable_from_inputs(g: &Graph) -> Vec<bool> {
+    let mut seen = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = g.inputs();
+    for &s in &stack {
+        seen[s.0] = true;
+    }
+    while let Some(u) = stack.pop() {
+        for v in g.successors(u) {
+            if !seen[v.0] {
+                seen[v.0] = true;
+                stack.push(v);
+            }
+        }
+    }
+    seen
+}
+
+/// The linear chain of compute nodes (everything except Input/Output) in
+/// topological order — the common case for the sequential CNNs analyzed in
+/// the paper.
+pub fn compute_order(g: &Graph) -> Result<Vec<NodeId>, AladinError> {
+    Ok(topo_sort(g)?
+        .into_iter()
+        .filter(|&id| {
+            !matches!(
+                g.node(id).op,
+                super::ir::Op::Input | super::ir::Op::Output
+            )
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::*;
+    use crate::graph::tensor::*;
+
+    fn chain(len: usize) -> Graph {
+        let mut g = Graph::new("chain");
+        let spec = TensorSpec::chw(1, 4, 4, ElemType::int(8));
+        let mut prev = g.add_node("in", Op::Input);
+        let mut prev_edge = g.add_edge("e0", spec.clone(), EdgeKind::Activation);
+        g.connect_output(prev, prev_edge);
+        for i in 0..len {
+            let n = g.add_node(format!("relu{i}"), Op::Relu);
+            g.connect_input(n, prev_edge);
+            let e = g.add_edge(format!("e{}", i + 1), spec.clone(), EdgeKind::Activation);
+            g.connect_output(n, e);
+            prev = n;
+            prev_edge = e;
+        }
+        let out = g.add_node("out", Op::Output);
+        g.connect_input(out, prev_edge);
+        let _ = prev;
+        g
+    }
+
+    #[test]
+    fn topo_sort_orders_chain() {
+        let g = chain(5);
+        let order = topo_sort(&g).unwrap();
+        assert_eq!(order.len(), g.nodes.len());
+        // each node must appear after its predecessor
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.nodes.len()];
+            for (i, id) in order.iter().enumerate() {
+                p[id.0] = i;
+            }
+            p
+        };
+        for e in &g.edges {
+            if let Some(f) = e.from {
+                for t in &e.to {
+                    assert!(pos[f.0] < pos[t.0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = chain(2);
+        // create a back edge: relu2 -> relu1
+        let e = g.add_edge(
+            "back",
+            TensorSpec::chw(1, 4, 4, ElemType::int(8)),
+            EdgeKind::Activation,
+        );
+        let relu1 = NodeId(1);
+        let relu2 = NodeId(2);
+        g.connect_output(relu2, e);
+        g.connect_input(relu1, e);
+        assert!(matches!(topo_sort(&g), Err(AladinError::GraphCycle { .. })));
+    }
+
+    #[test]
+    fn compute_order_skips_io() {
+        let g = chain(3);
+        let order = compute_order(&g).unwrap();
+        assert_eq!(order.len(), 3);
+        for id in order {
+            assert_eq!(g.node(id).op.kind(), "Relu");
+        }
+    }
+
+    #[test]
+    fn reachability_covers_chain() {
+        let g = chain(4);
+        let seen = reachable_from_inputs(&g);
+        assert!(seen.iter().all(|&b| b));
+    }
+}

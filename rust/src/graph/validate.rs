@@ -1,0 +1,277 @@
+//! Structural + shape validation of QNN graphs.
+//!
+//! Catches malformed imports and builder misuse before the analysis passes
+//! run: dangling edges, arity violations, shape mismatches between a node's
+//! attributes and its connected edge specs, and unreachable nodes.
+
+use super::ir::*;
+use super::topo;
+use crate::error::{AladinError, Result};
+
+/// Validate a canonical or implementation-aware graph.
+pub fn validate(g: &Graph) -> Result<()> {
+    // acyclicity first: everything else assumes a DAG
+    topo::topo_sort(g)?;
+
+    for e in &g.edges {
+        if e.to.is_empty() && e.from.is_none() {
+            return Err(AladinError::Validation {
+                at: e.name.clone(),
+                reason: "edge has neither producer nor consumer".into(),
+            });
+        }
+        if e.is_param() && e.from.is_some() {
+            return Err(AladinError::Validation {
+                at: e.name.clone(),
+                reason: "parameter edge has a producer".into(),
+            });
+        }
+        if e.spec.dims.is_empty() || e.spec.num_elems() == 0 {
+            return Err(AladinError::Validation {
+                at: e.name.clone(),
+                reason: "edge carries an empty tensor".into(),
+            });
+        }
+        if e.spec.elem.bits == 0 || e.spec.elem.bits > 32 {
+            return Err(AladinError::Validation {
+                at: e.name.clone(),
+                reason: format!("unsupported bit-width {}", e.spec.elem.bits),
+            });
+        }
+    }
+
+    for n in &g.nodes {
+        validate_node(g, n)?;
+    }
+
+    let seen = topo::reachable_from_inputs(g);
+    if let Some(i) = seen.iter().position(|&b| !b) {
+        return Err(AladinError::Validation {
+            at: g.nodes[i].name.clone(),
+            reason: "node unreachable from graph inputs".into(),
+        });
+    }
+    Ok(())
+}
+
+fn expect(cond: bool, at: &str, reason: impl Into<String>) -> Result<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(AladinError::Validation {
+            at: at.into(),
+            reason: reason.into(),
+        })
+    }
+}
+
+fn validate_node(g: &Graph, n: &Node) -> Result<()> {
+    let at = n.name.as_str();
+    let data_in = g.data_input(n.id);
+    let out = g.output_edge(n.id);
+    match &n.op {
+        Op::Input => expect(n.inputs.is_empty(), at, "Input node must have no inputs"),
+        Op::Output => expect(n.outputs.is_empty(), at, "Output node must have no outputs"),
+        Op::Conv(a) => {
+            let x = data_in.ok_or_else(|| AladinError::Validation {
+                at: at.into(),
+                reason: "Conv missing data input".into(),
+            })?;
+            expect(x.spec.dims.len() == 3, at, "Conv input must be [C,H,W]")?;
+            let cin = x.spec.dims[0];
+            expect(
+                cin % a.groups == 0,
+                at,
+                format!("in_channels {cin} not divisible by groups {}", a.groups),
+            )?;
+            let params = g.param_inputs(n.id);
+            expect(!params.is_empty(), at, "Conv missing weight parameter")?;
+            let w = &params[0].spec;
+            let want = vec![a.out_channels, cin / a.groups, a.kernel.0, a.kernel.1];
+            if w.dims != want {
+                return Err(AladinError::ShapeMismatch {
+                    at: at.into(),
+                    expected: format!("{want:?}"),
+                    got: format!("{:?}", w.dims),
+                });
+            }
+            if let Some(o) = out {
+                let (oh, ow) = a.out_hw(x.spec.dims[1], x.spec.dims[2]);
+                let want = vec![a.out_channels, oh, ow];
+                if o.spec.dims != want {
+                    return Err(AladinError::ShapeMismatch {
+                        at: at.into(),
+                        expected: format!("{want:?}"),
+                        got: format!("{:?}", o.spec.dims),
+                    });
+                }
+            }
+            Ok(())
+        }
+        Op::Gemm(a) => {
+            let x = data_in.ok_or_else(|| AladinError::Validation {
+                at: at.into(),
+                reason: "Gemm missing data input".into(),
+            })?;
+            expect(x.spec.dims.len() == 1, at, "Gemm input must be flattened [F]")?;
+            let params = g.param_inputs(n.id);
+            expect(!params.is_empty(), at, "Gemm missing weight parameter")?;
+            let w = &params[0].spec;
+            let want = vec![a.out_features, x.spec.dims[0]];
+            if w.dims != want {
+                return Err(AladinError::ShapeMismatch {
+                    at: at.into(),
+                    expected: format!("{want:?}"),
+                    got: format!("{:?}", w.dims),
+                });
+            }
+            Ok(())
+        }
+        Op::MatMul(a) => {
+            expect(a.m > 0 && a.k > 0 && a.n > 0, at, "MatMul dims must be positive")
+        }
+        Op::Quant(a) => {
+            let x = data_in.ok_or_else(|| AladinError::Validation {
+                at: at.into(),
+                reason: "Quant missing data input".into(),
+            })?;
+            expect(
+                a.to.bits <= x.spec.elem.bits,
+                at,
+                format!(
+                    "requantization must not widen: {} -> {}",
+                    x.spec.elem, a.to
+                ),
+            )?;
+            if let Some(o) = out {
+                expect(
+                    o.spec.elem == a.to,
+                    at,
+                    format!("Quant output elem {} != target {}", o.spec.elem, a.to),
+                )?;
+            }
+            Ok(())
+        }
+        Op::Relu | Op::Add => {
+            if let (Some(x), Some(o)) = (data_in, out) {
+                expect(
+                    x.spec.dims == o.spec.dims,
+                    at,
+                    "elementwise op must preserve shape",
+                )?;
+            }
+            Ok(())
+        }
+        Op::MaxPool(a) | Op::AvgPool(a) => {
+            let x = data_in.ok_or_else(|| AladinError::Validation {
+                at: at.into(),
+                reason: "Pool missing data input".into(),
+            })?;
+            expect(x.spec.dims.len() == 3, at, "Pool input must be [C,H,W]")?;
+            if let Some(o) = out {
+                let (oh, ow) = a.out_hw(x.spec.dims[1], x.spec.dims[2]);
+                let want = vec![x.spec.dims[0], oh, ow];
+                if o.spec.dims != want {
+                    return Err(AladinError::ShapeMismatch {
+                        at: at.into(),
+                        expected: format!("{want:?}"),
+                        got: format!("{:?}", o.spec.dims),
+                    });
+                }
+            }
+            Ok(())
+        }
+        Op::Flatten => {
+            if let (Some(x), Some(o)) = (data_in, out) {
+                expect(
+                    x.spec.num_elems() == o.spec.num_elems(),
+                    at,
+                    "Flatten must preserve element count",
+                )?;
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+
+    fn valid_graph() -> Graph {
+        let mut b = GraphBuilder::new(
+            "v",
+            TensorSpec::chw(3, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(8, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .max_pool("p0", PoolAttrs::square(2, 2))
+            .flatten("f")
+            .gemm("fc", 10, ElemType::int(8));
+        b.finish()
+    }
+
+    #[test]
+    fn builder_output_validates() {
+        validate(&valid_graph()).unwrap();
+    }
+
+    #[test]
+    fn rejects_widening_quant() {
+        let mut g = valid_graph();
+        // corrupt quant target to widen 32 -> impossible via builder, force it:
+        for n in &mut g.nodes {
+            if let Op::Quant(q) = &mut n.op {
+                q.to = ElemType::int(8);
+            }
+        }
+        // make the quant *input* narrower than target
+        let qid = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Quant(_)))
+            .unwrap()
+            .id;
+        let in_edge = g.nodes[qid.0].inputs[0];
+        g.edges[in_edge.0].spec.elem = ElemType::int(4);
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_weight_shape() {
+        let mut g = valid_graph();
+        // find conv weight edge and corrupt it
+        let w = g
+            .edges
+            .iter()
+            .position(|e| e.name == "c0.weight")
+            .unwrap();
+        g.edges[w].spec.dims = vec![8, 3, 5, 5];
+        assert!(matches!(
+            validate(&g),
+            Err(AladinError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_dangling_edge() {
+        let mut g = valid_graph();
+        g.add_edge(
+            "dangling",
+            TensorSpec::chw(1, 1, 1, ElemType::int(8)),
+            EdgeKind::Activation,
+        );
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_bitwidth() {
+        let mut g = valid_graph();
+        g.edges[0].spec.elem.bits = 0;
+        assert!(validate(&g).is_err());
+    }
+}

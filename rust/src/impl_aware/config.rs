@@ -1,0 +1,501 @@
+//! Implementation configuration files (paper Listing 1).
+//!
+//! The user assigns an implementation strategy to each node of the QONNX
+//! model (plus optional per-kind defaults). Accepted YAML forms:
+//!
+//! ```yaml
+//! # structured form
+//! defaults:
+//!   conv: im2col
+//!   quant: dyadic
+//!   act: comparator
+//! nodes:
+//!   Quant_0: { implementation: thresholds, bit_width: 8 }
+//!   MatMul_0: { filter_wise: true, implementation: lut, bit_width: 8 }
+//! ```
+//!
+//! or the flat Listing-1 form (node name -> spec at top level).
+
+use crate::error::{AladinError, Result};
+use crate::graph::ir::{Graph, Node, Op};
+use crate::util::json::Value;
+use crate::util::omap::OrderedMap;
+use crate::util::yamlish;
+use std::path::Path;
+
+/// Implementation strategy for linear ops (Conv/Gemm/MatMul) — §VI-A/B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LinearImpl {
+    /// im2col rewrite + MAC-based matrix multiplication.
+    #[default]
+    Im2col,
+    /// im2col rewrite + LUT-based multiplication (MACs = 0, §II-B).
+    Lut,
+    /// Direct (nested-loop) convolution, no im2col buffer redundancy.
+    Direct,
+}
+
+/// Implementation strategy for requantization nodes — §VI-C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantImpl {
+    /// Dyadic scaling: multiply + right shift (uniform quantization).
+    #[default]
+    Dyadic,
+    /// Balanced comparator tree over `2^Ly - 1` thresholds.
+    Thresholds,
+    /// Direct accumulator->output LUT (Eq. 7); infeasible for wide acc.
+    Lut,
+}
+
+/// Implementation strategy for activations — §VI-D.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ActImpl {
+    /// ReLU via a single comparator against zero.
+    #[default]
+    Comparator,
+    /// Arbitrary activation discretized by a threshold tree.
+    Thresholds,
+}
+
+/// Raw per-node specification as written in the YAML file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeImplSpec {
+    /// "im2col" | "lut" | "direct" | "dyadic" | "thresholds" | "comparator"
+    pub implementation: Option<String>,
+    /// Override of the operand bit-width (weights for linear ops, output
+    /// for quant nodes). Usually inherited from the QONNX model.
+    pub bit_width: Option<u8>,
+    /// Channel-wise ("filter-wise") quantization parameters.
+    pub filter_wise: Option<bool>,
+    /// Threshold count for threshold-tree activations (§VI-D: user-defined).
+    pub num_thresholds: Option<u64>,
+    /// Shift operations per element for dyadic scaling (Eq. 10).
+    pub bit_shifts: Option<u64>,
+}
+
+/// Per-op-kind defaults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ImplDefaults {
+    pub conv: LinearImpl,
+    pub gemm: LinearImpl,
+    pub quant: QuantImpl,
+    pub act: ActImpl,
+}
+
+/// Full implementation configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ImplConfig {
+    pub defaults: ImplDefaults,
+    pub nodes: OrderedMap<NodeImplSpec>,
+}
+
+/// Resolved implementation choice for one node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ImplChoice {
+    Linear {
+        strategy: LinearImpl,
+        filter_wise: bool,
+    },
+    Quant {
+        strategy: QuantImpl,
+        filter_wise: bool,
+        bit_shifts: u64,
+    },
+    Act {
+        strategy: ActImpl,
+        num_thresholds: u64,
+    },
+    Pool,
+    Passthrough,
+}
+
+impl ImplChoice {
+    /// Label used in reports and `NodeAnn::impl_label`.
+    pub fn label(&self) -> String {
+        match self {
+            ImplChoice::Linear { strategy, .. } => match strategy {
+                LinearImpl::Im2col => "im2col".into(),
+                LinearImpl::Lut => "lut".into(),
+                LinearImpl::Direct => "direct".into(),
+            },
+            ImplChoice::Quant { strategy, .. } => match strategy {
+                QuantImpl::Dyadic => "dyadic".into(),
+                QuantImpl::Thresholds => "threshold-tree".into(),
+                QuantImpl::Lut => "lut".into(),
+            },
+            ImplChoice::Act { strategy, .. } => match strategy {
+                ActImpl::Comparator => "comparator".into(),
+                ActImpl::Thresholds => "threshold-tree".into(),
+            },
+            ImplChoice::Pool => "comparator".into(),
+            ImplChoice::Passthrough => "passthrough".into(),
+        }
+    }
+}
+
+impl NodeImplSpec {
+    /// Parse one node entry from the YAML document model.
+    pub fn from_value(name: &str, v: &Value) -> Result<Self> {
+        if matches!(v, Value::Null) {
+            return Ok(Self::default());
+        }
+        let obj = v.as_obj().ok_or_else(|| AladinError::ImplConfig {
+            node: name.into(),
+            reason: "node spec must be a map".into(),
+        })?;
+        let mut spec = Self::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "implementation" => {
+                    spec.implementation = val.as_str().map(String::from);
+                }
+                "bit_width" => {
+                    spec.bit_width = Some(val.as_u64().ok_or_else(|| {
+                        AladinError::ImplConfig {
+                            node: name.into(),
+                            reason: "bit_width must be an integer".into(),
+                        }
+                    })? as u8);
+                }
+                "filter_wise" | "channelwise" => {
+                    spec.filter_wise = val.as_bool();
+                }
+                "num_thresholds" => {
+                    spec.num_thresholds = val.as_u64();
+                }
+                "bit_shifts" => {
+                    spec.bit_shifts = val.as_u64();
+                }
+                other => {
+                    return Err(AladinError::ImplConfig {
+                        node: name.into(),
+                        reason: format!("unknown field `{other}`"),
+                    });
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl ImplDefaults {
+    /// Parse the `defaults:` section.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut d = Self::default();
+        if let Some(s) = v.str_field("conv") {
+            d.conv = parse_linear(s, "defaults.conv")?;
+        }
+        if let Some(s) = v.str_field("gemm") {
+            d.gemm = parse_linear(s, "defaults.gemm")?;
+        }
+        if let Some(s) = v.str_field("quant") {
+            d.quant = parse_quant(s, "defaults.quant")?;
+        }
+        if let Some(s) = v.str_field("act") {
+            d.act = parse_act(s, "defaults.act")?;
+        }
+        Ok(d)
+    }
+}
+
+pub(crate) fn linear_str(l: LinearImpl) -> &'static str {
+    match l {
+        LinearImpl::Im2col => "im2col",
+        LinearImpl::Lut => "lut",
+        LinearImpl::Direct => "direct",
+    }
+}
+
+pub(crate) fn quant_str(q: QuantImpl) -> &'static str {
+    match q {
+        QuantImpl::Dyadic => "dyadic",
+        QuantImpl::Thresholds => "thresholds",
+        QuantImpl::Lut => "lut",
+    }
+}
+
+pub(crate) fn act_str(a: ActImpl) -> &'static str {
+    match a {
+        ActImpl::Comparator => "comparator",
+        ActImpl::Thresholds => "thresholds",
+    }
+}
+
+fn parse_linear(s: &str, node: &str) -> Result<LinearImpl> {
+    match s.to_ascii_lowercase().as_str() {
+        "im2col" => Ok(LinearImpl::Im2col),
+        "lut" => Ok(LinearImpl::Lut),
+        "direct" => Ok(LinearImpl::Direct),
+        other => Err(AladinError::ImplConfig {
+            node: node.into(),
+            reason: format!("unknown linear implementation `{other}`"),
+        }),
+    }
+}
+
+fn parse_quant(s: &str, node: &str) -> Result<QuantImpl> {
+    match s.to_ascii_lowercase().as_str() {
+        "dyadic" | "scaling" => Ok(QuantImpl::Dyadic),
+        "thresholds" | "threshold-tree" => Ok(QuantImpl::Thresholds),
+        "lut" => Ok(QuantImpl::Lut),
+        other => Err(AladinError::ImplConfig {
+            node: node.into(),
+            reason: format!("unknown quant implementation `{other}`"),
+        }),
+    }
+}
+
+fn parse_act(s: &str, node: &str) -> Result<ActImpl> {
+    match s.to_ascii_lowercase().as_str() {
+        "comparator" => Ok(ActImpl::Comparator),
+        "thresholds" | "threshold-tree" => Ok(ActImpl::Thresholds),
+        other => Err(AladinError::ImplConfig {
+            node: node.into(),
+            reason: format!("unknown activation implementation `{other}`"),
+        }),
+    }
+}
+
+impl ImplConfig {
+    /// Parse from YAML text; accepts both the structured form (top-level
+    /// `defaults:` / `nodes:` keys) and the flat Listing-1 layout.
+    pub fn from_yaml(text: &str) -> Result<Self> {
+        let doc = yamlish::parse(text)?;
+        let structured = doc.get("defaults").is_some() || doc.get("nodes").is_some();
+        let mut cfg = ImplConfig::default();
+        if structured {
+            if let Some(d) = doc.get("defaults") {
+                cfg.defaults = ImplDefaults::from_value(d)?;
+            }
+            if let Some(nodes) = doc.get("nodes").and_then(|n| n.as_obj()) {
+                for (name, spec) in nodes {
+                    cfg.nodes.insert(name.clone(), NodeImplSpec::from_value(name, spec)?);
+                }
+            }
+        } else if let Some(pairs) = doc.as_obj() {
+            for (name, spec) in pairs {
+                cfg.nodes.insert(name.clone(), NodeImplSpec::from_value(name, spec)?);
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_yaml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize to the structured YAML form.
+    pub fn to_yaml(&self) -> Result<String> {
+        let mut defaults = Value::obj();
+        defaults.set("conv", linear_str(self.defaults.conv));
+        defaults.set("gemm", linear_str(self.defaults.gemm));
+        defaults.set("quant", quant_str(self.defaults.quant));
+        defaults.set("act", act_str(self.defaults.act));
+        let mut nodes = Value::obj();
+        for (name, spec) in self.nodes.iter() {
+            let mut entry = Value::obj();
+            if let Some(s) = &spec.implementation {
+                entry.set("implementation", s.clone());
+            }
+            if let Some(b) = spec.bit_width {
+                entry.set("bit_width", b);
+            }
+            if let Some(f) = spec.filter_wise {
+                entry.set("filter_wise", f);
+            }
+            if let Some(t) = spec.num_thresholds {
+                entry.set("num_thresholds", t);
+            }
+            if let Some(s) = spec.bit_shifts {
+                entry.set("bit_shifts", s);
+            }
+            nodes.set(name.clone(), entry);
+        }
+        let doc = Value::obj().with("defaults", defaults).with("nodes", nodes);
+        Ok(yamlish::to_string(&doc))
+    }
+
+    /// Set (or replace) the spec for a node.
+    pub fn set_node(&mut self, name: impl Into<String>, spec: NodeImplSpec) -> &mut Self {
+        self.nodes.insert(name.into(), spec);
+        self
+    }
+
+    /// Resolve the implementation choice for a node of the graph.
+    pub fn resolve(&self, node: &Node) -> Result<ImplChoice> {
+        let spec = self.nodes.get(&node.name);
+        let name = node.name.as_str();
+        match &node.op {
+            Op::Conv(_) | Op::MatMul(_) => {
+                let strategy = match spec.and_then(|s| s.implementation.as_deref()) {
+                    Some(s) => parse_linear(s, name)?,
+                    None => self.defaults.conv,
+                };
+                Ok(ImplChoice::Linear {
+                    strategy,
+                    filter_wise: spec.and_then(|s| s.filter_wise).unwrap_or(false),
+                })
+            }
+            Op::Gemm(_) => {
+                let strategy = match spec.and_then(|s| s.implementation.as_deref()) {
+                    Some(s) => parse_linear(s, name)?,
+                    None => self.defaults.gemm,
+                };
+                Ok(ImplChoice::Linear {
+                    strategy,
+                    filter_wise: spec.and_then(|s| s.filter_wise).unwrap_or(false),
+                })
+            }
+            Op::Quant(_) => {
+                let strategy = match spec.and_then(|s| s.implementation.as_deref()) {
+                    Some(s) => parse_quant(s, name)?,
+                    None => self.defaults.quant,
+                };
+                Ok(ImplChoice::Quant {
+                    strategy,
+                    filter_wise: spec.and_then(|s| s.filter_wise).unwrap_or(false),
+                    bit_shifts: spec.and_then(|s| s.bit_shifts).unwrap_or(1),
+                })
+            }
+            Op::Relu => {
+                let strategy = match spec.and_then(|s| s.implementation.as_deref()) {
+                    Some(s) => parse_act(s, name)?,
+                    None => self.defaults.act,
+                };
+                Ok(ImplChoice::Act {
+                    strategy,
+                    num_thresholds: spec.and_then(|s| s.num_thresholds).unwrap_or(15),
+                })
+            }
+            Op::MaxPool(_) | Op::AvgPool(_) => Ok(ImplChoice::Pool),
+            Op::Input | Op::Output | Op::Flatten | Op::Add => Ok(ImplChoice::Passthrough),
+        }
+    }
+
+    /// Validate that every configured node name exists in the graph —
+    /// catches typos in hand-written config files.
+    pub fn check_against(&self, g: &Graph) -> Result<()> {
+        for name in self.nodes.keys() {
+            if !g.nodes.iter().any(|n| &n.name == name) {
+                return Err(AladinError::ImplConfig {
+                    node: name.clone(),
+                    reason: "configured node not present in the model".into(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+
+    const LISTING1: &str = r#"
+Quant_0:
+  implementation: thresholds
+  bit_width: 8
+
+MatMul_0:
+  filter_wise: True
+  implementation: LUT
+  bit_width: 8
+
+Relu_0:
+  implementation: comparator
+"#;
+
+    const STRUCTURED: &str = r#"
+defaults:
+  conv: im2col
+  quant: dyadic
+nodes:
+  conv1: { implementation: lut }
+"#;
+
+    #[test]
+    fn parses_listing1_flat_form() {
+        let cfg = ImplConfig::from_yaml(LISTING1).unwrap();
+        assert_eq!(cfg.nodes.len(), 3);
+        assert_eq!(
+            cfg.nodes["Quant_0"].implementation.as_deref(),
+            Some("thresholds")
+        );
+        assert_eq!(cfg.nodes["MatMul_0"].filter_wise, Some(true));
+    }
+
+    #[test]
+    fn parses_structured_form() {
+        let cfg = ImplConfig::from_yaml(STRUCTURED).unwrap();
+        assert_eq!(cfg.defaults.quant, QuantImpl::Dyadic);
+        assert_eq!(
+            cfg.nodes["conv1"].implementation.as_deref(),
+            Some("lut")
+        );
+    }
+
+    fn graph() -> Graph {
+        let mut b = GraphBuilder::new(
+            "g",
+            TensorSpec::chw(3, 8, 8, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("conv1", ConvAttrs::standard(4, 3, 1, 1), ElemType::int(8))
+            .relu("relu1")
+            .quant("quant1", ElemType::int(8), false);
+        b.finish()
+    }
+
+    #[test]
+    fn resolve_uses_defaults_then_overrides() {
+        let g = graph();
+        let cfg = ImplConfig::from_yaml(STRUCTURED).unwrap();
+        let conv = g.nodes.iter().find(|n| n.name == "conv1").unwrap();
+        match cfg.resolve(conv).unwrap() {
+            ImplChoice::Linear { strategy, .. } => assert_eq!(strategy, LinearImpl::Lut),
+            other => panic!("{other:?}"),
+        }
+        let q = g.nodes.iter().find(|n| n.name == "quant1").unwrap();
+        match cfg.resolve(q).unwrap() {
+            ImplChoice::Quant { strategy, .. } => assert_eq!(strategy, QuantImpl::Dyadic),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_rejected() {
+        let g = graph();
+        let mut cfg = ImplConfig::default();
+        cfg.set_node(
+            "conv1",
+            NodeImplSpec {
+                implementation: Some("winograd".into()),
+                ..Default::default()
+            },
+        );
+        let conv = g.nodes.iter().find(|n| n.name == "conv1").unwrap();
+        assert!(cfg.resolve(conv).is_err());
+    }
+
+    #[test]
+    fn check_against_flags_typos() {
+        let g = graph();
+        let mut cfg = ImplConfig::default();
+        cfg.set_node("conv_typo", NodeImplSpec::default());
+        assert!(cfg.check_against(&g).is_err());
+        let mut ok = ImplConfig::default();
+        ok.set_node("conv1", NodeImplSpec::default());
+        ok.check_against(&g).unwrap();
+    }
+
+    #[test]
+    fn yaml_round_trip() {
+        let cfg = ImplConfig::from_yaml(STRUCTURED).unwrap();
+        let text = cfg.to_yaml().unwrap();
+        let cfg2 = ImplConfig::from_yaml(&text).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Implementation-aware model generation (paper §V step 1, §VI):
+//! implementation configuration files, per-op decoration rules
+//! (Eqs. 2–12), and the decoration driver with the Conv→MatMul rewrite.
+
+pub mod config;
+pub mod decorate;
+pub mod ops;
+
+pub use config::{ActImpl, ImplChoice, ImplConfig, ImplDefaults, LinearImpl, NodeImplSpec, QuantImpl};
+pub use decorate::{decorate, layer_summaries, LayerSummary};

@@ -1,0 +1,121 @@
+//! Decoration of activation nodes (paper §VI-D; Eq. 11).
+
+use crate::error::Result;
+use crate::graph::ir::NodeAnn;
+use crate::graph::tensor::ElemType;
+use crate::impl_aware::config::ActImpl;
+
+use super::OpDecoration;
+
+/// Inputs needed to decorate one activation node.
+pub struct ActCtx<'a> {
+    pub name: &'a str,
+    /// Number of input features `I`.
+    pub inputs: u64,
+    /// Input element type — L_x.
+    pub x_type: ElemType,
+    /// Threshold count `T` for the threshold-tree variant (user-defined,
+    /// §VI-D: more thresholds = closer step-function approximation).
+    pub num_thresholds: u64,
+    pub strategy: ActImpl,
+}
+
+/// Decorate an activation node per paper Eq. (11) / the §VI-D
+/// threshold-tree generalization.
+pub fn decorate(ctx: &ActCtx) -> Result<OpDecoration> {
+    let l_x = ctx.x_type.bits as u64;
+
+    let (param_mem_bits, bops, label) = match ctx.strategy {
+        // ReLU via one comparator against zero: BOPs = I * (Lx + 1), no
+        // parameters (Eq. 11).
+        ActImpl::Comparator => (0, ctx.inputs * (l_x + 1), "comparator"),
+
+        // Generic activation as a T-threshold step function: T thresholds
+        // at input precision; comparisons via a balanced tree.
+        ActImpl::Thresholds => {
+            let t = ctx.num_thresholds.max(1);
+            let log_t = (t.max(2) as f64).log2().ceil() as u64;
+            (t * l_x, ctx.inputs * log_t * l_x, "threshold-tree")
+        }
+    };
+
+    Ok(OpDecoration {
+        ann: NodeAnn {
+            macs: 0,
+            macs_physical: 0,
+            bops,
+            param_mem_bits,
+            impl_label: label.into(),
+        },
+        input_mem_bits: ctx.inputs * l_x,
+        output_mem_bits: ctx.inputs * l_x,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_comparator_eq11() {
+        let d = decorate(&ActCtx {
+            name: "relu",
+            inputs: 512,
+            x_type: ElemType::int(8),
+            num_thresholds: 15,
+            strategy: ActImpl::Comparator,
+        })
+        .unwrap();
+        assert_eq!(d.ann.bops, 512 * 9); // I * (Lx + 1)
+        assert_eq!(d.ann.param_mem_bits, 0);
+        assert_eq!(d.ann.macs, 0);
+    }
+
+    #[test]
+    fn threshold_act_stores_t_thresholds() {
+        let d = decorate(&ActCtx {
+            name: "hswish",
+            inputs: 512,
+            x_type: ElemType::int(16),
+            num_thresholds: 31,
+            strategy: ActImpl::Thresholds,
+        })
+        .unwrap();
+        // T thresholds at input precision
+        assert_eq!(d.ann.param_mem_bits, 31 * 16);
+        // ceil(log2 31) = 5 comparisons of 16-bit values
+        assert_eq!(d.ann.bops, 512 * 5 * 16);
+    }
+
+    #[test]
+    fn more_thresholds_more_memory() {
+        let mk = |t| {
+            decorate(&ActCtx {
+                name: "a",
+                inputs: 10,
+                x_type: ElemType::int(8),
+                num_thresholds: t,
+                strategy: ActImpl::Thresholds,
+            })
+            .unwrap()
+            .ann
+            .param_mem_bits
+        };
+        assert!(mk(63) > mk(15));
+        assert!(mk(15) > mk(3));
+    }
+
+    #[test]
+    fn shape_preserving_edges() {
+        let d = decorate(&ActCtx {
+            name: "relu",
+            inputs: 100,
+            x_type: ElemType::int(4),
+            num_thresholds: 1,
+            strategy: ActImpl::Comparator,
+        })
+        .unwrap();
+        assert_eq!(d.input_mem_bits, 400);
+        assert_eq!(d.output_mem_bits, 400);
+    }
+}

@@ -1,0 +1,290 @@
+//! Decoration of linear ops: Conv (im2col/LUT/direct), Gemm, MatMul
+//! (paper §VI-A, §VI-B; Eqs. 2–6).
+
+use crate::error::{AladinError, Result};
+use crate::graph::ir::{ConvAttrs, GemmAttrs, NodeAnn};
+use crate::graph::tensor::{ElemType, TensorSpec};
+use crate::impl_aware::config::LinearImpl;
+use crate::quant::lut::lut_mul_size_bits;
+
+use super::OpDecoration;
+
+/// Geometry of a linear op after normalization to matmul form
+/// `[M x K] @ [K x N]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinearGeom {
+    /// Output channels / features (rows of the filter matrix).
+    pub m: usize,
+    /// Shared dimension `Cin/groups * kh * kw`.
+    pub k: usize,
+    /// Spatial positions `Hout * Wout` (1 for Gemm).
+    pub n: usize,
+    /// Groups (depthwise: groups == Cout, k == kh*kw).
+    pub groups: usize,
+}
+
+impl LinearGeom {
+    pub fn from_conv(attrs: &ConvAttrs, input: &TensorSpec) -> Self {
+        let (h, w) = (input.dims[1], input.dims[2]);
+        let (oh, ow) = attrs.out_hw(h, w);
+        let cin = input.dims[0];
+        Self {
+            m: attrs.out_channels,
+            k: (cin / attrs.groups) * attrs.kernel.0 * attrs.kernel.1,
+            n: oh * ow,
+            groups: attrs.groups,
+        }
+    }
+
+    pub fn from_gemm(attrs: &GemmAttrs, input: &TensorSpec) -> Self {
+        Self {
+            m: attrs.out_features,
+            k: input.dims[0],
+            n: 1,
+            groups: 1,
+        }
+    }
+
+    /// Physically executed whole-layer MACs:
+    /// `M * K * N` (K already folds the /groups factor; each of the M
+    /// output channels only reads its own group's slice).
+    pub fn macs_physical(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+/// Inputs needed to decorate one linear node.
+pub struct LinearCtx<'a> {
+    pub name: &'a str,
+    pub geom: LinearGeom,
+    /// Full input-channel count (pre-/groups), for the paper's Eq. 5.
+    pub cin_full: usize,
+    pub kernel: (usize, usize),
+    /// Weight element type (L_w).
+    pub w_type: ElemType,
+    /// Input activation element type (L_x).
+    pub x_type: ElemType,
+    /// Accumulator element type (L_acc).
+    pub acc_type: ElemType,
+    pub strategy: LinearImpl,
+}
+
+/// Decorate a linear node per paper Eqs. (2)–(6).
+pub fn decorate(ctx: &LinearCtx) -> Result<OpDecoration> {
+    let g = &ctx.geom;
+    let (kh, kw) = ctx.kernel;
+    let l_x = ctx.x_type.bits as u64;
+    let l_w = ctx.w_type.bits as u64;
+    let l_acc = ctx.acc_type.bits as u64;
+
+    // Eq. (5) — the paper's MAC metric: Cout * Cin * kh * kw, groups-blind
+    // and per output pixel (see NodeAnn::macs docs).
+    let macs_paper = g.m as u64 * ctx.cin_full as u64 * kh as u64 * kw as u64;
+    let macs_physical = g.macs_physical();
+
+    // Eq. (2) — im2col input buffer: (Hout*Wout)(Cin/groups * kh * kw) * Lx,
+    // replicated per group for grouped convolutions. `Direct` convolutions
+    // keep the original input footprint.
+    let input_mem_bits = match ctx.strategy {
+        LinearImpl::Im2col | LinearImpl::Lut => {
+            g.n as u64 * g.k as u64 * g.groups as u64 * l_x
+        }
+        LinearImpl::Direct => ctx.cin_full as u64 * g.n as u64 * l_x,
+    };
+
+    // Eq. (3) — parameters: weights at Lw plus one bias per output channel
+    // at Lacc.
+    let weight_bits = g.m as u64 * g.k as u64 * l_w;
+    let bias_bits = g.m as u64 * l_acc;
+    let mut param_mem_bits = weight_bits + bias_bits;
+
+    // Eq. (4) — output at accumulator precision.
+    let output_mem_bits = g.m as u64 * g.n as u64 * l_acc;
+
+    // Eq. (6) — BOPs = MACs * (1 + Lacc + Lw + Lx). "The number of BOPs
+    // remains unchanged [for LUT], since the MAC is replaced by a memory
+    // access indexed by the operands."
+    let bops = macs_paper * (1 + l_acc + l_w + l_x);
+
+    let (macs, label) = match ctx.strategy {
+        LinearImpl::Im2col => (macs_paper, "im2col"),
+        LinearImpl::Direct => (macs_paper, "direct"),
+        LinearImpl::Lut => {
+            // MACs = 0; parameters grow by the multiplication LUT,
+            // 2^(Lw+La) * Lacc bits (§II-B).
+            if l_w + l_x > 24 {
+                return Err(AladinError::ImplConfig {
+                    node: ctx.name.into(),
+                    reason: format!(
+                        "multiplication LUT for Lw={l_w} La={l_x} has 2^{} entries — infeasible",
+                        l_w + l_x
+                    ),
+                });
+            }
+            param_mem_bits += lut_mul_size_bits(l_w as u8, l_x as u8, l_acc as u8);
+            (0, "lut")
+        }
+    };
+
+    Ok(OpDecoration {
+        ann: NodeAnn {
+            macs,
+            macs_physical: if ctx.strategy == LinearImpl::Lut {
+                // LUT replaces multiplies with lookups; the simulator models
+                // them as memory accesses, but the logical op count stands.
+                macs_physical
+            } else {
+                macs_physical
+            },
+            bops,
+            param_mem_bits,
+            impl_label: label.into(),
+        },
+        input_mem_bits,
+        output_mem_bits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_std(strategy: LinearImpl) -> (LinearCtx<'static>, LinearGeom) {
+        // Conv 16 -> 32, 3x3, on 8x8 input, stride 1, pad 1
+        let attrs = ConvAttrs::standard(32, 3, 1, 1);
+        let input = TensorSpec::chw(16, 8, 8, ElemType::int(8));
+        let geom = LinearGeom::from_conv(&attrs, &input);
+        (
+            LinearCtx {
+                name: "conv",
+                geom,
+                cin_full: 16,
+                kernel: (3, 3),
+                w_type: ElemType::int(8),
+                x_type: ElemType::int(8),
+                acc_type: ElemType::int(32),
+                strategy,
+            },
+            geom,
+        )
+    }
+
+    #[test]
+    fn geometry_standard_conv() {
+        let (_, g) = ctx_std(LinearImpl::Im2col);
+        assert_eq!(g.m, 32);
+        assert_eq!(g.k, 16 * 9);
+        assert_eq!(g.n, 64);
+        assert_eq!(g.macs_physical(), 32 * 144 * 64);
+    }
+
+    #[test]
+    fn geometry_depthwise_conv() {
+        let attrs = ConvAttrs::depthwise(16, 3, 1, 1);
+        let input = TensorSpec::chw(16, 8, 8, ElemType::int(8));
+        let g = LinearGeom::from_conv(&attrs, &input);
+        assert_eq!(g.m, 16);
+        assert_eq!(g.k, 9); // Cin/groups = 1
+        assert_eq!(g.groups, 16);
+        assert_eq!(g.macs_physical(), 16 * 9 * 64);
+    }
+
+    #[test]
+    fn eq2_input_memory_im2col() {
+        let (ctx, g) = ctx_std(LinearImpl::Im2col);
+        let d = decorate(&ctx).unwrap();
+        // (Hout*Wout)(Cin*kh*kw) * Lx = 64 * 144 * 8
+        assert_eq!(d.input_mem_bits, g.n as u64 * 144 * 8);
+    }
+
+    #[test]
+    fn eq3_eq4_param_and_output_memory() {
+        let (ctx, g) = ctx_std(LinearImpl::Im2col);
+        let d = decorate(&ctx).unwrap();
+        // weights 32*144*8 + bias 32*32
+        assert_eq!(d.ann.param_mem_bits, 32 * 144 * 8 + 32 * 32);
+        // output (Cout*Hout*Wout)*Lacc
+        assert_eq!(d.output_mem_bits, g.m as u64 * g.n as u64 * 32);
+    }
+
+    #[test]
+    fn eq5_eq6_macs_and_bops() {
+        let (ctx, _) = ctx_std(LinearImpl::Im2col);
+        let d = decorate(&ctx).unwrap();
+        let macs = 32u64 * 16 * 3 * 3; // Eq. 5 convention
+        assert_eq!(d.ann.macs, macs);
+        assert_eq!(d.ann.bops, macs * (1 + 32 + 8 + 8)); // Eq. 6
+    }
+
+    #[test]
+    fn lut_zeroes_macs_and_adds_table() {
+        let (mut ctx, _) = ctx_std(LinearImpl::Lut);
+        ctx.w_type = ElemType::int(4);
+        let d = decorate(&ctx).unwrap();
+        assert_eq!(d.ann.macs, 0);
+        let base = 32u64 * 144 * 4 + 32 * 32;
+        assert_eq!(
+            d.ann.param_mem_bits,
+            base + lut_mul_size_bits(4, 8, 32)
+        );
+        // BOPs unchanged vs the MAC implementation (paper §VI-A)
+        let macs = 32u64 * 16 * 9;
+        assert_eq!(d.ann.bops, macs * (1 + 32 + 4 + 8));
+    }
+
+    #[test]
+    fn lut_rejected_for_wide_operands() {
+        let (mut ctx, _) = ctx_std(LinearImpl::Lut);
+        ctx.w_type = ElemType::int(16);
+        ctx.x_type = ElemType::int(16);
+        assert!(decorate(&ctx).is_err());
+    }
+
+    #[test]
+    fn depthwise_paper_macs_exceed_pointwise() {
+        // The §VIII-A observation: with the Eq. 5 convention a 3x3 depthwise
+        // layer reads as 9x the MACs of a 1x1 pointwise at equal channels.
+        let input = TensorSpec::chw(64, 4, 4, ElemType::int(8));
+        let dw = ConvAttrs::depthwise(64, 3, 1, 1);
+        let pw = ConvAttrs::standard(64, 1, 1, 0);
+        let mk = |attrs: &ConvAttrs| LinearCtx {
+            name: "c",
+            geom: LinearGeom::from_conv(attrs, &input),
+            cin_full: 64,
+            kernel: attrs.kernel,
+            w_type: ElemType::int(8),
+            x_type: ElemType::int(8),
+            acc_type: ElemType::int(32),
+            strategy: LinearImpl::Im2col,
+        };
+        let d_dw = decorate(&mk(&dw)).unwrap();
+        let d_pw = decorate(&mk(&pw)).unwrap();
+        assert_eq!(d_dw.ann.macs, d_pw.ann.macs * 9);
+        // ... while its parameter memory is far smaller (weights /64)
+        assert!(d_dw.ann.param_mem_bits < d_pw.ann.param_mem_bits);
+        // and physically it executes fewer MACs
+        assert!(d_dw.ann.macs_physical < d_pw.ann.macs_physical);
+    }
+
+    #[test]
+    fn gemm_as_degenerate_conv() {
+        let attrs = GemmAttrs { out_features: 10 };
+        let input = TensorSpec::new(vec![256], ElemType::int(8));
+        let g = LinearGeom::from_gemm(&attrs, &input);
+        assert_eq!((g.m, g.k, g.n), (10, 256, 1));
+        let ctx = LinearCtx {
+            name: "fc",
+            geom: g,
+            cin_full: 256,
+            kernel: (1, 1),
+            w_type: ElemType::int(8),
+            x_type: ElemType::int(8),
+            acc_type: ElemType::int(32),
+            strategy: LinearImpl::Im2col,
+        };
+        let d = decorate(&ctx).unwrap();
+        assert_eq!(d.ann.macs, 2560);
+        // no im2col redundancy when N == 1: input mem = K * Lx
+        assert_eq!(d.input_mem_bits, 256 * 8);
+    }
+}

@@ -1,0 +1,18 @@
+//! Per-operation decoration rules (paper §VI-A … §VI-E).
+
+pub mod act;
+pub mod conv;
+pub mod pool;
+pub mod quant;
+
+use crate::graph::ir::NodeAnn;
+
+/// Result of decorating one node: the node annotation plus the memory
+/// requirements it imposes on its data input and output edges (Eqs. 2, 4 —
+/// the input side includes im2col redundancy where applicable).
+#[derive(Debug, Clone)]
+pub struct OpDecoration {
+    pub ann: NodeAnn,
+    pub input_mem_bits: u64,
+    pub output_mem_bits: u64,
+}

@@ -1,0 +1,105 @@
+//! Decoration of pooling nodes (paper §VI-E; Eq. 12).
+
+use crate::error::Result;
+use crate::graph::ir::{NodeAnn, PoolAttrs};
+use crate::graph::tensor::ElemType;
+
+use super::OpDecoration;
+
+/// Inputs needed to decorate one pooling node.
+pub struct PoolCtx<'a> {
+    pub name: &'a str,
+    /// Number of input elements `I`.
+    pub inputs: u64,
+    /// Number of output elements.
+    pub outputs: u64,
+    /// Input element type — L_x.
+    pub x_type: ElemType,
+    pub attrs: &'a PoolAttrs,
+    /// Average pooling divides by the patch size; the division is
+    /// shift-approximated (§VI-E), adding one shift per output element.
+    pub is_avg: bool,
+}
+
+/// Decorate a pooling node per paper Eq. (12).
+pub fn decorate(ctx: &PoolCtx) -> Result<OpDecoration> {
+    let l_x = ctx.x_type.bits as u64;
+    let (kh, kw) = (ctx.attrs.kernel.0 as u64, ctx.attrs.kernel.1 as u64);
+
+    // Eq. (12): BOPs = I * (Lx * Kw * Kh) — comparator work over each patch.
+    let mut bops = ctx.inputs * l_x * kw * kh;
+    let label = if ctx.is_avg {
+        // Average pooling: accumulation plus a power-of-two shift division
+        // per output (dyadic approximation of 1/(Kh*Kw), §VI-E).
+        bops += ctx.outputs;
+        "shift-avg"
+    } else {
+        "comparator"
+    };
+
+    Ok(OpDecoration {
+        ann: NodeAnn {
+            macs: 0,
+            macs_physical: 0,
+            bops,
+            param_mem_bits: 0,
+            impl_label: label.into(),
+        },
+        input_mem_bits: ctx.inputs * l_x,
+        output_mem_bits: ctx.outputs * l_x,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_eq12() {
+        let attrs = PoolAttrs::square(2, 2);
+        let d = decorate(&PoolCtx {
+            name: "mp",
+            inputs: 1024,
+            outputs: 256,
+            x_type: ElemType::int(8),
+            attrs: &attrs,
+            is_avg: false,
+        })
+        .unwrap();
+        assert_eq!(d.ann.bops, 1024 * 8 * 2 * 2);
+        assert_eq!(d.ann.param_mem_bits, 0);
+        assert_eq!(d.ann.impl_label, "comparator");
+    }
+
+    #[test]
+    fn avgpool_adds_shift_per_output() {
+        let attrs = PoolAttrs::square(4, 4);
+        let d = decorate(&PoolCtx {
+            name: "ap",
+            inputs: 1024,
+            outputs: 64,
+            x_type: ElemType::int(8),
+            attrs: &attrs,
+            is_avg: true,
+        })
+        .unwrap();
+        assert_eq!(d.ann.bops, 1024 * 8 * 16 + 64);
+        assert_eq!(d.ann.impl_label, "shift-avg");
+    }
+
+    #[test]
+    fn output_memory_shrinks() {
+        let attrs = PoolAttrs::square(2, 2);
+        let d = decorate(&PoolCtx {
+            name: "mp",
+            inputs: 400,
+            outputs: 100,
+            x_type: ElemType::int(4),
+            attrs: &attrs,
+            is_avg: false,
+        })
+        .unwrap();
+        assert_eq!(d.input_mem_bits, 1600);
+        assert_eq!(d.output_mem_bits, 400);
+    }
+}

@@ -1,0 +1,165 @@
+//! Decoration of requantization nodes (paper §VI-C; Eqs. 7–10).
+
+use crate::error::{AladinError, Result};
+use crate::graph::ir::NodeAnn;
+use crate::graph::tensor::ElemType;
+use crate::impl_aware::config::QuantImpl;
+use crate::quant::lut::lut_quant_size_bits;
+
+use super::OpDecoration;
+
+/// Inputs needed to decorate one Quant node.
+pub struct QuantCtx<'a> {
+    pub name: &'a str,
+    /// Number of input features `I`.
+    pub inputs: u64,
+    /// Accumulator (input) element type — L_acc.
+    pub acc_type: ElemType,
+    /// Target output element type — L_y.
+    pub out_type: ElemType,
+    /// Channel-wise parameters: multiply parameter memory by `channels`.
+    pub filter_wise: bool,
+    pub channels: u64,
+    /// Shift ops per element for dyadic scaling (Eq. 10).
+    pub bit_shifts: u64,
+    pub strategy: QuantImpl,
+}
+
+/// Decorate a Quant node per paper Eqs. (7)–(10).
+pub fn decorate(ctx: &QuantCtx) -> Result<OpDecoration> {
+    let l_acc = ctx.acc_type.bits as u64;
+    let l_y = ctx.out_type.bits as u64;
+    let ch = if ctx.filter_wise { ctx.channels } else { 1 };
+
+    let (param_mem_bits, bops, label) = match ctx.strategy {
+        // Dyadic scaling: one 32-bit scale parameter (per channel when
+        // filter-wise); BOPs = I * #bit-shifts (Eq. 10).
+        QuantImpl::Dyadic => (32 * ch, ctx.inputs * ctx.bit_shifts, "dyadic"),
+
+        // Threshold tree: (2^Ly - 1) * Lacc parameter bits (Eq. 8, times
+        // channels when channel-wise); BOPs = I * log2(T) * Lacc (Eq. 9).
+        QuantImpl::Thresholds => {
+            let t = (1u64 << l_y) - 1;
+            let log_t = (t.max(2) as f64).log2().ceil() as u64;
+            (
+                t * l_acc * ch,
+                ctx.inputs * log_t * l_acc,
+                "threshold-tree",
+            )
+        }
+
+        // Quantization LUT: 2^Lacc * Ly bits (Eq. 7); O(1) per element —
+        // one Lacc-bit indexed access.
+        QuantImpl::Lut => {
+            let size = lut_quant_size_bits(ctx.acc_type.bits, ctx.out_type.bits)
+                .ok_or_else(|| AladinError::ImplConfig {
+                    node: ctx.name.into(),
+                    reason: format!(
+                        "quantization LUT infeasible for {}-bit accumulator (Eq. 7 size 2^{l_acc})",
+                        l_acc
+                    ),
+                })?;
+            (size * ch, ctx.inputs * l_acc, "lut")
+        }
+    };
+
+    Ok(OpDecoration {
+        ann: NodeAnn {
+            macs: 0,
+            macs_physical: 0,
+            bops,
+            param_mem_bits,
+            impl_label: label.into(),
+        },
+        input_mem_bits: ctx.inputs * l_acc,
+        output_mem_bits: ctx.inputs * l_y,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(strategy: QuantImpl) -> QuantCtx<'static> {
+        QuantCtx {
+            name: "q",
+            inputs: 1024,
+            acc_type: ElemType::int(32),
+            out_type: ElemType::int(8),
+            filter_wise: false,
+            channels: 16,
+            bit_shifts: 1,
+            strategy,
+        }
+    }
+
+    #[test]
+    fn dyadic_minimal_memory() {
+        let d = decorate(&ctx(QuantImpl::Dyadic)).unwrap();
+        assert_eq!(d.ann.param_mem_bits, 32);
+        assert_eq!(d.ann.bops, 1024); // Eq. 10 with 1 shift/elem
+        assert_eq!(d.ann.impl_label, "dyadic");
+    }
+
+    #[test]
+    fn dyadic_channelwise_scales_params() {
+        let mut c = ctx(QuantImpl::Dyadic);
+        c.filter_wise = true;
+        let d = decorate(&c).unwrap();
+        assert_eq!(d.ann.param_mem_bits, 32 * 16);
+    }
+
+    #[test]
+    fn thresholds_eq8_eq9() {
+        let d = decorate(&ctx(QuantImpl::Thresholds)).unwrap();
+        // Eq. 8: (2^8 - 1) * 32
+        assert_eq!(d.ann.param_mem_bits, 255 * 32);
+        // Eq. 9: I * ceil(log2 255) * Lacc = 1024 * 8 * 32
+        assert_eq!(d.ann.bops, 1024 * 8 * 32);
+    }
+
+    #[test]
+    fn thresholds_channelwise_multiplies_by_channels() {
+        let mut c = ctx(QuantImpl::Thresholds);
+        c.filter_wise = true;
+        let d = decorate(&c).unwrap();
+        assert_eq!(d.ann.param_mem_bits, 255 * 32 * 16);
+    }
+
+    #[test]
+    fn low_bit_threshold_memory_comparable_to_8bit_dyadic() {
+        // §VIII-A: "threshold-tree implementations, even under low-bit
+        // quantization, introduce a memory overhead comparable to 8-bit
+        // quantization based on dyadic scaling" — per channel, a 2-bit tree
+        // stores 3 * Lacc = 48 bits (16-bit acc) vs 32 bits for dyadic.
+        let mut tree2 = ctx(QuantImpl::Thresholds);
+        tree2.acc_type = ElemType::int(16);
+        tree2.out_type = ElemType::int(2);
+        let d_tree = decorate(&tree2).unwrap();
+        let d_dyadic = decorate(&ctx(QuantImpl::Dyadic)).unwrap();
+        let ratio = d_tree.ann.param_mem_bits as f64 / d_dyadic.ann.param_mem_bits as f64;
+        assert!((0.5..=4.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn lut_infeasible_for_32bit_acc() {
+        assert!(decorate(&ctx(QuantImpl::Lut)).is_err());
+    }
+
+    #[test]
+    fn lut_feasible_for_16bit_acc() {
+        let mut c = ctx(QuantImpl::Lut);
+        c.acc_type = ElemType::int(16);
+        let d = decorate(&c).unwrap();
+        // Eq. 7: 2^16 * 8 bits
+        assert_eq!(d.ann.param_mem_bits, 65536 * 8);
+        assert_eq!(d.ann.impl_label, "lut");
+    }
+
+    #[test]
+    fn edge_memories_follow_precisions() {
+        let d = decorate(&ctx(QuantImpl::Dyadic)).unwrap();
+        assert_eq!(d.input_mem_bits, 1024 * 32);
+        assert_eq!(d.output_mem_bits, 1024 * 8);
+    }
+}

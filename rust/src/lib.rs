@@ -1,0 +1,38 @@
+//! # ALADIN — Accuracy–Latency-Aware Design-space Inference Analysis
+//!
+//! Reproduction of *"ALADIN: Accuracy–Latency–Aware Design-Space InfereNce
+//! Analysis for Real-Time Embedded AI Accelerators"* (Baldi, Casini,
+//! Biondi). The library evaluates mixed-precision quantized neural networks
+//! on scratchpad-based embedded AI accelerators *without deploying them*:
+//!
+//! 1. [`graph`] — the QONNX-style DAG representation of a QNN;
+//! 2. [`impl_aware`] — refinement with implementation details (im2col vs
+//!    LUT matmuls, dyadic vs threshold-tree requantization, …) producing
+//!    per-node MACs/BOPs and per-edge memory annotations (paper §VI);
+//! 3. [`platform`] + [`platform_aware`] — refinement against a hardware
+//!    model (cores, L1 banks, L2/L3, DMA): fusion, L1-feasible tiling,
+//!    double-buffered schedules (paper §VII);
+//! 4. [`sim`] — an event-driven cycle simulator of the abstract platform
+//!    (the GVSoC substitute) producing per-layer cycles and L1/L2
+//!    utilization (paper §VIII-B);
+//! 5. [`analysis`] + [`dse`] — latency bounds, deadline screening, and the
+//!    hardware design-space exploration of paper §VIII-C;
+//! 6. [`models`] — the MobileNetV1 workload and the Table-I cases;
+//! 7. [`runtime`] — PJRT-based execution of the AOT-compiled quantized
+//!    inference graphs for the accuracy column of Table I.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod dse;
+pub mod error;
+pub mod graph;
+pub mod impl_aware;
+pub mod models;
+pub mod platform;
+pub mod platform_aware;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{AladinError, Result};

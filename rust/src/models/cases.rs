@@ -1,0 +1,153 @@
+//! The three Table-I configurations of MobileNetV1.
+//!
+//! | Block      | Case 1       | Case 2       | Case 3       |
+//! |------------|--------------|--------------|--------------|
+//! | Pilot      | int8 im2col  | int8 im2col  | int8 im2col  |
+//! | Block 1    | int8 im2col  | int4 im2col  | int8 im2col  |
+//! | Block 2-5  | int8 im2col  | int4 im2col  | int4 im2col  |
+//! | Block 6-7  | int8 im2col  | int4 im2col  | int4 LUT     |
+//! | Block 8-9  | int8 im2col  | int4 LUT     | int4 LUT     |
+//! | Block 10   | int8 im2col  | int4 LUT     | int2 LUT     |
+//! | Classifier | int8 Gemm    | int8 Gemm    | int4 LUT     |
+//! | Accuracy   | 0.83         | 0.77         | 0.78         |
+
+use super::mobilenet::{BlockConfig, BlockImpl, MobileNetConfig};
+
+/// Paper-reported accuracies for reference in reports (Table I bottom row).
+pub const PAPER_ACCURACY: [(&str, f64); 3] = [("case1", 0.83), ("case2", 0.77), ("case3", 0.78)];
+
+/// Case 1 — all-int8 baseline, pure im2col.
+pub fn case1() -> MobileNetConfig {
+    MobileNetConfig::uniform("case1", 8, BlockImpl::Im2col)
+}
+
+/// Case 2 — int4 body with LUT on the last three blocks.
+pub fn case2() -> MobileNetConfig {
+    let i4 = BlockConfig::new(4, BlockImpl::Im2col);
+    let l4 = BlockConfig::new(4, BlockImpl::Lut);
+    MobileNetConfig {
+        name: "case2".into(),
+        input: (3, 32, 32),
+        num_classes: 10,
+        width_mult: 1.0,
+        pilot: BlockConfig::new(8, BlockImpl::Im2col),
+        blocks: vec![i4, i4, i4, i4, i4, i4, i4, l4, l4, l4],
+        classifier: BlockConfig::new(8, BlockImpl::Im2col),
+    }
+}
+
+/// Case 3 — aggressive: int4/int2 with a LUT tail and a LUT classifier.
+pub fn case3() -> MobileNetConfig {
+    let i8c = BlockConfig::new(8, BlockImpl::Im2col);
+    let i4 = BlockConfig::new(4, BlockImpl::Im2col);
+    let l4 = BlockConfig::new(4, BlockImpl::Lut);
+    let l2 = BlockConfig::new(2, BlockImpl::Lut);
+    MobileNetConfig {
+        name: "case3".into(),
+        input: (3, 32, 32),
+        num_classes: 10,
+        width_mult: 1.0,
+        pilot: BlockConfig::new(8, BlockImpl::Im2col),
+        blocks: vec![i8c, i4, i4, i4, i4, l4, l4, l4, l4, l2],
+        classifier: BlockConfig::new(4, BlockImpl::Lut),
+    }
+}
+
+/// All three cases in Table-I order.
+pub fn all_cases() -> Vec<MobileNetConfig> {
+    vec![case1(), case2(), case3()]
+}
+
+/// A rendered Table-I row set (precision/implementation per block), for the
+/// `table1` bench/example output.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub block: String,
+    pub case1: String,
+    pub case2: String,
+    pub case3: String,
+}
+
+fn cell(b: &BlockConfig) -> String {
+    let impl_str = match b.implementation {
+        BlockImpl::Im2col => "im2col",
+        BlockImpl::Lut => "LUT",
+    };
+    format!("int{} {}", b.bits, impl_str)
+}
+
+/// Build the Table-I structure rows from the case definitions.
+pub fn table1_rows() -> Vec<Table1Row> {
+    let (c1, c2, c3) = (case1(), case2(), case3());
+    let mut rows = vec![Table1Row {
+        block: "Pilot".into(),
+        case1: cell(&c1.pilot),
+        case2: cell(&c2.pilot),
+        case3: cell(&c3.pilot),
+    }];
+    for i in 0..10 {
+        rows.push(Table1Row {
+            block: format!("Block_{}", i + 1),
+            case1: cell(&c1.blocks[i]),
+            case2: cell(&c2.blocks[i]),
+            case3: cell(&c3.blocks[i]),
+        });
+    }
+    rows.push(Table1Row {
+        block: "Classifier".into(),
+        case1: cell(&c1.classifier).replace("im2col", "Gemm"),
+        case2: cell(&c2.classifier).replace("im2col", "Gemm"),
+        case3: cell(&c3.classifier),
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::impl_aware::decorate;
+    use crate::graph::validate::validate;
+
+    #[test]
+    fn all_cases_build_and_decorate() {
+        for case in all_cases() {
+            let (g, cfg) = case.build();
+            validate(&g).unwrap();
+            let d = decorate(g, &cfg).unwrap();
+            assert!(d.total_bops() > 0, "{}", case.name);
+        }
+    }
+
+    #[test]
+    fn case_structure_matches_table1() {
+        let c2 = case2();
+        assert_eq!(c2.pilot.bits, 8);
+        assert!(c2.blocks[..7].iter().all(|b| b.bits == 4 && b.implementation == BlockImpl::Im2col));
+        assert!(c2.blocks[7..].iter().all(|b| b.bits == 4 && b.implementation == BlockImpl::Lut));
+        let c3 = case3();
+        assert_eq!(c3.blocks[0].bits, 8);
+        assert_eq!(c3.blocks[9].bits, 2);
+        assert_eq!(c3.blocks[9].implementation, BlockImpl::Lut);
+        assert_eq!(c3.classifier.bits, 4);
+    }
+
+    #[test]
+    fn table1_rows_render() {
+        let rows = table1_rows();
+        assert_eq!(rows.len(), 12);
+        assert_eq!(rows[0].block, "Pilot");
+        assert_eq!(rows[11].case1, "int8 Gemm");
+        assert_eq!(rows[11].case3, "int4 LUT");
+        assert_eq!(rows[10].case3, "int2 LUT");
+    }
+
+    #[test]
+    fn case1_params_larger_than_case2() {
+        // int8 everywhere must dominate int4-body in weight memory
+        let p = |c: MobileNetConfig| {
+            let (g, cfg) = c.build();
+            decorate(g, &cfg).unwrap().total_param_bits()
+        };
+        assert!(p(case1()) > p(case2()));
+    }
+}

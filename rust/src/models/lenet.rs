@@ -1,0 +1,65 @@
+//! A LeNet-5-style compact CNN — a second workload for quickstart examples
+//! and tests (exercises MaxPool layers, which MobileNetV1 lacks).
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::ir::{ConvAttrs, Graph, PoolAttrs};
+use crate::graph::tensor::{ElemType, TensorSpec};
+use crate::impl_aware::config::ImplConfig;
+
+/// Build a quantized LeNet-5-like network for `(c, h, w)` inputs.
+pub fn lenet(bits: u8, input: (usize, usize, usize), num_classes: usize) -> (Graph, ImplConfig) {
+    let acc = if bits < 8 { ElemType::int(16) } else { ElemType::int(32) };
+    let wt = ElemType::int(bits);
+    let mut b = GraphBuilder::new(
+        format!("lenet_int{bits}"),
+        TensorSpec::chw(input.0, input.1, input.2, ElemType::int(8)),
+        acc,
+    );
+    b.conv("Conv_0", ConvAttrs::standard(6, 5, 1, 2), wt)
+        .relu("Relu_0")
+        .quant("Quant_0", wt, false)
+        .max_pool("MaxPool_0", PoolAttrs::square(2, 2))
+        .conv("Conv_1", ConvAttrs::standard(16, 5, 1, 0), wt)
+        .relu("Relu_1")
+        .quant("Quant_1", wt, false)
+        .max_pool("MaxPool_1", PoolAttrs::square(2, 2))
+        .flatten("Flatten_0")
+        .gemm("Gemm_0", 120, wt)
+        .relu("Relu_2")
+        .quant("Quant_2", wt, false)
+        .gemm("Gemm_1", 84, wt)
+        .relu("Relu_3")
+        .quant("Quant_3", wt, false)
+        .gemm("Gemm_2", num_classes, wt)
+        .quant("Quant_4", ElemType::int(8), false);
+    (b.finish(), ImplConfig::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::impl_aware::decorate;
+    use crate::platform::presets;
+    use crate::platform_aware::{build_schedule, fuse};
+    use crate::sim::simulate;
+
+    #[test]
+    fn lenet_builds_for_cifar_shape() {
+        let (g, cfg) = lenet(8, (3, 32, 32), 10);
+        validate(&g).unwrap();
+        let d = decorate(g, &cfg).unwrap();
+        assert!(d.total_macs() > 0);
+    }
+
+    #[test]
+    fn lenet_end_to_end_simulation() {
+        let (g, cfg) = lenet(4, (3, 32, 32), 10);
+        let d = decorate(g, &cfg).unwrap();
+        let s = build_schedule(fuse(&d).unwrap(), &presets::gap8()).unwrap();
+        let r = simulate(&s);
+        assert!(r.total_cycles() > 0);
+        // RC_1 RC_2 RP_1 RP_2 FC_1..3 + flatten
+        assert!(r.layers.len() >= 8);
+    }
+}

@@ -1,0 +1,252 @@
+//! MobileNetV1 workload builder (paper §VIII: "a well-known compact CNN,
+//! MobileNet V1, trained on the CIFAR-10 dataset").
+//!
+//! The network is a pilot convolution followed by depthwise-separable
+//! blocks (each: depthwise 3x3 + ReLU + Quant, pointwise 1x1 + ReLU +
+//! Quant) and a classifier head (average pooling + fully connected), as in
+//! Table I: Pilot, Block_1 … Block_10, Classifier.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::ir::{ConvAttrs, Graph, PoolAttrs};
+use crate::graph::tensor::{ElemType, TensorSpec};
+use crate::impl_aware::config::{ImplConfig, NodeImplSpec};
+
+/// Linear-op implementation selector per Table I's "Impl." column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockImpl {
+    Im2col,
+    Lut,
+}
+
+impl BlockImpl {
+    fn as_str(&self) -> &'static str {
+        match self {
+            BlockImpl::Im2col => "im2col",
+            BlockImpl::Lut => "lut",
+        }
+    }
+}
+
+/// Per-block precision + implementation (one Table I row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockConfig {
+    /// Weight/activation bit-width of the block.
+    pub bits: u8,
+    pub implementation: BlockImpl,
+}
+
+impl BlockConfig {
+    pub const fn new(bits: u8, implementation: BlockImpl) -> Self {
+        Self { bits, implementation }
+    }
+
+    /// Accumulator width: 32-bit for byte precision, 16-bit for sub-byte
+    /// (paper §VIII: "accumulators … are 32-bits, except in sub-byte
+    /// quantization configurations, where 16-bit ones are used").
+    pub fn acc_bits(&self) -> u8 {
+        if self.bits < 8 {
+            16
+        } else {
+            32
+        }
+    }
+}
+
+/// Full MobileNetV1 instance description.
+#[derive(Debug, Clone)]
+pub struct MobileNetConfig {
+    pub name: String,
+    /// Input feature map (C, H, W) — CIFAR-10: (3, 32, 32).
+    pub input: (usize, usize, usize),
+    pub num_classes: usize,
+    /// Width multiplier applied to every channel count.
+    pub width_mult: f64,
+    pub pilot: BlockConfig,
+    /// The 10 depthwise-separable blocks of Table I.
+    pub blocks: Vec<BlockConfig>,
+    pub classifier: BlockConfig,
+}
+
+/// Channel plan of the 10-block CIFAR variant: (pointwise out channels,
+/// depthwise stride) per block.
+pub const BLOCK_PLAN: [(usize, usize); 10] = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+];
+
+/// Pilot convolution output channels (pre width-mult).
+pub const PILOT_CHANNELS: usize = 32;
+
+impl MobileNetConfig {
+    /// Uniform configuration: every block at `bits` with `implementation`.
+    pub fn uniform(name: impl Into<String>, bits: u8, implementation: BlockImpl) -> Self {
+        let b = BlockConfig::new(bits, implementation);
+        Self {
+            name: name.into(),
+            input: (3, 32, 32),
+            num_classes: 10,
+            width_mult: 1.0,
+            pilot: b,
+            blocks: vec![b; 10],
+            classifier: b,
+        }
+    }
+
+    fn ch(&self, c: usize) -> usize {
+        ((c as f64 * self.width_mult).round() as usize).max(8)
+    }
+
+    /// Build the canonical QONNX-style graph plus the implementation
+    /// configuration matching Table I.
+    pub fn build(&self) -> (Graph, ImplConfig) {
+        assert_eq!(self.blocks.len(), 10, "Table I defines 10 blocks");
+        let (cin, h, w) = self.input;
+        let mut cfg = ImplConfig::default();
+
+        let pilot_acc = ElemType::int(self.pilot.acc_bits());
+        let mut b = GraphBuilder::new(
+            self.name.clone(),
+            TensorSpec::chw(cin, h, w, ElemType::int(8)),
+            pilot_acc,
+        );
+
+        let spec = |cfg: &mut ImplConfig, name: &str, bc: &BlockConfig| {
+            cfg.set_node(
+                name.to_string(),
+                NodeImplSpec {
+                    implementation: Some(bc.implementation.as_str().into()),
+                    bit_width: Some(bc.bits),
+                    ..Default::default()
+                },
+            );
+        };
+
+        // Pilot convolution (stride 1 on 32x32 inputs)
+        let pc = self.ch(PILOT_CHANNELS);
+        b.set_acc(ElemType::int(self.pilot.acc_bits()));
+        b.conv(
+            "Conv_pilot",
+            ConvAttrs::standard(pc, 3, 1, 1),
+            ElemType::int(self.pilot.bits),
+        )
+        .relu("Relu_pilot")
+        .quant("Quant_pilot", ElemType::int(self.pilot.bits), true);
+        spec(&mut cfg, "Conv_pilot", &self.pilot);
+
+        // Depthwise-separable blocks
+        let mut prev_c = pc;
+        for (i, ((pw_c, stride), bc)) in BLOCK_PLAN.iter().zip(&self.blocks).enumerate() {
+            let n = i + 1;
+            let acc = ElemType::int(bc.acc_bits());
+            let wt = ElemType::int(bc.bits);
+            b.set_acc(acc);
+            // depthwise 3x3
+            let dw_name = format!("Conv_dw{n}");
+            b.conv(&dw_name, ConvAttrs::depthwise(prev_c, 3, *stride, 1), wt)
+                .relu(format!("Relu_dw{n}"))
+                .quant(format!("Quant_dw{n}"), wt, true);
+            spec(&mut cfg, &dw_name, bc);
+            // pointwise 1x1
+            let out_c = self.ch(*pw_c);
+            let pw_name = format!("Conv_pw{n}");
+            b.conv(&pw_name, ConvAttrs::standard(out_c, 1, 1, 0), wt)
+                .relu(format!("Relu_pw{n}"))
+                .quant(format!("Quant_pw{n}"), wt, true);
+            spec(&mut cfg, &pw_name, bc);
+            prev_c = out_c;
+        }
+
+        // Classifier head: global average pooling + FC
+        let cur = b.cur_spec().clone();
+        let pool_k = cur.dims[1];
+        b.avg_pool("AvgPool_head", PoolAttrs::square(pool_k, pool_k));
+        b.flatten("Flatten_head");
+        let cl_acc = ElemType::int(self.classifier.acc_bits());
+        b.set_acc(cl_acc);
+        b.gemm(
+            "Gemm_classifier",
+            self.num_classes,
+            ElemType::int(self.classifier.bits),
+        )
+        .quant("Quant_classifier", ElemType::int(8), false);
+        spec(&mut cfg, "Gemm_classifier", &self.classifier);
+
+        (b.finish(), cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::graph::ir::Op;
+    use crate::impl_aware::decorate;
+
+    #[test]
+    fn uniform_int8_builds_and_validates() {
+        let (g, cfg) = MobileNetConfig::uniform("mn", 8, BlockImpl::Im2col).build();
+        validate(&g).unwrap();
+        cfg.check_against(&g).unwrap();
+        // pilot + 10*(dw+pw) = 21 convolutions
+        let convs = g.nodes_where(|op| matches!(op, Op::Conv(_))).count();
+        assert_eq!(convs, 21);
+        // one Gemm classifier
+        assert_eq!(g.nodes_where(|op| matches!(op, Op::Gemm(_))).count(), 1);
+    }
+
+    #[test]
+    fn spatial_plan_reaches_2x2() {
+        // 32x32 with 4 stride-2 blocks -> 2x2 before global pooling
+        let (g, _) = MobileNetConfig::uniform("mn", 8, BlockImpl::Im2col).build();
+        let pool = g.nodes.iter().find(|n| n.name == "AvgPool_head").unwrap();
+        let x = g.data_input(pool.id).unwrap();
+        assert_eq!(x.spec.dims[1], 2);
+        assert_eq!(x.spec.dims[2], 2);
+        assert_eq!(x.spec.dims[0], 1024);
+    }
+
+    #[test]
+    fn width_mult_shrinks_channels() {
+        let mut c = MobileNetConfig::uniform("mn", 8, BlockImpl::Im2col);
+        c.width_mult = 0.25;
+        let (g, _) = c.build();
+        validate(&g).unwrap();
+        let pool = g.nodes.iter().find(|n| n.name == "AvgPool_head").unwrap();
+        assert_eq!(g.data_input(pool.id).unwrap().spec.dims[0], 256);
+    }
+
+    #[test]
+    fn sub_byte_blocks_use_16bit_acc() {
+        let mut c = MobileNetConfig::uniform("mn", 4, BlockImpl::Im2col);
+        c.pilot = BlockConfig::new(8, BlockImpl::Im2col);
+        let (g, _) = c.build();
+        let dw1 = g.nodes.iter().find(|n| n.name == "Conv_dw1").unwrap();
+        let out = g.output_edge(dw1.id).unwrap();
+        assert_eq!(out.spec.elem, ElemType::int(16));
+        let pilot = g.nodes.iter().find(|n| n.name == "Conv_pilot").unwrap();
+        assert_eq!(g.output_edge(pilot.id).unwrap().spec.elem, ElemType::int(32));
+    }
+
+    #[test]
+    fn decorates_end_to_end() {
+        let mut c = MobileNetConfig::uniform("mn", 4, BlockImpl::Im2col);
+        // LUT on the last two blocks, Table-I style
+        c.blocks[8] = BlockConfig::new(4, BlockImpl::Lut);
+        c.blocks[9] = BlockConfig::new(2, BlockImpl::Lut);
+        let (g, cfg) = c.build();
+        let d = decorate(g, &cfg).unwrap();
+        let dw9 = d.nodes.iter().find(|n| n.name == "Conv_dw9").unwrap();
+        assert_eq!(dw9.ann.as_ref().unwrap().impl_label, "lut");
+        assert_eq!(dw9.ann.as_ref().unwrap().macs, 0);
+        let dw2 = d.nodes.iter().find(|n| n.name == "Conv_dw2").unwrap();
+        assert!(dw2.ann.as_ref().unwrap().macs > 0);
+    }
+}

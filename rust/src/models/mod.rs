@@ -1,0 +1,12 @@
+//! Workload model zoo: MobileNetV1 (the paper's evaluation network), the
+//! Table-I mixed-precision cases, and a LeNet-style secondary workload.
+
+pub mod cases;
+pub mod lenet;
+pub mod mobilenet;
+pub mod resnet;
+
+pub use cases::{all_cases, case1, case2, case3, table1_rows, PAPER_ACCURACY};
+pub use lenet::lenet;
+pub use resnet::resnet8;
+pub use mobilenet::{BlockConfig, BlockImpl, MobileNetConfig};

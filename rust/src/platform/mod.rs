@@ -1,0 +1,6 @@
+//! The abstract platform model (paper §IV) and concrete presets.
+
+pub mod model;
+pub mod presets;
+
+pub use model::{CycleCosts, DmaSpec, PlatformSpec};

@@ -1,0 +1,315 @@
+//! Abstract platform model of a scratchpad-based AI accelerator
+//! (paper §IV, Fig. 1).
+//!
+//! A controller core orchestrates a cluster of `M` identical cores sharing
+//! an L1 scratchpad of `N` single-ported banks; an on-chip L2 scratchpad
+//! and an off-chip L3 are reached through explicit DMA transfers. Memory
+//! sizes are expressed in *chunks* of a fixed byte count.
+
+use crate::error::{AladinError, Result};
+
+/// A DMA engine's timing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmaSpec {
+    /// Fixed programming/startup cost per transfer, in cycles.
+    pub setup_cycles: u64,
+    /// Sustained bandwidth in bytes per cycle.
+    pub bytes_per_cycle: f64,
+}
+
+impl DmaSpec {
+    /// Cycles to move `bytes` in one transfer.
+    pub fn cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.setup_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+}
+
+/// Per-operation cycle costs of one cluster core.
+///
+/// Calibrated against XpulpNN-style DSP-extended RISC-V cores ([22], [43]):
+/// 8-bit SIMD dot-product units, explicit bit-unpacking for sub-byte
+/// operands (the §VIII-B observation that 4-bit im2col convolutions cost
+/// about the same cycles as 8-bit ones), and single-cycle L1 accesses when
+/// contention-free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CycleCosts {
+    /// int8 MACs retired per core per cycle (SIMD dot-product width).
+    pub macs_per_cycle_int8: f64,
+    /// Extra cycles per sub-byte (≤4-bit) operand element for unpacking
+    /// into byte lanes before the SIMD MAC.
+    pub unpack_cycles_per_elem: f64,
+    /// Cycles per LUT lookup (address formation + L1 read), contention-free.
+    pub lut_access_cycles: f64,
+    /// Cycles per comparator operation (ReLU, max-pool, threshold step).
+    pub compare_cycles: f64,
+    /// Cycles per shift-and-multiply requantization step (dyadic scaling).
+    pub requant_cycles: f64,
+    /// Cycles per L1 word access when contention-free.
+    pub l1_access_cycles: f64,
+    /// Per-element cost of the im2col rearrangement (copy through L1).
+    pub im2col_cycles_per_elem: f64,
+    /// Fixed overhead per tile launch (loop setup, core wake-up, barriers).
+    pub tile_overhead_cycles: u64,
+}
+
+impl Default for CycleCosts {
+    fn default() -> Self {
+        Self {
+            macs_per_cycle_int8: 4.0, // XpulpNN 4x int8 sdotp
+            unpack_cycles_per_elem: 0.5,
+            lut_access_cycles: 2.0,
+            compare_cycles: 1.0,
+            requant_cycles: 2.0,
+            l1_access_cycles: 1.0,
+            im2col_cycles_per_elem: 1.0,
+            tile_overhead_cycles: 120,
+        }
+    }
+}
+
+/// The full platform specification (paper §IV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub name: String,
+    /// Cluster cores `M`.
+    pub cores: usize,
+    /// L1 banks `N` (each single-ported: one device per cycle).
+    pub l1_banks: usize,
+    /// Total L1 scratchpad size in bytes (`sz_1`).
+    pub l1_bytes: u64,
+    /// On-chip L2 scratchpad size in bytes (`sz_2`).
+    pub l2_bytes: u64,
+    /// Chunk granularity in bytes (allocations round up to chunks).
+    pub chunk_bytes: u64,
+    /// DMA between L2 and L1 (cluster DMA).
+    pub dma_l2_l1: DmaSpec,
+    /// DMA between L3 and L2 (micro-DMA).
+    pub dma_l3_l2: DmaSpec,
+    pub costs: CycleCosts,
+    /// Cluster clock in Hz — converts cycles to wall-clock latency for
+    /// deadline checks.
+    pub clock_hz: f64,
+}
+
+impl PlatformSpec {
+    /// Size of one L1 bank in bytes.
+    pub fn bank_bytes(&self) -> u64 {
+        self.l1_bytes / self.l1_banks as u64
+    }
+
+    /// Round a size up to the chunk granularity.
+    pub fn round_to_chunk(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.chunk_bytes) * self.chunk_bytes
+    }
+
+    /// Number of L1 banks a buffer of `bytes` spans (interleaved layout).
+    pub fn banks_spanned(&self, bytes: u64) -> usize {
+        let spans = bytes.div_ceil(self.bank_bytes()) as usize;
+        spans.clamp(1, self.l1_banks)
+    }
+
+    /// Convert cycles to seconds at the cluster clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz
+    }
+
+    /// Sanity checks (positive sizes, banks divide L1, …).
+    pub fn validate(&self) -> Result<()> {
+        let fail = |reason: String| Err(AladinError::Platform(reason));
+        if self.cores == 0 {
+            return fail("cluster must have at least one core".into());
+        }
+        if self.l1_banks == 0 || self.l1_bytes == 0 || self.l2_bytes == 0 {
+            return fail("memory sizes must be positive".into());
+        }
+        if self.l1_bytes % self.l1_banks as u64 != 0 {
+            return fail(format!(
+                "L1 size {} not divisible into {} banks",
+                self.l1_bytes, self.l1_banks
+            ));
+        }
+        if self.l2_bytes < self.l1_bytes {
+            return fail("L2 must be at least as large as L1".into());
+        }
+        if self.chunk_bytes == 0 {
+            return fail("chunk size must be positive".into());
+        }
+        if self.dma_l2_l1.bytes_per_cycle <= 0.0 || self.dma_l3_l2.bytes_per_cycle <= 0.0 {
+            return fail("DMA bandwidth must be positive".into());
+        }
+        if self.costs.macs_per_cycle_int8 <= 0.0 {
+            return fail("MAC throughput must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// A copy with a different core count / L2 size — the Fig. 7 design
+    /// space knobs ("GVSoC allows reconfiguration of the target platform by
+    /// varying both the SRAM capacity and the number of cores").
+    pub fn reconfigure(&self, cores: usize, l2_bytes: u64) -> Self {
+        let mut p = self.clone();
+        p.cores = cores;
+        p.l2_bytes = l2_bytes;
+        p.name = format!("{}-c{}-l2_{}kB", self.name, cores, l2_bytes / 1024);
+        p
+    }
+}
+
+
+impl PlatformSpec {
+    /// Parse from the in-tree JSON document model (platform JSON files
+    /// passed to the CLI). Missing fields fall back to the GAP8 preset.
+    pub fn from_json(v: &crate::util::Value) -> Result<Self> {
+        let base = crate::platform::presets::gap8();
+        let dma = |key: &str, d: DmaSpec| -> DmaSpec {
+            v.get(key)
+                .map(|o| DmaSpec {
+                    setup_cycles: o.u64_field("setup_cycles").unwrap_or(d.setup_cycles),
+                    bytes_per_cycle: o.f64_field("bytes_per_cycle").unwrap_or(d.bytes_per_cycle),
+                })
+                .unwrap_or(d)
+        };
+        let costs = v
+            .get("costs")
+            .map(|o| CycleCosts {
+                macs_per_cycle_int8: o
+                    .f64_field("macs_per_cycle_int8")
+                    .unwrap_or(base.costs.macs_per_cycle_int8),
+                unpack_cycles_per_elem: o
+                    .f64_field("unpack_cycles_per_elem")
+                    .unwrap_or(base.costs.unpack_cycles_per_elem),
+                lut_access_cycles: o
+                    .f64_field("lut_access_cycles")
+                    .unwrap_or(base.costs.lut_access_cycles),
+                compare_cycles: o.f64_field("compare_cycles").unwrap_or(base.costs.compare_cycles),
+                requant_cycles: o.f64_field("requant_cycles").unwrap_or(base.costs.requant_cycles),
+                l1_access_cycles: o
+                    .f64_field("l1_access_cycles")
+                    .unwrap_or(base.costs.l1_access_cycles),
+                im2col_cycles_per_elem: o
+                    .f64_field("im2col_cycles_per_elem")
+                    .unwrap_or(base.costs.im2col_cycles_per_elem),
+                tile_overhead_cycles: o
+                    .u64_field("tile_overhead_cycles")
+                    .unwrap_or(base.costs.tile_overhead_cycles),
+            })
+            .unwrap_or(base.costs);
+        let spec = PlatformSpec {
+            name: v.str_field("name").unwrap_or(&base.name).to_string(),
+            cores: v.usize_field("cores").unwrap_or(base.cores),
+            l1_banks: v.usize_field("l1_banks").unwrap_or(base.l1_banks),
+            l1_bytes: v.u64_field("l1_bytes").unwrap_or(base.l1_bytes),
+            l2_bytes: v.u64_field("l2_bytes").unwrap_or(base.l2_bytes),
+            chunk_bytes: v.u64_field("chunk_bytes").unwrap_or(base.chunk_bytes),
+            dma_l2_l1: dma("dma_l2_l1", base.dma_l2_l1),
+            dma_l3_l2: dma("dma_l3_l2", base.dma_l3_l2),
+            costs,
+            clock_hz: v.f64_field("clock_hz").unwrap_or(base.clock_hz),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl crate::util::ToJson for PlatformSpec {
+    fn to_json(&self) -> crate::util::Value {
+        let dma = |d: &DmaSpec| {
+            crate::util::Value::obj()
+                .with("setup_cycles", d.setup_cycles)
+                .with("bytes_per_cycle", d.bytes_per_cycle)
+        };
+        crate::util::Value::obj()
+            .with("name", self.name.clone())
+            .with("cores", self.cores)
+            .with("l1_banks", self.l1_banks)
+            .with("l1_bytes", self.l1_bytes)
+            .with("l2_bytes", self.l2_bytes)
+            .with("chunk_bytes", self.chunk_bytes)
+            .with("dma_l2_l1", dma(&self.dma_l2_l1))
+            .with("dma_l3_l2", dma(&self.dma_l3_l2))
+            .with(
+                "costs",
+                crate::util::Value::obj()
+                    .with("macs_per_cycle_int8", self.costs.macs_per_cycle_int8)
+                    .with("unpack_cycles_per_elem", self.costs.unpack_cycles_per_elem)
+                    .with("lut_access_cycles", self.costs.lut_access_cycles)
+                    .with("compare_cycles", self.costs.compare_cycles)
+                    .with("requant_cycles", self.costs.requant_cycles)
+                    .with("l1_access_cycles", self.costs.l1_access_cycles)
+                    .with("im2col_cycles_per_elem", self.costs.im2col_cycles_per_elem)
+                    .with("tile_overhead_cycles", self.costs.tile_overhead_cycles),
+            )
+            .with("clock_hz", self.clock_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets;
+
+    #[test]
+    fn dma_cycles_include_setup() {
+        let d = DmaSpec {
+            setup_cycles: 10,
+            bytes_per_cycle: 8.0,
+        };
+        assert_eq!(d.cycles(0), 0);
+        assert_eq!(d.cycles(64), 10 + 8);
+        assert_eq!(d.cycles(65), 10 + 9); // ceil
+    }
+
+    #[test]
+    fn bank_math() {
+        let p = presets::gap8();
+        assert_eq!(p.bank_bytes() * p.l1_banks as u64, p.l1_bytes);
+        assert_eq!(p.banks_spanned(1), 1);
+        assert_eq!(p.banks_spanned(p.l1_bytes), p.l1_banks);
+        assert_eq!(p.banks_spanned(p.l1_bytes * 10), p.l1_banks); // clamped
+        assert_eq!(p.banks_spanned(p.bank_bytes() + 1), 2);
+    }
+
+    #[test]
+    fn chunk_rounding() {
+        let mut p = presets::gap8();
+        p.chunk_bytes = 4;
+        assert_eq!(p.round_to_chunk(1), 4);
+        assert_eq!(p.round_to_chunk(4), 4);
+        assert_eq!(p.round_to_chunk(5), 8);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let base = presets::gap8();
+        base.validate().unwrap();
+        let mut p = base.clone();
+        p.cores = 0;
+        assert!(p.validate().is_err());
+        let mut p = base.clone();
+        p.l1_bytes = 1000; // not divisible by 16 banks
+        assert!(p.validate().is_err());
+        let mut p = base.clone();
+        p.l2_bytes = p.l1_bytes - 1;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn reconfigure_changes_knobs_only() {
+        let p = presets::gap8();
+        let q = p.reconfigure(4, 256 * 1024);
+        assert_eq!(q.cores, 4);
+        assert_eq!(q.l2_bytes, 256 * 1024);
+        assert_eq!(q.l1_bytes, p.l1_bytes);
+        q.validate().unwrap();
+    }
+
+    #[test]
+    fn cycles_to_seconds() {
+        let p = presets::gap8();
+        let s = p.cycles_to_seconds(p.clock_hz as u64);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

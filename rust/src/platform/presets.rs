@@ -1,0 +1,114 @@
+//! Platform presets for the chips the paper anchors its model on (§IV):
+//! GAP8 (RISC-V cluster, XpulpNN ISA extensions) and the STM32N6 series
+//! (Cortex-M55 + accelerator).
+
+use super::model::{CycleCosts, DmaSpec, PlatformSpec};
+
+/// GAP8-like preset — the evaluation platform of paper §VIII:
+/// 8 cluster cores, 64 kB L1 scratchpad in 16 banks, 512 kB L2, off-chip
+/// L3 behind a micro-DMA. Cluster clock 175 MHz.
+pub fn gap8() -> PlatformSpec {
+    PlatformSpec {
+        name: "gap8".into(),
+        cores: 8,
+        l1_banks: 16,
+        l1_bytes: 64 * 1024,
+        l2_bytes: 512 * 1024,
+        chunk_bytes: 4,
+        // cluster DMA L2<->L1: wide on-chip port
+        dma_l2_l1: DmaSpec {
+            setup_cycles: 30,
+            bytes_per_cycle: 8.0,
+        },
+        // micro-DMA L3<->L2: off-chip, narrower + slower
+        dma_l3_l2: DmaSpec {
+            setup_cycles: 100,
+            bytes_per_cycle: 2.0,
+        },
+        costs: CycleCosts::default(),
+        clock_hz: 175e6,
+    }
+}
+
+/// GAP8 variant with the Fig. 7 design-space knobs applied.
+pub fn gap8_with(cores: usize, l2_kb: u64) -> PlatformSpec {
+    gap8().reconfigure(cores, l2_kb * 1024)
+}
+
+/// STM32N6-like preset — Cortex-M55 (Helium MVE SIMD) plus a neural
+/// accelerator; single "cluster core" visible to the scheduler, larger L2.
+/// Kept to demonstrate the generality of the platform model (§IV: "we
+/// preferred to focus on more general-purpose AI oriented chips").
+pub fn stm32n6() -> PlatformSpec {
+    PlatformSpec {
+        name: "stm32n6".into(),
+        cores: 1,
+        l1_banks: 4,
+        l1_bytes: 128 * 1024,
+        l2_bytes: 1024 * 1024,
+        chunk_bytes: 4,
+        dma_l2_l1: DmaSpec {
+            setup_cycles: 20,
+            bytes_per_cycle: 8.0,
+        },
+        dma_l3_l2: DmaSpec {
+            setup_cycles: 80,
+            bytes_per_cycle: 4.0,
+        },
+        costs: CycleCosts {
+            // MVE: 8x int8 MACs/cycle on the single core
+            macs_per_cycle_int8: 8.0,
+            ..CycleCosts::default()
+        },
+        clock_hz: 800e6,
+    }
+}
+
+/// The Fig. 7 design grid: cores x L2 kB explored in §VIII-C.
+pub fn fig7_grid() -> Vec<PlatformSpec> {
+    let mut grid = Vec::new();
+    for &cores in &[2usize, 4, 8] {
+        for &l2_kb in &[256u64, 320, 512] {
+            grid.push(gap8_with(cores, l2_kb));
+        }
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        gap8().validate().unwrap();
+        stm32n6().validate().unwrap();
+    }
+
+    #[test]
+    fn gap8_matches_paper_setup() {
+        let p = gap8();
+        assert_eq!(p.cores, 8);
+        assert_eq!(p.l1_banks, 16);
+        assert_eq!(p.l1_bytes, 64 * 1024);
+        assert_eq!(p.l2_bytes, 512 * 1024);
+    }
+
+    #[test]
+    fn fig7_grid_is_3x3() {
+        let g = fig7_grid();
+        assert_eq!(g.len(), 9);
+        for p in &g {
+            p.validate().unwrap();
+        }
+        assert!(g.iter().any(|p| p.cores == 2 && p.l2_bytes == 256 * 1024));
+        assert!(g.iter().any(|p| p.cores == 8 && p.l2_bytes == 512 * 1024));
+    }
+
+    #[test]
+    fn l3_dma_slower_than_cluster_dma() {
+        let p = gap8();
+        assert!(p.dma_l3_l2.bytes_per_cycle < p.dma_l2_l1.bytes_per_cycle);
+        assert!(p.dma_l3_l2.setup_cycles > p.dma_l2_l1.setup_cycles);
+    }
+}

@@ -1,0 +1,530 @@
+//! Operator fusion (paper §VIII-B: "Dory applies operator fusion … the
+//! layer shown in the plots represents the operators resulting from fusing
+//! a convolution or a fully connected layer with ReLU and quantization").
+//!
+//! Fused layers follow the paper's naming: `RC_k` (ReLU-Convolution),
+//! `RP_k` (ReLU-Pooling), `FC_k` (fully connected).
+
+use crate::error::{AladinError, Result};
+use crate::graph::ir::*;
+use crate::graph::tensor::ElemType;
+use crate::graph::topo;
+use crate::impl_aware::config::{LinearImpl, QuantImpl};
+
+/// The computation performed by one fused layer.
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    /// Conv/MatMul/Gemm (+ ReLU + Quant): the matmul geometry after im2col.
+    Linear {
+        /// Output channels / features.
+        m: usize,
+        /// Shared dimension `Cin/groups * kh * kw`.
+        k: usize,
+        /// Spatial positions `Hout * Wout` (1 for FC).
+        n: usize,
+        groups: usize,
+        /// Input feature-map geometry (channels, h, w); `h = w = 1` for FC.
+        in_dims: (usize, usize, usize),
+        out_dims: (usize, usize, usize),
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        /// Weight / activation / accumulator element types.
+        w_type: ElemType,
+        x_type: ElemType,
+        acc_type: ElemType,
+        /// Output element type after the fused requantization (the
+        /// accumulator type when no Quant was fused).
+        y_type: ElemType,
+        strategy: LinearImpl,
+        /// Fused requantization implementation, if a Quant node was fused.
+        quant: Option<QuantImpl>,
+        quant_channelwise: bool,
+        has_relu: bool,
+        depthwise: bool,
+    },
+    /// Max/avg pooling (+ fused ReLU / Quant).
+    Pool {
+        in_dims: (usize, usize, usize),
+        out_dims: (usize, usize, usize),
+        kernel: (usize, usize),
+        x_type: ElemType,
+        is_avg: bool,
+        has_relu: bool,
+    },
+    /// Element-wise residue (Add) or data movement (Flatten) — negligible
+    /// compute, kept for completeness of the schedule.
+    Elementwise {
+        elems: usize,
+        x_type: ElemType,
+    },
+}
+
+/// A fused schedulable layer of the platform-aware model.
+#[derive(Debug, Clone)]
+pub struct FusedLayer {
+    /// Scheduler name (RC_k / RP_k / FC_k) — matches the paper's plots.
+    pub name: String,
+    /// Names of the fused graph nodes, in execution order.
+    pub node_names: Vec<String>,
+    pub kind: LayerKind,
+    /// Physically executed MACs of the linear part.
+    pub macs_physical: u64,
+    /// Total BOPs of the fused nodes.
+    pub bops: u64,
+    /// Parameter memory of the fused nodes in bits, *including* LUT /
+    /// threshold-tree auxiliary structures (Dory's "temporary buffers",
+    /// allocated in L1).
+    pub param_bits: u64,
+    /// Auxiliary (temp-buffer) subset of `param_bits`: LUT tables,
+    /// threshold trees — resident in L1 for the whole layer.
+    pub temp_bits: u64,
+    /// Raw (non-im2col) input activation bits.
+    pub input_bits: u64,
+    /// Output activation bits at the post-fusion precision.
+    pub output_bits: u64,
+}
+
+impl FusedLayer {
+    /// Whether this layer carries a LUT-based matmul.
+    pub fn uses_mul_lut(&self) -> bool {
+        matches!(
+            &self.kind,
+            LayerKind::Linear {
+                strategy: LinearImpl::Lut,
+                ..
+            }
+        )
+    }
+}
+
+/// Fuse a *decorated* graph into schedulable layers.
+pub fn fuse(g: &Graph) -> Result<Vec<FusedLayer>> {
+    let order = topo::compute_order(g)?;
+    let mut consumed = vec![false; g.nodes.len()];
+    let mut layers = Vec::new();
+    let mut rc = 0usize;
+    let mut rp = 0usize;
+    let mut fc = 0usize;
+
+    for id in order {
+        if consumed[id.0] {
+            continue;
+        }
+        let node = g.node(id);
+        match &node.op {
+            Op::Conv(_) | Op::MatMul(_) | Op::Gemm(_) => {
+                let group = absorb_chain(g, id, &mut consumed);
+                let is_fc = matches!(node.op, Op::Gemm(_))
+                    || matches!(&node.op, Op::MatMul(a) if a.n == 1 && a.from_conv.is_none());
+                let name = if is_fc {
+                    fc += 1;
+                    format!("FC_{fc}")
+                } else {
+                    rc += 1;
+                    format!("RC_{rc}")
+                };
+                layers.push(build_linear_layer(g, name, &group)?);
+            }
+            Op::MaxPool(_) | Op::AvgPool(_) => {
+                let group = absorb_chain(g, id, &mut consumed);
+                rp += 1;
+                layers.push(build_pool_layer(g, format!("RP_{rp}"), &group)?);
+            }
+            Op::Add | Op::Flatten => {
+                consumed[id.0] = true;
+                let x = g.data_input(id).ok_or_else(|| AladinError::Validation {
+                    at: node.name.clone(),
+                    reason: "missing data input".into(),
+                })?;
+                layers.push(FusedLayer {
+                    name: node.name.clone(),
+                    node_names: vec![node.name.clone()],
+                    kind: LayerKind::Elementwise {
+                        elems: x.spec.num_elems(),
+                        x_type: x.spec.elem,
+                    },
+                    macs_physical: 0,
+                    bops: node.ann.as_ref().map(|a| a.bops).unwrap_or(0),
+                    param_bits: 0,
+                    temp_bits: 0,
+                    input_bits: x.spec.bits(),
+                    output_bits: g.output_edge(id).map(|e| e.spec.bits()).unwrap_or(0),
+                });
+            }
+            // standalone Relu/Quant not preceded by a linear op: keep as a
+            // degenerate elementwise layer
+            Op::Relu | Op::Quant(_) => {
+                consumed[id.0] = true;
+                let x = g.data_input(id).ok_or_else(|| AladinError::Validation {
+                    at: node.name.clone(),
+                    reason: "missing data input".into(),
+                })?;
+                layers.push(FusedLayer {
+                    name: node.name.clone(),
+                    node_names: vec![node.name.clone()],
+                    kind: LayerKind::Elementwise {
+                        elems: x.spec.num_elems(),
+                        x_type: x.spec.elem,
+                    },
+                    macs_physical: 0,
+                    bops: node.ann.as_ref().map(|a| a.bops).unwrap_or(0),
+                    param_bits: node.ann.as_ref().map(|a| a.param_mem_bits).unwrap_or(0),
+                    temp_bits: 0,
+                    input_bits: x.spec.bits(),
+                    output_bits: g.output_edge(id).map(|e| e.spec.bits()).unwrap_or(0),
+                });
+            }
+            Op::Input | Op::Output => {
+                consumed[id.0] = true;
+            }
+        }
+    }
+    Ok(layers)
+}
+
+/// Starting from a linear or pool node, absorb the following single-consumer
+/// Relu / Quant nodes.
+fn absorb_chain(g: &Graph, start: NodeId, consumed: &mut [bool]) -> Vec<NodeId> {
+    let mut group = vec![start];
+    consumed[start.0] = true;
+    let mut cur = start;
+    loop {
+        let succs = g.successors(cur);
+        if succs.len() != 1 {
+            break;
+        }
+        let next = succs[0];
+        if consumed[next.0] {
+            break;
+        }
+        match g.node(next).op {
+            Op::Relu | Op::Quant(_) => {
+                consumed[next.0] = true;
+                group.push(next);
+                cur = next;
+            }
+            _ => break,
+        }
+    }
+    group
+}
+
+fn group_bops(g: &Graph, group: &[NodeId]) -> u64 {
+    group
+        .iter()
+        .filter_map(|&id| g.node(id).ann.as_ref())
+        .map(|a| a.bops)
+        .sum()
+}
+
+fn group_params(g: &Graph, group: &[NodeId]) -> u64 {
+    group
+        .iter()
+        .filter_map(|&id| g.node(id).ann.as_ref())
+        .map(|a| a.param_mem_bits)
+        .sum()
+}
+
+/// Auxiliary (temp-buffer) bits: everything beyond the raw weight+bias
+/// tensors — LUT tables and threshold trees.
+fn group_temp_bits(g: &Graph, group: &[NodeId]) -> u64 {
+    let mut temp = 0;
+    for &id in group {
+        let node = g.node(id);
+        let Some(ann) = node.ann.as_ref() else { continue };
+        let raw: u64 = g.param_inputs(id).iter().map(|e| e.spec.bits()).sum();
+        temp += ann.param_mem_bits.saturating_sub(raw);
+    }
+    temp
+}
+
+fn build_linear_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<FusedLayer> {
+    let head = g.node(group[0]);
+    let x = g.data_input(head.id).ok_or_else(|| AladinError::Validation {
+        at: head.name.clone(),
+        reason: "missing data input".into(),
+    })?;
+    let last = g.node(*group.last().unwrap());
+    let y = g.output_edge(last.id).ok_or_else(|| AladinError::Validation {
+        at: last.name.clone(),
+        reason: "missing output edge".into(),
+    })?;
+
+    let w_type = g
+        .param_inputs(head.id)
+        .first()
+        .map(|e| e.spec.elem)
+        .unwrap_or(ElemType::int(8));
+    let acc_type = g
+        .output_edge(head.id)
+        .map(|e| e.spec.elem)
+        .unwrap_or(ElemType::int(32));
+
+    let strategy = match head.ann.as_ref().map(|a| a.impl_label.as_str()) {
+        Some("lut") => LinearImpl::Lut,
+        Some("direct") => LinearImpl::Direct,
+        _ => LinearImpl::Im2col,
+    };
+
+    let mut quant = None;
+    let mut quant_channelwise = false;
+    let mut has_relu = false;
+    for &id in &group[1..] {
+        let n = g.node(id);
+        match &n.op {
+            Op::Relu => has_relu = true,
+            Op::Quant(qa) => {
+                quant_channelwise = qa.channelwise;
+                quant = Some(match n.ann.as_ref().map(|a| a.impl_label.as_str()) {
+                    Some("threshold-tree") => QuantImpl::Thresholds,
+                    Some("lut") => QuantImpl::Lut,
+                    _ => QuantImpl::Dyadic,
+                });
+            }
+            _ => {}
+        }
+    }
+
+    let (m, k, n, groups, kernel, stride, out_dims) = match &head.op {
+        Op::MatMul(a) => {
+            let conv = a.from_conv.as_ref();
+            let groups = conv.map(|c| c.groups).unwrap_or(1);
+            let kernel = conv.map(|c| c.kernel).unwrap_or((1, 1));
+            let stride = conv.map(|c| c.stride).unwrap_or((1, 1));
+            let head_out = g.output_edge(head.id).unwrap();
+            let out_dims = if head_out.spec.dims.len() == 3 {
+                (
+                    head_out.spec.dims[0],
+                    head_out.spec.dims[1],
+                    head_out.spec.dims[2],
+                )
+            } else {
+                (a.m, 1, 1)
+            };
+            (a.m, a.k, a.n, groups, kernel, stride, out_dims)
+        }
+        Op::Conv(a) => {
+            // direct (non-rewritten) convolution
+            let (oh, ow) = a.out_hw(x.spec.dims[1], x.spec.dims[2]);
+            (
+                a.out_channels,
+                x.spec.dims[0] / a.groups * a.kernel.0 * a.kernel.1,
+                oh * ow,
+                a.groups,
+                a.kernel,
+                a.stride,
+                (a.out_channels, oh, ow),
+            )
+        }
+        Op::Gemm(a) => (
+            a.out_features,
+            x.spec.dims[0],
+            1,
+            1,
+            (1, 1),
+            (1, 1),
+            (a.out_features, 1, 1),
+        ),
+        _ => unreachable!(),
+    };
+
+    let in_dims = if x.spec.dims.len() == 3 {
+        (x.spec.dims[0], x.spec.dims[1], x.spec.dims[2])
+    } else {
+        (x.spec.dims[0], 1, 1)
+    };
+
+    Ok(FusedLayer {
+        name,
+        node_names: group.iter().map(|&id| g.node(id).name.clone()).collect(),
+        kind: LayerKind::Linear {
+            m,
+            k,
+            n,
+            groups,
+            in_dims,
+            out_dims,
+            kernel,
+            stride,
+            w_type,
+            x_type: x.spec.elem,
+            acc_type,
+            y_type: y.spec.elem,
+            strategy,
+            quant,
+            quant_channelwise,
+            has_relu,
+            depthwise: groups > 1 && groups == m,
+        },
+        macs_physical: head.ann.as_ref().map(|a| a.macs_physical).unwrap_or(0),
+        bops: group_bops(g, group),
+        param_bits: group_params(g, group),
+        temp_bits: group_temp_bits(g, group),
+        input_bits: x.spec.bits(),
+        output_bits: y.spec.bits(),
+    })
+}
+
+fn build_pool_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<FusedLayer> {
+    let head = g.node(group[0]);
+    let x = g.data_input(head.id).ok_or_else(|| AladinError::Validation {
+        at: head.name.clone(),
+        reason: "missing data input".into(),
+    })?;
+    let last = g.node(*group.last().unwrap());
+    let y = g.output_edge(last.id).ok_or_else(|| AladinError::Validation {
+        at: last.name.clone(),
+        reason: "missing output edge".into(),
+    })?;
+    let (attrs, is_avg) = match &head.op {
+        Op::MaxPool(a) => (a, false),
+        Op::AvgPool(a) => (a, true),
+        _ => unreachable!(),
+    };
+    let (oh, ow) = attrs.out_hw(x.spec.dims[1], x.spec.dims[2]);
+    let has_relu = group[1..]
+        .iter()
+        .any(|&id| matches!(g.node(id).op, Op::Relu));
+
+    Ok(FusedLayer {
+        name,
+        node_names: group.iter().map(|&id| g.node(id).name.clone()).collect(),
+        kind: LayerKind::Pool {
+            in_dims: (x.spec.dims[0], x.spec.dims[1], x.spec.dims[2]),
+            out_dims: (x.spec.dims[0], oh, ow),
+            kernel: attrs.kernel,
+            x_type: x.spec.elem,
+            is_avg,
+            has_relu,
+        },
+        macs_physical: 0,
+        bops: group_bops(g, group),
+        param_bits: group_params(g, group),
+        temp_bits: group_temp_bits(g, group),
+        input_bits: x.spec.bits(),
+        output_bits: y.spec.bits(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::tensor::TensorSpec;
+    use crate::impl_aware::{decorate, ImplConfig, NodeImplSpec};
+
+    fn decorated() -> Graph {
+        let mut b = GraphBuilder::new(
+            "f",
+            TensorSpec::chw(3, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(8, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .conv("c1", ConvAttrs::depthwise(8, 3, 1, 1), ElemType::int(4))
+            .relu("r1")
+            .quant("q1", ElemType::int(4), false)
+            .max_pool("p0", PoolAttrs::square(2, 2))
+            .flatten("flat")
+            .gemm("fc0", 10, ElemType::int(8));
+        decorate(b.finish(), &ImplConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn fuses_conv_relu_quant_into_rc() {
+        let layers = fuse(&decorated()).unwrap();
+        let names: Vec<&str> = layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["RC_1", "RC_2", "RP_1", "flat", "FC_1"]);
+        assert_eq!(layers[0].node_names, vec!["c0", "r0", "q0"]);
+    }
+
+    #[test]
+    fn rc_output_precision_is_post_quant() {
+        let layers = fuse(&decorated()).unwrap();
+        match &layers[0].kind {
+            LayerKind::Linear { y_type, acc_type, has_relu, quant, .. } => {
+                assert_eq!(*y_type, ElemType::int(8));
+                assert_eq!(*acc_type, ElemType::int(32));
+                assert!(*has_relu);
+                assert_eq!(*quant, Some(QuantImpl::Dyadic));
+            }
+            other => panic!("{other:?}"),
+        }
+        // RC_2 is the depthwise int4 block
+        match &layers[1].kind {
+            LayerKind::Linear { depthwise, w_type, y_type, .. } => {
+                assert!(*depthwise);
+                assert_eq!(*w_type, ElemType::int(4));
+                assert_eq!(*y_type, ElemType::int(4));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lut_temp_bits_reported() {
+        let mut cfg = ImplConfig::default();
+        cfg.set_node(
+            "c1",
+            NodeImplSpec {
+                implementation: Some("lut".into()),
+                ..Default::default()
+            },
+        );
+        let mut b = GraphBuilder::new(
+            "f",
+            TensorSpec::chw(3, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(8, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .conv("c1", ConvAttrs::depthwise(8, 3, 1, 1), ElemType::int(4))
+            .relu("r1")
+            .quant("q1", ElemType::int(4), false);
+        let g = decorate(b.finish(), &cfg).unwrap();
+        let layers = fuse(&g).unwrap();
+        let rc2 = layers.iter().find(|l| l.name == "RC_2").unwrap();
+        assert!(rc2.uses_mul_lut());
+        // temp bits = LUT size 2^(4+8) * 32 plus the fused Quant node's
+        // 32-bit dyadic scale (an auxiliary structure too)
+        assert_eq!(rc2.temp_bits, (1u64 << 12) * 32 + 32);
+        assert!(!layers[0].uses_mul_lut());
+    }
+
+    #[test]
+    fn fc_geometry() {
+        let layers = fuse(&decorated()).unwrap();
+        let fc = layers.iter().find(|l| l.name == "FC_1").unwrap();
+        match &fc.kind {
+            LayerKind::Linear { m, k, n, .. } => {
+                assert_eq!(*m, 10);
+                assert_eq!(*n, 1);
+                assert_eq!(*k, 8 * 8 * 8);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bops_aggregate_over_fused_nodes() {
+        let g = decorated();
+        let layers = fuse(&g).unwrap();
+        let total_layer_bops: u64 = layers.iter().map(|l| l.bops).sum();
+        assert_eq!(total_layer_bops, g.total_bops());
+    }
+
+    #[test]
+    fn pool_layer_shapes() {
+        let layers = fuse(&decorated()).unwrap();
+        let rp = layers.iter().find(|l| l.name == "RP_1").unwrap();
+        match &rp.kind {
+            LayerKind::Pool { in_dims, out_dims, .. } => {
+                assert_eq!(*in_dims, (8, 16, 16));
+                assert_eq!(*out_dims, (8, 8, 8));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

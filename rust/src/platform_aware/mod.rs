@@ -1,0 +1,12 @@
+//! Platform-aware model generation (paper §VII): operator fusion,
+//! Dory-style L1 tiling with double buffering, and L2/L3 residency
+//! planning. The output ([`schedule::NetworkSchedule`]) is what the cycle
+//! simulator executes.
+
+pub mod fusion;
+pub mod schedule;
+pub mod tiling;
+
+pub use fusion::{fuse, FusedLayer, LayerKind};
+pub use schedule::{build_schedule, L2Plan, LayerSchedule, NetworkSchedule};
+pub use tiling::{plan_layer, TilePlan};

@@ -1,0 +1,235 @@
+//! Network-level scheduling: per-layer tile plans plus L2 residency and
+//! L3 traffic planning (paper §VII).
+//!
+//! The controller core stages each layer's working set in L2 (weights
+//! fetched from L3, activations produced by the previous layer), then the
+//! cluster consumes it tile-by-tile through the L2<->L1 DMA. When a layer's
+//! working set exceeds L2, weights are re-streamed from L3 per spatial tile
+//! and/or activations spill to L3 — the mechanism behind the Fig. 7
+//! observation that enlarging L2 reduces execution cycles for
+//! memory-intensive layers.
+
+use super::fusion::FusedLayer;
+use super::tiling::{plan_layer, TilePlan};
+use crate::error::Result;
+use crate::platform::PlatformSpec;
+
+/// L2 residency decision for one layer.
+#[derive(Debug, Clone)]
+pub struct L2Plan {
+    /// Packed weight + auxiliary parameter bytes staged in L2.
+    pub weight_bytes: u64,
+    /// Input activations resident in L2 (packed).
+    pub input_bytes: u64,
+    /// Output activations resident in L2 (packed).
+    pub output_bytes: u64,
+    /// Whole working set fits in L2.
+    pub fits_l2: bool,
+    /// How many times the full weight set is fetched from L3 (1 when the
+    /// working set is L2-resident; `tiles_h` when weights are re-streamed
+    /// per spatial tile).
+    pub weight_refetches: u64,
+    /// Activation bytes spilled to L3 and read back (0 when L2-resident).
+    pub spill_bytes: u64,
+    /// Peak L2 utilization in bytes (capped at the L2 size).
+    pub l2_used_bytes: u64,
+    /// This layer's weights fit in L2 *next to the previous layer's
+    /// working set*, so the controller can prefetch them from L3 while the
+    /// cluster is still computing the previous layer — the L2-capacity
+    /// mechanism behind Fig. 7 ("a larger L2 SRAM enables greater data
+    /// reuse, reducing the need for costly DMA transfers between L3 and
+    /// L2").
+    pub prefetchable: bool,
+}
+
+/// A fully planned layer: fusion result + L1 tiling + L2 residency.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub layer: FusedLayer,
+    pub tile: TilePlan,
+    pub l2: L2Plan,
+}
+
+/// The platform-aware model of the whole network, ready for simulation.
+#[derive(Debug, Clone)]
+pub struct NetworkSchedule {
+    pub platform: PlatformSpec,
+    pub layers: Vec<LayerSchedule>,
+}
+
+impl NetworkSchedule {
+    /// Peak L1 utilization across layers (bytes).
+    pub fn peak_l1(&self) -> u64 {
+        self.layers.iter().map(|l| l.tile.l1_used_bytes).max().unwrap_or(0)
+    }
+
+    /// Peak L2 utilization across layers (bytes).
+    pub fn peak_l2(&self) -> u64 {
+        self.layers.iter().map(|l| l.l2.l2_used_bytes).max().unwrap_or(0)
+    }
+
+    /// Total L3 DMA traffic in bytes (weight fetches + spills).
+    pub fn l3_traffic(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.l2.weight_bytes * l.l2.weight_refetches + 2 * l.l2.spill_bytes)
+            .sum()
+    }
+}
+
+fn plan_l2(layer: &FusedLayer, tile: &TilePlan, platform: &PlatformSpec) -> L2Plan {
+    // packed storage in L2 (sub-byte tensors stay packed until the cluster
+    // unpacks them during compute)
+    let weight_bytes = layer.param_bits.div_ceil(8);
+    let input_bytes = layer.input_bits.div_ceil(8);
+    let output_bytes = layer.output_bits.div_ceil(8);
+
+    let need = weight_bytes + input_bytes + output_bytes;
+    let fits_l2 = need <= platform.l2_bytes;
+
+    let (weight_refetches, spill_bytes, l2_used) = if fits_l2 {
+        (1, 0, need)
+    } else {
+        // weights re-streamed per spatial tile when they cannot stay
+        // resident next to the activations
+        let io = input_bytes + output_bytes;
+        if io + tile.tile_weight_bytes * 2 <= platform.l2_bytes {
+            // activations resident, weights streamed once per spatial pass
+            (tile.tiles_h as u64, 0, platform.l2_bytes.min(need))
+        } else {
+            // activations don't fit either: spill the output feature map
+            (
+                tile.tiles_h as u64,
+                output_bytes,
+                platform.l2_bytes,
+            )
+        }
+    };
+
+    L2Plan {
+        weight_bytes,
+        input_bytes,
+        output_bytes,
+        fits_l2,
+        weight_refetches,
+        spill_bytes,
+        l2_used_bytes: l2_used,
+        prefetchable: false, // filled in by build_schedule (needs context)
+    }
+}
+
+/// Build the complete platform-aware schedule for a list of fused layers.
+pub fn build_schedule(
+    layers: Vec<FusedLayer>,
+    platform: &PlatformSpec,
+) -> Result<NetworkSchedule> {
+    platform.validate()?;
+    let mut planned: Vec<LayerSchedule> = Vec::with_capacity(layers.len());
+    for layer in layers {
+        let tile = plan_layer(&layer, platform)?;
+        let mut l2 = plan_l2(&layer, &tile, platform);
+        // weight prefetch is possible when this layer's weights fit next
+        // to the *previous* layer's resident working set (the first layer
+        // prefetches during model load and is always considered hidden)
+        l2.prefetchable = l2.fits_l2
+            && match planned.last() {
+                Some(prev) => {
+                    prev.l2.l2_used_bytes + l2.weight_bytes <= platform.l2_bytes
+                }
+                None => true,
+            };
+        planned.push(LayerSchedule { layer, tile, l2 });
+    }
+    Ok(NetworkSchedule {
+        platform: platform.clone(),
+        layers: planned,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::fusion::fuse;
+
+    fn schedule_for(cout: usize, platform: &PlatformSpec) -> NetworkSchedule {
+        let mut b = GraphBuilder::new(
+            "s",
+            TensorSpec::chw(32, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(cout, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        build_schedule(fuse(&g).unwrap(), platform).unwrap()
+    }
+    use crate::platform::PlatformSpec;
+
+    #[test]
+    fn small_net_fits_l2() {
+        let s = schedule_for(32, &presets::gap8());
+        assert!(s.layers[0].l2.fits_l2);
+        assert_eq!(s.layers[0].l2.weight_refetches, 1);
+        assert_eq!(s.layers[0].l2.spill_bytes, 0);
+        assert_eq!(s.l3_traffic(), s.layers[0].l2.weight_bytes);
+    }
+
+    #[test]
+    fn big_net_streams_weights() {
+        // 32 -> 2048 channels: weights = 2048*32*9 = 590 kB > 512 kB L2
+        let s = schedule_for(2048, &presets::gap8());
+        let l = &s.layers[0];
+        assert!(!l.l2.fits_l2);
+        assert!(l.l2.weight_refetches >= 1);
+        assert!(s.l3_traffic() >= l.l2.weight_bytes);
+    }
+
+    #[test]
+    fn larger_l2_reduces_l3_traffic() {
+        // the Fig. 7 mechanism
+        let small = presets::gap8_with(8, 256);
+        let large = presets::gap8_with(8, 512);
+        let t_small = schedule_for(1024, &small).l3_traffic();
+        let t_large = schedule_for(1024, &large).l3_traffic();
+        assert!(t_large <= t_small, "large={t_large} small={t_small}");
+    }
+
+    #[test]
+    fn peaks_within_capacity() {
+        let p = presets::gap8();
+        let s = schedule_for(256, &p);
+        assert!(s.peak_l1() <= p.l1_bytes);
+        assert!(s.peak_l2() <= p.l2_bytes);
+    }
+
+    #[test]
+    fn mobilenet_style_chain_schedules() {
+        let mut b = GraphBuilder::new(
+            "chain",
+            TensorSpec::chw(3, 32, 32, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(32, 3, 2, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .conv("c1", ConvAttrs::depthwise(32, 3, 1, 1), ElemType::int(8))
+            .relu("r1")
+            .quant("q1", ElemType::int(8), false)
+            .conv("c2", ConvAttrs::standard(64, 1, 1, 0), ElemType::int(8))
+            .relu("r2")
+            .quant("q2", ElemType::int(8), false)
+            .flatten("f")
+            .gemm("fc", 10, ElemType::int(8));
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let s = build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap();
+        assert_eq!(s.layers.len(), 5); // RC_1 RC_2 RC_3 flat FC_1
+        for l in &s.layers {
+            assert!(l.tile.l1_used_bytes <= presets::gap8().l1_bytes);
+        }
+    }
+}

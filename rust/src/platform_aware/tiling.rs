@@ -1,0 +1,399 @@
+//! Dory-style L1 tiling solver (paper §VII).
+//!
+//! "When all the required data for a given layer fit entirely within the L1
+//! memory, no data tiling is needed … Otherwise, Dory partitions the data
+//! based on the output channels or feature maps to ensure that each tile
+//! fits within the available L1 space. If memory utilization allows, Dory
+//! can also employ a double-buffering strategy, which reserves twice the
+//! space of a single buffer but enables overlapping of data transfer and
+//! computation."
+//!
+//! Temp buffers (LUT tables, threshold trees) are allocated once in L1 for
+//! the whole layer, like Dory does ("Dory directly allocates these
+//! auxiliary structures in the L1 buffer").
+
+use super::fusion::{FusedLayer, LayerKind};
+use crate::error::{AladinError, Result};
+use crate::platform::PlatformSpec;
+
+/// The tiling decision for one fused layer.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub layer: String,
+    /// Tiles along output channels.
+    pub tiles_c: usize,
+    /// Tiles along output spatial rows.
+    pub tiles_h: usize,
+    /// Per-tile L1 buffer sizes in bytes.
+    pub tile_input_bytes: u64,
+    pub tile_weight_bytes: u64,
+    pub tile_output_bytes: u64,
+    /// Whole-layer-resident auxiliary structures (LUTs, threshold trees).
+    pub temp_bytes: u64,
+    /// Double buffering enabled (2x input/weight/output buffers reserved).
+    pub double_buffered: bool,
+    /// Peak L1 utilization in bytes.
+    pub l1_used_bytes: u64,
+    /// True when the whole layer fits in L1 in one pass (no tiling).
+    pub single_pass: bool,
+    /// Per-tile output elements (channels, spatial) of a *full* tile.
+    pub tile_out_c: usize,
+    pub tile_out_sp: usize,
+}
+
+impl TilePlan {
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_c * self.tiles_h
+    }
+
+    /// Bytes DMA-ed L2->L1 for one tile (input + weights).
+    pub fn tile_in_dma_bytes(&self) -> u64 {
+        self.tile_input_bytes + self.tile_weight_bytes
+    }
+}
+
+/// Buffer requirements of a candidate (tiles_c, tiles_h) split.
+#[derive(Debug, Clone, Copy)]
+struct TileBuffers {
+    input: u64,
+    weight: u64,
+    output: u64,
+}
+
+/// Geometry + precision info extracted from a fused layer for tiling.
+struct TileGeom {
+    /// Shared dim (per group).
+    k: usize,
+    /// Input feature map (channels, h, w) and element bits.
+    in_dims: (usize, usize, usize),
+    x_bits: u64,
+    /// Output feature map (channels, h, w) and element bits.
+    out_dims: (usize, usize, usize),
+    y_bits: u64,
+    w_bits: u64,
+    acc_bits: u64,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    depthwise: bool,
+    /// For FC / elementwise: no spatial tiling possible.
+    spatial_tilable: bool,
+}
+
+fn geom_of(layer: &FusedLayer) -> TileGeom {
+    match &layer.kind {
+        LayerKind::Linear {
+            k,
+            in_dims,
+            out_dims,
+            kernel,
+            stride,
+            w_type,
+            x_type,
+            acc_type,
+            y_type,
+            depthwise,
+            ..
+        } => TileGeom {
+            k: *k,
+            in_dims: *in_dims,
+            x_bits: x_type.bits as u64,
+            out_dims: *out_dims,
+            y_bits: y_type.bits as u64,
+            w_bits: w_type.bits as u64,
+            acc_bits: acc_type.bits as u64,
+            kernel: *kernel,
+            stride: *stride,
+            depthwise: *depthwise,
+            spatial_tilable: out_dims.1 > 1,
+        },
+        LayerKind::Pool {
+            in_dims,
+            out_dims,
+            kernel,
+            x_type,
+            ..
+        } => TileGeom {
+            k: (kernel.0 * kernel.1).max(1),
+            in_dims: *in_dims,
+            x_bits: x_type.bits as u64,
+            out_dims: *out_dims,
+            y_bits: x_type.bits as u64,
+            w_bits: 0,
+            acc_bits: 0,
+            kernel: *kernel,
+            stride: *kernel,
+            depthwise: true, // pooling is channel-independent like depthwise
+            spatial_tilable: out_dims.1 > 1,
+        },
+        LayerKind::Elementwise { elems, x_type } => TileGeom {
+            k: 1,
+            in_dims: (1, 1, *elems),
+            x_bits: x_type.bits as u64,
+            out_dims: (1, 1, *elems),
+            y_bits: x_type.bits as u64,
+            w_bits: 0,
+            acc_bits: 0,
+            kernel: (1, 1),
+            stride: (1, 1),
+            depthwise: true,
+            spatial_tilable: false,
+        },
+    }
+}
+
+/// Byte-aligned element storage (sub-byte elements unpacked for compute;
+/// consistent with the bit-unpacking overhead the cycle model charges).
+fn buf_bytes(elems: u64, bits: u64) -> u64 {
+    elems * bits.div_ceil(8).max(1)
+}
+
+/// Buffer sizes for a (tiles_c, tiles_h) candidate.
+fn tile_buffers(g: &TileGeom, tiles_c: usize, tiles_h: usize) -> TileBuffers {
+    let (cin, hin, win) = g.in_dims;
+    let (cout, hout, wout) = g.out_dims;
+
+    let tc_out = cout.div_ceil(tiles_c);
+    let th_out = hout.div_ceil(tiles_h);
+
+    // input rows needed for th_out output rows, with kernel halo
+    let th_in = ((th_out - 1) * g.stride.0 + g.kernel.0).min(hin);
+
+    // channel tiling shrinks the input only for channel-independent ops
+    // (depthwise, pooling); dense convolutions need all input channels.
+    let tc_in = if g.depthwise { cin.div_ceil(tiles_c) } else { cin };
+
+    let input = buf_bytes((tc_in * th_in * win) as u64, g.x_bits);
+    let weight = buf_bytes((tc_out * g.k) as u64, g.w_bits)
+        + buf_bytes(tc_out as u64, g.acc_bits); // bias at accumulator precision
+    let output = buf_bytes((tc_out * th_out * wout) as u64, g.y_bits);
+    TileBuffers { input, weight, output }
+}
+
+/// Solve the L1 tiling for one fused layer. Search order prefers the
+/// fewest tiles (Dory's single-pass-first policy), then double buffering.
+pub fn plan_layer(layer: &FusedLayer, platform: &PlatformSpec) -> Result<TilePlan> {
+    let g = geom_of(layer);
+    let temp_bytes = platform.round_to_chunk(layer.temp_bits.div_ceil(8));
+    let l1 = platform.l1_bytes;
+
+    if temp_bytes >= l1 {
+        return Err(AladinError::Infeasible {
+            layer: layer.name.clone(),
+            required: temp_bytes,
+            available: l1,
+        });
+    }
+    let budget = l1 - temp_bytes;
+
+    let (cout, hout, _) = g.out_dims;
+    let max_tc = cout.max(1);
+    let max_th = if g.spatial_tilable { hout.max(1) } else { 1 };
+
+    let fits = |b: &TileBuffers, dbl: bool| -> bool {
+        let f = if dbl { 2 } else { 1 };
+        let total = f * (platform.round_to_chunk(b.input)
+            + platform.round_to_chunk(b.weight)
+            + platform.round_to_chunk(b.output));
+        total <= budget
+    };
+
+    // Enumerate candidates in increasing tile count; for each tiles_h pick
+    // the smallest tiles_c that fits. Buffer sizes are non-increasing in
+    // tiles_c (output channels split monotonically), so the smallest
+    // feasible tiles_c is found by binary search — O(log Cout) per row
+    // instead of the linear scan (see EXPERIMENTS.md §Perf).
+    let mut best: Option<(usize, usize, TileBuffers, bool)> = None;
+    'outer: for th in 1..=max_th {
+        // fast path: an untiled channel dimension usually fits
+        let tc = if fits(&tile_buffers(&g, 1, th), false) {
+            1
+        } else {
+            if !fits(&tile_buffers(&g, max_tc, th), false) {
+                continue; // no tc fits at this th
+            }
+            let (mut lo, mut hi) = (2usize, max_tc);
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if fits(&tile_buffers(&g, mid, th), false) {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            lo
+        };
+        let b = tile_buffers(&g, tc, th);
+        let dbl = fits(&b, true);
+        let n = tc * th;
+        match &best {
+            Some((btc, bth, _, bdbl)) => {
+                let bn = btc * bth;
+                // prefer fewer tiles; tie-break on double buffering
+                if n < bn || (n == bn && dbl && !bdbl) {
+                    best = Some((tc, th, b, dbl));
+                }
+            }
+            None => best = Some((tc, th, b, dbl)),
+        }
+        // single-pass (1 tile) cannot be beaten
+        if tc == 1 && th == 1 {
+            break 'outer;
+        }
+    }
+
+    let (tiles_c, tiles_h, b, double_buffered) = best.ok_or_else(|| {
+        let b = tile_buffers(&g, max_tc, max_th);
+        AladinError::Infeasible {
+            layer: layer.name.clone(),
+            required: temp_bytes + b.input + b.weight + b.output,
+            available: l1,
+        }
+    })?;
+
+    let factor = if double_buffered { 2 } else { 1 };
+    let l1_used = temp_bytes
+        + factor
+            * (platform.round_to_chunk(b.input)
+                + platform.round_to_chunk(b.weight)
+                + platform.round_to_chunk(b.output));
+
+    Ok(TilePlan {
+        layer: layer.name.clone(),
+        tiles_c,
+        tiles_h,
+        tile_input_bytes: b.input,
+        tile_weight_bytes: b.weight,
+        tile_output_bytes: b.output,
+        temp_bytes,
+        double_buffered,
+        l1_used_bytes: l1_used,
+        single_pass: tiles_c == 1 && tiles_h == 1,
+        tile_out_c: g.out_dims.0.div_ceil(tiles_c),
+        tile_out_sp: g.out_dims.1.div_ceil(tiles_h) * g.out_dims.2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::fusion::fuse;
+
+    fn layer_for(cin: usize, cout: usize, hw: usize, w_bits: u8) -> FusedLayer {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(cin, hw, hw, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c", ConvAttrs::standard(cout, 3, 1, 1), ElemType::int(w_bits))
+            .relu("r")
+            .quant("q", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        fuse(&g).unwrap().into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn small_layer_single_pass() {
+        let l = layer_for(3, 8, 16, 8);
+        let plan = plan_layer(&l, &presets::gap8()).unwrap();
+        assert!(plan.single_pass);
+        assert_eq!(plan.n_tiles(), 1);
+        assert!(plan.double_buffered); // tiny: 2x fits easily
+        assert!(plan.l1_used_bytes <= presets::gap8().l1_bytes);
+    }
+
+    #[test]
+    fn large_layer_gets_tiled() {
+        // 128 -> 256 channels at 16x16: weights alone are 128*256*9 = 295k
+        let l = layer_for(128, 256, 16, 8);
+        let plan = plan_layer(&l, &presets::gap8()).unwrap();
+        assert!(!plan.single_pass);
+        assert!(plan.n_tiles() > 1);
+        assert!(plan.l1_used_bytes <= presets::gap8().l1_bytes);
+    }
+
+    #[test]
+    fn tile_buffers_cover_whole_layer() {
+        let l = layer_for(64, 128, 8, 8);
+        let plan = plan_layer(&l, &presets::gap8()).unwrap();
+        // summed over tiles, outputs cover at least the full output
+        let out_total = plan.tile_output_bytes * plan.n_tiles() as u64;
+        assert!(out_total >= l.output_bits / 8);
+        // weights replicated across spatial tiles but cover all channels
+        let w_total = plan.tile_weight_bytes * plan.tiles_c as u64;
+        assert!(w_total * 8 >= l.param_bits - l.temp_bits);
+    }
+
+    #[test]
+    fn infeasible_when_temp_exceeds_l1() {
+        let mut l = layer_for(3, 8, 8, 8);
+        l.temp_bits = presets::gap8().l1_bytes * 8 + 8; // LUT bigger than L1
+        assert!(matches!(
+            plan_layer(&l, &presets::gap8()),
+            Err(AladinError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn smaller_l1_forces_more_tiles() {
+        let l = layer_for(64, 64, 16, 8);
+        let big = presets::gap8();
+        let mut small = presets::gap8();
+        small.l1_bytes = 16 * 1024;
+        let p_big = plan_layer(&l, &big).unwrap();
+        let p_small = plan_layer(&l, &small).unwrap();
+        assert!(p_small.n_tiles() >= p_big.n_tiles());
+        assert!(p_small.l1_used_bytes <= small.l1_bytes);
+    }
+
+    #[test]
+    fn lower_precision_fewer_tiles() {
+        // the §VIII-B memory observation: int4 weights halve the tile
+        // working set, enabling fewer tiles / better prefetch
+        let l8 = layer_for(64, 128, 16, 8);
+        let l4 = layer_for(64, 128, 16, 4);
+        let p8 = plan_layer(&l8, &presets::gap8()).unwrap();
+        let p4 = plan_layer(&l4, &presets::gap8()).unwrap();
+        assert!(p4.n_tiles() <= p8.n_tiles());
+        assert!(p4.tile_weight_bytes <= p8.tile_weight_bytes);
+    }
+
+    #[test]
+    fn depthwise_input_shrinks_with_channel_tiling() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(256, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c", ConvAttrs::depthwise(256, 3, 1, 1), ElemType::int(8))
+            .relu("r")
+            .quant("q", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let l = fuse(&g).unwrap().into_iter().next().unwrap();
+        let mut tiny = presets::gap8();
+        tiny.l1_bytes = 32 * 1024;
+        let plan = plan_layer(&l, &tiny).unwrap();
+        assert!(plan.l1_used_bytes <= tiny.l1_bytes);
+        // per-tile input must be less than the full input
+        assert!(plan.tile_input_bytes < 256 * 18 * 16);
+    }
+
+    #[test]
+    fn pool_layer_tiles() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(512, 32, 32, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.max_pool("p", crate::graph::ir::PoolAttrs::square(2, 2));
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let l = fuse(&g).unwrap().into_iter().next().unwrap();
+        let plan = plan_layer(&l, &presets::gap8()).unwrap();
+        assert!(plan.l1_used_bytes <= presets::gap8().l1_bytes);
+        assert!(plan.n_tiles() >= 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Dyadic scaling — integer-only requantization (paper §VI-C, [17], [33]).
+//!
+//! Approximates the real scale `S` as `m = M / 2^n` where `M` is a positive
+//! integer and `n` is a positive integer below the platform's widest
+//! precision (usually 30 or 31). The rescale then becomes a multiply plus a
+//! right shift — no division in hardware.
+
+
+/// A dyadic approximation `M / 2^n` of a real scale factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DyadicScale {
+    /// Positive integer multiplier.
+    pub m: u64,
+    /// Right-shift amount (positive, < platform max precision).
+    pub n: u8,
+}
+
+impl DyadicScale {
+    /// Fit the best `M / 2^n` approximation of `scale` with `n = max_n`
+    /// (offline computation, paper: "M is a positive integer that can be
+    /// computed offline in such a way m closely approximates S").
+    ///
+    /// For scales ≥ 1 the shift is reduced until `M` fits in 32 bits.
+    pub fn fit(scale: f64, max_n: u8) -> Self {
+        assert!(scale > 0.0, "scale must be positive, got {scale}");
+        assert!(max_n > 0 && max_n < 64);
+        let mut n = max_n;
+        loop {
+            let m = (scale * (1u64 << n) as f64).round();
+            if m <= u32::MAX as f64 || n == 1 {
+                return Self { m: m.max(1.0) as u64, n };
+            }
+            n -= 1;
+        }
+    }
+
+    /// The real value this dyadic pair represents.
+    pub fn value(&self) -> f64 {
+        self.m as f64 / (1u64 << self.n) as f64
+    }
+
+    /// Relative approximation error vs the original scale.
+    pub fn rel_error(&self, scale: f64) -> f64 {
+        ((self.value() - scale) / scale).abs()
+    }
+
+    /// Apply the rescale to an accumulator value with rounding:
+    /// `(acc * M + 2^(n-1)) >> n` (round-to-nearest via bias).
+    pub fn apply(&self, acc: i64) -> i64 {
+        let prod = acc as i128 * self.m as i128;
+        let bias = 1i128 << (self.n - 1);
+        // arithmetic shift with round-to-nearest, correct for negatives
+        ((prod + bias) >> self.n) as i64
+    }
+
+    /// Number of primitive shift/multiply steps for the BOPs model
+    /// (Eq. 10 counts bit-shifts; one multiply + one shift per element).
+    pub fn num_bit_shifts(&self) -> u64 {
+        1
+    }
+
+    /// Parameter storage cost: one `M` at accumulator precision plus the
+    /// shift amount — the paper rounds this to "the 32 bits required for
+    /// storing the scale parameter".
+    pub fn param_mem_bits(&self) -> u64 {
+        32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_is_accurate_for_small_scales() {
+        for scale in [0.0037, 0.01, 0.12, 0.5, 0.9] {
+            let d = DyadicScale::fit(scale, 31);
+            assert!(d.rel_error(scale) < 1e-6, "scale={scale} err={}", d.rel_error(scale));
+        }
+    }
+
+    #[test]
+    fn fit_handles_scales_above_one() {
+        let d = DyadicScale::fit(3.25, 31);
+        assert!(d.rel_error(3.25) < 1e-6);
+        assert!(d.m <= u32::MAX as u64);
+    }
+
+    #[test]
+    fn apply_matches_float_rescale() {
+        let scale = 0.0123;
+        let d = DyadicScale::fit(scale, 31);
+        for acc in [-100_000i64, -1234, -1, 0, 1, 999, 123_456] {
+            let want = (acc as f64 * scale).round() as i64;
+            let got = d.apply(acc);
+            assert!(
+                (got - want).abs() <= 1,
+                "acc={acc} want={want} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_rounds_to_nearest() {
+        // scale = 0.5 exactly: m/2^n = 1/2
+        let d = DyadicScale { m: 1, n: 1 };
+        assert_eq!(d.apply(3), 2); // 1.5 rounds away to 2
+        assert_eq!(d.apply(2), 1);
+        assert_eq!(d.apply(-3), -1); // -1.5 + bias path: rounds to -1
+    }
+
+    #[test]
+    fn coarse_n_gives_larger_error() {
+        let scale = 0.0123;
+        let fine = DyadicScale::fit(scale, 31);
+        let coarse = DyadicScale::fit(scale, 8);
+        assert!(coarse.rel_error(scale) >= fine.rel_error(scale));
+    }
+
+    #[test]
+    fn mem_cost_is_single_scalar() {
+        assert_eq!(DyadicScale::fit(0.1, 31).param_mem_bits(), 32);
+    }
+}

@@ -1,0 +1,204 @@
+//! Look-up-table implementations (paper §II-B, §VI-A, §VI-C).
+//!
+//! Two LUT uses appear in the paper:
+//!
+//! 1. **Multiplication LUT** — pre-compute every partial product between all
+//!    `2^Lw` weight values and `2^La` activation values; a MAC becomes a
+//!    table read + accumulate. Size `2^(Lw+La) * Lacc` bits. Trades compute
+//!    for memory; the table lives in L1 and is shared by all cluster cores
+//!    (which is exactly what creates the bank-contention bottleneck in
+//!    paper §VIII-B).
+//! 2. **Quantization LUT** — map every possible accumulator value directly
+//!    to its requantized value, `O(1)` instead of the `O(log n)` threshold
+//!    tree. Size `2^Lacc * Ly` bits (Eq. 7) — only viable for narrow
+//!    accumulators.
+
+use crate::graph::tensor::ElemType;
+
+/// Pre-computed multiplication table indexed by (weight, activation).
+#[derive(Debug, Clone)]
+pub struct MulLut {
+    pub w_type: ElemType,
+    pub a_type: ElemType,
+    pub acc_type: ElemType,
+    /// Row-major `[2^Lw][2^La]` products at accumulator precision.
+    pub table: Vec<i64>,
+}
+
+impl MulLut {
+    /// Materialize the full product table.
+    pub fn build(w_type: ElemType, a_type: ElemType, acc_type: ElemType) -> Self {
+        let nw = w_type.levels() as usize;
+        let na = a_type.levels() as usize;
+        let mut table = Vec::with_capacity(nw * na);
+        for wi in 0..nw {
+            let w = Self::decode(w_type, wi as u64);
+            for ai in 0..na {
+                let a = Self::decode(a_type, ai as u64);
+                table.push(acc_type.clamp(w * a));
+            }
+        }
+        Self {
+            w_type,
+            a_type,
+            acc_type,
+            table,
+        }
+    }
+
+    /// Map a raw index (the bit pattern) back to its signed value.
+    fn decode(t: ElemType, raw: u64) -> i64 {
+        if t.signed {
+            let half = t.levels() / 2;
+            if raw >= half {
+                raw as i64 - t.levels() as i64
+            } else {
+                raw as i64
+            }
+        } else {
+            raw as i64
+        }
+    }
+
+    /// Encode a signed value into its table index.
+    fn encode(t: ElemType, v: i64) -> usize {
+        debug_assert!(t.contains(v), "{v} out of range for {t}");
+        if t.signed && v < 0 {
+            (v + t.levels() as i64) as usize
+        } else {
+            v as usize
+        }
+    }
+
+    /// Look up the product of `w * a` — replaces one MAC multiply.
+    pub fn mul(&self, w: i64, a: i64) -> i64 {
+        let wi = Self::encode(self.w_type, w);
+        let ai = Self::encode(self.a_type, a);
+        self.table[wi * self.a_type.levels() as usize + ai]
+    }
+
+    /// Table size in bits: `2^(Lw + La) * Lacc` (paper §II-B).
+    pub fn size_bits(&self) -> u64 {
+        lut_mul_size_bits(self.w_type.bits, self.a_type.bits, self.acc_type.bits)
+    }
+}
+
+/// Size of a multiplication LUT in bits without materializing it.
+pub fn lut_mul_size_bits(l_w: u8, l_a: u8, l_acc: u8) -> u64 {
+    (1u64 << (l_w as u32 + l_a as u32)) * l_acc as u64
+}
+
+/// Size of a quantization LUT in bits — paper Eq. (7): `2^Lacc * Ly`.
+/// Returns `None` when the accumulator is too wide to enumerate (the
+/// "not applicable" case of §VI-C — e.g. 32-bit accumulators).
+pub fn lut_quant_size_bits(l_acc: u8, l_y: u8) -> Option<u64> {
+    if l_acc >= 28 {
+        return None; // 2^28 entries: beyond any on-chip memory, reject
+    }
+    Some((1u64 << l_acc) * l_y as u64)
+}
+
+/// Quantization LUT: direct accumulator -> quantized value map.
+#[derive(Debug, Clone)]
+pub struct QuantLut {
+    pub acc_type: ElemType,
+    pub out_type: ElemType,
+    table: Vec<i64>,
+}
+
+impl QuantLut {
+    /// Build from any requantization function over the accumulator domain.
+    /// Only feasible for narrow accumulators (≤ 16 bits in practice).
+    pub fn build(
+        acc_type: ElemType,
+        out_type: ElemType,
+        f: impl Fn(i64) -> i64,
+    ) -> Option<Self> {
+        lut_quant_size_bits(acc_type.bits, out_type.bits)?;
+        let n = acc_type.levels() as usize;
+        let mut table = Vec::with_capacity(n);
+        for raw in 0..n {
+            let v = MulLut::decode(acc_type, raw as u64);
+            table.push(out_type.clamp(f(v)));
+        }
+        Some(Self {
+            acc_type,
+            out_type,
+            table,
+        })
+    }
+
+    /// O(1) lookup.
+    pub fn apply(&self, acc: i64) -> i64 {
+        self.table[MulLut::encode(self.acc_type, acc)]
+    }
+
+    pub fn size_bits(&self) -> u64 {
+        self.table.len() as u64 * self.out_type.bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_lut_matches_multiplication() {
+        let lut = MulLut::build(ElemType::int(4), ElemType::int(4), ElemType::int(16));
+        for w in -8..=7i64 {
+            for a in -8..=7i64 {
+                assert_eq!(lut.mul(w, a), w * a, "w={w} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_lut_unsigned_activation() {
+        let lut = MulLut::build(ElemType::int(2), ElemType::uint(4), ElemType::int(16));
+        for w in -2..=1i64 {
+            for a in 0..=15i64 {
+                assert_eq!(lut.mul(w, a), w * a);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_lut_size_formula() {
+        // paper §II-B: 2^(Lw+La) * Lacc
+        let lut = MulLut::build(ElemType::int(4), ElemType::int(8), ElemType::int(32));
+        assert_eq!(lut.size_bits(), (1u64 << 12) * 32);
+        assert_eq!(lut.table.len(), 1 << 12);
+        // 8+8 int32: 2 MiB of bits
+        assert_eq!(lut_mul_size_bits(8, 8, 32), (1 << 16) * 32);
+    }
+
+    #[test]
+    fn lut_size_grows_exponentially_with_weight_bits() {
+        // the Fig. 6 observation: 4-bit vs 2-bit weight LUT differ by 4x
+        let s2 = lut_mul_size_bits(2, 8, 16);
+        let s4 = lut_mul_size_bits(4, 8, 16);
+        assert_eq!(s4, s2 * 4);
+    }
+
+    #[test]
+    fn quant_lut_infeasible_for_wide_acc() {
+        assert!(lut_quant_size_bits(32, 8).is_none());
+        assert!(
+            QuantLut::build(ElemType::int(32), ElemType::int(8), |v| v >> 8).is_none()
+        );
+    }
+
+    #[test]
+    fn quant_lut_matches_function() {
+        let lut =
+            QuantLut::build(ElemType::int(12), ElemType::int(4), |v| (v as f64 / 100.0)
+                .round() as i64)
+            .unwrap();
+        for acc in [-2048i64, -512, -100, -49, 0, 49, 100, 2047] {
+            let want = ((acc as f64 / 100.0).round() as i64).clamp(-8, 7);
+            assert_eq!(lut.apply(acc), want, "acc={acc}");
+        }
+        // Eq. (7): 2^12 * 4 bits
+        assert_eq!(lut.size_bits(), 4096 * 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! Quantization mathematics: uniform/affine quantizers (Eq. 1), dyadic
+//! scaling, threshold trees, LUT construction/sizing, non-uniform schemes.
+
+pub mod dyadic;
+pub mod lut;
+pub mod nonuniform;
+pub mod thresholds;
+pub mod uniform;
+
+pub use dyadic::DyadicScale;
+pub use lut::{lut_mul_size_bits, lut_quant_size_bits, MulLut, QuantLut};
+pub use nonuniform::NonUniformQuantizer;
+pub use thresholds::ThresholdTree;
+pub use uniform::{ChannelwiseQuantizer, Rounding, UniformQuantizer};

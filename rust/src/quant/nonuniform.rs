@@ -1,0 +1,136 @@
+//! Non-uniform quantization (paper §II-A).
+//!
+//! `Q(r) = x_i if r ∈ [Δ_i, Δ_{i+1})` — bins of arbitrary width tailored to
+//! the data distribution. We provide the additive-powers-of-two (APoT-like)
+//! scheme referenced by the paper ([18]: more precision near zero) plus a
+//! generic bin-edge quantizer, both of which lower to the threshold-tree
+//! implementation of §VI-C.
+
+use super::thresholds::ThresholdTree;
+use crate::graph::tensor::ElemType;
+
+/// A non-uniform quantizer defined by real-domain bin edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NonUniformQuantizer {
+    /// Strictly increasing bin boundaries Δ_1 < … < Δ_T (real domain).
+    pub edges: Vec<f64>,
+    /// Representative value of each of the T+1 bins (dequantization).
+    pub levels: Vec<f64>,
+    pub target: ElemType,
+}
+
+impl NonUniformQuantizer {
+    /// Powers-of-two bins: edges at ±β/2^k — dense near zero, as in [18].
+    pub fn powers_of_two(beta: f64, target: ElemType) -> Self {
+        assert!(beta > 0.0);
+        let half_levels = (target.levels() / 2) as i64;
+        let mut edges = Vec::new();
+        // negative edges (from most negative inward), then positive outward
+        for k in (1..half_levels).rev() {
+            edges.push(-beta / (1u64 << k) as f64);
+        }
+        edges.push(0.0);
+        for k in (1..half_levels).rev() {
+            edges.push(beta / (1u64 << (half_levels - k)) as f64);
+        }
+        edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        edges.dedup();
+        let levels = Self::midpoint_levels(&edges, beta);
+        Self { edges, levels, target }
+    }
+
+    /// Generic quantizer from explicit edges, with midpoint dequant levels.
+    pub fn from_edges(edges: Vec<f64>, beta: f64, target: ElemType) -> Self {
+        assert!(edges.windows(2).all(|w| w[0] < w[1]));
+        let levels = Self::midpoint_levels(&edges, beta);
+        Self { edges, levels, target }
+    }
+
+    fn midpoint_levels(edges: &[f64], beta: f64) -> Vec<f64> {
+        let mut levels = Vec::with_capacity(edges.len() + 1);
+        levels.push(edges.first().copied().unwrap_or(-beta).min(-beta));
+        for w in edges.windows(2) {
+            levels.push((w[0] + w[1]) / 2.0);
+        }
+        levels.push(edges.last().copied().unwrap_or(beta).max(beta));
+        levels
+    }
+
+    /// Quantize: index of the containing bin, mapped to the signed range.
+    pub fn quantize(&self, r: f64) -> i64 {
+        let idx = self.edges.partition_point(|&e| e <= r) as i64;
+        self.target.clamp(self.target.min_value() + idx)
+    }
+
+    /// Dequantize to the bin's representative value.
+    pub fn dequantize(&self, q: i64) -> f64 {
+        let idx = (q - self.target.min_value()) as usize;
+        self.levels[idx.min(self.levels.len() - 1)]
+    }
+
+    /// Lower to the integer-domain threshold tree executed on the platform:
+    /// thresholds are the real edges mapped through the *input* (accumulator)
+    /// quantization scale.
+    pub fn to_threshold_tree(&self, acc_scale: f64, acc: ElemType) -> ThresholdTree {
+        let thresholds: Vec<i64> = self
+            .edges
+            .iter()
+            .map(|&e| (e / acc_scale).round() as i64)
+            .collect();
+        ThresholdTree { thresholds, acc, out: self.target }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pot_bins_denser_near_zero() {
+        let q = NonUniformQuantizer::powers_of_two(1.0, ElemType::int(4));
+        // widths of bins adjacent to zero are smaller than outermost widths
+        let n = q.edges.len();
+        let inner = q.edges[n / 2] - q.edges[n / 2 - 1];
+        let outer = q.edges[1] - q.edges[0];
+        assert!(inner < outer, "inner={inner} outer={outer}");
+    }
+
+    #[test]
+    fn quantize_monotone() {
+        let q = NonUniformQuantizer::powers_of_two(1.0, ElemType::int(4));
+        let mut prev = i64::MIN;
+        let mut r = -2.0;
+        while r < 2.0 {
+            let v = q.quantize(r);
+            assert!(v >= prev);
+            prev = v;
+            r += 0.01;
+        }
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_bin_width() {
+        let q = NonUniformQuantizer::powers_of_two(1.0, ElemType::int(4));
+        for i in 0..200 {
+            let r = -0.99 + i as f64 * 0.01;
+            let rr = q.dequantize(q.quantize(r));
+            // error bounded by the widest bin
+            assert!((r - rr).abs() <= 0.51, "r={r} rr={rr}");
+        }
+    }
+
+    #[test]
+    fn lowering_to_threshold_tree_consistent() {
+        let q = NonUniformQuantizer::from_edges(
+            vec![-0.5, -0.1, 0.0, 0.1, 0.5, 1.0, 2.0],
+            2.0,
+            ElemType::int(3),
+        );
+        let acc_scale = 0.01; // accumulator value v represents v * 0.01
+        let tree = q.to_threshold_tree(acc_scale, ElemType::int(16));
+        for acc in (-300..300).step_by(7) {
+            let r = acc as f64 * acc_scale;
+            assert_eq!(tree.apply(acc), q.quantize(r), "acc={acc}");
+        }
+    }
+}

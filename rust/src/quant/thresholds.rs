@@ -1,0 +1,156 @@
+//! Threshold-tree requantization / non-uniform quantization (paper §VI-C).
+//!
+//! Re-quantization by comparators arranged in a balanced tree: `T = 2^Ly - 1`
+//! thresholds, each at accumulator precision, map an accumulator value onto
+//! one of `2^Ly` output levels in `O(log T)` comparisons. The same structure
+//! discretizes arbitrary activation functions into step functions (§VI-D).
+
+use crate::graph::tensor::ElemType;
+
+/// A monotone threshold set mapping accumulator values to output levels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThresholdTree {
+    /// Strictly increasing thresholds Δ_1 < Δ_2 < … < Δ_T (accumulator
+    /// domain). Output level for `v` is `#\{i : v >= Δ_i\}` mapped into the
+    /// signed output range.
+    pub thresholds: Vec<i64>,
+    /// Bit-width of each stored threshold (accumulator precision, L_acc).
+    pub acc: ElemType,
+    /// Output element type (L_y bits).
+    pub out: ElemType,
+}
+
+impl ThresholdTree {
+    /// Build the tree equivalent to a uniform requantization with real
+    /// scale `scale` (and zero zero-point) to `out` precision: threshold i
+    /// is the accumulator value at which the uniform quantizer's output
+    /// crosses from level `i-1` to level `i`.
+    pub fn from_uniform_scale(scale: f64, acc: ElemType, out: ElemType) -> Self {
+        let t = (out.levels() - 1) as i64;
+        let lo = out.min_value();
+        let mut thresholds = Vec::with_capacity(t as usize);
+        for i in 0..t {
+            // crossing point between output level (lo+i) and (lo+i+1):
+            // the smallest accumulator value whose rounded quotient reaches
+            // level lo+i+1 (round half away from zero, like Eq. 1's Int()).
+            let edge = ((lo + i) as f64 + 0.5) * scale;
+            let thr = if edge >= 0.0 {
+                edge.ceil() as i64
+            } else {
+                edge.floor() as i64 + 1
+            };
+            thresholds.push(thr);
+        }
+        Self { thresholds, acc, out }
+    }
+
+    /// Build from explicit (already sorted) thresholds — the general
+    /// non-uniform case of §II-A.
+    pub fn from_thresholds(thresholds: Vec<i64>, acc: ElemType, out: ElemType) -> Self {
+        debug_assert!(thresholds.windows(2).all(|w| w[0] < w[1]));
+        debug_assert_eq!(thresholds.len() as u64, out.levels() - 1);
+        Self { thresholds, acc, out }
+    }
+
+    /// Number of thresholds `T = 2^Ly - 1`.
+    pub fn num_thresholds(&self) -> u64 {
+        self.thresholds.len() as u64
+    }
+
+    /// Apply via binary search over the balanced tree (`O(log T)`
+    /// comparisons, exactly what the comparator tree does in HW).
+    pub fn apply(&self, v: i64) -> i64 {
+        // number of thresholds <= v
+        let idx = self.thresholds.partition_point(|&t| t <= v) as i64;
+        self.out.min_value() + idx
+    }
+
+    /// Parameter memory of the stored thresholds — paper Eq. (8):
+    /// `(2^Ly - 1) * L_acc` bits (multiplied by channel count for
+    /// channel-wise quantization at the call site).
+    pub fn param_mem_bits(&self) -> u64 {
+        (self.out.levels() - 1) * self.acc.bits as u64
+    }
+
+    /// Comparator depth of the balanced tree (`ceil(log2(T+1))`).
+    pub fn depth(&self) -> u32 {
+        (self.num_thresholds() + 1).next_power_of_two().trailing_zeros()
+    }
+
+    /// BOPs for requantizing `inputs` features — paper Eq. (9):
+    /// `I * log2(T) * L_acc`.
+    pub fn bops(&self, inputs: u64) -> u64 {
+        let t = self.num_thresholds().max(2);
+        inputs * (t as f64).log2().ceil() as u64 * self.acc.bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_uniform_quantizer() {
+        // requant int32 accumulators to int4 with scale 10 (i.e. output
+        // level = round(acc / 10) clamped)
+        let tree = ThresholdTree::from_uniform_scale(10.0, ElemType::int(32), ElemType::int(4));
+        for acc in -100..=100i64 {
+            let uniform = ((acc as f64 / 10.0).round() as i64).clamp(-8, 7);
+            assert_eq!(tree.apply(acc), uniform, "acc={acc}");
+        }
+    }
+
+    #[test]
+    fn threshold_count_matches_eq8() {
+        let tree = ThresholdTree::from_uniform_scale(4.0, ElemType::int(16), ElemType::int(4));
+        assert_eq!(tree.num_thresholds(), 15); // 2^4 - 1
+        assert_eq!(tree.param_mem_bits(), 15 * 16); // Eq. (8)
+    }
+
+    #[test]
+    fn bops_matches_eq9() {
+        let tree = ThresholdTree::from_uniform_scale(4.0, ElemType::int(32), ElemType::int(8));
+        // T = 255, log2(255) ceil = 8, L_acc = 32
+        assert_eq!(tree.bops(1000), 1000 * 8 * 32);
+    }
+
+    #[test]
+    fn saturates_at_extremes() {
+        let tree = ThresholdTree::from_uniform_scale(1.0, ElemType::int(32), ElemType::int(2));
+        assert_eq!(tree.apply(i64::MIN / 2), -2);
+        assert_eq!(tree.apply(i64::MAX / 2), 1);
+    }
+
+    #[test]
+    fn nonuniform_thresholds_respected() {
+        // APoT-style: denser near zero
+        let tree = ThresholdTree::from_thresholds(
+            vec![-4, -1, 0, 1, 4, 16, 64],
+            ElemType::int(16),
+            ElemType::int(3),
+        );
+        assert_eq!(tree.apply(-100), -4);
+        assert_eq!(tree.apply(-2), -3); // one threshold (-4) passed
+        assert_eq!(tree.apply(0), -1); // thresholds -4,-1,0 passed
+        assert_eq!(tree.apply(100), 3);
+    }
+
+    #[test]
+    fn depth_is_log_t() {
+        let t4 = ThresholdTree::from_uniform_scale(1.0, ElemType::int(16), ElemType::int(4));
+        assert_eq!(t4.depth(), 4); // 15 thresholds -> depth 4
+        let t2 = ThresholdTree::from_uniform_scale(1.0, ElemType::int(16), ElemType::int(2));
+        assert_eq!(t2.depth(), 2); // 3 thresholds -> depth 2
+    }
+
+    #[test]
+    fn monotone() {
+        let tree = ThresholdTree::from_uniform_scale(7.0, ElemType::int(32), ElemType::int(4));
+        let mut prev = i64::MIN;
+        for acc in (-200..200).step_by(3) {
+            let q = tree.apply(acc);
+            assert!(q >= prev);
+            prev = q;
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Uniform (affine) quantization — paper Eq. (1).
+//!
+//! `Q(r) = Int(r/S) - Z` with scale `S = (β - α)/(2^B - 1)` and zero-point
+//! `Z`. `Int()` is rounding followed by clipping into the representable
+//! range of the target [`ElemType`].
+
+use crate::graph::tensor::ElemType;
+
+/// Rounding mode used by the `Int()` operation (paper §II-A: "the rounding
+/// can be performed using different implementations").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Rounding {
+    /// Round half away from zero (ties away) — typical HW behaviour.
+    #[default]
+    Nearest,
+    Floor,
+    Ceil,
+}
+
+/// A uniform quantizer: scale, zero-point, target type, rounding mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UniformQuantizer {
+    pub scale: f64,
+    pub zero_point: i64,
+    pub target: ElemType,
+    pub rounding: Rounding,
+}
+
+impl UniformQuantizer {
+    /// Build a quantizer from the representation boundaries `[alpha, beta]`
+    /// (the expected min/max of the values to represent).
+    pub fn from_range(alpha: f64, beta: f64, target: ElemType) -> Self {
+        assert!(beta > alpha, "degenerate range [{alpha}, {beta}]");
+        let levels = (target.levels() - 1) as f64;
+        let scale = (beta - alpha) / levels;
+        // Zero-point chosen so alpha maps to the minimum representable value.
+        let zero_point = (alpha / scale).round() as i64 - target.min_value();
+        Self {
+            scale,
+            zero_point: -zero_point,
+            target,
+            rounding: Rounding::Nearest,
+        }
+    }
+
+    /// Symmetric quantizer: zero-point 0, range `[-beta, beta]`.
+    pub fn symmetric(beta: f64, target: ElemType) -> Self {
+        assert!(beta > 0.0);
+        let scale = beta / target.max_value() as f64;
+        Self {
+            scale,
+            zero_point: 0,
+            target,
+            rounding: Rounding::Nearest,
+        }
+    }
+
+    fn round(&self, v: f64) -> f64 {
+        match self.rounding {
+            Rounding::Nearest => v.round(),
+            Rounding::Floor => v.floor(),
+            Rounding::Ceil => v.ceil(),
+        }
+    }
+
+    /// Quantize a real value: `Int(r/S) - Z`, clipped.
+    pub fn quantize(&self, r: f64) -> i64 {
+        let q = self.round(r / self.scale) - self.zero_point as f64;
+        self.target.clamp(q as i64)
+    }
+
+    /// Dequantize back to the real domain: `r ≈ S * (q + Z)`.
+    pub fn dequantize(&self, q: i64) -> f64 {
+        self.scale * (q + self.zero_point) as f64
+    }
+
+    /// Quantization error for a value.
+    pub fn error(&self, r: f64) -> f64 {
+        (r - self.dequantize(self.quantize(r))).abs()
+    }
+}
+
+/// Per-channel quantization parameters (paper §II-A: "each out channel of
+/// the convolution has its own quantization configuration (S and Z), at the
+/// cost of a higher memory footprint").
+#[derive(Debug, Clone)]
+pub struct ChannelwiseQuantizer {
+    pub channels: Vec<UniformQuantizer>,
+}
+
+impl ChannelwiseQuantizer {
+    /// Fit per-channel symmetric quantizers from per-channel max-abs stats.
+    pub fn fit(max_abs: &[f64], target: ElemType) -> Self {
+        Self {
+            channels: max_abs
+                .iter()
+                .map(|&m| UniformQuantizer::symmetric(m.max(1e-12), target))
+                .collect(),
+        }
+    }
+
+    pub fn quantize(&self, channel: usize, r: f64) -> i64 {
+        self.channels[channel].quantize(r)
+    }
+
+    /// Parameter memory overhead in bits vs a per-tensor scalar pair:
+    /// one (S, Z) pair per channel at `param_bits` each.
+    pub fn param_mem_bits(&self, param_bits: u64) -> u64 {
+        self.channels.len() as u64 * 2 * param_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_int8_round_trip() {
+        let q = UniformQuantizer::symmetric(1.0, ElemType::int(8));
+        assert_eq!(q.quantize(1.0), 127);
+        assert_eq!(q.quantize(-1.0), -127);
+        assert_eq!(q.quantize(0.0), 0);
+        // dequantized error bounded by scale/2
+        for r in [-0.9, -0.3, 0.05, 0.42, 0.77] {
+            assert!(q.error(r) <= q.scale / 2.0 + 1e-12, "r={r}");
+        }
+    }
+
+    #[test]
+    fn clipping_saturates() {
+        let q = UniformQuantizer::symmetric(1.0, ElemType::int(4));
+        assert_eq!(q.quantize(10.0), 7);
+        assert_eq!(q.quantize(-10.0), -8);
+    }
+
+    #[test]
+    fn asymmetric_range_covers_alpha_beta() {
+        let q = UniformQuantizer::from_range(0.0, 6.0, ElemType::uint(8));
+        // endpoints map inside the range without saturating mid-range values
+        let lo = q.quantize(0.0);
+        let hi = q.quantize(6.0);
+        assert!(lo >= 0 && hi <= 255 && hi > lo);
+        assert!(q.error(3.0) <= q.scale);
+    }
+
+    #[test]
+    fn rounding_modes_differ() {
+        let mut q = UniformQuantizer::symmetric(8.0, ElemType::int(8));
+        q.rounding = Rounding::Floor;
+        let f = q.quantize(0.099);
+        q.rounding = Rounding::Ceil;
+        let c = q.quantize(0.099);
+        assert!(c >= f);
+        assert_eq!(c - f, 1);
+    }
+
+    #[test]
+    fn channelwise_fits_each_channel() {
+        let cw = ChannelwiseQuantizer::fit(&[1.0, 2.0, 0.5], ElemType::int(8));
+        assert_eq!(cw.quantize(0, 1.0), 127);
+        assert_eq!(cw.quantize(1, 1.0), 64); // half of channel-1 range
+        assert_eq!(cw.quantize(2, 0.5), 127);
+        // 3 channels * (S, Z) * 32 bits
+        assert_eq!(cw.param_mem_bits(32), 3 * 2 * 32);
+    }
+
+    #[test]
+    fn lower_bits_larger_error() {
+        let q8 = UniformQuantizer::symmetric(1.0, ElemType::int(8));
+        let q4 = UniformQuantizer::symmetric(1.0, ElemType::int(4));
+        let q2 = UniformQuantizer::symmetric(1.0, ElemType::int(2));
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64) / 100.0 * 1.9 - 0.95).collect();
+        let err = |q: &UniformQuantizer| vals.iter().map(|&v| q.error(v)).sum::<f64>();
+        assert!(err(&q8) < err(&q4));
+        assert!(err(&q4) < err(&q2));
+    }
+}

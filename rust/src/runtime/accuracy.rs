@@ -1,0 +1,125 @@
+//! Batched accuracy evaluation of an AOT-compiled quantized model — the
+//! Table-I accuracy column, measured instead of assumed.
+
+use super::artifacts::{Manifest, TestSet};
+use super::client::{Compiled, Engine};
+use crate::error::{AladinError, Result};
+use std::time::Instant;
+
+/// Result of evaluating one model on the test set.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    pub model: String,
+    pub n_examples: usize,
+    pub n_correct: usize,
+    pub accuracy: f64,
+    /// Host-side wall time of the whole evaluation (seconds).
+    pub eval_seconds: f64,
+    /// Examples per second through the PJRT executable.
+    pub throughput: f64,
+}
+
+/// Argmax over a logits row.
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Evaluate a compiled model (fixed batch size baked into the artifact)
+/// on the test set. Ragged final batches are zero-padded.
+pub fn evaluate(
+    model_name: &str,
+    compiled: &Compiled,
+    input_shape: &[i64],
+    testset: &TestSet,
+) -> Result<AccuracyReport> {
+    let batch = input_shape
+        .first()
+        .copied()
+        .ok_or_else(|| AladinError::Artifact("empty input shape".into()))? as usize;
+    let example_len = testset.example_len();
+    let expected_len: i64 = input_shape[1..].iter().product();
+    if expected_len as usize != example_len {
+        return Err(AladinError::Artifact(format!(
+            "test-set example size {example_len} != model input size {expected_len}"
+        )));
+    }
+
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut padded = vec![0f32; batch * example_len];
+
+    while seen < testset.header.n {
+        let (imgs, labels) = testset.batch(seen, batch);
+        let input: &[f32] = if labels.len() == batch {
+            imgs
+        } else {
+            padded[..imgs.len()].copy_from_slice(imgs);
+            padded[imgs.len()..].fill(0.0);
+            &padded
+        };
+        let logits = compiled.run_f32(&[(input, input_shape)])?;
+        let classes = logits.len() / batch;
+        for (i, &label) in labels.iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            if argmax(row) == label {
+                correct += 1;
+            }
+        }
+        seen += labels.len();
+    }
+
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(AccuracyReport {
+        model: model_name.to_string(),
+        n_examples: seen,
+        n_correct: correct,
+        accuracy: correct as f64 / seen.max(1) as f64,
+        eval_seconds: secs,
+        throughput: seen as f64 / secs.max(1e-12),
+    })
+}
+
+/// Load + compile + evaluate every model in the manifest.
+pub fn evaluate_all(engine: &Engine, manifest: &Manifest) -> Result<Vec<AccuracyReport>> {
+    let testset = manifest.load_testset()?;
+    manifest
+        .models
+        .iter()
+        .map(|m| {
+            let compiled = engine.load_hlo_text(manifest.dir.join(&m.hlo))?;
+            evaluate(&m.name, &compiled, &m.input_shape, &testset)
+        })
+        .collect()
+}
+
+
+impl crate::util::ToJson for AccuracyReport {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("model", self.model.clone())
+            .with("n_examples", self.n_examples)
+            .with("n_correct", self.n_correct)
+            .with("accuracy", self.accuracy)
+            .with("eval_seconds", self.eval_seconds)
+            .with("throughput", self.throughput)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+        assert_eq!(argmax(&[-5.0, -1.0, -3.0]), 1);
+    }
+}

@@ -1,0 +1,295 @@
+//! AOT artifact manifest + dataset container.
+//!
+//! `make artifacts` (python/compile/aot.py) writes into `artifacts/`:
+//! - `manifest.json` — which models exist, their input/output shapes;
+//! - `<case>.hlo.txt` — the quantized inference graph per Table-I case;
+//! - `testset.json` + `testset.bin` — the held-out synthetic test set
+//!   (f32 little-endian images + labels).
+
+use crate::error::{AladinError, Result};
+use crate::util::json::Value;
+use std::path::{Path, PathBuf};
+
+/// One exported model entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub hlo: String,
+    /// Input shape (batch, h, w, c).
+    pub input_shape: Vec<i64>,
+    /// Output shape (batch, classes).
+    pub output_shape: Vec<i64>,
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: Vec<ModelArtifact>,
+    /// Test-set descriptor file, relative to the manifest directory.
+    pub testset: String,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(AladinError::Artifact(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let doc = Value::parse(&std::fs::read_to_string(path)?)?;
+        let mut m = Self::from_json(&doc)?;
+        m.dir = dir;
+        Ok(m)
+    }
+
+    /// Parse from the in-tree JSON document model.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let bad = |reason: &str| AladinError::Artifact(format!("manifest: {reason}"));
+        let models = v
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| bad("missing `models`"))?
+            .iter()
+            .map(|m| {
+                let shape = |key: &str| -> Result<Vec<i64>> {
+                    m.get(key)
+                        .and_then(|s| s.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_i64()).collect())
+                        .ok_or_else(|| bad(&format!("model missing `{key}`")))
+                };
+                Ok(ModelArtifact {
+                    name: m
+                        .str_field("name")
+                        .ok_or_else(|| bad("model missing name"))?
+                        .to_string(),
+                    hlo: m
+                        .str_field("hlo")
+                        .ok_or_else(|| bad("model missing hlo"))?
+                        .to_string(),
+                    input_shape: shape("input_shape")?,
+                    output_shape: shape("output_shape")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            models,
+            testset: v
+                .str_field("testset")
+                .ok_or_else(|| bad("missing `testset`"))?
+                .to_string(),
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Render to the in-tree JSON document model.
+    pub fn to_json(&self) -> Value {
+        let models: Vec<Value> = self
+            .models
+            .iter()
+            .map(|m| {
+                Value::obj()
+                    .with("name", m.name.clone())
+                    .with("hlo", m.hlo.clone())
+                    .with("input_shape", m.input_shape.clone())
+                    .with("output_shape", m.output_shape.clone())
+            })
+            .collect();
+        Value::obj()
+            .with("models", Value::Arr(models))
+            .with("testset", self.testset.clone())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifact> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| AladinError::Artifact(format!("model `{name}` not in manifest")))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.model(name)?.hlo))
+    }
+
+    pub fn load_testset(&self) -> Result<TestSet> {
+        TestSet::load(self.dir.join(&self.testset))
+    }
+}
+
+/// Test-set header (sidecar of the raw f32 binary).
+#[derive(Debug, Clone)]
+pub struct TestSetHeader {
+    /// Number of examples.
+    pub n: usize,
+    /// Per-example image shape (h, w, c).
+    pub image_shape: Vec<usize>,
+    /// Raw binary file with `n * prod(image_shape)` f32 LE values.
+    pub images_bin: String,
+    /// Ground-truth labels.
+    pub labels: Vec<u32>,
+}
+
+impl TestSetHeader {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let bad = |reason: &str| AladinError::Artifact(format!("testset: {reason}"));
+        Ok(TestSetHeader {
+            n: v.usize_field("n").ok_or_else(|| bad("missing `n`"))?,
+            image_shape: v
+                .get("image_shape")
+                .and_then(|s| s.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .ok_or_else(|| bad("missing `image_shape`"))?,
+            images_bin: v
+                .str_field("images_bin")
+                .ok_or_else(|| bad("missing `images_bin`"))?
+                .to_string(),
+            labels: v
+                .get("labels")
+                .and_then(|l| l.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_u64().map(|u| u as u32)).collect())
+                .ok_or_else(|| bad("missing `labels`"))?,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("n", self.n)
+            .with("image_shape", self.image_shape.clone())
+            .with("images_bin", self.images_bin.clone())
+            .with("labels", self.labels.clone())
+    }
+}
+
+/// Loaded test set.
+pub struct TestSet {
+    pub header: TestSetHeader,
+    /// Flattened images, example-major.
+    pub images: Vec<f32>,
+}
+
+impl TestSet {
+    pub fn load(header_path: impl AsRef<Path>) -> Result<Self> {
+        let header_path = header_path.as_ref();
+        let doc = Value::parse(&std::fs::read_to_string(header_path)?)?;
+        let header = TestSetHeader::from_json(&doc)?;
+        let bin_path = header_path
+            .parent()
+            .unwrap_or_else(|| Path::new("."))
+            .join(&header.images_bin);
+        let bytes = std::fs::read(&bin_path)?;
+        let expected = header.n * header.image_shape.iter().product::<usize>() * 4;
+        if bytes.len() != expected {
+            return Err(AladinError::Artifact(format!(
+                "{}: expected {expected} bytes, found {}",
+                bin_path.display(),
+                bytes.len()
+            )));
+        }
+        let images = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { header, images })
+    }
+
+    /// Pixels per example.
+    pub fn example_len(&self) -> usize {
+        self.header.image_shape.iter().product()
+    }
+
+    /// Slice out examples `[start, start+count)` as a contiguous batch.
+    pub fn batch(&self, start: usize, count: usize) -> (&[f32], &[u32]) {
+        let len = self.example_len();
+        let end = (start + count).min(self.header.n);
+        (
+            &self.images[start * len..end * len],
+            &self.header.labels[start..end],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_testset(dir: &Path, n: usize) {
+        let shape = vec![2usize, 2, 1];
+        let len: usize = shape.iter().product();
+        let images: Vec<f32> = (0..n * len).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = images.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("testset.bin"), bytes).unwrap();
+        let header = TestSetHeader {
+            n,
+            image_shape: shape,
+            images_bin: "testset.bin".into(),
+            labels: (0..n as u32).map(|i| i % 10).collect(),
+        };
+        std::fs::write(dir.join("testset.json"), header.to_json().to_string_pretty())
+            .unwrap();
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        write_testset(dir.path(), 8);
+        let manifest = Manifest {
+            models: vec![ModelArtifact {
+                name: "case1".into(),
+                hlo: "case1.hlo.txt".into(),
+                input_shape: vec![8, 2, 2, 1],
+                output_shape: vec![8, 10],
+            }],
+            testset: "testset.json".into(),
+            dir: PathBuf::new(),
+        };
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            manifest.to_json().to_string_pretty(),
+        )
+        .unwrap();
+
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.models.len(), 1);
+        assert!(m.hlo_path("case1").unwrap().ends_with("case1.hlo.txt"));
+        assert!(m.model("nope").is_err());
+        let ts = m.load_testset().unwrap();
+        assert_eq!(ts.header.n, 8);
+        assert_eq!(ts.example_len(), 4);
+        let (imgs, labels) = ts.batch(2, 3);
+        assert_eq!(imgs.len(), 12);
+        assert_eq!(labels, &[2, 3, 4]);
+        assert_eq!(imgs[0], 8.0);
+    }
+
+    #[test]
+    fn size_mismatch_detected() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        write_testset(dir.path(), 8);
+        // truncate the bin
+        let bin = dir.path().join("testset.bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(TestSet::load(dir.path().join("testset.json")).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn batch_clamps_at_end() {
+        let dir = crate::util::tempdir::tempdir().unwrap();
+        write_testset(dir.path(), 5);
+        let ts = TestSet::load(dir.path().join("testset.json")).unwrap();
+        let (imgs, labels) = ts.batch(3, 10);
+        assert_eq!(labels.len(), 2);
+        assert_eq!(imgs.len(), 8);
+    }
+}

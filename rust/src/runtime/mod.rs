@@ -1,0 +1,11 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (HLO text + test set) and execute them from rust — the accuracy leg of
+//! the accuracy/latency/resource trade-off. Python is never on this path.
+
+pub mod accuracy;
+pub mod artifacts;
+pub mod client;
+
+pub use accuracy::{evaluate, evaluate_all, AccuracyReport};
+pub use artifacts::{Manifest, ModelArtifact, TestSet, TestSetHeader};
+pub use client::{Compiled, Engine};

@@ -1,0 +1,296 @@
+//! Per-tile compute cycle model of the cluster (the GVSoC substitute's
+//! core-side timing).
+//!
+//! Encodes the mechanisms the paper observes on GAP8/XpulpNN:
+//!
+//! - SIMD MAC throughput (`macs_per_cycle_int8` per core) with work split
+//!   over output channels — layers with few output channels cannot use all
+//!   cores ("the expected performance gain is limited in the initial layers
+//!   of the network, which contain relatively few output channels, thereby
+//!   restricting parallelization opportunities", §VIII-B);
+//! - bit-unpacking overhead for sub-byte operands, charged once per loaded
+//!   element ("the number of cycles required for 4-bit convolutions is
+//!   comparable to that of 8-bit ones … due to the bit-unpacking mechanism
+//!   of the target platform", §VIII-B);
+//! - LUT-based matmuls replace MACs with L1 lookups into a *shared* table;
+//!   concurrent cores contend on the banks the table spans ("the smaller
+//!   LUT exhibits a higher level of concurrent access … creating a
+//!   bottleneck that limits the anticipated performance gain", §VIII-B).
+
+use crate::impl_aware::config::{LinearImpl, QuantImpl};
+use crate::platform::PlatformSpec;
+use crate::platform_aware::fusion::{FusedLayer, LayerKind};
+use crate::platform_aware::tiling::TilePlan;
+
+/// Compute-side cycle breakdown for one tile.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TileComputeCycles {
+    /// MAC (or LUT-lookup) cycles, including contention.
+    pub mac_cycles: u64,
+    /// Sub-byte unpack cycles.
+    pub unpack_cycles: u64,
+    /// im2col rearrangement cycles.
+    pub im2col_cycles: u64,
+    /// Fused ReLU + requantization cycles.
+    pub post_cycles: u64,
+    /// Fixed per-tile overhead (loop setup, barriers).
+    pub overhead_cycles: u64,
+}
+
+impl TileComputeCycles {
+    pub fn total(&self) -> u64 {
+        self.mac_cycles
+            + self.unpack_cycles
+            + self.im2col_cycles
+            + self.post_cycles
+            + self.overhead_cycles
+    }
+}
+
+/// Number of cores a tile can actually use: parallelization is over output
+/// channels (and spatial positions within a channel for very wide layers).
+pub fn cores_used(platform: &PlatformSpec, tile_out_c: usize, tile_out_sp: usize) -> usize {
+    let parallelism = tile_out_c * tile_out_sp.max(1);
+    platform.cores.min(parallelism.max(1))
+}
+
+/// Contention slowdown factor for `cores` concurrently reading a shared
+/// structure spanning `banks` single-ported L1 banks: with random indexed
+/// accesses, at most `banks` reads retire per cycle.
+pub fn lut_contention_factor(cores: usize, banks: usize) -> f64 {
+    (cores as f64 / banks as f64).max(1.0)
+}
+
+/// Cycles for the compute phase of one (full-size) tile of a fused layer.
+pub fn tile_compute_cycles(
+    layer: &FusedLayer,
+    plan: &TilePlan,
+    platform: &PlatformSpec,
+) -> TileComputeCycles {
+    let c = &platform.costs;
+    match &layer.kind {
+        LayerKind::Linear {
+            k,
+            w_type,
+            x_type,
+            strategy,
+            quant,
+            has_relu,
+            ..
+        } => {
+            let cores = cores_used(platform, plan.tile_out_c, plan.tile_out_sp) as f64;
+            let tile_out_elems = (plan.tile_out_c * plan.tile_out_sp) as u64;
+            let tile_macs = tile_out_elems * *k as u64;
+            let per_core_macs = (tile_macs as f64 / cores).ceil();
+
+            // loaded elements this tile (for unpack accounting): the raw
+            // input + weight buffers, at element granularity
+            let in_elems = plan.tile_input_bytes * 8 / (x_type.bits as u64).div_ceil(8).max(1) / 8;
+            let in_elems = in_elems.max(1);
+            let w_elems = (plan.tile_out_c * *k) as u64;
+
+            let mut unpack = 0.0;
+            if x_type.bits < 8 {
+                unpack += in_elems as f64 * c.unpack_cycles_per_elem;
+            }
+            if w_type.bits < 8 {
+                unpack += w_elems as f64 * c.unpack_cycles_per_elem;
+            }
+            // unpacking parallelizes across cores
+            let unpack_cycles = (unpack / cores).ceil() as u64;
+
+            let mac_cycles = match strategy {
+                LinearImpl::Im2col | LinearImpl::Direct => {
+                    (per_core_macs / c.macs_per_cycle_int8).ceil() as u64
+                }
+                LinearImpl::Lut => {
+                    // one lookup + accumulate per MAC; lookups contend on
+                    // the banks the shared LUT spans
+                    let lut_bytes = layer.temp_bits.div_ceil(8);
+                    let banks = platform.banks_spanned(lut_bytes);
+                    let factor = lut_contention_factor(cores as usize, banks);
+                    (per_core_macs * c.lut_access_cycles * factor).ceil() as u64
+                }
+            };
+
+            let im2col_cycles = match strategy {
+                LinearImpl::Im2col | LinearImpl::Lut => {
+                    // k x n_tile elements staged per tile, split over cores
+                    ((*k as u64 * plan.tile_out_sp as u64) as f64 * c.im2col_cycles_per_elem
+                        / cores)
+                        .ceil() as u64
+                }
+                LinearImpl::Direct => 0,
+            };
+
+            // fused postprocessing per output element
+            let mut post = 0.0;
+            if *has_relu {
+                post += c.compare_cycles;
+            }
+            post += match quant {
+                Some(QuantImpl::Dyadic) => c.requant_cycles,
+                Some(QuantImpl::Thresholds) => {
+                    // log2(T) comparisons per element
+                    let l_y: f64 = 8.0; // tree depth bounded by output bits; dominated by compare cost
+                    c.compare_cycles * l_y.min(8.0)
+                }
+                Some(QuantImpl::Lut) => c.lut_access_cycles,
+                None => 0.0,
+            };
+            let post_cycles = ((tile_out_elems as f64 * post) / cores).ceil() as u64;
+
+            TileComputeCycles {
+                mac_cycles,
+                unpack_cycles,
+                im2col_cycles,
+                post_cycles,
+                overhead_cycles: c.tile_overhead_cycles,
+            }
+        }
+        LayerKind::Pool {
+            kernel,
+            x_type,
+            is_avg,
+            has_relu,
+            ..
+        } => {
+            let cores = cores_used(platform, plan.tile_out_c, plan.tile_out_sp) as f64;
+            let tile_out_elems = (plan.tile_out_c * plan.tile_out_sp) as u64;
+            let patch = (kernel.0 * kernel.1) as f64;
+            let mut per_elem = patch * c.compare_cycles;
+            if *is_avg {
+                per_elem += c.requant_cycles; // shift-division
+            }
+            if *has_relu {
+                per_elem += c.compare_cycles;
+            }
+            let mut unpack_cycles = 0;
+            if x_type.bits < 8 {
+                unpack_cycles = ((tile_out_elems as f64 * patch * c.unpack_cycles_per_elem)
+                    / cores)
+                    .ceil() as u64;
+            }
+            TileComputeCycles {
+                mac_cycles: ((tile_out_elems as f64 * per_elem) / cores).ceil() as u64,
+                unpack_cycles,
+                im2col_cycles: 0,
+                post_cycles: 0,
+                overhead_cycles: c.tile_overhead_cycles,
+            }
+        }
+        LayerKind::Elementwise { elems, .. } => TileComputeCycles {
+            // controller-side data movement / trivial elementwise
+            mac_cycles: (*elems as u64).div_ceil(4),
+            unpack_cycles: 0,
+            im2col_cycles: 0,
+            post_cycles: 0,
+            overhead_cycles: c.tile_overhead_cycles / 4,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig, NodeImplSpec};
+    use crate::platform::presets;
+    use crate::platform_aware::fusion::fuse;
+    use crate::platform_aware::tiling::plan_layer;
+
+    fn rc_layer(w_bits: u8, lut: bool, cout: usize) -> (FusedLayer, TilePlan) {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(32, 8, 8, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c", ConvAttrs::standard(cout, 3, 1, 1), ElemType::int(w_bits))
+            .relu("r")
+            .quant("q", ElemType::int(8), false);
+        let mut cfg = ImplConfig::default();
+        if lut {
+            cfg.set_node(
+                "c",
+                NodeImplSpec {
+                    implementation: Some("lut".into()),
+                    ..Default::default()
+                },
+            );
+        }
+        let g = decorate(b.finish(), &cfg).unwrap();
+        let l = fuse(&g).unwrap().into_iter().next().unwrap();
+        let p = plan_layer(&l, &presets::gap8()).unwrap();
+        (l, p)
+    }
+
+    #[test]
+    fn more_cores_fewer_cycles_for_wide_layers() {
+        let (l, p) = rc_layer(8, false, 64);
+        let c2 = tile_compute_cycles(&l, &p, &presets::gap8_with(2, 512)).total();
+        let c8 = tile_compute_cycles(&l, &p, &presets::gap8_with(8, 512)).total();
+        assert!(c8 < c2, "c8={c8} c2={c2}");
+    }
+
+    #[test]
+    fn few_output_channels_limit_parallelism() {
+        // 2 output channels at 1 spatial position can use at most 2 cores
+        assert_eq!(cores_used(&presets::gap8(), 2, 1), 2);
+        assert_eq!(cores_used(&presets::gap8(), 2, 8), 8);
+        assert_eq!(cores_used(&presets::gap8(), 64, 64), 8);
+    }
+
+    #[test]
+    fn int4_unpack_overhead_offsets_simd_gain() {
+        // §VIII-B: 4-bit im2col cycles comparable to 8-bit
+        let (l8, p8) = rc_layer(8, false, 64);
+        let (l4, p4) = rc_layer(4, false, 64);
+        let c8 = tile_compute_cycles(&l8, &p8, &presets::gap8()).total() as f64;
+        let c4 = tile_compute_cycles(&l4, &p4, &presets::gap8()).total() as f64;
+        let ratio = c4 / c8;
+        assert!((0.8..=1.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn lut_replaces_macs_with_lookups() {
+        let (l_mac, p_mac) = rc_layer(4, false, 64);
+        let (l_lut, p_lut) = rc_layer(4, true, 64);
+        let mac = tile_compute_cycles(&l_mac, &p_mac, &presets::gap8());
+        let lut = tile_compute_cycles(&l_lut, &p_lut, &presets::gap8());
+        // on MAC-optimized cores (XpulpNN), LUT lookups are slower than
+        // SIMD MACs — exactly the paper's observation for GAP8
+        assert!(lut.mac_cycles > mac.mac_cycles);
+    }
+
+    #[test]
+    fn smaller_lut_contends_more() {
+        // §VIII-B: 2-bit LUT spans fewer banks -> higher contention factor
+        let p = presets::gap8();
+        let lut2_bytes = crate::quant::lut_mul_size_bits(2, 8, 16) / 8; // 2 kB -> 1 bank
+        let lut4_bytes = crate::quant::lut_mul_size_bits(4, 8, 16) / 8; // 8 kB -> 2 banks
+        let f2 = lut_contention_factor(8, p.banks_spanned(lut2_bytes));
+        let f4 = lut_contention_factor(8, p.banks_spanned(lut4_bytes));
+        assert!(f2 > f4, "f2={f2} f4={f4}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let (l, p) = rc_layer(4, false, 32);
+        let c = tile_compute_cycles(&l, &p, &presets::gap8());
+        assert_eq!(
+            c.total(),
+            c.mac_cycles + c.unpack_cycles + c.im2col_cycles + c.post_cycles + c.overhead_cycles
+        );
+        assert!(c.unpack_cycles > 0); // int4 weights
+        assert!(c.post_cycles > 0); // fused relu+quant
+    }
+
+    #[test]
+    fn int8_has_no_unpack_cost() {
+        let (l, p) = rc_layer(8, false, 32);
+        let c = tile_compute_cycles(&l, &p, &presets::gap8());
+        assert_eq!(c.unpack_cycles, 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The cycle simulator (GVSoC substitute): per-tile compute cycle model,
+//! event-driven tile pipeline with DMA/compute overlap, and Fig.-6-style
+//! reporting.
+
+pub mod compute;
+pub mod engine;
+pub mod report;
+pub mod trace;
+
+pub use compute::{cores_used, lut_contention_factor, tile_compute_cycles, TileComputeCycles};
+pub use engine::{simulate, LayerSimResult, SimResult};
+pub use report::{fig6_rows, render_comparison, Fig6Row};
+pub use trace::{Span, Trace};

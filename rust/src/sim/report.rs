@@ -1,0 +1,125 @@
+//! Reporting: Fig.-6-style per-layer tables (cycles, L1/L2 utilization)
+//! and comparison tables across cases / platforms.
+
+use super::engine::SimResult;
+use std::fmt::Write as _;
+
+/// One Fig.-6 row: per-layer cycles and memory utilization.
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub layer: String,
+    pub cycles: u64,
+    pub l1_kb: f64,
+    pub l2_kb: f64,
+    pub n_tiles: usize,
+    pub double_buffered: bool,
+}
+
+/// Extract the Fig.-6 rows from a simulation result, skipping negligible
+/// elementwise layers (the paper's plots exclude "non-relevant nodes").
+pub fn fig6_rows(sim: &SimResult) -> Vec<Fig6Row> {
+    sim.layers
+        .iter()
+        .filter(|l| l.name.starts_with("RC") || l.name.starts_with("RP") || l.name.starts_with("FC"))
+        .map(|l| Fig6Row {
+            layer: l.name.clone(),
+            cycles: l.cycles,
+            l1_kb: l.l1_used_bytes as f64 / 1024.0,
+            l2_kb: l.l2_used_bytes as f64 / 1024.0,
+            n_tiles: l.n_tiles,
+            double_buffered: l.double_buffered,
+        })
+        .collect()
+}
+
+/// Render a fixed-width comparison table of several simulation results
+/// (one column group per case, as in Fig. 6).
+pub fn render_comparison(names: &[&str], sims: &[&SimResult]) -> String {
+    assert_eq!(names.len(), sims.len());
+    let mut out = String::new();
+    let rows: Vec<Vec<Fig6Row>> = sims.iter().map(|s| fig6_rows(s)).collect();
+    let layer_names: Vec<String> = rows
+        .iter()
+        .max_by_key(|r| r.len())
+        .map(|r| r.iter().map(|x| x.layer.clone()).collect())
+        .unwrap_or_default();
+
+    let _ = write!(out, "{:<8}", "layer");
+    for n in names {
+        let _ = write!(out, " | {:>14} {:>8} {:>8}", format!("{n} cycles"), "L1 kB", "L2 kB");
+    }
+    let _ = writeln!(out);
+    let width = 8 + names.len() * 36;
+    let _ = writeln!(out, "{}", "-".repeat(width));
+
+    for lname in &layer_names {
+        let _ = write!(out, "{lname:<8}");
+        for case_rows in &rows {
+            match case_rows.iter().find(|r| &r.layer == lname) {
+                Some(r) => {
+                    let _ = write!(
+                        out,
+                        " | {:>14} {:>8.1} {:>8.1}",
+                        r.cycles, r.l1_kb, r.l2_kb
+                    );
+                }
+                None => {
+                    let _ = write!(out, " | {:>14} {:>8} {:>8}", "-", "-", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    let _ = writeln!(out, "{}", "-".repeat(width));
+    let _ = write!(out, "{:<8}", "total");
+    for s in sims {
+        let _ = write!(out, " | {:>14} {:>8} {:>8}", s.total_cycles(), "", "");
+    }
+    let _ = writeln!(out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::{build_schedule, fuse};
+    use crate::sim::engine::simulate;
+
+    fn sim() -> SimResult {
+        let mut b = GraphBuilder::new(
+            "n",
+            TensorSpec::chw(3, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(16, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .flatten("fl")
+            .gemm("fc", 10, ElemType::int(8));
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap())
+    }
+
+    #[test]
+    fn rows_skip_elementwise() {
+        let rows = fig6_rows(&sim());
+        assert_eq!(rows.len(), 2); // RC_1, FC_1 (flatten skipped)
+        assert!(rows.iter().all(|r| r.cycles > 0));
+    }
+
+    #[test]
+    fn comparison_renders_all_cases() {
+        let s1 = sim();
+        let s2 = sim();
+        let table = render_comparison(&["case1", "case2"], &[&s1, &s2]);
+        assert!(table.contains("RC_1"));
+        assert!(table.contains("FC_1"));
+        assert!(table.contains("total"));
+        assert!(table.contains("case1 cycles"));
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal benchmark harness (criterion replacement for the offline
+//! build): warms up, runs timed iterations, reports min/median/mean and a
+//! simple throughput line. Used by the `rust/benches/*` targets
+//! (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} iters={:<4} min={:>12?} median={:>12?} mean={:>12?} max={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.max
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs. A value
+/// should be returned from the closure and is passed through `black_box`
+/// to defeat dead-code elimination.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        min: times[0],
+        median: times[iters / 2],
+        mean,
+        max: times[iters - 1],
+    };
+    stats.report();
+    stats
+}
+
+/// Opaque value sink (std::hint::black_box shim).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordered() {
+        let s = bench("noop", 1, 9, || 1 + 1);
+        assert_eq!(s.iters, 9);
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.max);
+    }
+}

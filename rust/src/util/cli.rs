@@ -1,0 +1,138 @@
+//! Tiny `--flag value` argument parser (clap replacement for the offline
+//! build). Supports `--key value`, `--key=value`, boolean `--flag`, one
+//! positional subcommand, and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    args.flags.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{stripped} expects a value"))?;
+                    args.opts.insert(stripped.to_string(), v);
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument `{a}`"));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed getter with parse error reporting.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value `{v}` for --{key}")),
+        }
+    }
+
+    /// Comma-separated list getter.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|_| format!("invalid element `{p}` for --{key}"))
+                })
+                .collect::<Result<Vec<T>, String>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["json", "verbose"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("analyze --model case2 --deadline-ms 5 --json");
+        assert_eq!(a.subcommand.as_deref(), Some("analyze"));
+        assert_eq!(a.get("model"), Some("case2"));
+        assert_eq!(a.get_parsed::<f64>("deadline-ms").unwrap(), Some(5.0));
+        assert!(a.flag("json"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("dse --cores=2,4,8");
+        assert_eq!(
+            a.get_list::<usize>("cores").unwrap(),
+            Some(vec![2, 4, 8])
+        );
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let err =
+            Args::parse(["--model".to_string()].into_iter(), &[]).unwrap_err();
+        assert!(err.contains("--model"));
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(Args::parse(
+            ["a".to_string(), "b".to_string()].into_iter(),
+            &[]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = parse("x --n abc");
+        assert!(a.get_parsed::<u32>("n").is_err());
+    }
+}

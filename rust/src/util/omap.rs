@@ -1,0 +1,101 @@
+//! Insertion-ordered string map (indexmap replacement for the offline
+//! build) — preserves configuration-file ordering in round trips.
+
+use std::ops::Index;
+
+/// A `Vec`-backed map keyed by `String`, preserving insertion order.
+/// Lookups are linear — fine for the dozens of entries in an
+/// implementation configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OrderedMap<V> {
+    entries: Vec<(String, V)>,
+}
+
+impl<V> OrderedMap<V> {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, value: V) {
+        let key = key.into();
+        if let Some(e) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            e.1 = value;
+        } else {
+            self.entries.push((key, value));
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&V> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn contains_key(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.iter().map(|(k, _)| k)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &V)> {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+}
+
+impl<V> Index<&str> for OrderedMap<V> {
+    type Output = V;
+
+    fn index(&self, key: &str) -> &V {
+        self.get(key)
+            .unwrap_or_else(|| panic!("key `{key}` not found"))
+    }
+}
+
+impl<V> FromIterator<(String, V)> for OrderedMap<V> {
+    fn from_iter<T: IntoIterator<Item = (String, V)>>(iter: T) -> Self {
+        let mut m = Self::new();
+        for (k, v) in iter {
+            m.insert(k, v);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_insertion_order() {
+        let mut m = OrderedMap::new();
+        m.insert("z", 1);
+        m.insert("a", 2);
+        m.insert("m", 3);
+        let keys: Vec<&String> = m.keys().collect();
+        assert_eq!(keys, ["z", "a", "m"]);
+    }
+
+    #[test]
+    fn insert_replaces() {
+        let mut m = OrderedMap::new();
+        m.insert("a", 1);
+        m.insert("a", 2);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m["a"], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not found")]
+    fn index_panics_on_missing() {
+        let m: OrderedMap<u32> = OrderedMap::new();
+        let _ = m["missing"];
+    }
+}

@@ -1,0 +1,365 @@
+//! Parser for the YAML subset used by implementation configuration files
+//! (paper Listing 1): block maps with 2-space-multiple indentation, inline
+//! flow maps `{k: v, ...}`, scalars (string / number / bool), `#` comments.
+//! Parses into the in-tree JSON [`Value`] so downstream code has a single
+//! document model. Built in-tree because the offline vendored crate set has
+//! no serde_yaml.
+
+use super::json::Value;
+use std::fmt;
+
+/// YAML-subset parse error with line number (1-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+struct Line<'a> {
+    indent: usize,
+    content: &'a str,
+    number: usize,
+}
+
+fn significant_lines(text: &str) -> Vec<Line<'_>> {
+    text.lines()
+        .enumerate()
+        .filter_map(|(i, raw)| {
+            // strip comments not inside quotes (config files don't quote '#')
+            let without_comment = match raw.find('#') {
+                Some(pos) if !raw[..pos].contains('"') && !raw[..pos].contains('\'') => {
+                    &raw[..pos]
+                }
+                _ => raw,
+            };
+            let trimmed = without_comment.trim_end();
+            if trimmed.trim().is_empty() {
+                return None;
+            }
+            let indent = trimmed.len() - trimmed.trim_start().len();
+            Some(Line {
+                indent,
+                content: trimmed.trim_start(),
+                number: i + 1,
+            })
+        })
+        .collect()
+}
+
+/// Parse a YAML-subset document into a [`Value`] (always an object at the
+/// top level; an empty document yields an empty object).
+pub fn parse(text: &str) -> Result<Value, YamlError> {
+    let lines = significant_lines(text);
+    if lines.is_empty() {
+        return Ok(Value::obj());
+    }
+    let (v, consumed) = parse_map_counted(&lines, 0, lines[0].indent)?;
+    if consumed != lines.len() {
+        return Err(YamlError {
+            line: lines[consumed].number,
+            msg: "unexpected de-indentation / mixed structure".into(),
+        });
+    }
+    Ok(v)
+}
+
+fn parse_map_counted(
+    lines: &[Line],
+    start: usize,
+    indent: usize,
+) -> Result<(Value, usize), YamlError> {
+    let mut pairs = Vec::new();
+    let mut i = start;
+    while i < lines.len() {
+        let line = &lines[i];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError {
+                line: line.number,
+                msg: "unexpected indentation".into(),
+            });
+        }
+        let (key, rest) = split_key(line)?;
+        if rest.is_empty() {
+            if i + 1 < lines.len() && lines[i + 1].indent > indent {
+                let child_indent = lines[i + 1].indent;
+                let (child, consumed) = parse_map_counted(lines, i + 1, child_indent)?;
+                pairs.push((key, child));
+                i = consumed;
+            } else {
+                pairs.push((key, Value::Null));
+                i += 1;
+            }
+        } else {
+            pairs.push((key, parse_scalar_or_flow(rest, line.number)?));
+            i += 1;
+        }
+    }
+    Ok((Value::Obj(pairs), i))
+}
+
+fn split_key<'a>(line: &Line<'a>) -> Result<(String, &'a str), YamlError> {
+    let pos = line.content.find(':').ok_or_else(|| YamlError {
+        line: line.number,
+        msg: "expected `key: value`".into(),
+    })?;
+    let key = line.content[..pos].trim().trim_matches('"').trim_matches('\'');
+    if key.is_empty() {
+        return Err(YamlError {
+            line: line.number,
+            msg: "empty key".into(),
+        });
+    }
+    Ok((key.to_string(), line.content[pos + 1..].trim()))
+}
+
+fn parse_scalar_or_flow(text: &str, line: usize) -> Result<Value, YamlError> {
+    if text.starts_with('{') {
+        return parse_flow_map(text, line);
+    }
+    if text.starts_with('[') {
+        return parse_flow_list(text, line);
+    }
+    Ok(scalar(text))
+}
+
+fn parse_flow_map(text: &str, line: usize) -> Result<Value, YamlError> {
+    let inner = text
+        .strip_prefix('{')
+        .and_then(|t| t.strip_suffix('}'))
+        .ok_or_else(|| YamlError {
+            line,
+            msg: "unterminated flow map".into(),
+        })?;
+    let mut pairs = Vec::new();
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let pos = part.find(':').ok_or_else(|| YamlError {
+            line,
+            msg: format!("expected `key: value` in flow map, got `{part}`"),
+        })?;
+        let key = part[..pos].trim().trim_matches('"').trim_matches('\'');
+        pairs.push((key.to_string(), parse_scalar_or_flow(part[pos + 1..].trim(), line)?));
+    }
+    Ok(Value::Obj(pairs))
+}
+
+fn parse_flow_list(text: &str, line: usize) -> Result<Value, YamlError> {
+    let inner = text
+        .strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .ok_or_else(|| YamlError {
+            line,
+            msg: "unterminated flow list".into(),
+        })?;
+    let mut items = Vec::new();
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if !part.is_empty() {
+            items.push(parse_scalar_or_flow(part, line)?);
+        }
+    }
+    Ok(Value::Arr(items))
+}
+
+/// Split on commas that are not nested inside braces/brackets.
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in text.char_indices() {
+        match c {
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                parts.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&text[start..]);
+    parts
+}
+
+fn scalar(text: &str) -> Value {
+    let t = text.trim();
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Value::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "true" | "True" | "TRUE" => return Value::Bool(true),
+        "false" | "False" | "FALSE" => return Value::Bool(false),
+        "null" | "~" | "" => return Value::Null,
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        if !t.contains(|c: char| c.is_ascii_alphabetic() && c != 'e' && c != 'E') {
+            return Value::Num(n);
+        }
+    }
+    Value::Str(t.to_string())
+}
+
+/// Serialize a Value object to the YAML subset (block style).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_map(v, &mut out, 0);
+    out
+}
+
+fn write_map(v: &Value, out: &mut String, indent: usize) {
+    if let Value::Obj(pairs) = v {
+        for (k, val) in pairs {
+            out.push_str(&" ".repeat(indent));
+            out.push_str(k);
+            out.push(':');
+            match val {
+                Value::Obj(_) => {
+                    out.push('\n');
+                    write_map(val, out, indent + 2);
+                }
+                Value::Arr(items) => {
+                    let rendered: Vec<String> =
+                        items.iter().map(write_scalar_inline).collect();
+                    out.push_str(&format!(" [{}]\n", rendered.join(", ")));
+                }
+                other => {
+                    out.push(' ');
+                    out.push_str(&write_scalar_inline(other));
+                    out.push('\n');
+                }
+            }
+        }
+    }
+}
+
+fn write_scalar_inline(v: &Value) -> String {
+    match v {
+        Value::Null => "null".into(),
+        Value::Bool(b) => b.to_string(),
+        Value::Num(n) => {
+            if n.fract() == 0.0 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }
+        }
+        Value::Str(s) => s.clone(),
+        other => other.to_string_compact(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LISTING1: &str = r#"
+Quant_0:
+  implementation: thresholds
+  bit_width: 8
+
+MatMul_0:
+  filter_wise: True
+  implementation: LUT
+  bit_width: 8
+
+Relu_0:
+  implementation: comparator
+"#;
+
+    #[test]
+    fn parses_listing1() {
+        let v = parse(LISTING1).unwrap();
+        let q = v.get("Quant_0").unwrap();
+        assert_eq!(q.str_field("implementation"), Some("thresholds"));
+        assert_eq!(q.u64_field("bit_width"), Some(8));
+        let m = v.get("MatMul_0").unwrap();
+        assert_eq!(m.bool_field("filter_wise"), Some(true));
+        assert_eq!(m.str_field("implementation"), Some("LUT"));
+    }
+
+    #[test]
+    fn parses_structured_with_flow_maps() {
+        let text = r#"
+defaults:
+  conv: im2col
+  quant: dyadic
+nodes:
+  conv1: { implementation: lut, bit_width: 4 }
+"#;
+        let v = parse(text).unwrap();
+        assert_eq!(
+            v.get("defaults").unwrap().str_field("conv"),
+            Some("im2col")
+        );
+        let c1 = v.get("nodes").unwrap().get("conv1").unwrap();
+        assert_eq!(c1.str_field("implementation"), Some("lut"));
+        assert_eq!(c1.u64_field("bit_width"), Some(4));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let v = parse("# header\na: 1 # trailing\n\nb: two\n").unwrap();
+        assert_eq!(v.u64_field("a"), Some(1));
+        assert_eq!(v.str_field("b"), Some("two"));
+    }
+
+    #[test]
+    fn flow_lists() {
+        let v = parse("cores: [2, 4, 8]\n").unwrap();
+        let arr = v.get("cores").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_u64(), Some(8));
+    }
+
+    #[test]
+    fn empty_doc_is_empty_object() {
+        assert_eq!(parse("").unwrap(), Value::obj());
+        assert_eq!(parse("# only comments\n").unwrap(), Value::obj());
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let v = parse("a:\n  b:\n    c: 3\n").unwrap();
+        assert_eq!(
+            v.get("a").unwrap().get("b").unwrap().u64_field("c"),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn round_trip_through_writer() {
+        let v = parse(LISTING1).unwrap();
+        let text = to_string(&v);
+        let v2 = parse(&text).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn bad_indent_is_an_error() {
+        assert!(parse("a: 1\n   b: 2\n  c: 3\n").is_err());
+    }
+
+    #[test]
+    fn quoted_strings_keep_specials() {
+        let v = parse("s: \"true\"\nn: '42'\n").unwrap();
+        assert_eq!(v.str_field("s"), Some("true"));
+        assert_eq!(v.str_field("n"), Some("42"));
+    }
+}

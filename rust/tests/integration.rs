@@ -1,0 +1,226 @@
+//! Cross-module integration tests: the full analysis pipeline on the
+//! paper's workloads, asserting the *shapes* of the paper's findings
+//! (§VIII-A/B/C) rather than absolute numbers.
+
+use aladin::coordinator::{Analysis, Pipeline};
+use aladin::dse::GridSearch;
+use aladin::graph::qonnx;
+use aladin::impl_aware::{decorate, layer_summaries, ImplConfig};
+use aladin::models;
+use aladin::platform::presets;
+use aladin::util::json::Value;
+use aladin::util::ToJson;
+
+fn analyze(case: models::MobileNetConfig) -> Analysis {
+    let (g, cfg) = case.build();
+    Pipeline::new(presets::gap8(), cfg).analyze(g).unwrap()
+}
+
+fn analyses() -> Vec<Analysis> {
+    models::all_cases().into_iter().map(analyze).collect()
+}
+
+#[test]
+fn pipeline_runs_all_cases_full_width() {
+    for a in analyses() {
+        assert!(a.latency.total_cycles > 0, "{}", a.model);
+        assert!(a.peak_l1 <= presets::gap8().l1_bytes);
+        assert!(a.peak_l2 <= presets::gap8().l2_bytes);
+        // 21 RC layers + RP + FC in the fused schedule
+        let rc = a.sim.layers.iter().filter(|l| l.name.starts_with("RC")).count();
+        assert_eq!(rc, 21, "{}", a.model);
+        assert_eq!(
+            a.sim.layers.iter().filter(|l| l.name.starts_with("FC")).count(),
+            1
+        );
+    }
+}
+
+#[test]
+fn fig5a_depthwise_reads_more_macs_than_pointwise() {
+    // §VIII-A: with the Eq. 5 convention, Block10's depthwise conv is more
+    // MAC-intensive than its standard (pointwise) conv …
+    let a = analyze(models::case1());
+    let get = |n: &str| a.impl_summary.iter().find(|r| r.name == n).unwrap().clone();
+    let dw = get("Conv_dw10");
+    let pw = get("Conv_pw10");
+    assert!(dw.macs > pw.macs, "dw {} <= pw {}", dw.macs, pw.macs);
+    // … while having a substantially lower memory footprint
+    assert!(dw.param_mem_bits * 4 < pw.param_mem_bits);
+    // and physically executing fewer MACs
+    assert!(dw.macs_physical < pw.macs_physical);
+}
+
+#[test]
+fn fig5b_lut_tail_inflates_case_parameter_memory() {
+    let [a1, a2, _a3]: [Analysis; 3] = analyses().try_into().ok().unwrap();
+    let lut_rows = |a: &Analysis| {
+        a.impl_summary
+            .iter()
+            .filter(|r| r.impl_label == "lut")
+            .count()
+    };
+    assert_eq!(lut_rows(&a1), 0);
+    assert!(lut_rows(&a2) >= 6); // 3 blocks x (dw + pw)
+    // per-layer: a LUT'd layer in case2 carries more parameter memory than
+    // the same-precision im2col layer would (the table is extra)
+    let dw9_lut = a2.impl_summary.iter().find(|r| r.name == "Conv_dw9").unwrap();
+    assert_eq!(dw9_lut.impl_label, "lut");
+    assert_eq!(dw9_lut.macs, 0); // MACs = 0 under LUT (paper §VI-A)
+    assert!(dw9_lut.param_mem_bits > dw9_lut.macs_physical / 100); // non-trivial table
+}
+
+#[test]
+fn fig5c_bops_scale_with_precision() {
+    // Eq. 6: BOPs fall when Lw drops 8 -> 4 at equal structure
+    let [a1, a2, _]: [Analysis; 3] = analyses().try_into().ok().unwrap();
+    let bops = |a: &Analysis, n: &str| a.impl_summary.iter().find(|r| r.name == n).unwrap().bops;
+    // Block 5 is int8-im2col in case1, int4-im2col in case2
+    assert!(bops(&a2, "Conv_pw5") < bops(&a1, "Conv_pw5"));
+}
+
+#[test]
+fn fig6a_int4_im2col_cycles_comparable_to_int8() {
+    // §VIII-B: bit-unpacking makes 4-bit convolutions cost about the same
+    // cycles as 8-bit ones in the early blocks
+    let [a1, a2, _]: [Analysis; 3] = analyses().try_into().ok().unwrap();
+    let cyc = |a: &Analysis, l: &str| {
+        a.sim.layers.iter().find(|x| x.name == l).unwrap().cycles as f64
+    };
+    for layer in ["RC_2", "RC_3", "RC_4", "RC_5"] {
+        let ratio = cyc(&a2, layer) / cyc(&a1, layer);
+        assert!(
+            (0.5..=1.6).contains(&ratio),
+            "{layer}: int4/int8 cycle ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn fig6b_int4_reduces_memory_utilization() {
+    let [a1, a2, _]: [Analysis; 3] = analyses().try_into().ok().unwrap();
+    let l2 = |a: &Analysis, l: &str| {
+        a.sim.layers.iter().find(|x| x.name == l).unwrap().l2_used_bytes
+    };
+    // deep pointwise layers: int4 weights halve the resident working set
+    assert!(l2(&a2, "RC_19") < l2(&a1, "RC_19"));
+}
+
+#[test]
+fn fig6a_2bit_lut_no_speedup_over_4bit() {
+    // §VIII-B: the smaller 2-bit LUT contends more on the shared banks, so
+    // the expected speed-up does not materialize
+    let [_, a2, a3]: [Analysis; 3] = analyses().try_into().ok().unwrap();
+    let cyc = |a: &Analysis, l: &str| {
+        a.sim.layers.iter().find(|x| x.name == l).unwrap().cycles as f64
+    };
+    // Block 10 is 4-bit LUT in case2, 2-bit LUT in case3 (RC_21 = dw10)
+    let ratio = cyc(&a3, "RC_21") / cyc(&a2, "RC_21");
+    assert!(ratio > 0.85, "2-bit LUT unexpectedly fast: ratio {ratio}");
+}
+
+#[test]
+fn lut_cases_slower_on_mac_optimized_cluster() {
+    // §VIII-B: GAP8's cores are MAC-optimized, so LUT-based cases cost more
+    // cycles than the all-im2col baseline
+    let [a1, a2, a3]: [Analysis; 3] = analyses().try_into().ok().unwrap();
+    assert!(a2.latency.total_cycles > a1.latency.total_cycles);
+    assert!(a3.latency.total_cycles > a1.latency.total_cycles);
+}
+
+#[test]
+fn fig7_grid_monotone_full_model() {
+    let (g, cfg) = models::case2().build();
+    let points = GridSearch::fig7(presets::gap8()).run_canonical(g, &cfg).unwrap();
+    assert_eq!(points.len(), 9);
+    for &l2 in &[256u64, 320, 512] {
+        let mut row: Vec<_> = points.iter().filter(|p| p.l2_kb == l2).collect();
+        row.sort_by_key(|p| p.cores);
+        assert!(row[1].total_cycles <= row[0].total_cycles);
+        assert!(row[2].total_cycles <= row[1].total_cycles);
+    }
+    // core-count saturation for the memory-bound deep layers: the 4->8
+    // gain is smaller than the 2->4 gain (§VIII-C)
+    let t = |c: usize| {
+        points.iter().find(|p| p.cores == c && p.l2_kb == 256).unwrap().total_cycles as f64
+    };
+    assert!(t(2) / t(4) >= t(4) / t(8) * 0.99);
+}
+
+#[test]
+fn qonnx_export_reanalyzes_identically() {
+    let (g, cfg) = models::case3().build();
+    let pipe = Pipeline::new(presets::gap8(), cfg);
+    let direct = pipe.analyze(g.clone()).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("aladin-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("case3.qonnx.json");
+    qonnx::export(&g).to_file(&path).unwrap();
+    let via_file = pipe.analyze_file(&path).unwrap();
+    assert_eq!(direct.latency.total_cycles, via_file.latency.total_cycles);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn analysis_json_serializes_and_parses() {
+    let mut case = models::case1();
+    case.width_mult = 0.25;
+    let a = analyze(case);
+    let text = a.to_json().to_string_pretty();
+    let v = Value::parse(&text).unwrap();
+    assert_eq!(v.str_field("model"), Some("case1"));
+    assert!(v.get("sim").unwrap().u64_field("total_cycles").unwrap() > 0);
+    assert!(!v.get("impl_summary").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn stm32n6_preset_analyzes() {
+    let (g, cfg) = models::case1().build();
+    let a = Pipeline::new(presets::stm32n6(), cfg).analyze(g).unwrap();
+    assert!(a.latency.total_cycles > 0);
+    assert!(a.peak_l1 <= presets::stm32n6().l1_bytes);
+}
+
+#[test]
+fn listing1_yaml_config_drives_pipeline() {
+    let yaml = r#"
+Conv_dw10:
+  implementation: LUT
+Quant_pw10:
+  implementation: thresholds
+  filter_wise: True
+"#;
+    let cfg = ImplConfig::from_yaml(yaml).unwrap();
+    let (g, _) = models::case1().build();
+    let d = decorate(g, &cfg).unwrap();
+    let rows = layer_summaries(&d);
+    assert_eq!(
+        rows.iter().find(|r| r.name == "Conv_dw10").unwrap().impl_label,
+        "lut"
+    );
+    assert_eq!(
+        rows.iter().find(|r| r.name == "Quant_pw10").unwrap().impl_label,
+        "threshold-tree"
+    );
+}
+
+#[test]
+fn tighter_l1_still_schedules_or_fails_cleanly() {
+    // the §VIII-C note: "significantly reducing [L1] capacity results in
+    // schedulability failures, as expected"
+    let (g, cfg) = models::case1().build();
+    let mut small = presets::gap8();
+    small.l1_bytes = 16 * 1024;
+    let r = Pipeline::new(small, cfg.clone()).analyze(g.clone());
+    // 16 kB still schedules (tiled harder) …
+    let a = r.unwrap();
+    assert!(a.peak_l1 <= 16 * 1024);
+
+    let mut tiny = presets::gap8();
+    tiny.l1_bytes = 1024; // … 1 kB cannot hold the LUT-free working set
+    tiny.l1_banks = 4;
+    tiny.l2_bytes = 512 * 1024;
+    let r = Pipeline::new(tiny, cfg).analyze(g);
+    assert!(matches!(r, Err(aladin::AladinError::Infeasible { .. })));
+}

@@ -1,0 +1,321 @@
+//! Property-based tests over randomized inputs (in-tree harness,
+//! `aladin::util::check_property`): coordinator invariants — tiling
+//! feasibility/coverage, decoration equations, quantizer equivalences,
+//! simulator monotonicity, and parser round-trips.
+
+use aladin::graph::builder::GraphBuilder;
+use aladin::graph::ir::ConvAttrs;
+use aladin::graph::tensor::{ElemType, TensorSpec};
+use aladin::impl_aware::{decorate, ImplConfig, NodeImplSpec};
+use aladin::platform::presets;
+use aladin::platform_aware::{build_schedule, fuse, plan_layer};
+use aladin::quant::{DyadicScale, MulLut, ThresholdTree, UniformQuantizer};
+use aladin::sim::simulate;
+use aladin::util::json::Value;
+use aladin::util::prng::{check_property, Prng};
+use aladin::util::yamlish;
+
+/// Random small conv net decorated with a random implementation config.
+fn random_decorated(rng: &mut Prng) -> aladin::graph::ir::Graph {
+    let cin = rng.range(1, 16);
+    let hw = [4, 8, 16, 32][rng.range(0, 3)];
+    let cout = rng.range(1, 64);
+    let bits = [2u8, 4, 8][rng.range(0, 2)];
+    let k = [1usize, 3][rng.range(0, 1)];
+    let stride = rng.range(1, 2).min(hw / 2).max(1);
+    let depthwise = rng.chance(0.3) && cin > 1;
+
+    let mut b = GraphBuilder::new(
+        "rand",
+        TensorSpec::chw(cin, hw, hw, ElemType::int(8)),
+        ElemType::int(if bits < 8 { 16 } else { 32 }),
+    );
+    let attrs = if depthwise {
+        ConvAttrs::depthwise(cin, 3, stride, 1)
+    } else {
+        ConvAttrs::standard(cout, k, stride, if k == 3 { 1 } else { 0 })
+    };
+    b.conv("c", attrs, ElemType::int(bits))
+        .relu("r")
+        .quant("q", ElemType::int(bits), rng.chance(0.5));
+    let g = b.finish();
+
+    let mut cfg = ImplConfig::default();
+    let impls = ["im2col", "lut", "direct"];
+    cfg.set_node(
+        "c",
+        NodeImplSpec {
+            implementation: Some(impls[rng.range(0, 2)].into()),
+            ..Default::default()
+        },
+    );
+    let qimpls = ["dyadic", "thresholds"];
+    cfg.set_node(
+        "q",
+        NodeImplSpec {
+            implementation: Some(qimpls[rng.range(0, 1)].into()),
+            ..Default::default()
+        },
+    );
+    decorate(g, &cfg).unwrap()
+}
+
+#[test]
+fn prop_tiling_always_fits_l1_and_covers_output() {
+    check_property("tiling_fits_l1", 200, |rng| {
+        let g = random_decorated(rng);
+        let layers = fuse(&g).unwrap();
+        let mut platform = presets::gap8();
+        // randomized L1 capacity (power-of-two banks)
+        platform.l1_banks = 16;
+        platform.l1_bytes = [16u64, 32, 64, 128][rng.range(0, 3)] * 1024;
+        for layer in &layers {
+            match plan_layer(layer, &platform) {
+                Ok(plan) => {
+                    assert!(
+                        plan.l1_used_bytes <= platform.l1_bytes,
+                        "{}: used {} > L1 {}",
+                        layer.name,
+                        plan.l1_used_bytes,
+                        platform.l1_bytes
+                    );
+                    // tiles cover the whole output
+                    let out_total = plan.tile_output_bytes * plan.n_tiles() as u64;
+                    assert!(out_total * 8 >= layer.output_bits);
+                    assert!(plan.n_tiles() >= 1);
+                }
+                Err(aladin::AladinError::Infeasible { .. }) => {} // legal outcome
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decoration_eq6_bops_relation() {
+    check_property("eq6_bops", 200, |rng| {
+        let g = random_decorated(rng);
+        for n in &g.nodes {
+            if let (Some(ann), true) = (&n.ann, n.op.is_linear()) {
+                if ann.macs > 0 {
+                    // BOPs divisible by MACs with quotient 1 + Lacc + Lw + Lx
+                    assert_eq!(ann.bops % ann.macs, 0, "{}", n.name);
+                    let q = ann.bops / ann.macs;
+                    assert!(q > 1 && q <= 1 + 32 + 8 + 8, "{}: q={q}", n.name);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_memory_monotone_in_weight_bits() {
+    check_property("mem_monotone_bits", 100, |rng| {
+        let cin = rng.range(1, 8);
+        let cout = rng.range(1, 32);
+        let hw = 8;
+        let build = |bits: u8| {
+            let mut b = GraphBuilder::new(
+                "m",
+                TensorSpec::chw(cin, hw, hw, ElemType::int(8)),
+                ElemType::int(32),
+            );
+            b.conv("c", ConvAttrs::standard(cout, 3, 1, 1), ElemType::int(bits));
+            decorate(b.finish(), &ImplConfig::default()).unwrap()
+        };
+        let m2 = build(2).total_param_bits();
+        let m4 = build(4).total_param_bits();
+        let m8 = build(8).total_param_bits();
+        assert!(m2 <= m4 && m4 <= m8, "{m2} {m4} {m8}");
+    });
+}
+
+#[test]
+fn prop_dyadic_scale_accuracy() {
+    check_property("dyadic_accuracy", 500, |rng| {
+        let scale = rng.uniform(1e-6, 8.0);
+        let d = DyadicScale::fit(scale, 31);
+        assert!(
+            d.rel_error(scale) < 1e-5,
+            "scale={scale} err={}",
+            d.rel_error(scale)
+        );
+        // apply() tracks the float rescale within 1 ulp
+        let acc = rng.range_i64(-1_000_000, 1_000_000);
+        let want = (acc as f64 * scale).round() as i64;
+        assert!((d.apply(acc) - want).abs() <= 1, "acc={acc} scale={scale}");
+    });
+}
+
+#[test]
+fn prop_threshold_tree_equals_uniform_quantizer() {
+    check_property("tree_vs_uniform", 300, |rng| {
+        let bits = [2u8, 3, 4, 8][rng.range(0, 3)];
+        let scale = rng.uniform(0.5, 2000.0);
+        let out = ElemType::int(bits);
+        let tree = ThresholdTree::from_uniform_scale(scale, ElemType::int(32), out);
+        for _ in 0..32 {
+            let acc = rng.range_i64(-5_000_000, 5_000_000);
+            let uniform = out.clamp((acc as f64 / scale).round() as i64);
+            assert_eq!(tree.apply(acc), uniform, "acc={acc} scale={scale} bits={bits}");
+        }
+    });
+}
+
+#[test]
+fn prop_mul_lut_exact_for_all_bit_combos() {
+    for w_bits in [2u8, 3, 4] {
+        for x_bits in [2u8, 4, 8] {
+            let lut = MulLut::build(
+                ElemType::int(w_bits),
+                ElemType::int(x_bits),
+                ElemType::int(32),
+            );
+            let wt = ElemType::int(w_bits);
+            let xt = ElemType::int(x_bits);
+            for w in wt.min_value()..=wt.max_value() {
+                for x in xt.min_value()..=xt.max_value() {
+                    assert_eq!(lut.mul(w, x), w * x);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_dequantize_error_bounded() {
+    check_property("quant_error_bound", 300, |rng| {
+        let bits = [2u8, 4, 8][rng.range(0, 2)];
+        let beta = rng.uniform(0.1, 100.0);
+        let q = UniformQuantizer::symmetric(beta, ElemType::int(bits));
+        let r = rng.uniform(-beta, beta);
+        assert!(q.error(r) <= q.scale / 2.0 + 1e-9, "r={r} beta={beta} bits={bits}");
+    });
+}
+
+#[test]
+fn prop_sim_cycles_monotone_in_cores() {
+    check_property("sim_monotone_cores", 60, |rng| {
+        let g = random_decorated(rng);
+        let layers = fuse(&g).unwrap();
+        let mut prev = u64::MAX;
+        for cores in [1usize, 2, 4, 8] {
+            let p = presets::gap8_with(cores, 512);
+            // an oversized LUT can legitimately be L1-infeasible
+            let s = match build_schedule(layers.clone(), &p) {
+                Ok(s) => s,
+                Err(aladin::AladinError::Infeasible { .. }) => return,
+                Err(e) => panic!("unexpected error: {e}"),
+            };
+            let cycles = simulate(&s).total_cycles();
+            assert!(
+                cycles <= prev,
+                "cores {cores}: {cycles} > prev {prev}"
+            );
+            prev = cycles;
+        }
+    });
+}
+
+#[test]
+fn prop_sim_conservation() {
+    // per-layer: total >= compute, stalls = total - compute
+    check_property("sim_conservation", 100, |rng| {
+        let g = random_decorated(rng);
+        let s = match build_schedule(fuse(&g).unwrap(), &presets::gap8()) {
+            Ok(s) => s,
+            Err(aladin::AladinError::Infeasible { .. }) => return,
+            Err(e) => panic!("unexpected error: {e}"),
+        };
+        let r = simulate(&s);
+        for l in &r.layers {
+            assert!(l.cycles >= l.compute_cycles, "{}", l.name);
+            assert_eq!(l.stall_cycles, l.cycles - l.compute_cycles);
+        }
+        let u = r.compute_utilization();
+        assert!(u > 0.0 && u <= 1.0);
+    });
+}
+
+#[test]
+fn prop_json_round_trip_random_documents() {
+    fn random_value(rng: &mut Prng, depth: usize) -> Value {
+        match if depth == 0 { rng.range(0, 3) } else { rng.range(0, 5) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Num((rng.range_i64(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => Value::Str(
+                (0..rng.range(0, 12))
+                    .map(|_| *rng.choice(&['a', 'b', '"', '\\', 'é', '\n', ' ', 'z']))
+                    .collect(),
+            ),
+            4 => Value::Arr((0..rng.range(0, 4)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Value::obj();
+                for i in 0..rng.range(0, 4) {
+                    o.set(format!("k{i}"), random_value(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check_property("json_round_trip", 300, |rng| {
+        let v = random_value(rng, 3);
+        let compact = Value::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(compact, v);
+        let pretty = Value::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn prop_implconfig_yaml_round_trip() {
+    check_property("implconfig_round_trip", 100, |rng| {
+        let mut cfg = ImplConfig::default();
+        for i in 0..rng.range(0, 8) {
+            cfg.set_node(
+                format!("node_{i}"),
+                NodeImplSpec {
+                    implementation: if rng.chance(0.8) {
+                        Some(["im2col", "lut", "dyadic", "thresholds", "comparator"]
+                            [rng.range(0, 4)]
+                        .to_string())
+                    } else {
+                        None
+                    },
+                    bit_width: if rng.chance(0.5) {
+                        Some([2u8, 4, 8][rng.range(0, 2)])
+                    } else {
+                        None
+                    },
+                    filter_wise: if rng.chance(0.5) { Some(rng.chance(0.5)) } else { None },
+                    num_thresholds: None,
+                    bit_shifts: None,
+                },
+            );
+        }
+        let text = cfg.to_yaml().unwrap();
+        let cfg2 = ImplConfig::from_yaml(&text).unwrap();
+        assert_eq!(cfg, cfg2, "yaml:\n{text}");
+    });
+}
+
+#[test]
+fn prop_yamlish_parses_generated_listing1_files() {
+    check_property("yamlish_listing1", 100, |rng| {
+        let mut text = String::new();
+        let n = rng.range(1, 6);
+        for i in 0..n {
+            text.push_str(&format!("Node_{i}:\n"));
+            text.push_str(&format!("  implementation: {}\n", rng.choice(&["lut", "im2col"])));
+            if rng.chance(0.5) {
+                text.push_str(&format!("  bit_width: {}\n", rng.choice(&[2, 4, 8])));
+            }
+            if rng.chance(0.3) {
+                text.push('\n');
+            }
+        }
+        let v = yamlish::parse(&text).unwrap();
+        assert_eq!(v.as_obj().unwrap().len(), n);
+    });
+}
