@@ -1,0 +1,99 @@
+//! Bench: the unified joint quantization × hardware DSE engine.
+//!
+//! Measures (a) the Fig. 7 hardware grid evaluated the old way — one full
+//! parse→decorate→fuse→tile→simulate pipeline per candidate, sequentially —
+//! against the cache-backed parallel engine, in candidates/sec; and (b) the
+//! joint quant×hardware product space (`aladin dse --joint`) where the
+//! cache collapses the per-quant-config decoration across every hardware
+//! point. Also prints the stage-recomputation accounting that the
+//! `engine_cache` integration test asserts.
+
+use aladin::coordinator::Pipeline;
+use aladin::dse::{explore_joint, EvalEngine, GridSearch, JointSpace};
+use aladin::impl_aware::decorate;
+use aladin::models;
+use aladin::platform::presets;
+use aladin::util::bench::bench;
+
+fn main() {
+    println!("=== joint DSE: sequential pipeline vs cache-backed engine (Case 2) ===");
+
+    let case = models::case2();
+    let (g, cfg) = case.build();
+    let grid_points: Vec<(usize, u64)> = [2usize, 4, 8]
+        .iter()
+        .flat_map(|&c| [256u64, 320, 512].iter().map(move |&l2| (c, l2)))
+        .collect();
+
+    // (a) sequential baseline: the pre-engine behaviour — every candidate
+    // re-runs the whole pipeline from the canonical graph
+    let seq = bench("joint_dse/fig7_9pts/sequential_pipeline", 1, 5, || {
+        let mut total = 0u64;
+        for &(c, l2) in &grid_points {
+            let a = Pipeline::new(presets::gap8_with(c, l2), cfg.clone())
+                .analyze(g.clone())
+                .unwrap();
+            total += a.latency.total_cycles;
+        }
+        total
+    });
+
+    // (b) the engine: stage-1 shared, stage-2 parallel across the grid
+    let eng = bench("joint_dse/fig7_9pts/eval_engine", 1, 5, || {
+        GridSearch::fig7(presets::gap8())
+            .run_canonical(g.clone(), &cfg)
+            .unwrap()
+            .len()
+    });
+
+    let n = grid_points.len() as f64;
+    let seq_rate = n / seq.median.as_secs_f64();
+    let eng_rate = n / eng.median.as_secs_f64();
+    println!(
+        "\nFig. 7 grid throughput: sequential {seq_rate:.2} candidates/sec, \
+         engine {eng_rate:.2} candidates/sec ({:.2}x)",
+        eng_rate / seq_rate
+    );
+
+    // recomputation accounting on a persistent engine
+    let decorated = decorate(g.clone(), &cfg).unwrap();
+    let engine = EvalEngine::for_decorated(decorated, presets::gap8());
+    let pts = GridSearch::fig7(presets::gap8()).run_on(&engine).unwrap();
+    let s = engine.stats();
+    println!(
+        "Fig. 7 grid recomputation: {} pipeline-stage computations for {} \
+         candidates x 2 stages ({} uncached) — stage-1 {}x, stage-2 {}x",
+        s.recomputations(),
+        pts.len(),
+        s.naive_recomputations(),
+        s.impl_computed,
+        s.sim_computed
+    );
+    assert!(
+        s.recomputations() < pts.len() * 2,
+        "cache must beat point-count x stage-count"
+    );
+
+    // (c) the joint quant x hardware product space: 2 quant configs x 9
+    // hardware points; each quant config is decorated exactly once
+    let space = JointSpace::default_grid();
+    bench("joint_dse/joint_18cand/case2", 1, 3, || {
+        explore_joint(models::case2(), presets::gap8(), &space, None)
+            .unwrap()
+            .records
+            .len()
+    });
+    let joint = explore_joint(models::case2(), presets::gap8(), &space, None).unwrap();
+    let js = joint.stats;
+    println!(
+        "joint space: {} candidates, Pareto front {} — {} stage computations \
+         ({} uncached): stage-1 {}x for {} quant configs, stage-2 {}x",
+        joint.records.len(),
+        joint.front.len(),
+        js.recomputations(),
+        js.naive_recomputations(),
+        js.impl_computed,
+        space.quant_axes(10).len(),
+        js.sim_computed
+    );
+}

@@ -1,8 +1,12 @@
 //! The ALADIN workflow coordinator (paper Fig. 3): canonical model →
 //! implementation-aware model → platform-aware model → simulation →
-//! analysis, as one composable pipeline. This is the public entry point a
-//! downstream user drives (directly or through the CLI).
+//! analysis, as one composable pipeline of resumable stages. This is the
+//! public entry point a downstream user drives (directly or through the
+//! CLI); the DSE engine drives the individual stages through its
+//! evaluation cache.
 
 pub mod pipeline;
 
-pub use pipeline::{Analysis, Pipeline};
+pub use pipeline::{
+    stage_impl, stage_impl_decorated, stage_platform, Analysis, ImplModel, Pipeline, PlatformEval,
+};

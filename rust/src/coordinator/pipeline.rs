@@ -1,14 +1,22 @@
-//! The end-to-end analysis pipeline (paper Fig. 3).
+//! The end-to-end analysis pipeline (paper Fig. 3), split into resumable
+//! stages so the DSE evaluation cache ([`crate::dse::engine`]) can snapshot
+//! intermediate models and restart candidates mid-pipeline.
 //!
 //! ```text
-//! QONNX model + impl config ──▶ implementation-aware model (§VI)
-//!                                    │
-//!              platform spec ──▶ platform-aware model (§VII)
+//! QONNX model + impl config ──▶ implementation-aware model (§VI)   [stage_impl]
+//!                                    │            (= ImplModel snapshot:
+//!                                    │               decorated graph + fused layers)
+//!              platform spec ──▶ platform-aware model (§VII)        [stage_platform]
 //!                                    │
 //!                              cycle simulation (GVSoC substitute)
-//!                                    │
+//!                                    │            (= PlatformEval snapshot)
 //!                    latency bound + deadline screening (§V step 4)
 //! ```
+//!
+//! `stage_impl` is platform-independent: candidates that share a model +
+//! implementation configuration reuse its output across every hardware
+//! point. `stage_platform` is the platform-dependent tail (schedule +
+//! simulate + bound). [`Pipeline::analyze`] composes the two.
 
 use crate::analysis::{check_deadline, Feasibility, LatencyBound};
 use crate::error::Result;
@@ -16,9 +24,105 @@ use crate::graph::ir::Graph;
 use crate::graph::{qonnx, validate};
 use crate::impl_aware::{decorate, layer_summaries, ImplConfig, LayerSummary};
 use crate::platform::PlatformSpec;
-use crate::platform_aware::{build_schedule, fuse, NetworkSchedule};
+use crate::platform_aware::{build_schedule, fuse, FusedLayer, NetworkSchedule};
 use crate::sim::{simulate, SimResult};
 use std::path::Path;
+use std::sync::Arc;
+
+/// Stage-1 snapshot: the platform-independent implementation-aware model
+/// (paper §VI) plus its fused schedulable layers. Everything downstream of
+/// this point depends only on the platform spec.
+#[derive(Debug, Clone)]
+pub struct ImplModel {
+    /// Model name.
+    pub model: String,
+    /// The decorated graph (MACs/BOPs/memory annotations, Conv→MatMul
+    /// rewrites applied). Shared, not cloned: the DSE cache holds one
+    /// snapshot per quantization config.
+    pub decorated: Arc<Graph>,
+    /// Fig.-5 per-layer rows extracted from the decorated graph.
+    pub impl_summary: Vec<LayerSummary>,
+    /// Fused schedulable layers (input to the platform-aware stage).
+    pub fused: Vec<FusedLayer>,
+}
+
+/// Stage-2/3 snapshot: the platform-dependent evaluation of one
+/// [`ImplModel`] on one platform spec — schedule, simulation, and latency
+/// bound.
+#[derive(Debug, Clone)]
+pub struct PlatformEval {
+    /// Platform name.
+    pub platform: String,
+    /// Fig.-6 data: simulated per-layer cycles and L1/L2 utilization.
+    pub sim: SimResult,
+    /// End-to-end latency bound.
+    pub latency: LatencyBound,
+    /// Peak memory utilization (bytes).
+    pub peak_l1: u64,
+    pub peak_l2: u64,
+    /// Total L3 DMA traffic (bytes).
+    pub l3_traffic: u64,
+    /// (layer, tiles_c, tiles_h, double_buffered) per layer — the Fig. 7
+    /// bottom-row "tiling configurations".
+    pub tilings: Vec<(String, usize, usize, bool)>,
+}
+
+/// Stage 1 (paper §V step 1, §VI): validate a canonical graph, decorate it
+/// under `cfg`, and fuse it into schedulable layers.
+pub fn stage_impl(canonical: Graph, cfg: &ImplConfig) -> Result<ImplModel> {
+    validate::validate(&canonical)?;
+    let model = canonical.name.clone();
+    let decorated = Arc::new(decorate(canonical, cfg)?);
+    let impl_summary = layer_summaries(&decorated);
+    let fused = fuse(&decorated)?;
+    Ok(ImplModel {
+        model,
+        decorated,
+        impl_summary,
+        fused,
+    })
+}
+
+/// Stage 1 for an *already decorated* graph (e.g. handed straight to the
+/// hardware DSE): skips validation + decoration, extracts summaries and
+/// fuses.
+pub fn stage_impl_decorated(decorated: Arc<Graph>) -> Result<ImplModel> {
+    Ok(ImplModel {
+        model: decorated.name.clone(),
+        impl_summary: layer_summaries(&decorated),
+        fused: fuse(&decorated)?,
+        decorated,
+    })
+}
+
+/// Stages 2+3 (paper §VII + §VIII-B): schedule fused layers on a platform
+/// and simulate the result.
+pub fn stage_platform(fused: &[FusedLayer], platform: &PlatformSpec) -> Result<PlatformEval> {
+    let schedule = build_schedule(fused.to_vec(), platform)?;
+    let sim = simulate(&schedule);
+    let latency = LatencyBound::from_sim(&sim, platform);
+    let tilings = schedule
+        .layers
+        .iter()
+        .map(|l| {
+            (
+                l.layer.name.clone(),
+                l.tile.tiles_c,
+                l.tile.tiles_h,
+                l.tile.double_buffered,
+            )
+        })
+        .collect();
+    Ok(PlatformEval {
+        platform: platform.name.clone(),
+        peak_l1: schedule.peak_l1(),
+        peak_l2: schedule.peak_l2(),
+        l3_traffic: schedule.l3_traffic(),
+        sim,
+        latency,
+        tilings,
+    })
+}
 
 /// Everything ALADIN produces for one (model, impl config, platform)
 /// candidate.
@@ -43,6 +147,20 @@ pub struct Analysis {
 }
 
 impl Analysis {
+    /// Assemble from the two stage snapshots.
+    pub fn from_stages(impl_model: ImplModel, eval: PlatformEval) -> Self {
+        Analysis {
+            model: impl_model.model,
+            platform: eval.platform,
+            impl_summary: impl_model.impl_summary,
+            sim: eval.sim,
+            latency: eval.latency,
+            peak_l1: eval.peak_l1,
+            peak_l2: eval.peak_l2,
+            l3_traffic: eval.l3_traffic,
+        }
+    }
+
     /// Screen against a deadline in seconds.
     pub fn feasibility(&self, deadline_s: f64) -> Feasibility {
         check_deadline(&self.latency, deadline_s)
@@ -62,30 +180,9 @@ impl Pipeline {
 
     /// Run the full workflow on a canonical graph.
     pub fn analyze(&self, canonical: Graph) -> Result<Analysis> {
-        validate::validate(&canonical)?;
-        let model = canonical.name.clone();
-
-        // step 1: implementation-aware model (§VI)
-        let decorated = decorate(canonical, &self.impl_config)?;
-        let impl_summary = layer_summaries(&decorated);
-
-        // step 2: platform-aware model (§VII)
-        let schedule = self.schedule(&decorated)?;
-
-        // step 3: cycle simulation (GVSoC substitute)
-        let sim = simulate(&schedule);
-        let latency = LatencyBound::from_sim(&sim, &self.platform);
-
-        Ok(Analysis {
-            model,
-            platform: self.platform.name.clone(),
-            impl_summary,
-            peak_l1: schedule.peak_l1(),
-            peak_l2: schedule.peak_l2(),
-            l3_traffic: schedule.l3_traffic(),
-            sim,
-            latency,
-        })
+        let impl_model = stage_impl(canonical, &self.impl_config)?;
+        let eval = stage_platform(&impl_model.fused, &self.platform)?;
+        Ok(Analysis::from_stages(impl_model, eval))
     }
 
     /// The platform-aware model alone (for inspection / DSE reuse).
@@ -166,5 +263,35 @@ mod tests {
         let pipe = Pipeline::new(presets::gap8(), cfg);
         let a = pipe.analyze_file(&path).unwrap();
         assert!(a.latency.total_cycles > 0);
+    }
+
+    #[test]
+    fn staged_run_matches_monolithic_analyze() {
+        let mut case = models::case2();
+        case.width_mult = 0.25;
+        let (g, cfg) = case.build();
+        let monolithic = Pipeline::new(presets::gap8(), cfg.clone()).analyze(g.clone()).unwrap();
+
+        // drive the stages by hand, snapshotting between them
+        let impl_model = stage_impl(g, &cfg).unwrap();
+        assert!(!impl_model.fused.is_empty());
+        assert!(!impl_model.impl_summary.is_empty());
+        let eval = stage_platform(&impl_model.fused, &presets::gap8()).unwrap();
+        assert_eq!(eval.latency.total_cycles, monolithic.latency.total_cycles);
+        assert_eq!(eval.peak_l1, monolithic.peak_l1);
+        assert_eq!(eval.peak_l2, monolithic.peak_l2);
+        assert_eq!(eval.l3_traffic, monolithic.l3_traffic);
+        assert_eq!(eval.tilings.len(), eval.sim.layers.len());
+    }
+
+    #[test]
+    fn stage_impl_decorated_skips_redecoration() {
+        let mut case = models::case1();
+        case.width_mult = 0.25;
+        let (g, cfg) = case.build();
+        let full = stage_impl(g, &cfg).unwrap();
+        let again = stage_impl_decorated(full.decorated.clone()).unwrap();
+        assert_eq!(full.fused.len(), again.fused.len());
+        assert_eq!(full.impl_summary.len(), again.impl_summary.len());
     }
 }

@@ -1,0 +1,949 @@
+//! The unified design-space evaluation engine.
+//!
+//! ALADIN's value is screening many (mixed-precision config, platform)
+//! candidates *without deployment* (paper §I, §VIII-C). This module is the
+//! single evaluation path every searcher shares:
+//!
+//! - [`DesignVector`] — one candidate: an optional quantization axis
+//!   (per-block bits + implementation, [`QuantAxis`]) × an optional
+//!   hardware axis (cluster cores, L2 kB, [`HwAxis`]);
+//! - [`EvalEngine`] — evaluates design vectors through the staged pipeline
+//!   ([`crate::coordinator::stage_impl`] /
+//!   [`crate::coordinator::stage_platform`]) behind a **memoized
+//!   evaluation cache** keyed by stable content hashes of (model config,
+//!   impl config, platform spec): candidates sharing a decorated graph or
+//!   fused layer list skip straight to scheduling/simulation instead of
+//!   recomputing from the QONNX root. Batches run on a work-queue executor
+//!   over `std::thread::scope`, bounded by available parallelism;
+//! - [`JointSpace`] / [`explore_joint`] — the joint quantization×hardware
+//!   product explorer (CLI `aladin dse --joint`), streaming a 3-axis
+//!   Pareto front over (sensitivity, latency, param+activation memory)
+//!   via [`crate::dse::pareto`].
+//!
+//! [`GridSearch`](crate::dse::GridSearch) (Fig. 7) and the quant searchers
+//! ([`crate::dse::quant_search`]) are thin frontends over this engine.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::coordinator::{
+    stage_impl, stage_impl_decorated, stage_platform, ImplModel, PlatformEval,
+};
+use crate::error::{AladinError, Result};
+use crate::graph::ir::Graph;
+use crate::impl_aware::LayerSummary;
+use crate::models::{BlockConfig, BlockImpl, MobileNetConfig};
+use crate::platform::PlatformSpec;
+use crate::sim::SimResult;
+use crate::util::StableHasher;
+
+// ---------------------------------------------------------------------------
+// design vectors
+// ---------------------------------------------------------------------------
+
+/// The quantization axis of a design vector: per-block precision and
+/// implementation choices over the `B^L` layer-wise space (paper §III).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantAxis {
+    /// Bits per block (Table-I layout: 10 entries for MobileNetV1).
+    pub bits: Vec<u8>,
+    /// Implementation per block.
+    pub impls: Vec<BlockImpl>,
+}
+
+fn impl_tag(i: BlockImpl) -> u8 {
+    match i {
+        BlockImpl::Im2col => 0,
+        BlockImpl::Lut => 1,
+    }
+}
+
+fn impl_char(i: BlockImpl) -> char {
+    match i {
+        BlockImpl::Im2col => 'i',
+        BlockImpl::Lut => 'l',
+    }
+}
+
+impl QuantAxis {
+    /// Every block at `bits` with `implementation`.
+    pub fn uniform(bits: u8, implementation: BlockImpl, n_blocks: usize) -> Self {
+        Self {
+            bits: vec![bits; n_blocks],
+            impls: vec![implementation; n_blocks],
+        }
+    }
+
+    /// Override the blocks of a MobileNet configuration with this axis.
+    pub fn apply(&self, case: &mut MobileNetConfig) {
+        for (i, block) in case.blocks.iter_mut().enumerate() {
+            if let Some(&bits) = self.bits.get(i) {
+                let implementation = self.impls.get(i).copied().unwrap_or(block.implementation);
+                *block = BlockConfig::new(bits, implementation);
+            }
+        }
+    }
+
+    /// Compact human-readable label, e.g. `int4/im2col` (uniform) or
+    /// `b:8888844444 i:iiiiiiilll` (mixed).
+    pub fn label(&self) -> String {
+        let bits_uniform = self.bits.windows(2).all(|w| w[0] == w[1]);
+        let impls_uniform = self.impls.windows(2).all(|w| w[0] == w[1]);
+        match (
+            bits_uniform.then(|| self.bits.first().copied()).flatten(),
+            impls_uniform.then(|| self.impls.first().copied()).flatten(),
+        ) {
+            (Some(b), Some(i)) => format!(
+                "int{b}/{}",
+                match i {
+                    BlockImpl::Im2col => "im2col",
+                    BlockImpl::Lut => "lut",
+                }
+            ),
+            _ => {
+                let bits: String = self.bits.iter().map(|b| char::from(b'0' + b % 10)).collect();
+                let impls: String = self.impls.iter().copied().map(impl_char).collect();
+                format!("b:{bits} i:{impls}")
+            }
+        }
+    }
+
+    fn write(&self, h: &mut StableHasher) {
+        h.write_usize(self.bits.len());
+        for &b in &self.bits {
+            h.write_u8(b);
+        }
+        h.write_usize(self.impls.len());
+        for &i in &self.impls {
+            h.write_u8(impl_tag(i));
+        }
+    }
+}
+
+/// The hardware axis of a design vector: the Fig. 7 reconfiguration knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HwAxis {
+    /// Cluster core count.
+    pub cores: usize,
+    /// L2 SRAM capacity in kB.
+    pub l2_kb: u64,
+}
+
+/// One candidate in the joint design space. `None` on an axis means "keep
+/// the engine's base model / base platform unchanged" — a pure-hardware
+/// sweep sets only `hw`, a pure-quantization search only `quant`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignVector {
+    pub quant: Option<QuantAxis>,
+    pub hw: Option<HwAxis>,
+}
+
+impl DesignVector {
+    pub fn of_hw(cores: usize, l2_kb: u64) -> Self {
+        Self {
+            quant: None,
+            hw: Some(HwAxis { cores, l2_kb }),
+        }
+    }
+
+    pub fn of_quant(quant: QuantAxis) -> Self {
+        Self {
+            quant: Some(quant),
+            hw: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// evaluation records
+// ---------------------------------------------------------------------------
+
+/// Everything the engine produces for one evaluated design vector.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub vector: DesignVector,
+    /// Resolved platform knobs (base platform when `vector.hw` is `None`).
+    pub cores: usize,
+    pub l2_kb: u64,
+    pub total_cycles: u64,
+    pub latency_s: f64,
+    /// Sensitivity proxy: precision loss weighted by physical MAC volume
+    /// (stand-in for the Hessian-trace sensitivity of [33]; lower is
+    /// better, 0 for all-int8). Decorated-graph sources carry no per-block
+    /// bit information, so their records always report 0 — compare
+    /// sensitivities only across records from a configurable
+    /// ([`ModelSource::MobileNet`]) engine.
+    pub sensitivity: f64,
+    /// Parameter memory (kB), incl. LUT / threshold-tree overheads.
+    pub param_kb: f64,
+    /// Param + peak activation footprint (kB) — the memory axis of the
+    /// joint Pareto front.
+    pub mem_kb: f64,
+    pub peak_l1_kb: f64,
+    pub peak_l2_kb: f64,
+    pub l3_traffic_kb: f64,
+    pub sim: SimResult,
+    /// (layer, tiles_c, tiles_h, double_buffered) per scheduled layer.
+    pub tilings: Vec<(String, usize, usize, bool)>,
+}
+
+/// Sensitivity proxy shared by the engine and the quant searchers: sum over
+/// layers of (8 - block bits) * sqrt(physical MACs) / 1e3, with the coarse
+/// layer→block mapping of the Table-I layout.
+pub(crate) fn sensitivity_proxy(summary: &[LayerSummary], bits: &[u8]) -> f64 {
+    summary
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let block = (i / 4).min(9); // coarse layer->block mapping
+            (8.0 - bits.get(block).copied().unwrap_or(8) as f64)
+                * (r.macs_physical as f64).sqrt()
+                / 1e3
+        })
+        .sum()
+}
+
+impl EvalRecord {
+    fn derive(
+        vector: DesignVector,
+        effective_bits: &[u8],
+        impl_model: &ImplModel,
+        eval: &PlatformEval,
+        platform: &PlatformSpec,
+    ) -> Self {
+        let param_kb = impl_model
+            .impl_summary
+            .iter()
+            .map(|r| r.param_mem_bits)
+            .sum::<u64>() as f64
+            / 8192.0;
+        let act_peak_kb = impl_model
+            .impl_summary
+            .iter()
+            .map(|r| r.input_mem_bits + r.output_mem_bits)
+            .max()
+            .unwrap_or(0) as f64
+            / 8192.0;
+        let sensitivity = sensitivity_proxy(&impl_model.impl_summary, effective_bits);
+        EvalRecord {
+            cores: platform.cores,
+            l2_kb: platform.l2_bytes / 1024,
+            total_cycles: eval.latency.total_cycles,
+            latency_s: eval.latency.latency_s,
+            sensitivity,
+            param_kb,
+            mem_kb: param_kb + act_peak_kb,
+            peak_l1_kb: eval.peak_l1 as f64 / 1024.0,
+            peak_l2_kb: eval.peak_l2 as f64 / 1024.0,
+            l3_traffic_kb: eval.l3_traffic as f64 / 1024.0,
+            sim: eval.sim.clone(),
+            tilings: eval.tilings.clone(),
+            vector,
+        }
+    }
+
+    /// Label of the quantization axis ("base" when none).
+    pub fn quant_label(&self) -> String {
+        self.vector
+            .quant
+            .as_ref()
+            .map(|q| q.label())
+            .unwrap_or_else(|| "base".into())
+    }
+}
+
+impl crate::util::ToJson for EvalRecord {
+    fn to_json(&self) -> crate::util::Value {
+        let bits: Vec<crate::util::Value> = self
+            .vector
+            .quant
+            .iter()
+            .flat_map(|q| q.bits.iter().map(|&b| crate::util::Value::from(b)))
+            .collect();
+        crate::util::Value::obj()
+            .with("quant", self.quant_label())
+            .with("bits", crate::util::Value::Arr(bits))
+            .with("cores", self.cores)
+            .with("l2_kb", self.l2_kb)
+            .with("total_cycles", self.total_cycles)
+            .with("latency_s", self.latency_s)
+            .with("sensitivity", self.sensitivity)
+            .with("param_kb", self.param_kb)
+            .with("mem_kb", self.mem_kb)
+            .with("peak_l1_kb", self.peak_l1_kb)
+            .with("peak_l2_kb", self.peak_l2_kb)
+            .with("l3_traffic_kb", self.l3_traffic_kb)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// memoized stage cache
+// ---------------------------------------------------------------------------
+
+/// A lazily-initialized cache slot: computed at most once, shared by every
+/// waiter. Errors are stored shared and replayed structurally
+/// ([`AladinError::replay`]), so every consumer — computing thread,
+/// concurrent waiter, or later lookup — sees the same typed variant
+/// (`Infeasible` stays matchable through the cache).
+type Slot<T> = Arc<OnceLock<std::result::Result<Arc<T>, Arc<AladinError>>>>;
+
+/// One memoization table: key → lazily-computed shared value. The map lock
+/// only guards slot creation; computation runs outside it (concurrent
+/// requests for the *same* key block on the slot's `OnceLock`, distinct
+/// keys compute in parallel), so each key is computed at most once.
+struct Memo<T> {
+    slots: Mutex<HashMap<u64, Slot<T>>>,
+    hits: AtomicUsize,
+    computed: AtomicUsize,
+}
+
+impl<T> Memo<T> {
+    fn new() -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            computed: AtomicUsize::new(0),
+        }
+    }
+
+    fn get_or_compute(&self, key: u64, f: impl FnOnce() -> Result<T>) -> Result<Arc<T>> {
+        let (slot, fresh) = {
+            let mut slots = self.slots.lock().expect("memo lock poisoned");
+            match slots.entry(key) {
+                Entry::Occupied(e) => (e.get().clone(), false),
+                Entry::Vacant(v) => {
+                    let slot = Arc::new(OnceLock::new());
+                    v.insert(slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if !fresh {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let outcome = slot.get_or_init(|| {
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            f().map(Arc::new).map_err(Arc::new)
+        });
+        match outcome {
+            Ok(v) => Ok(v.clone()),
+            Err(e) => Err(e.replay()),
+        }
+    }
+}
+
+/// Cache effectiveness counters, one pair per pipeline stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Stage-1 (decorate + fuse) computations actually executed.
+    pub impl_computed: usize,
+    /// Stage-1 lookups served from the cache.
+    pub impl_hits: usize,
+    /// Stage-2/3 (schedule + simulate) computations actually executed.
+    pub sim_computed: usize,
+    /// Stage-2/3 lookups served from the cache.
+    pub sim_hits: usize,
+}
+
+impl CacheStats {
+    /// Total pipeline-stage recomputations across both stages.
+    pub fn recomputations(&self) -> usize {
+        self.impl_computed + self.sim_computed
+    }
+
+    /// What a cache-less sequential evaluator would have recomputed for the
+    /// same lookups: every lookup runs its stage.
+    pub fn naive_recomputations(&self) -> usize {
+        self.impl_computed + self.impl_hits + self.sim_computed + self.sim_hits
+    }
+}
+
+impl crate::util::ToJson for CacheStats {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("impl_computed", self.impl_computed)
+            .with("impl_hits", self.impl_hits)
+            .with("sim_computed", self.sim_computed)
+            .with("sim_hits", self.sim_hits)
+            .with("recomputations", self.recomputations())
+            .with("naive_recomputations", self.naive_recomputations())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// What the engine evaluates the quantization axis against.
+#[derive(Debug, Clone)]
+pub enum ModelSource {
+    /// MobileNet base configuration; each candidate's [`QuantAxis`]
+    /// overrides its per-block choices before building the graph.
+    MobileNet(MobileNetConfig),
+    /// A pre-decorated graph (quantization axes are rejected: the
+    /// implementation choices are already baked in).
+    Decorated(Arc<Graph>),
+}
+
+fn mobilenet_key(c: &MobileNetConfig) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_str(&c.name);
+    h.write_usize(c.input.0);
+    h.write_usize(c.input.1);
+    h.write_usize(c.input.2);
+    h.write_usize(c.num_classes);
+    h.write_f64(c.width_mult);
+    for b in std::iter::once(&c.pilot)
+        .chain(c.blocks.iter())
+        .chain(std::iter::once(&c.classifier))
+    {
+        h.write_u8(b.bits);
+        h.write_u8(impl_tag(b.implementation));
+    }
+    h.finish()
+}
+
+fn graph_key(g: &Graph) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_str(&g.name);
+    h.write_usize(g.nodes.len());
+    h.write_usize(g.edges.len());
+    for n in &g.nodes {
+        h.write_str(&n.name);
+        h.write_str(n.op.kind());
+        if let Some(a) = &n.ann {
+            h.write_u64(a.macs);
+            h.write_u64(a.macs_physical);
+            h.write_u64(a.bops);
+            h.write_u64(a.param_mem_bits);
+            h.write_str(&a.impl_label);
+        }
+    }
+    for e in &g.edges {
+        h.write_u64(e.spec.bits());
+        h.write_u64(e.ann.map(|a| a.mem_bits).unwrap_or(0));
+    }
+    h.finish()
+}
+
+/// The shared, thread-safe design-space evaluation engine.
+pub struct EvalEngine {
+    source: ModelSource,
+    base: PlatformSpec,
+    base_key: u64,
+    threads: usize,
+    impl_stage: Memo<ImplModel>,
+    sim_stage: Memo<PlatformEval>,
+}
+
+impl EvalEngine {
+    pub fn new(source: ModelSource, base: PlatformSpec) -> Self {
+        let base_key = match &source {
+            ModelSource::MobileNet(c) => mobilenet_key(c),
+            ModelSource::Decorated(g) => graph_key(g),
+        };
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self {
+            source,
+            base,
+            base_key,
+            threads,
+            impl_stage: Memo::new(),
+            sim_stage: Memo::new(),
+        }
+    }
+
+    /// Engine over a configurable MobileNet workload (quant axes allowed).
+    pub fn for_mobilenet(base_model: MobileNetConfig, base_platform: PlatformSpec) -> Self {
+        Self::new(ModelSource::MobileNet(base_model), base_platform)
+    }
+
+    /// Engine over a fixed, already-decorated graph (hardware axes only).
+    pub fn for_decorated(decorated: Graph, base_platform: PlatformSpec) -> Self {
+        Self::new(ModelSource::Decorated(Arc::new(decorated)), base_platform)
+    }
+
+    /// Override the worker count (defaults to available parallelism).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The base platform whose knobs the hardware axis varies.
+    pub fn base_platform(&self) -> &PlatformSpec {
+        &self.base
+    }
+
+    /// Snapshot of the cache counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            impl_computed: self.impl_stage.computed.load(Ordering::Relaxed),
+            impl_hits: self.impl_stage.hits.load(Ordering::Relaxed),
+            sim_computed: self.sim_stage.computed.load(Ordering::Relaxed),
+            sim_hits: self.sim_stage.hits.load(Ordering::Relaxed),
+        }
+    }
+
+    fn impl_key(&self, quant: Option<&QuantAxis>) -> u64 {
+        let mut h = StableHasher::new();
+        h.write_u64(self.base_key);
+        match quant {
+            None => h.write_u8(0),
+            Some(q) => {
+                h.write_u8(1);
+                q.write(&mut h);
+            }
+        }
+        h.finish()
+    }
+
+    /// Stage 1 through the cache: decorated + fused model for a quant axis.
+    fn impl_model(&self, quant: Option<&QuantAxis>) -> Result<Arc<ImplModel>> {
+        let key = self.impl_key(quant);
+        self.impl_stage
+            .get_or_compute(key, || match (&self.source, quant) {
+                (ModelSource::Decorated(g), None) => stage_impl_decorated(g.clone()),
+                (ModelSource::Decorated(_), Some(_)) => Err(AladinError::Unsupported(
+                    "quantization axis requires a configurable model source \
+                     (EvalEngine::for_mobilenet)"
+                        .into(),
+                )),
+                (ModelSource::MobileNet(base), quant) => {
+                    let mut case = base.clone();
+                    if let Some(q) = quant {
+                        q.apply(&mut case);
+                    }
+                    let (g, cfg) = case.build();
+                    stage_impl(g, &cfg)
+                }
+            })
+    }
+
+    /// The per-block bit widths a vector actually evaluates: its quant
+    /// axis when present, otherwise the base model's blocks.
+    fn effective_bits(&self, vector: &DesignVector) -> Vec<u8> {
+        match (&vector.quant, &self.source) {
+            (Some(q), _) => q.bits.clone(),
+            (None, ModelSource::MobileNet(c)) => c.blocks.iter().map(|b| b.bits).collect(),
+            (None, ModelSource::Decorated(_)) => Vec::new(), // defaults to int8
+        }
+    }
+
+    /// Evaluate one design vector through the staged cache.
+    pub fn evaluate(&self, vector: &DesignVector) -> Result<EvalRecord> {
+        let impl_key = self.impl_key(vector.quant.as_ref());
+        let impl_model = self.impl_model(vector.quant.as_ref())?;
+        let platform = match vector.hw {
+            Some(hw) => self.base.reconfigure(hw.cores, hw.l2_kb * 1024),
+            None => self.base.clone(),
+        };
+        let sim_key = crate::util::hash::combine(impl_key, platform.content_hash());
+        let eval = self
+            .sim_stage
+            .get_or_compute(sim_key, || stage_platform(&impl_model.fused, &platform))?;
+        Ok(EvalRecord::derive(
+            vector.clone(),
+            &self.effective_bits(vector),
+            &impl_model,
+            &eval,
+            &platform,
+        ))
+    }
+
+    /// Evaluate a batch, aborting on the first (lowest-index) failure.
+    pub fn evaluate_all(&self, vectors: &[DesignVector]) -> Result<Vec<EvalRecord>> {
+        self.try_evaluate_all(vectors).into_iter().collect()
+    }
+
+    /// Evaluate a batch on a work-queue over scoped threads, returning one
+    /// result per candidate — a failing candidate (e.g. an L1-infeasible
+    /// corner of the product space) does not abort the rest. Results come
+    /// back in input order regardless of worker count, so downstream Pareto
+    /// fronts are deterministic across thread counts.
+    pub fn try_evaluate_all(&self, vectors: &[DesignVector]) -> Vec<Result<EvalRecord>> {
+        if vectors.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.threads.min(vectors.len());
+        if workers <= 1 {
+            return vectors.iter().map(|v| self.evaluate(v)).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let per_worker: Vec<Vec<(usize, Result<EvalRecord>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next = &next;
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= vectors.len() {
+                                break;
+                            }
+                            out.push((i, self.evaluate(&vectors[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("dse engine worker panicked"))
+                .collect()
+        });
+
+        let mut slots: Vec<Option<Result<EvalRecord>>> = vectors.iter().map(|_| None).collect();
+        for (i, r) in per_worker.into_iter().flatten() {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("work queue covered every index"))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the joint explorer
+// ---------------------------------------------------------------------------
+
+/// Hard cap on exhaustively varied tail blocks (`|alphabet|^k` explosion
+/// guard, shared with [`crate::dse::quant_search::exhaustive_pareto`]).
+pub const MAX_TAIL_K: usize = 5;
+
+/// Exhaustive tail assignments: the last `k` blocks vary over `alphabet`
+/// (mixed-radix enumeration, first alphabet digit at the earliest tail
+/// block), the leading blocks stay int8/im2col. `k` is clamped to
+/// `n_blocks` and [`MAX_TAIL_K`].
+pub(crate) fn tail_axes(alphabet: &[BlockConfig], k: usize, n_blocks: usize) -> Vec<QuantAxis> {
+    if alphabet.is_empty() {
+        return Vec::new();
+    }
+    let k = k.min(n_blocks).min(MAX_TAIL_K);
+    let n = alphabet.len().checked_pow(k as u32).unwrap_or(0);
+    let mut axes = Vec::with_capacity(n);
+    for code in 0..n {
+        let mut bits = vec![8u8; n_blocks];
+        let mut impls = vec![BlockImpl::Im2col; n_blocks];
+        let mut c = code;
+        for j in 0..k {
+            let choice = alphabet[c % alphabet.len()];
+            c /= alphabet.len();
+            bits[n_blocks - k + j] = choice.bits;
+            impls[n_blocks - k + j] = choice.implementation;
+        }
+        axes.push(QuantAxis { bits, impls });
+    }
+    axes
+}
+
+/// The joint quantization × hardware product space (CLI `dse --joint`).
+#[derive(Debug, Clone)]
+pub struct JointSpace {
+    /// Per-block precision alphabet.
+    pub bits: Vec<u8>,
+    /// Per-block implementation alphabet.
+    pub impls: Vec<BlockImpl>,
+    /// With `tail_k == 0` each candidate assigns one (bits, impl) choice
+    /// uniformly to every block. With `tail_k > 0` the last `tail_k` blocks
+    /// are varied exhaustively over the alphabet (the leading blocks stay
+    /// int8/im2col), matching the `exhaustive_pareto` convention; capped at
+    /// [`MAX_TAIL_K`].
+    pub tail_k: usize,
+    /// Cluster core counts to explore.
+    pub cores: Vec<usize>,
+    /// L2 capacities (kB) to explore.
+    pub l2_kb: Vec<u64>,
+}
+
+impl JointSpace {
+    /// The paper-flavoured default: bits {4, 8} × im2col over the Fig. 7
+    /// hardware grid.
+    pub fn default_grid() -> Self {
+        Self {
+            bits: vec![4, 8],
+            impls: vec![BlockImpl::Im2col],
+            tail_k: 0,
+            cores: vec![2, 4, 8],
+            l2_kb: vec![256, 320, 512],
+        }
+    }
+
+    /// The quantization-axis candidates over `n_blocks` blocks.
+    pub fn quant_axes(&self, n_blocks: usize) -> Vec<QuantAxis> {
+        let alphabet: Vec<BlockConfig> = self
+            .bits
+            .iter()
+            .flat_map(|&b| self.impls.iter().map(move |&i| BlockConfig::new(b, i)))
+            .collect();
+        if alphabet.is_empty() {
+            return Vec::new();
+        }
+        if self.tail_k == 0 {
+            alphabet
+                .iter()
+                .map(|c| QuantAxis::uniform(c.bits, c.implementation, n_blocks))
+                .collect()
+        } else {
+            tail_axes(&alphabet, self.tail_k, n_blocks)
+        }
+    }
+
+    /// Enumerate the full quant × hardware product as design vectors.
+    pub fn vectors(&self, n_blocks: usize) -> Vec<DesignVector> {
+        let mut out = Vec::new();
+        for quant in self.quant_axes(n_blocks) {
+            for &cores in &self.cores {
+                for &l2_kb in &self.l2_kb {
+                    out.push(DesignVector {
+                        quant: Some(quant.clone()),
+                        hw: Some(HwAxis { cores, l2_kb }),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Result of one joint exploration.
+#[derive(Debug)]
+pub struct JointResult {
+    /// Every successfully evaluated candidate, in enumeration order.
+    pub records: Vec<EvalRecord>,
+    /// Indices into `records` of the 3-axis Pareto front over
+    /// (sensitivity, latency, param+activation memory), all minimized.
+    pub front: Vec<usize>,
+    /// Candidates screened out as unevaluable (infeasible tiling, invalid
+    /// platform corner, …), with the reason. Infeasibility is a screening
+    /// outcome of the design loop (paper §V), not a fatal error.
+    pub skipped: Vec<(DesignVector, AladinError)>,
+    /// Cache counters for the run.
+    pub stats: CacheStats,
+}
+
+impl JointResult {
+    /// The Pareto-optimal records themselves.
+    pub fn front_records(&self) -> Vec<&EvalRecord> {
+        self.front.iter().map(|&i| &self.records[i]).collect()
+    }
+}
+
+/// Evaluate the full joint product space through a fresh engine and screen
+/// the 3-axis Pareto front. Unevaluable candidates are screened into
+/// `skipped` rather than aborting the run. `threads` overrides the worker
+/// count (handy for determinism tests).
+pub fn explore_joint(
+    base_model: MobileNetConfig,
+    base_platform: PlatformSpec,
+    space: &JointSpace,
+    threads: Option<usize>,
+) -> Result<JointResult> {
+    let n_blocks = base_model.blocks.len();
+    let mut engine = EvalEngine::for_mobilenet(base_model, base_platform);
+    if let Some(t) = threads {
+        engine = engine.with_threads(t);
+    }
+    let vectors = space.vectors(n_blocks);
+    let mut records = Vec::new();
+    let mut skipped = Vec::new();
+    for (vector, outcome) in vectors.iter().zip(engine.try_evaluate_all(&vectors)) {
+        match outcome {
+            Ok(r) => records.push(r),
+            Err(e) => skipped.push((vector.clone(), e)),
+        }
+    }
+    let points: Vec<[f64; 3]> = records
+        .iter()
+        .map(|r| [r.sensitivity, r.latency_s, r.mem_kb])
+        .collect();
+    let front = super::pareto::pareto_min_indices(&points);
+    Ok(JointResult {
+        records,
+        front,
+        skipped,
+        stats: engine.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::platform::presets;
+
+    fn small_case2() -> MobileNetConfig {
+        let mut c = models::case2();
+        c.width_mult = 0.25;
+        c
+    }
+
+    #[test]
+    fn repeat_evaluation_hits_both_stage_caches() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let v = DesignVector::of_hw(4, 320);
+        let a = engine.evaluate(&v).unwrap();
+        let b = engine.evaluate(&v).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        let s = engine.stats();
+        assert_eq!(s.impl_computed, 1);
+        assert_eq!(s.sim_computed, 1);
+        assert_eq!(s.impl_hits, 1);
+        assert_eq!(s.sim_hits, 1);
+    }
+
+    #[test]
+    fn hw_sweep_shares_the_impl_stage() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let vectors: Vec<DesignVector> = [(2, 256), (4, 320), (8, 512)]
+            .iter()
+            .map(|&(c, l2)| DesignVector::of_hw(c, l2))
+            .collect();
+        let records = engine.evaluate_all(&vectors).unwrap();
+        assert_eq!(records.len(), 3);
+        let s = engine.stats();
+        assert_eq!(s.impl_computed, 1, "one decoration for the whole sweep");
+        assert_eq!(s.sim_computed, 3, "one simulation per hardware point");
+    }
+
+    #[test]
+    fn quant_axis_changes_the_model() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let int8 = engine
+            .evaluate(&DesignVector::of_quant(QuantAxis::uniform(
+                8,
+                BlockImpl::Im2col,
+                10,
+            )))
+            .unwrap();
+        let int4 = engine
+            .evaluate(&DesignVector::of_quant(QuantAxis::uniform(
+                4,
+                BlockImpl::Im2col,
+                10,
+            )))
+            .unwrap();
+        assert!(int4.param_kb < int8.param_kb);
+        assert!(int4.sensitivity > int8.sensitivity);
+        assert_eq!(engine.stats().impl_computed, 2);
+    }
+
+    #[test]
+    fn decorated_source_rejects_quant_axes() {
+        let (g, cfg) = small_case2().build();
+        let d = crate::impl_aware::decorate(g, &cfg).unwrap();
+        let engine = EvalEngine::for_decorated(d, presets::gap8());
+        assert!(engine.evaluate(&DesignVector::of_hw(4, 320)).is_ok());
+        let err = engine.evaluate(&DesignVector::of_quant(QuantAxis::uniform(
+            4,
+            BlockImpl::Im2col,
+            10,
+        )));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn joint_space_enumeration_counts() {
+        let space = JointSpace::default_grid();
+        assert_eq!(space.quant_axes(10).len(), 2);
+        assert_eq!(space.vectors(10).len(), 2 * 9);
+        let tail = JointSpace {
+            bits: vec![4, 8],
+            impls: vec![BlockImpl::Im2col, BlockImpl::Lut],
+            tail_k: 2,
+            cores: vec![8],
+            l2_kb: vec![512],
+        };
+        assert_eq!(tail.quant_axes(10).len(), 16); // 4^2 alphabet^k
+        assert_eq!(tail.vectors(10).len(), 16);
+        // runaway tail_k is clamped to MAX_TAIL_K, not enumerated
+        let runaway = JointSpace {
+            tail_k: 99,
+            ..tail
+        };
+        assert_eq!(runaway.quant_axes(10).len(), 4usize.pow(MAX_TAIL_K as u32));
+    }
+
+    #[test]
+    fn joint_explorer_front_is_nondominated() {
+        let space = JointSpace {
+            bits: vec![4, 8],
+            impls: vec![BlockImpl::Im2col],
+            tail_k: 0,
+            cores: vec![2, 8],
+            l2_kb: vec![256, 512],
+        };
+        let r = explore_joint(small_case2(), presets::gap8(), &space, Some(2)).unwrap();
+        assert_eq!(r.records.len(), 8);
+        assert!(!r.front.is_empty());
+        // the cache must beat one-(stage-)computation-per-candidate
+        assert_eq!(r.stats.impl_computed, 2);
+        assert_eq!(r.stats.sim_computed, 8);
+        assert!(r.stats.recomputations() < r.records.len() * 2);
+        // front members are mutually non-dominated
+        for &i in &r.front {
+            for &j in &r.front {
+                if i == j {
+                    continue;
+                }
+                let (a, b) = (&r.records[i], &r.records[j]);
+                let dominates = a.sensitivity <= b.sensitivity
+                    && a.latency_s <= b.latency_s
+                    && a.mem_kb <= b.mem_kb
+                    && (a.sensitivity < b.sensitivity
+                        || a.latency_s < b.latency_s
+                        || a.mem_kb < b.mem_kb);
+                assert!(!dominates, "front member {i} dominates {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn joint_explorer_screens_unevaluable_corners() {
+        // 32 kB L2 is smaller than GAP8's 64 kB L1 — an invalid platform
+        // corner that must be screened out, not abort the run
+        let space = JointSpace {
+            bits: vec![8],
+            impls: vec![BlockImpl::Im2col],
+            tail_k: 0,
+            cores: vec![8],
+            l2_kb: vec![32, 512],
+        };
+        let r = explore_joint(small_case2(), presets::gap8(), &space, Some(1)).unwrap();
+        assert_eq!(r.records.len(), 1);
+        assert_eq!(r.records[0].l2_kb, 512);
+        assert_eq!(r.skipped.len(), 1);
+        assert!(matches!(r.skipped[0].1, AladinError::Platform(_)));
+        assert_eq!(r.front, vec![0]);
+    }
+
+    #[test]
+    fn cache_replays_typed_errors() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let bad = DesignVector::of_hw(8, 32); // L2 < L1
+        let first = engine.evaluate(&bad).unwrap_err();
+        let replayed = engine.evaluate(&bad).unwrap_err();
+        assert!(matches!(first, AladinError::Platform(_)));
+        assert!(matches!(replayed, AladinError::Platform(_)));
+        assert_eq!(first.to_string(), replayed.to_string());
+        let s = engine.stats();
+        assert_eq!(s.sim_computed, 1, "failures are memoized too");
+        assert_eq!(s.sim_hits, 1);
+    }
+
+    #[test]
+    fn quant_labels() {
+        assert_eq!(
+            QuantAxis::uniform(4, BlockImpl::Im2col, 10).label(),
+            "int4/im2col"
+        );
+        let mixed = QuantAxis {
+            bits: vec![8, 8, 4],
+            impls: vec![BlockImpl::Im2col, BlockImpl::Im2col, BlockImpl::Lut],
+        };
+        assert_eq!(mixed.label(), "b:884 i:iil");
+    }
+}

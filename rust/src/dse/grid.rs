@@ -3,13 +3,19 @@
 //! Grid search over reconfigurable platform knobs (cluster core count, L2
 //! SRAM capacity) for a fixed model configuration, reporting per-layer and
 //! total cycles plus the tiling configurations chosen at each point.
+//!
+//! Since the engine refactor this is a thin frontend over
+//! [`EvalEngine`](super::engine::EvalEngine): the implementation-aware
+//! stage (decorate + fuse) is computed once and shared across every grid
+//! point through the evaluation cache, and points are simulated on the
+//! engine's bounded work-queue executor.
 
-use crate::error::Result;
+use super::engine::{DesignVector, EvalEngine, EvalRecord};
+use crate::error::{AladinError, Result};
 use crate::graph::ir::Graph;
 use crate::impl_aware::{decorate, ImplConfig};
 use crate::platform::PlatformSpec;
-use crate::platform_aware::{build_schedule, fuse};
-use crate::sim::{simulate, SimResult};
+use crate::sim::SimResult;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -25,6 +31,22 @@ pub struct DesignPoint {
     /// (layer, tiles_c, tiles_h, double_buffered) per layer — the Fig. 7
     /// bottom-row "tiling configurations".
     pub tilings: Vec<(String, usize, usize, bool)>,
+}
+
+impl From<EvalRecord> for DesignPoint {
+    fn from(r: EvalRecord) -> Self {
+        DesignPoint {
+            cores: r.cores,
+            l2_kb: r.l2_kb,
+            total_cycles: r.total_cycles,
+            latency_s: r.latency_s,
+            peak_l1_kb: r.peak_l1_kb,
+            peak_l2_kb: r.peak_l2_kb,
+            l3_traffic_kb: r.l3_traffic_kb,
+            sim: r.sim,
+            tilings: r.tilings,
+        }
+    }
 }
 
 /// Grid-search driver.
@@ -45,56 +67,36 @@ impl GridSearch {
         }
     }
 
-    /// Evaluate a decorated graph on every grid point (parallelized).
-    pub fn run(&self, decorated: &Graph) -> Result<Vec<DesignPoint>> {
-        let layers = fuse(decorated)?;
-        let points: Vec<(usize, u64)> = self
-            .cores
+    /// The grid as hardware-axis design vectors (row-major: cores outer).
+    pub fn vectors(&self) -> Vec<DesignVector> {
+        self.cores
             .iter()
-            .flat_map(|&c| self.l2_kb.iter().map(move |&l2| (c, l2)))
-            .collect();
+            .flat_map(|&c| self.l2_kb.iter().map(move |&l2| DesignVector::of_hw(c, l2)))
+            .collect()
+    }
 
-        // evaluate grid points on scoped threads (no rayon in the offline
-        // vendored set); each point is independent
-        let results: Vec<Result<DesignPoint>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = points
-                .iter()
-                .map(|&(cores, l2_kb)| {
-                    let layers = &layers;
-                    let base = &self.base;
-                    scope.spawn(move || -> Result<DesignPoint> {
-                        let platform = base.reconfigure(cores, l2_kb * 1024);
-                        let schedule = build_schedule(layers.clone(), &platform)?;
-                        let sim = simulate(&schedule);
-                        let tilings = schedule
-                            .layers
-                            .iter()
-                            .map(|l| {
-                                (
-                                    l.layer.name.clone(),
-                                    l.tile.tiles_c,
-                                    l.tile.tiles_h,
-                                    l.tile.double_buffered,
-                                )
-                            })
-                            .collect();
-                        Ok(DesignPoint {
-                            cores,
-                            l2_kb,
-                            total_cycles: sim.total_cycles(),
-                            latency_s: platform.cycles_to_seconds(sim.total_cycles()),
-                            peak_l1_kb: schedule.peak_l1() as f64 / 1024.0,
-                            peak_l2_kb: schedule.peak_l2() as f64 / 1024.0,
-                            l3_traffic_kb: schedule.l3_traffic() as f64 / 1024.0,
-                            sim,
-                            tilings,
-                        })
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("dse worker panicked")).collect()
-        });
-        results.into_iter().collect()
+    /// Evaluate a decorated graph on every grid point through a fresh
+    /// engine (parallelized, stage-cached).
+    pub fn run(&self, decorated: &Graph) -> Result<Vec<DesignPoint>> {
+        let engine = EvalEngine::for_decorated(decorated.clone(), self.base.clone());
+        self.run_on(&engine)
+    }
+
+    /// Evaluate every grid point on an existing engine, sharing its cache
+    /// with whatever else the caller has evaluated. The engine's base
+    /// platform must match `self.base` — the grid only varies the
+    /// cores/L2 knobs, so a mismatched base would silently evaluate on the
+    /// wrong clock/DMA/cost model.
+    pub fn run_on(&self, engine: &EvalEngine) -> Result<Vec<DesignPoint>> {
+        if self.base.content_hash() != engine.base_platform().content_hash() {
+            return Err(AladinError::Dse(format!(
+                "grid base platform `{}` differs from the engine's base `{}`",
+                self.base.name,
+                engine.base_platform().name
+            )));
+        }
+        let records = engine.evaluate_all(&self.vectors())?;
+        Ok(records.into_iter().map(DesignPoint::from).collect())
     }
 
     /// Convenience: decorate a canonical graph with `cfg` then run.
@@ -167,6 +169,27 @@ mod tests {
     }
 
     #[test]
+    fn grid_point_order_is_row_major() {
+        // callers (benches, CLI tables) rely on enumeration order
+        let pts = small_case2_points();
+        let order: Vec<(usize, u64)> = pts.iter().map(|p| (p.cores, p.l2_kb)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (2, 256),
+                (2, 320),
+                (2, 512),
+                (4, 256),
+                (4, 320),
+                (4, 512),
+                (8, 256),
+                (8, 320),
+                (8, 512),
+            ]
+        );
+    }
+
+    #[test]
     fn more_cores_never_slower_same_l2() {
         let pts = small_case2_points();
         for &l2 in &[256u64, 320, 512] {
@@ -205,5 +228,21 @@ mod tests {
         let s = speedups(&pts);
         assert!(s.iter().any(|&(_, _, x)| (x - 1.0).abs() < 1e-9)); // the worst point
         assert!(s.iter().all(|&(_, _, x)| x >= 1.0));
+    }
+
+    #[test]
+    fn shared_engine_reuses_fusion_across_grids() {
+        let mut c = models::case2();
+        c.width_mult = 0.25;
+        let (g, cfg) = c.build();
+        let d = crate::impl_aware::decorate(g, &cfg).unwrap();
+        let engine = EvalEngine::for_decorated(d, presets::gap8());
+        let grid = GridSearch::fig7(presets::gap8());
+        grid.run_on(&engine).unwrap();
+        grid.run_on(&engine).unwrap(); // second run: all simulation cached
+        let s = engine.stats();
+        assert_eq!(s.impl_computed, 1);
+        assert_eq!(s.sim_computed, 9);
+        assert_eq!(s.sim_hits, 9);
     }
 }

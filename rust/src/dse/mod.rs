@@ -1,10 +1,17 @@
-//! Design-space exploration: hardware grid search (Fig. 7) and Pareto
-//! screening of candidate configurations.
+//! Design-space exploration: the unified joint quantization×hardware
+//! evaluation engine ([`engine`]), the Fig. 7 hardware grid search
+//! ([`grid`]), mixed-precision searchers ([`quant_search`]), and Pareto
+//! screening of candidate configurations ([`pareto`]).
 
+pub mod engine;
 pub mod grid;
 pub mod pareto;
 pub mod quant_search;
 
+pub use engine::{
+    explore_joint, CacheStats, DesignVector, EvalEngine, EvalRecord, HwAxis, JointResult,
+    JointSpace, ModelSource, QuantAxis, MAX_TAIL_K,
+};
 pub use grid::{speedups, DesignPoint, GridSearch};
-pub use pareto::{best_feasible, pareto_front, Candidate};
-pub use quant_search::{exhaustive_pareto, greedy_memory, QuantCandidate};
+pub use pareto::{best_feasible, pareto_front, pareto_min_indices, Candidate};
+pub use quant_search::{exhaustive_pareto, greedy_memory, greedy_memory_on, QuantCandidate};

@@ -39,6 +39,26 @@ pub fn pareto_front(candidates: &[Candidate]) -> Vec<Candidate> {
         .collect()
 }
 
+/// Indices of the Pareto-optimal points when every axis is minimized —
+/// the generic front used by the joint DSE engine over
+/// (sensitivity, latency, memory). Ties (bit-identical points) are all
+/// kept, and input order is preserved, so the front is deterministic for a
+/// fixed candidate enumeration regardless of evaluation parallelism.
+pub fn pareto_min_indices(points: &[[f64; 3]]) -> Vec<usize> {
+    let dominates = |a: &[f64; 3], b: &[f64; 3]| {
+        a.iter().zip(b.iter()).all(|(x, y)| x <= y)
+            && a.iter().zip(b.iter()).any(|(x, y)| x < y)
+    };
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
 /// Filter candidates meeting a deadline (cycles), then return the
 /// accuracy-maximal one — the "best feasible configuration" query.
 pub fn best_feasible(candidates: &[Candidate], deadline_cycles: u64) -> Option<Candidate> {
@@ -88,5 +108,18 @@ mod tests {
         assert_eq!(best_feasible(&c, 550).unwrap().name, "b");
         assert_eq!(best_feasible(&c, 2000).unwrap().name, "a");
         assert!(best_feasible(&c, 100).is_none());
+    }
+
+    #[test]
+    fn min_indices_front() {
+        let pts = [
+            [1.0, 1.0, 1.0], // kept
+            [2.0, 2.0, 2.0], // dominated by 0
+            [0.5, 3.0, 1.0], // kept (better on axis 0)
+            [1.0, 1.0, 1.0], // duplicate of 0: kept (ties not dominated)
+        ];
+        assert_eq!(pareto_min_indices(&pts), vec![0, 2, 3]);
+        assert!(pareto_min_indices(&[]).is_empty());
+        assert_eq!(pareto_min_indices(&[[1.0, 2.0, 3.0]]), vec![0]);
     }
 }

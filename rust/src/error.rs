@@ -1,56 +1,225 @@
 //! Shared error type for the ALADIN library.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls (no `thiserror`): the crate
+//! builds offline with zero external dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced across the analysis pipeline.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AladinError {
-    #[error("graph contains a cycle through node `{node}`")]
-    GraphCycle { node: String },
+    GraphCycle {
+        node: String,
+    },
 
-    #[error("graph validation failed at `{at}`: {reason}")]
-    Validation { at: String, reason: String },
+    Validation {
+        at: String,
+        reason: String,
+    },
 
-    #[error("shape mismatch at `{at}`: expected {expected}, got {got}")]
     ShapeMismatch {
         at: String,
         expected: String,
         got: String,
     },
 
-    #[error("implementation config error for `{node}`: {reason}")]
-    ImplConfig { node: String, reason: String },
+    ImplConfig {
+        node: String,
+        reason: String,
+    },
 
-    #[error("unsupported: {0}")]
     Unsupported(String),
 
-    #[error("layer `{layer}` cannot be tiled to fit L1 ({required} B required of {available} B available)")]
+    /// A layer cannot be tiled to fit L1.
     Infeasible {
         layer: String,
         required: u64,
         available: u64,
     },
 
-    #[error("platform model error: {0}")]
     Platform(String),
 
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    #[error("runtime error: {0}")]
     Runtime(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// Design-space engine error (including stringified errors replayed
+    /// from the evaluation cache).
+    Dse(String),
 
-    #[error("{0}")]
-    Json(#[from] crate::util::json::JsonError),
+    Io(std::io::Error),
 
-    #[error("{0}")]
-    Yaml(#[from] crate::util::yamlish::YamlError),
+    Json(crate::util::json::JsonError),
 
-    #[error("parse error at `{at}`: {reason}")]
-    Parse { at: String, reason: String },
+    Yaml(crate::util::yamlish::YamlError),
+
+    Parse {
+        at: String,
+        reason: String,
+    },
+}
+
+impl fmt::Display for AladinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AladinError::GraphCycle { node } => {
+                write!(f, "graph contains a cycle through node `{node}`")
+            }
+            AladinError::Validation { at, reason } => {
+                write!(f, "graph validation failed at `{at}`: {reason}")
+            }
+            AladinError::ShapeMismatch { at, expected, got } => {
+                write!(f, "shape mismatch at `{at}`: expected {expected}, got {got}")
+            }
+            AladinError::ImplConfig { node, reason } => {
+                write!(f, "implementation config error for `{node}`: {reason}")
+            }
+            AladinError::Unsupported(what) => write!(f, "unsupported: {what}"),
+            AladinError::Infeasible {
+                layer,
+                required,
+                available,
+            } => write!(
+                f,
+                "layer `{layer}` cannot be tiled to fit L1 ({required} B required of {available} B available)"
+            ),
+            AladinError::Platform(reason) => write!(f, "platform model error: {reason}"),
+            AladinError::Artifact(reason) => write!(f, "artifact error: {reason}"),
+            AladinError::Runtime(reason) => write!(f, "runtime error: {reason}"),
+            AladinError::Dse(reason) => write!(f, "design-space engine error: {reason}"),
+            AladinError::Io(e) => write!(f, "io error: {e}"),
+            AladinError::Json(e) => write!(f, "{e}"),
+            AladinError::Yaml(e) => write!(f, "{e}"),
+            AladinError::Parse { at, reason } => {
+                write!(f, "parse error at `{at}`: {reason}")
+            }
+        }
+    }
+}
+
+impl AladinError {
+    /// Best-effort structural copy for replaying memoized failures from
+    /// the DSE evaluation cache: every variant is reproduced faithfully
+    /// except `Io`, which is not cloneable and degrades to `Dse` with the
+    /// rendered message.
+    pub fn replay(&self) -> AladinError {
+        use AladinError::*;
+        match self {
+            GraphCycle { node } => GraphCycle { node: node.clone() },
+            Validation { at, reason } => Validation {
+                at: at.clone(),
+                reason: reason.clone(),
+            },
+            ShapeMismatch { at, expected, got } => ShapeMismatch {
+                at: at.clone(),
+                expected: expected.clone(),
+                got: got.clone(),
+            },
+            ImplConfig { node, reason } => ImplConfig {
+                node: node.clone(),
+                reason: reason.clone(),
+            },
+            Unsupported(s) => Unsupported(s.clone()),
+            Infeasible {
+                layer,
+                required,
+                available,
+            } => Infeasible {
+                layer: layer.clone(),
+                required: *required,
+                available: *available,
+            },
+            Platform(s) => Platform(s.clone()),
+            Artifact(s) => Artifact(s.clone()),
+            Runtime(s) => Runtime(s.clone()),
+            Dse(s) => Dse(s.clone()),
+            Io(e) => Dse(format!("io error: {e}")),
+            Json(e) => Json(e.clone()),
+            Yaml(e) => Yaml(e.clone()),
+            Parse { at, reason } => Parse {
+                at: at.clone(),
+                reason: reason.clone(),
+            },
+        }
+    }
+}
+
+impl std::error::Error for AladinError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AladinError::Io(e) => Some(e),
+            AladinError::Json(e) => Some(e),
+            AladinError::Yaml(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AladinError {
+    fn from(e: std::io::Error) -> Self {
+        AladinError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for AladinError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        AladinError::Json(e)
+    }
+}
+
+impl From<crate::util::yamlish::YamlError> for AladinError {
+    fn from(e: crate::util::yamlish::YamlError) -> Self {
+        AladinError::Yaml(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, AladinError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_seed_format() {
+        let e = AladinError::GraphCycle { node: "c0".into() };
+        assert_eq!(e.to_string(), "graph contains a cycle through node `c0`");
+        let e = AladinError::Infeasible {
+            layer: "RC_1".into(),
+            required: 100,
+            available: 64,
+        };
+        assert!(e.to_string().contains("cannot be tiled to fit L1"));
+        let e = AladinError::Parse {
+            at: "cli".into(),
+            reason: "bad".into(),
+        };
+        assert_eq!(e.to_string(), "parse error at `cli`: bad");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: AladinError = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn replay_preserves_typed_variants() {
+        let e = AladinError::Infeasible {
+            layer: "RC_1".into(),
+            required: 100,
+            available: 64,
+        };
+        assert!(matches!(
+            e.replay(),
+            AladinError::Infeasible { required: 100, available: 64, .. }
+        ));
+        assert_eq!(e.replay().to_string(), e.to_string());
+        // io degrades to Dse but keeps the rendered message
+        let io: AladinError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(io.replay(), AladinError::Dse(_)));
+        assert!(io.replay().to_string().contains("gone"));
+    }
+}

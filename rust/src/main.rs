@@ -4,11 +4,12 @@
 
 use aladin::analysis::Feasibility;
 use aladin::coordinator::Pipeline;
-use aladin::dse::GridSearch;
+use aladin::dse::{explore_joint, GridSearch, JointSpace, MAX_TAIL_K};
 use aladin::error::Result;
 use aladin::graph::ir::Graph;
 use aladin::impl_aware::ImplConfig;
 use aladin::models;
+use aladin::models::BlockImpl;
 use aladin::platform::{presets, PlatformSpec};
 use aladin::runtime;
 use aladin::sim::report;
@@ -24,7 +25,11 @@ USAGE:
                   [--impl-config <file.yaml>] [--platform gap8|stm32n6|<file.json>]
                   [--deadline-ms <f64>] [--width-mult <f64>] [--json]
   aladin dse      [--model <m>] [--cores 2,4,8] [--l2-kb 256,320,512]
-                  [--width-mult <f64>] [--json]
+                  [--platform gap8|stm32n6|<file.json>] [--width-mult <f64>] [--json]
+  aladin dse --joint
+                  [--model case1|case2|case3] [--bits 4,8] [--impls im2col,lut]
+                  [--tail-k <k>] [--cores 2,4,8] [--l2-kb 256,320,512]
+                  [--threads <n>] [--platform <p>] [--width-mult <f64>] [--json]
   aladin accuracy [--artifacts <dir>] [--json]
   aladin screen   --deadline-ms <f64> [--width-mult <f64>]
   aladin trace    [--model <m>] [--out trace.json] [--width-mult <f64>]
@@ -137,12 +142,161 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn parse_impls(args: &Args) -> Result<Vec<BlockImpl>> {
+    match args.get("impls") {
+        None => Ok(vec![BlockImpl::Im2col]),
+        Some(list) => list
+            .split(',')
+            .map(|p| match p.trim() {
+                "im2col" => Ok(BlockImpl::Im2col),
+                "lut" => Ok(BlockImpl::Lut),
+                other => Err(io_err(format!(
+                    "invalid --impls entry `{other}` (expected im2col|lut)"
+                ))),
+            })
+            .collect(),
+    }
+}
+
+/// Joint quantization × hardware exploration through the shared engine.
+fn cmd_dse_joint(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "case2");
+    let mut case = match model.as_str() {
+        "case1" => models::case1(),
+        "case2" => models::case2(),
+        "case3" => models::case3(),
+        other => {
+            return Err(io_err(format!(
+                "--joint explores block configurations and needs a configurable \
+                 model (case1|case2|case3), got `{other}`"
+            )))
+        }
+    };
+    if let Some(w) = args.get_parsed::<f64>("width-mult").map_err(io_err)? {
+        case.width_mult = w;
+    }
+    let tail_k = args.get_parsed::<usize>("tail-k").map_err(io_err)?.unwrap_or(0);
+    if tail_k > MAX_TAIL_K {
+        return Err(io_err(format!(
+            "--tail-k is limited to {MAX_TAIL_K} (the candidate count grows as \
+             |alphabet|^k), got {tail_k}"
+        )));
+    }
+    let space = JointSpace {
+        bits: args
+            .get_list::<u8>("bits")
+            .map_err(io_err)?
+            .unwrap_or_else(|| vec![4, 8]),
+        impls: parse_impls(args)?,
+        tail_k,
+        cores: args
+            .get_list::<usize>("cores")
+            .map_err(io_err)?
+            .unwrap_or_else(|| vec![2, 4, 8]),
+        l2_kb: args
+            .get_list::<u64>("l2-kb")
+            .map_err(io_err)?
+            .unwrap_or_else(|| vec![256, 320, 512]),
+    };
+    let platform = load_platform(&args.get_or("platform", "gap8"))?;
+    let threads = args.get_parsed::<usize>("threads").map_err(io_err)?;
+    let result = explore_joint(case, platform, &space, threads)?;
+
+    let skipped_label = |v: &aladin::dse::DesignVector| {
+        let quant = v
+            .quant
+            .as_ref()
+            .map(|q| q.label())
+            .unwrap_or_else(|| "base".into());
+        let (cores, l2_kb) = v.hw.map(|h| (h.cores, h.l2_kb)).unwrap_or((0, 0));
+        (quant, cores, l2_kb)
+    };
+
+    if args.flag("json") {
+        let front: Vec<Value> = result.front.iter().map(|&i| Value::from(i)).collect();
+        let skipped: Vec<Value> = result
+            .skipped
+            .iter()
+            .map(|(v, e)| {
+                let (quant, cores, l2_kb) = skipped_label(v);
+                Value::obj()
+                    .with("quant", quant)
+                    .with("cores", cores)
+                    .with("l2_kb", l2_kb)
+                    .with("error", e.to_string())
+            })
+            .collect();
+        let doc = Value::obj()
+            .with("model", model)
+            .with("records", ToJson::to_json(&result.records))
+            .with("front", Value::Arr(front))
+            .with("skipped", Value::Arr(skipped))
+            .with("stats", result.stats.to_json());
+        println!("{}", doc.to_string_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "== joint quantization × hardware DSE — {model} ({} candidates) ==",
+        result.records.len()
+    );
+    println!(
+        "{:<24} {:>5} {:>7} {:>14} {:>11} {:>9} {:>10} {:>9} {:>7}",
+        "quant", "cores", "L2 kB", "cycles", "latency ms", "sens", "param kB", "mem kB", "pareto"
+    );
+    for (i, r) in result.records.iter().enumerate() {
+        println!(
+            "{:<24} {:>5} {:>7} {:>14} {:>11.3} {:>9.2} {:>10.1} {:>9.1} {:>7}",
+            r.quant_label(),
+            r.cores,
+            r.l2_kb,
+            r.total_cycles,
+            r.latency_s * 1e3,
+            r.sensitivity,
+            r.param_kb,
+            r.mem_kb,
+            if result.front.contains(&i) { "*" } else { "" }
+        );
+    }
+    if !result.skipped.is_empty() {
+        println!(
+            "\n{} candidate(s) screened out as unevaluable:",
+            result.skipped.len()
+        );
+        for (v, e) in &result.skipped {
+            let (quant, cores, l2_kb) = skipped_label(v);
+            println!("  {quant} @ {cores} cores / {l2_kb} kB L2: {e}");
+        }
+    }
+    let s = result.stats;
+    println!(
+        "\nPareto front (sensitivity × latency × memory): {} of {} candidates",
+        result.front.len(),
+        result.records.len()
+    );
+    println!(
+        "cache: stage-1 decorate+fuse {} computed / {} cached, \
+         stage-2 schedule+sim {} computed / {} cached",
+        s.impl_computed, s.impl_hits, s.sim_computed, s.sim_hits
+    );
+    println!(
+        "       {} stage recomputations for {} candidates × 2 stages ({} uncached)",
+        s.recomputations(),
+        result.records.len(),
+        s.naive_recomputations()
+    );
+    Ok(())
+}
+
 fn cmd_dse(args: &Args) -> Result<()> {
+    if args.flag("joint") {
+        return cmd_dse_joint(args);
+    }
     let model = args.get_or("model", "case2");
     let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
     let (g, cfg) = load_model(&model, width_mult)?;
     let grid = GridSearch {
-        base: presets::gap8(),
+        base: load_platform(&args.get_or("platform", "gap8"))?,
         cores: args
             .get_list::<usize>("cores")
             .map_err(io_err)?
@@ -301,7 +455,7 @@ fn io_err(msg: String) -> aladin::AladinError {
 }
 
 fn main() {
-    let args = match Args::from_env(&["json"]) {
+    let args = match Args::from_env(&["json", "joint"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");

@@ -156,6 +156,33 @@ impl PlatformSpec {
         p.name = format!("{}-c{}-l2_{}kB", self.name, cores, l2_bytes / 1024);
         p
     }
+
+    /// Stable content hash over every field of the spec — the platform axis
+    /// of the DSE evaluation-cache key ([`crate::dse::engine`]). Two specs
+    /// with equal hashes schedule and simulate identically.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = crate::util::StableHasher::new();
+        h.write_str(&self.name);
+        h.write_usize(self.cores);
+        h.write_usize(self.l1_banks);
+        h.write_u64(self.l1_bytes);
+        h.write_u64(self.l2_bytes);
+        h.write_u64(self.chunk_bytes);
+        for dma in [&self.dma_l2_l1, &self.dma_l3_l2] {
+            h.write_u64(dma.setup_cycles);
+            h.write_f64(dma.bytes_per_cycle);
+        }
+        h.write_f64(self.costs.macs_per_cycle_int8);
+        h.write_f64(self.costs.unpack_cycles_per_elem);
+        h.write_f64(self.costs.lut_access_cycles);
+        h.write_f64(self.costs.compare_cycles);
+        h.write_f64(self.costs.requant_cycles);
+        h.write_f64(self.costs.l1_access_cycles);
+        h.write_f64(self.costs.im2col_cycles_per_elem);
+        h.write_u64(self.costs.tile_overhead_cycles);
+        h.write_f64(self.clock_hz);
+        h.finish()
+    }
 }
 
 
@@ -311,5 +338,21 @@ mod tests {
         let p = presets::gap8();
         let s = p.cycles_to_seconds(p.clock_hz as u64);
         assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn content_hash_tracks_every_knob() {
+        let p = presets::gap8();
+        assert_eq!(p.content_hash(), presets::gap8().content_hash());
+        assert_ne!(
+            p.content_hash(),
+            p.reconfigure(4, 256 * 1024).content_hash()
+        );
+        let mut q = p.clone();
+        q.costs.macs_per_cycle_int8 = 2.0;
+        assert_ne!(p.content_hash(), q.content_hash());
+        let mut q = p.clone();
+        q.dma_l3_l2.setup_cycles += 1;
+        assert_ne!(p.content_hash(), q.content_hash());
     }
 }

@@ -1,0 +1,134 @@
+//! Stable content hashing for memoization keys (FNV-1a, 64-bit).
+//!
+//! `std::hash` is deliberately avoided: `DefaultHasher` is randomly seeded
+//! per process, but the DSE evaluation cache ([`crate::dse::engine`]) wants
+//! keys that are reproducible across runs, threads, and platforms so cache
+//! behaviour (and the recomputation counters asserted in tests) is
+//! deterministic.
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// An incremental FNV-1a 64-bit hasher with typed write helpers.
+///
+/// Multi-byte integers are fed little-endian; floats via their IEEE-754 bit
+/// pattern; strings are length-prefixed so `("ab", "c")` and `("a", "bc")`
+/// hash differently.
+#[derive(Debug, Clone, Copy)]
+pub struct StableHasher(u64);
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> Self {
+        StableHasher(FNV_OFFSET)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write_bytes(&[v]);
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_u8(v as u8);
+    }
+
+    /// Hash a float by bit pattern (NaN payloads distinguish; -0.0 != 0.0).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-prefixed string hashing.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fold two hashes into one (order-sensitive).
+pub fn combine(a: u64, b: u64) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_u64(a);
+    h.write_u64(b);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_fnv_vectors() {
+        // FNV-1a reference values.
+        let mut h = StableHasher::new();
+        h.write_bytes(b"");
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = StableHasher::new();
+        h.write_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn deterministic_across_hashers() {
+        let word = |s: &str| {
+            let mut h = StableHasher::new();
+            h.write_str(s);
+            h.finish()
+        };
+        assert_eq!(word("design-vector"), word("design-vector"));
+        assert_ne!(word("design-vector"), word("design-vectos"));
+    }
+
+    #[test]
+    fn length_prefix_disambiguates_concatenation() {
+        let mut h1 = StableHasher::new();
+        h1.write_str("ab");
+        h1.write_str("c");
+        let mut h2 = StableHasher::new();
+        h2.write_str("a");
+        h2.write_str("bc");
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn typed_writes_distinguish_values() {
+        let one = |f: &dyn Fn(&mut StableHasher)| {
+            let mut h = StableHasher::new();
+            f(&mut h);
+            h.finish()
+        };
+        assert_ne!(one(&|h| h.write_f64(1.0)), one(&|h| h.write_f64(2.0)));
+        assert_ne!(one(&|h| h.write_u8(1)), one(&|h| h.write_u64(1)));
+        assert_ne!(one(&|h| h.write_bool(true)), one(&|h| h.write_bool(false)));
+    }
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        assert_ne!(combine(1, 2), combine(2, 1));
+        assert_eq!(combine(7, 9), combine(7, 9));
+    }
+}

@@ -1,15 +1,18 @@
 //! In-tree substrates for the offline build: JSON, the YAML-subset config
 //! parser, a deterministic PRNG + property-test harness, a bench harness,
-//! a CLI argument parser, and temp-dir test helpers.
+//! a CLI argument parser, stable content hashing, and temp-dir test
+//! helpers.
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod omap;
 pub mod prng;
 pub mod tempdir;
 pub mod yamlish;
 
+pub use hash::StableHasher;
 pub use json::{ToJson, Value};
 pub use omap::OrderedMap;
 pub use prng::{check_property, Prng};
