@@ -93,6 +93,10 @@ fn main() -> aladin::Result<()> {
         rc21_c3 as f64 / rc21_c2.max(1) as f64
     );
 
+    // ---- per-resource bottleneck attribution (case 1) -------------------
+    println!("\n== bottleneck attribution (case1): which resource bounds each layer ==");
+    print!("{}", report::render_bottlenecks(&analyses[0].sim));
+
     println!("\ntotals:");
     for a in &analyses {
         println!(

@@ -7,18 +7,42 @@
 //! cache collapses the per-quant-config decoration across every hardware
 //! point. Also prints the stage-recomputation accounting that the
 //! `engine_cache` integration test asserts.
+//!
+//! CI smoke mode: `BENCH_TINY=1` shrinks the workload (width-mult 0.25) so
+//! the bench runs in seconds, and `BENCH_JSON_OUT=<path>` writes the
+//! timings + cache counters as a JSON artifact (`BENCH_joint_dse.json`) so
+//! the per-PR perf trajectory accumulates.
 
 use aladin::coordinator::Pipeline;
 use aladin::dse::{explore_joint, EvalEngine, GridSearch, JointSpace};
 use aladin::impl_aware::decorate;
 use aladin::models;
 use aladin::platform::presets;
-use aladin::util::bench::bench;
+use aladin::util::bench::{bench, BenchStats};
+use aladin::util::json::Value;
+use aladin::util::ToJson;
+
+fn stats_json(s: &BenchStats) -> Value {
+    Value::obj()
+        .with("name", s.name.clone())
+        .with("iters", s.iters)
+        .with("min_us", s.min.as_micros() as u64)
+        .with("median_us", s.median.as_micros() as u64)
+        .with("mean_us", s.mean.as_micros() as u64)
+        .with("max_us", s.max.as_micros() as u64)
+}
 
 fn main() {
-    println!("=== joint DSE: sequential pipeline vs cache-backed engine (Case 2) ===");
+    let tiny = std::env::var("BENCH_TINY").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    println!(
+        "=== joint DSE: sequential pipeline vs cache-backed engine (Case 2{}) ===",
+        if tiny { ", tiny grid" } else { "" }
+    );
 
-    let case = models::case2();
+    let mut case = models::case2();
+    if tiny {
+        case.width_mult = 0.25;
+    }
     let (g, cfg) = case.build();
     let grid_points: Vec<(usize, u64)> = [2usize, 4, 8]
         .iter()
@@ -77,13 +101,14 @@ fn main() {
     // (c) the joint quant x hardware product space: 2 quant configs x 9
     // hardware points; each quant config is decorated exactly once
     let space = JointSpace::default_grid();
-    bench("joint_dse/joint_18cand/case2", 1, 3, || {
-        explore_joint(models::case2(), presets::gap8(), &space, None)
+    let case_for_joint = case.clone();
+    let joint_bench = bench("joint_dse/joint_18cand/case2", 1, 3, || {
+        explore_joint(case_for_joint.clone(), presets::gap8(), &space, None)
             .unwrap()
             .records
             .len()
     });
-    let joint = explore_joint(models::case2(), presets::gap8(), &space, None).unwrap();
+    let joint = explore_joint(case.clone(), presets::gap8(), &space, None).unwrap();
     let js = joint.stats;
     println!(
         "joint space: {} candidates, Pareto front {} — {} stage computations \
@@ -96,4 +121,28 @@ fn main() {
         space.quant_axes(10).len(),
         js.sim_computed
     );
+
+    if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
+        let doc = Value::obj()
+            .with("bench", "joint_dse")
+            .with("tiny", tiny)
+            .with("width_mult", case.width_mult)
+            .with("grid_points", grid_points.len())
+            .with("sequential_cand_per_sec", seq_rate)
+            .with("engine_cand_per_sec", eng_rate)
+            .with("speedup", eng_rate / seq_rate)
+            .with(
+                "runs",
+                Value::Arr(vec![
+                    stats_json(&seq),
+                    stats_json(&eng),
+                    stats_json(&joint_bench),
+                ]),
+            )
+            .with("joint_candidates", joint.records.len())
+            .with("joint_front", joint.front.len())
+            .with("cache_stats", js.to_json());
+        std::fs::write(&path, doc.to_string_pretty()).expect("write bench json");
+        println!("wrote bench timings to {path}");
+    }
 }

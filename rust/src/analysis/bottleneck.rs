@@ -1,0 +1,252 @@
+//! Per-resource bottleneck attribution (the paper's §I promise that
+//! ALADIN "enables the evaluation and analysis of inference bottlenecks"
+//! without deployment).
+//!
+//! Built on the simulator's exact exposed-cycle decomposition
+//! (`compute_cycles + exposed_dma_l1_cycles + exposed_dma_l3_cycles ==
+//! cycles`, see [`crate::sim::engine`]): each layer is classified by the
+//! resource that accounts for the largest share of its wall-clock cycles
+//! — the stacked per-mechanism accounting style of ANNETTE and the
+//! bottleneck-classification lens QADAM/QUIDAM use for co-exploration.
+//! Hidden (overlapped) DMA cycles are reported alongside, so a layer that
+//! *would* become DMA-bound at higher core counts is visible before it
+//! does.
+
+use crate::sim::{LayerSimResult, SimResult};
+
+/// The resource that bounds a layer's latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// Cluster compute array dominates.
+    Compute,
+    /// Exposed L2<->L1 cluster-DMA time dominates.
+    DmaL1,
+    /// Exposed L3<->L2 micro-DMA time dominates.
+    DmaL3,
+}
+
+impl Bottleneck {
+    /// Stable label for tables and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Bottleneck::Compute => "compute",
+            Bottleneck::DmaL1 => "dma-l1",
+            Bottleneck::DmaL3 => "dma-l3",
+        }
+    }
+}
+
+/// One layer's bottleneck verdict with its exposed-vs-hidden accounting.
+#[derive(Debug, Clone)]
+pub struct LayerBottleneck {
+    pub name: String,
+    pub cycles: u64,
+    /// The dominant resource (ties resolve compute > dma-l1 > dma-l3).
+    pub bound: Bottleneck,
+    /// Fraction of the layer's cycles attributed to the bounding resource.
+    pub bound_share: f64,
+    pub compute_cycles: u64,
+    pub exposed_dma_l1_cycles: u64,
+    pub exposed_dma_l3_cycles: u64,
+    /// L2<->L1 channel busy time overlapped with compute (hidden by
+    /// double buffering).
+    pub hidden_dma_l1_cycles: u64,
+    /// L3 prefetch time overlapped with the previous layer.
+    pub hidden_dma_l3_cycles: u64,
+}
+
+/// Classify one layer from its simulator accounting.
+pub fn classify_layer(l: &LayerSimResult) -> LayerBottleneck {
+    let parts = [
+        (Bottleneck::Compute, l.compute_cycles),
+        (Bottleneck::DmaL1, l.exposed_dma_l1_cycles),
+        (Bottleneck::DmaL3, l.exposed_dma_l3_cycles),
+    ];
+    // strict > keeps the earlier (higher-priority) resource on ties
+    let (bound, cycles) = parts
+        .iter()
+        .copied()
+        .fold(parts[0], |best, p| if p.1 > best.1 { p } else { best });
+    LayerBottleneck {
+        name: l.name.clone(),
+        cycles: l.cycles,
+        bound,
+        bound_share: cycles as f64 / l.cycles.max(1) as f64,
+        compute_cycles: l.compute_cycles,
+        exposed_dma_l1_cycles: l.exposed_dma_l1_cycles,
+        exposed_dma_l3_cycles: l.exposed_dma_l3_cycles,
+        hidden_dma_l1_cycles: l.dma_l1_cycles.saturating_sub(l.exposed_dma_l1_cycles),
+        hidden_dma_l3_cycles: l.hidden_dma_l3_cycles,
+    }
+}
+
+/// Classify every layer of a simulation.
+pub fn classify(sim: &SimResult) -> Vec<LayerBottleneck> {
+    sim.layers.iter().map(classify_layer).collect()
+}
+
+/// Network-level bottleneck summary.
+#[derive(Debug, Clone)]
+pub struct BottleneckReport {
+    pub layers: Vec<LayerBottleneck>,
+    pub total_cycles: u64,
+    pub total_compute_cycles: u64,
+    pub total_exposed_dma_l1_cycles: u64,
+    pub total_exposed_dma_l3_cycles: u64,
+}
+
+impl BottleneckReport {
+    pub fn from_sim(sim: &SimResult) -> Self {
+        let layers = classify(sim);
+        BottleneckReport {
+            total_cycles: sim.total_cycles(),
+            total_compute_cycles: layers.iter().map(|l| l.compute_cycles).sum(),
+            total_exposed_dma_l1_cycles: layers.iter().map(|l| l.exposed_dma_l1_cycles).sum(),
+            total_exposed_dma_l3_cycles: layers.iter().map(|l| l.exposed_dma_l3_cycles).sum(),
+            layers,
+        }
+    }
+
+    /// Number of layers bound by `b`.
+    pub fn count(&self, b: Bottleneck) -> usize {
+        self.layers.iter().filter(|l| l.bound == b).count()
+    }
+
+    /// The network-level dominant resource (by total exposed cycles).
+    pub fn dominant(&self) -> Bottleneck {
+        let parts = [
+            (Bottleneck::Compute, self.total_compute_cycles),
+            (Bottleneck::DmaL1, self.total_exposed_dma_l1_cycles),
+            (Bottleneck::DmaL3, self.total_exposed_dma_l3_cycles),
+        ];
+        parts
+            .iter()
+            .copied()
+            .fold(parts[0], |best, p| if p.1 > best.1 { p } else { best })
+            .0
+    }
+}
+
+impl crate::util::ToJson for LayerBottleneck {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("layer", self.name.clone())
+            .with("cycles", self.cycles)
+            .with("bound", self.bound.label())
+            .with("bound_share", self.bound_share)
+            .with("compute_cycles", self.compute_cycles)
+            .with("exposed_dma_l1_cycles", self.exposed_dma_l1_cycles)
+            .with("exposed_dma_l3_cycles", self.exposed_dma_l3_cycles)
+            .with("hidden_dma_l1_cycles", self.hidden_dma_l1_cycles)
+            .with("hidden_dma_l3_cycles", self.hidden_dma_l3_cycles)
+    }
+}
+
+impl crate::util::ToJson for BottleneckReport {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("total_cycles", self.total_cycles)
+            .with("total_compute_cycles", self.total_compute_cycles)
+            .with("total_exposed_dma_l1_cycles", self.total_exposed_dma_l1_cycles)
+            .with("total_exposed_dma_l3_cycles", self.total_exposed_dma_l3_cycles)
+            .with("dominant", self.dominant().label())
+            .with("layers", crate::util::ToJson::to_json(&self.layers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::{build_schedule, fuse};
+    use crate::sim::simulate;
+
+    fn sim(cout: usize, cores: usize, l2_kb: u64) -> SimResult {
+        let mut b = GraphBuilder::new(
+            "b",
+            TensorSpec::chw(16, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(cout, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8_with(cores, l2_kb)).unwrap())
+    }
+
+    #[test]
+    fn shares_and_counts_consistent() {
+        let s = sim(256, 8, 512);
+        let report = BottleneckReport::from_sim(&s);
+        assert_eq!(report.layers.len(), s.layers.len());
+        assert_eq!(report.total_cycles, s.total_cycles());
+        assert_eq!(
+            report.total_compute_cycles
+                + report.total_exposed_dma_l1_cycles
+                + report.total_exposed_dma_l3_cycles,
+            report.total_cycles
+        );
+        let counted = report.count(Bottleneck::Compute)
+            + report.count(Bottleneck::DmaL1)
+            + report.count(Bottleneck::DmaL3);
+        assert_eq!(counted, report.layers.len());
+        for l in &report.layers {
+            assert!(l.bound_share > 0.0 && l.bound_share <= 1.0, "{}", l.name);
+            // the bounding resource holds the plurality of the cycles
+            assert!(l.bound_share >= 1.0 / 3.0 - 1e-9, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn wide_layer_on_many_cores_is_compute_bound() {
+        // plenty of parallel work, everything L2-resident: compute wins
+        let s = sim(128, 2, 512);
+        let report = BottleneckReport::from_sim(&s);
+        assert_eq!(report.layers[0].bound, Bottleneck::Compute);
+        assert_eq!(report.dominant(), Bottleneck::Compute);
+    }
+
+    #[test]
+    fn streamed_weights_shift_the_bound_to_l3() {
+        // a pointwise layer with a huge weight set and almost no spatial
+        // work, streamed from L3 on a small L2: the micro-DMA dominates
+        let mut b = GraphBuilder::new(
+            "b",
+            TensorSpec::chw(1024, 2, 2, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(2048, 1, 1, 0), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let s =
+            simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8_with(8, 256)).unwrap());
+        let report = BottleneckReport::from_sim(&s);
+        let l = &report.layers[0];
+        assert!(
+            l.exposed_dma_l3_cycles > l.compute_cycles,
+            "exposed l3 {} vs compute {}",
+            l.exposed_dma_l3_cycles,
+            l.compute_cycles
+        );
+        assert_eq!(l.bound, Bottleneck::DmaL3);
+    }
+
+    #[test]
+    fn json_shape() {
+        use crate::util::ToJson;
+        let report = BottleneckReport::from_sim(&sim(64, 8, 512));
+        let v = report.to_json();
+        assert!(v.get("dominant").is_some());
+        assert_eq!(
+            v.get("layers").unwrap().as_arr().unwrap().len(),
+            report.layers.len()
+        );
+        assert!(["compute", "dma-l1", "dma-l3"]
+            .contains(&v.str_field("dominant").unwrap()));
+    }
+}

@@ -1,7 +1,10 @@
-//! Latency analysis and deadline screening of candidate configurations.
+//! Latency analysis, per-resource bottleneck attribution, and deadline
+//! screening of candidate configurations.
 
+pub mod bottleneck;
 pub mod latency;
 pub mod schedulability;
 
+pub use bottleneck::{classify, classify_layer, Bottleneck, BottleneckReport, LayerBottleneck};
 pub use latency::{check_deadline, Feasibility, LatencyBound};
 pub use schedulability::{rta_nonpreemptive, schedulable, total_utilization, InferenceTask, TaskVerdict};

@@ -25,7 +25,7 @@ use crate::graph::{qonnx, validate};
 use crate::impl_aware::{decorate, layer_summaries, ImplConfig, LayerSummary};
 use crate::platform::PlatformSpec;
 use crate::platform_aware::{build_schedule, fuse, FusedLayer, NetworkSchedule};
-use crate::sim::{simulate, SimResult};
+use crate::sim::{simulate, simulate_traced, SimResult, Timeline};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -100,6 +100,26 @@ pub fn stage_impl_decorated(decorated: Arc<Graph>) -> Result<ImplModel> {
 pub fn stage_platform(fused: &[FusedLayer], platform: &PlatformSpec) -> Result<PlatformEval> {
     let schedule = build_schedule(fused.to_vec(), platform)?;
     let sim = simulate(&schedule);
+    Ok(assemble_eval(&schedule, sim, platform))
+}
+
+/// [`stage_platform`] with span recording: also returns the per-resource
+/// [`Timeline`] of the simulation (bottleneck traces, Chrome-trace
+/// export). The `PlatformEval` is bit-identical to the untraced stage.
+pub fn stage_platform_traced(
+    fused: &[FusedLayer],
+    platform: &PlatformSpec,
+) -> Result<(PlatformEval, Timeline)> {
+    let schedule = build_schedule(fused.to_vec(), platform)?;
+    let (sim, timeline) = simulate_traced(&schedule);
+    Ok((assemble_eval(&schedule, sim, platform), timeline))
+}
+
+fn assemble_eval(
+    schedule: &NetworkSchedule,
+    sim: SimResult,
+    platform: &PlatformSpec,
+) -> PlatformEval {
     let latency = LatencyBound::from_sim(&sim, platform);
     let tilings = schedule
         .layers
@@ -113,7 +133,7 @@ pub fn stage_platform(fused: &[FusedLayer], platform: &PlatformSpec) -> Result<P
             )
         })
         .collect();
-    Ok(PlatformEval {
+    PlatformEval {
         platform: platform.name.clone(),
         peak_l1: schedule.peak_l1(),
         peak_l2: schedule.peak_l2(),
@@ -121,7 +141,7 @@ pub fn stage_platform(fused: &[FusedLayer], platform: &PlatformSpec) -> Result<P
         sim,
         latency,
         tilings,
-    })
+    }
 }
 
 /// Everything ALADIN produces for one (model, impl config, platform)
@@ -183,6 +203,14 @@ impl Pipeline {
         let impl_model = stage_impl(canonical, &self.impl_config)?;
         let eval = stage_platform(&impl_model.fused, &self.platform)?;
         Ok(Analysis::from_stages(impl_model, eval))
+    }
+
+    /// [`Pipeline::analyze`] with span recording: also returns the
+    /// simulator's per-resource [`Timeline`] for bottleneck traces.
+    pub fn analyze_traced(&self, canonical: Graph) -> Result<(Analysis, Timeline)> {
+        let impl_model = stage_impl(canonical, &self.impl_config)?;
+        let (eval, timeline) = stage_platform_traced(&impl_model.fused, &self.platform)?;
+        Ok((Analysis::from_stages(impl_model, eval), timeline))
     }
 
     /// The platform-aware model alone (for inspection / DSE reuse).
@@ -282,6 +310,20 @@ mod tests {
         assert_eq!(eval.peak_l2, monolithic.peak_l2);
         assert_eq!(eval.l3_traffic, monolithic.l3_traffic);
         assert_eq!(eval.tilings.len(), eval.sim.layers.len());
+    }
+
+    #[test]
+    fn traced_analysis_matches_untraced() {
+        let mut case = models::case2();
+        case.width_mult = 0.25;
+        let (g, cfg) = case.build();
+        let pipe = Pipeline::new(presets::gap8(), cfg);
+        let plain = pipe.analyze(g.clone()).unwrap();
+        let (traced, timeline) = pipe.analyze_traced(g).unwrap();
+        assert_eq!(plain.latency.total_cycles, traced.latency.total_cycles);
+        assert_eq!(plain.sim.layers.len(), traced.sim.layers.len());
+        assert_eq!(timeline.end(), traced.sim.total_cycles());
+        assert!(!timeline.spans.is_empty());
     }
 
     #[test]

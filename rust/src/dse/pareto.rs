@@ -61,11 +61,15 @@ pub fn pareto_min_indices(points: &[[f64; 3]]) -> Vec<usize> {
 
 /// Filter candidates meeting a deadline (cycles), then return the
 /// accuracy-maximal one — the "best feasible configuration" query.
+/// Candidates reporting NaN accuracy (e.g. a failed accuracy evaluation)
+/// are screened out rather than aborting the whole DSE run, and the
+/// remaining comparison is total (`f64::total_cmp`), so this never
+/// panics.
 pub fn best_feasible(candidates: &[Candidate], deadline_cycles: u64) -> Option<Candidate> {
     candidates
         .iter()
-        .filter(|c| c.latency_cycles <= deadline_cycles)
-        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .filter(|c| c.latency_cycles <= deadline_cycles && !c.accuracy.is_nan())
+        .max_by(|a, b| a.accuracy.total_cmp(&b.accuracy))
         .cloned()
 }
 
@@ -108,6 +112,28 @@ mod tests {
         assert_eq!(best_feasible(&c, 550).unwrap().name, "b");
         assert_eq!(best_feasible(&c, 2000).unwrap().name, "a");
         assert!(best_feasible(&c, 100).is_none());
+    }
+
+    #[test]
+    fn best_feasible_survives_nan_accuracy() {
+        // regression: partial_cmp().unwrap() aborted the run on NaN
+        let mut c = cands();
+        c.push(Candidate {
+            name: "nan".into(),
+            accuracy: f64::NAN,
+            latency_cycles: 1,
+            peak_mem_bytes: 1,
+        });
+        assert_eq!(best_feasible(&c, 2000).unwrap().name, "a");
+        assert_eq!(best_feasible(&c, 550).unwrap().name, "b");
+        // all-NaN feasible set: no usable candidate
+        let only_nan = vec![Candidate {
+            name: "nan".into(),
+            accuracy: f64::NAN,
+            latency_cycles: 1,
+            peak_mem_bytes: 1,
+        }];
+        assert!(best_feasible(&only_nan, 2000).is_none());
     }
 
     #[test]

@@ -24,6 +24,7 @@ USAGE:
   aladin analyze  [--model case1|case2|case3|lenet|<file.qonnx.json>]
                   [--impl-config <file.yaml>] [--platform gap8|stm32n6|<file.json>]
                   [--deadline-ms <f64>] [--width-mult <f64>] [--json]
+                  [--bottlenecks [--trace-out <file.json>]]
   aladin dse      [--model <m>] [--cores 2,4,8] [--l2-kb 256,320,512]
                   [--platform gap8|stm32n6|<file.json>] [--width-mult <f64>] [--json]
   aladin dse --joint
@@ -77,10 +78,36 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     }
     let platform = load_platform(&args.get_or("platform", "gap8"))?;
     let pipe = Pipeline::new(platform.clone(), cfg);
-    let analysis = pipe.analyze(g)?;
+    // --bottlenecks records the per-resource span timeline alongside the
+    // (bit-identical) analysis so the classification can be exported as a
+    // Chrome trace
+    let (analysis, timeline) = if args.flag("bottlenecks") {
+        let (a, t) = pipe.analyze_traced(g)?;
+        (a, Some(t))
+    } else {
+        (pipe.analyze(g)?, None)
+    };
+    // one export path shared by both output modes
+    let trace_export = match &timeline {
+        Some(tl) => {
+            let out = args.get_or("trace-out", "bottlenecks.trace.json");
+            let trace = aladin::sim::Trace::from_timeline(tl);
+            trace.write_chrome_trace(&out)?;
+            Some((out, trace))
+        }
+        None => None,
+    };
 
     if args.flag("json") {
-        println!("{}", analysis.to_json().to_string_pretty());
+        let mut doc = analysis.to_json();
+        if let Some((out, _)) = &trace_export {
+            doc.set(
+                "bottlenecks",
+                aladin::analysis::BottleneckReport::from_sim(&analysis.sim).to_json(),
+            );
+            doc.set("trace_out", out.clone());
+        }
+        println!("{}", doc.to_string_pretty());
         return Ok(());
     }
 
@@ -138,6 +165,19 @@ fn cmd_analyze(args: &Args) -> Result<()> {
                 println!("deadline {ms} ms: MISS (overrun {:.3} ms)", overrun_s * 1e3)
             }
         }
+    }
+
+    if let Some((out, trace)) = &trace_export {
+        println!("\n== per-resource bottleneck attribution ==");
+        print!("{}", report::render_bottlenecks(&analysis.sim));
+        println!(
+            "wrote {out}: {} spans over {} cycles (cluster {:.1}%, dma-l1 {:.1}%, dma-l3 {:.1}%)",
+            trace.spans.len(),
+            trace.end(),
+            trace.track_utilization("cluster") * 100.0,
+            trace.track_utilization("dma-l1") * 100.0,
+            trace.track_utilization("dma-l3") * 100.0
+        );
     }
     Ok(())
 }
@@ -353,14 +393,15 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Export a Chrome-trace JSON of the simulated execution timeline.
+/// Export a Chrome-trace JSON of the simulated execution timeline (the
+/// exact per-tile resource spans recorded by the simulator).
 fn cmd_trace(args: &Args) -> Result<()> {
     let model = args.get_or("model", "case1");
     let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
     let (g, cfg) = load_model(&model, width_mult)?;
     let pipe = Pipeline::new(presets::gap8(), cfg);
-    let analysis = pipe.analyze(g)?;
-    let trace = aladin::sim::Trace::from_sim(&analysis.sim);
+    let (_, timeline) = pipe.analyze_traced(g)?;
+    let trace = aladin::sim::Trace::from_timeline(&timeline);
     let out = args.get_or("out", "trace.json");
     trace.write_chrome_trace(&out)?;
     println!(
@@ -455,7 +496,7 @@ fn io_err(msg: String) -> aladin::AladinError {
 }
 
 fn main() {
-    let args = match Args::from_env(&["json", "joint"]) {
+    let args = match Args::from_env(&["json", "joint", "bottlenecks"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");

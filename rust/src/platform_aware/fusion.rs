@@ -28,6 +28,9 @@ pub enum LayerKind {
         out_dims: (usize, usize, usize),
         kernel: (usize, usize),
         stride: (usize, usize),
+        /// Symmetric zero padding (height, width) — padding rows/cols are
+        /// synthesized on the fly, never DMA-ed.
+        padding: (usize, usize),
         /// Weight / activation / accumulator element types.
         w_type: ElemType,
         x_type: ElemType,
@@ -47,6 +50,8 @@ pub enum LayerKind {
         in_dims: (usize, usize, usize),
         out_dims: (usize, usize, usize),
         kernel: (usize, usize),
+        /// Symmetric zero padding (height, width).
+        padding: (usize, usize),
         x_type: ElemType,
         is_avg: bool,
         has_relu: bool,
@@ -285,12 +290,13 @@ fn build_linear_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<Fused
         }
     }
 
-    let (m, k, n, groups, kernel, stride, out_dims) = match &head.op {
+    let (m, k, n, groups, kernel, stride, padding, out_dims) = match &head.op {
         Op::MatMul(a) => {
             let conv = a.from_conv.as_ref();
             let groups = conv.map(|c| c.groups).unwrap_or(1);
             let kernel = conv.map(|c| c.kernel).unwrap_or((1, 1));
             let stride = conv.map(|c| c.stride).unwrap_or((1, 1));
+            let padding = conv.map(|c| c.padding).unwrap_or((0, 0));
             let head_out = g.output_edge(head.id).unwrap();
             let out_dims = if head_out.spec.dims.len() == 3 {
                 (
@@ -301,7 +307,7 @@ fn build_linear_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<Fused
             } else {
                 (a.m, 1, 1)
             };
-            (a.m, a.k, a.n, groups, kernel, stride, out_dims)
+            (a.m, a.k, a.n, groups, kernel, stride, padding, out_dims)
         }
         Op::Conv(a) => {
             // direct (non-rewritten) convolution
@@ -313,6 +319,7 @@ fn build_linear_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<Fused
                 a.groups,
                 a.kernel,
                 a.stride,
+                a.padding,
                 (a.out_channels, oh, ow),
             )
         }
@@ -323,6 +330,7 @@ fn build_linear_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<Fused
             1,
             (1, 1),
             (1, 1),
+            (0, 0),
             (a.out_features, 1, 1),
         ),
         _ => unreachable!(),
@@ -346,6 +354,7 @@ fn build_linear_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<Fused
             out_dims,
             kernel,
             stride,
+            padding,
             w_type,
             x_type: x.spec.elem,
             acc_type,
@@ -393,6 +402,7 @@ fn build_pool_layer(g: &Graph, name: String, group: &[NodeId]) -> Result<FusedLa
             in_dims: (x.spec.dims[0], x.spec.dims[1], x.spec.dims[2]),
             out_dims: (x.spec.dims[0], oh, ow),
             kernel: attrs.kernel,
+            padding: attrs.padding,
             x_type: x.spec.elem,
             is_avg,
             has_relu,

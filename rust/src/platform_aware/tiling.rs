@@ -74,6 +74,9 @@ struct TileGeom {
     acc_bits: u64,
     kernel: (usize, usize),
     stride: (usize, usize),
+    /// Symmetric zero padding (height, width): padded rows are
+    /// synthesized, never DMA-ed.
+    padding: (usize, usize),
     depthwise: bool,
     /// For FC / elementwise: no spatial tiling possible.
     spatial_tilable: bool,
@@ -87,6 +90,7 @@ fn geom_of(layer: &FusedLayer) -> TileGeom {
             out_dims,
             kernel,
             stride,
+            padding,
             w_type,
             x_type,
             acc_type,
@@ -103,6 +107,7 @@ fn geom_of(layer: &FusedLayer) -> TileGeom {
             acc_bits: acc_type.bits as u64,
             kernel: *kernel,
             stride: *stride,
+            padding: *padding,
             depthwise: *depthwise,
             spatial_tilable: out_dims.1 > 1,
         },
@@ -110,6 +115,7 @@ fn geom_of(layer: &FusedLayer) -> TileGeom {
             in_dims,
             out_dims,
             kernel,
+            padding,
             x_type,
             ..
         } => TileGeom {
@@ -122,6 +128,7 @@ fn geom_of(layer: &FusedLayer) -> TileGeom {
             acc_bits: 0,
             kernel: *kernel,
             stride: *kernel,
+            padding: *padding,
             depthwise: true, // pooling is channel-independent like depthwise
             spatial_tilable: out_dims.1 > 1,
         },
@@ -135,6 +142,7 @@ fn geom_of(layer: &FusedLayer) -> TileGeom {
             acc_bits: 0,
             kernel: (1, 1),
             stride: (1, 1),
+            padding: (0, 0),
             depthwise: true,
             spatial_tilable: false,
         },
@@ -147,16 +155,44 @@ fn buf_bytes(elems: u64, bits: u64) -> u64 {
     elems * bits.div_ceil(8).max(1)
 }
 
+/// Input rows the *worst* spatial tile actually DMA-es: the nominal halo
+/// window `(th_out - 1) * stride + kernel`, clipped per tile to the real
+/// (unpadded) input — boundary tiles overlap the zero-padding region,
+/// whose rows are synthesized rather than transferred, so charging the
+/// full nominal window overcounts padded convolutions.
+fn max_tile_input_rows(g: &TileGeom, tiles_h: usize, th_out: usize) -> usize {
+    let hin = g.in_dims.1 as i64;
+    let nominal = ((th_out - 1) * g.stride.0 + g.kernel.0) as i64;
+    let pad = g.padding.0 as i64;
+    let step = (th_out * g.stride.0) as i64; // first-input-row advance per tile
+    // non-empty tiles of a possibly ragged split
+    let last = (g.out_dims.1.div_ceil(th_out).min(tiles_h.max(1)) - 1) as i64;
+    // rows(t) = min(t*step - pad + nominal, hin) - max(t*step - pad, 0) is
+    // unimodal in t: increasing while the tile still overlaps the top
+    // padding, non-increasing once past it — so the maximum is at one of
+    // the boundaries or the first tile clear of the padding. O(1) instead
+    // of a scan (this sits inside the per-layer tiling search).
+    let t_peak = ((pad + step - 1) / step).min(last);
+    let mut worst = 1i64;
+    for t in [0, (t_peak - 1).max(0), t_peak, last] {
+        let in_first = t * step - pad;
+        let rows = (in_first + nominal).min(hin) - in_first.max(0);
+        worst = worst.max(rows);
+    }
+    worst as usize
+}
+
 /// Buffer sizes for a (tiles_c, tiles_h) candidate.
 fn tile_buffers(g: &TileGeom, tiles_c: usize, tiles_h: usize) -> TileBuffers {
-    let (cin, hin, win) = g.in_dims;
+    let (cin, _, win) = g.in_dims;
     let (cout, hout, wout) = g.out_dims;
 
     let tc_out = cout.div_ceil(tiles_c);
     let th_out = hout.div_ceil(tiles_h);
 
-    // input rows needed for th_out output rows, with kernel halo
-    let th_in = ((th_out - 1) * g.stride.0 + g.kernel.0).min(hin);
+    // input rows needed for th_out output rows, with kernel halo, clamped
+    // to what the padded geometry actually transfers
+    let th_in = max_tile_input_rows(g, tiles_h, th_out);
 
     // channel tiling shrinks the input only for channel-independent ops
     // (depthwise, pooling); dense convolutions need all input channels.
@@ -326,6 +362,47 @@ mod tests {
         // weights replicated across spatial tiles but cover all channels
         let w_total = plan.tile_weight_bytes * plan.tiles_c as u64;
         assert!(w_total * 8 >= l.param_bits - l.temp_bits);
+    }
+
+    #[test]
+    fn padded_conv_halo_not_overcounted() {
+        // regression: a stride-1 pad-1 3x3 conv charged
+        // (th_out-1)*stride + kernel input rows per spatial tile even
+        // though boundary tiles overlap the (never-DMA-ed) padding.
+        let l = layer_for(4, 8, 16, 8); // 4ch 16x16 input, k3 s1 p1
+        let g = geom_of(&l);
+        assert_eq!(g.padding, (1, 1));
+        assert_eq!(g.out_dims.1, 16);
+
+        // two spatial tiles of 8 output rows each: the nominal window is
+        // 10 rows, but every tile borders padding on one side -> 9 rows
+        let b2 = tile_buffers(&g, 1, 2);
+        assert_eq!(b2.input, 4 * 9 * 16);
+
+        // single pass: 18 nominal rows clamp to the real 16 input rows
+        let b1 = tile_buffers(&g, 1, 1);
+        assert_eq!(b1.input, 4 * 16 * 16);
+
+        // four tiles of 4 output rows: interior tiles still need the full
+        // 6-row halo window — only boundary tiles save the padding row
+        let b4 = tile_buffers(&g, 1, 4);
+        assert_eq!(b4.input, 4 * 6 * 16);
+
+        // an unpadded conv keeps the exact nominal charge
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(4, 18, 18, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c", ConvAttrs::standard(8, 3, 1, 0), ElemType::int(8))
+            .relu("r")
+            .quant("q", ElemType::int(8), false);
+        let gr = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let lu = fuse(&gr).unwrap().into_iter().next().unwrap();
+        let gu = geom_of(&lu);
+        assert_eq!(gu.out_dims.1, 16);
+        let bu = tile_buffers(&gu, 1, 2); // 8 out rows -> 10 in rows, no padding saved
+        assert_eq!(bu.input, 4 * 10 * 18);
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn tile_compute_cycles(
             k,
             w_type,
             x_type,
+            y_type,
             strategy,
             quant,
             has_relu,
@@ -131,9 +132,11 @@ pub fn tile_compute_cycles(
             post += match quant {
                 Some(QuantImpl::Dyadic) => c.requant_cycles,
                 Some(QuantImpl::Thresholds) => {
-                    // log2(T) comparisons per element
-                    let l_y: f64 = 8.0; // tree depth bounded by output bits; dominated by compare cost
-                    c.compare_cycles * l_y.min(8.0)
+                    // the tree selects among the 2^Ly output codes, so its
+                    // depth is ceil(log2(2^Ly)) = Ly comparisons for the
+                    // *actual* output precision — int4/int2 outputs walk a
+                    // shallower tree than int8 ones
+                    c.compare_cycles * y_type.bits as f64
                 }
                 Some(QuantImpl::Lut) => c.lut_access_cycles,
                 None => 0.0,
@@ -285,6 +288,42 @@ mod tests {
         );
         assert!(c.unpack_cycles > 0); // int4 weights
         assert!(c.post_cycles > 0); // fused relu+quant
+    }
+
+    #[test]
+    fn threshold_requant_depth_tracks_output_bits() {
+        // regression: the comparison-tree depth was hardcoded to 8, so
+        // int4/int2 outputs were overcharged. Depth must be Ly.
+        fn thresh_layer(y_bits: u8) -> (FusedLayer, TilePlan) {
+            let mut b = GraphBuilder::new(
+                "t",
+                TensorSpec::chw(16, 8, 8, ElemType::int(8)),
+                ElemType::int(32),
+            );
+            b.conv("c", ConvAttrs::standard(32, 3, 1, 1), ElemType::int(8))
+                .relu("r")
+                .quant("q", ElemType::int(y_bits), false);
+            let mut cfg = ImplConfig::default();
+            cfg.set_node(
+                "q",
+                NodeImplSpec {
+                    implementation: Some("thresholds".into()),
+                    ..Default::default()
+                },
+            );
+            let g = decorate(b.finish(), &cfg).unwrap();
+            let l = fuse(&g).unwrap().into_iter().next().unwrap();
+            let p = plan_layer(&l, &presets::gap8()).unwrap();
+            (l, p)
+        }
+        let (l2, p2) = thresh_layer(2);
+        let (l4, p4) = thresh_layer(4);
+        let (l8, p8) = thresh_layer(8);
+        let c2 = tile_compute_cycles(&l2, &p2, &presets::gap8()).post_cycles;
+        let c4 = tile_compute_cycles(&l4, &p4, &presets::gap8()).post_cycles;
+        let c8 = tile_compute_cycles(&l8, &p8, &presets::gap8()).post_cycles;
+        assert!(c4 < c8, "4-bit post {c4} !< 8-bit post {c8}");
+        assert!(c2 < c4, "2-bit post {c2} !< 4-bit post {c4}");
     }
 
     #[test]

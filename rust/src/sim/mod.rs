@@ -1,6 +1,9 @@
 //! The cycle simulator (GVSoC substitute): per-tile compute cycle model,
-//! event-driven tile pipeline with DMA/compute overlap, and Fig.-6-style
-//! reporting.
+//! a bounded-buffer three-resource timeline engine (cluster compute array,
+//! L2<->L1 cluster DMA, L3<->L2 micro-DMA) with exact exposed-cycle
+//! decomposition per layer, and Fig.-6-style reporting plus per-resource
+//! bottleneck tables ([`report::render_bottlenecks`]) and Chrome-trace
+//! export ([`trace::Trace`]).
 
 pub mod compute;
 pub mod engine;
@@ -8,6 +11,9 @@ pub mod report;
 pub mod trace;
 
 pub use compute::{cores_used, lut_contention_factor, tile_compute_cycles, TileComputeCycles};
-pub use engine::{simulate, LayerSimResult, SimResult};
-pub use report::{fig6_rows, render_comparison, Fig6Row};
+pub use engine::{
+    simulate, simulate_traced, LayerSimResult, ResourceKind, SimResult, SpanKind, Timeline,
+    TimelineSpan,
+};
+pub use report::{fig6_rows, render_bottlenecks, render_comparison, Fig6Row};
 pub use trace::{Span, Trace};

@@ -1,5 +1,6 @@
-//! Reporting: Fig.-6-style per-layer tables (cycles, L1/L2 utilization)
-//! and comparison tables across cases / platforms.
+//! Reporting: Fig.-6-style per-layer tables (cycles, L1/L2 utilization),
+//! comparison tables across cases / platforms, and the per-resource
+//! bottleneck table built on [`crate::analysis::bottleneck`].
 
 use super::engine::SimResult;
 use std::fmt::Write as _;
@@ -79,6 +80,67 @@ pub fn render_comparison(names: &[&str], sims: &[&SimResult]) -> String {
     out
 }
 
+/// Render the per-layer bottleneck classification table: dominant
+/// resource, exposed compute/DMA decomposition, and hidden (overlapped)
+/// DMA cycles per layer, with a network-level summary line.
+pub fn render_bottlenecks(sim: &SimResult) -> String {
+    let report = crate::analysis::bottleneck::BottleneckReport::from_sim(sim);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<8} {:>12} {:>8} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "layer",
+        "cycles",
+        "bound",
+        "share",
+        "compute",
+        "exp dma-l1",
+        "exp dma-l3",
+        "hid dma-l1",
+        "hid dma-l3"
+    );
+    // header geometry: 8-wide layer column + {12,8,6}-wide columns + five
+    // 12-wide cycle columns, each preceded by one space
+    let width = 8 + (1 + 12) + (1 + 8) + (1 + 6) + 5 * (1 + 12);
+    let _ = writeln!(out, "{}", "-".repeat(width));
+    for l in &report.layers {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>12} {:>8} {:>5.0}% {:>12} {:>12} {:>12} {:>12} {:>12}",
+            l.name,
+            l.cycles,
+            l.bound.label(),
+            l.bound_share * 100.0,
+            l.compute_cycles,
+            l.exposed_dma_l1_cycles,
+            l.exposed_dma_l3_cycles,
+            l.hidden_dma_l1_cycles,
+            l.hidden_dma_l3_cycles
+        );
+    }
+    let _ = writeln!(out, "{}", "-".repeat(width));
+    let _ = writeln!(
+        out,
+        "{:<8} {:>12} {:>8} {:>6} {:>12} {:>12} {:>12}",
+        "total",
+        report.total_cycles,
+        report.dominant().label(),
+        "",
+        report.total_compute_cycles,
+        report.total_exposed_dma_l1_cycles,
+        report.total_exposed_dma_l3_cycles
+    );
+    use crate::analysis::bottleneck::Bottleneck;
+    let _ = writeln!(
+        out,
+        "layers bound by: compute {}, dma-l1 {}, dma-l3 {}",
+        report.count(Bottleneck::Compute),
+        report.count(Bottleneck::DmaL1),
+        report.count(Bottleneck::DmaL3)
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +172,17 @@ mod tests {
         let rows = fig6_rows(&sim());
         assert_eq!(rows.len(), 2); // RC_1, FC_1 (flatten skipped)
         assert!(rows.iter().all(|r| r.cycles > 0));
+    }
+
+    #[test]
+    fn bottleneck_table_renders_every_layer() {
+        let s = sim();
+        let table = render_bottlenecks(&s);
+        for l in &s.layers {
+            assert!(table.contains(l.name.as_str()), "missing {}", l.name);
+        }
+        assert!(table.contains("layers bound by:"));
+        assert!(table.contains("total"));
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Execution trace recording — the simulator's equivalent of GVSoC's
-//! VCD/trace output. Records per-layer DMA/compute spans on a virtual
-//! timeline and exports Chrome-trace JSON (`chrome://tracing` /
-//! Perfetto-compatible) for visual inspection of the pipeline overlap.
+//! VCD/trace output. Exports Chrome-trace JSON (`chrome://tracing` /
+//! Perfetto-compatible) for visual inspection of the pipeline overlap,
+//! either from the exact per-tile resource timeline recorded by
+//! [`simulate_traced`](super::engine::simulate_traced)
+//! ([`Trace::from_timeline`]) or reconstructed at layer granularity from
+//! a bare [`SimResult`] ([`Trace::from_sim`]).
 
-use super::engine::SimResult;
+use super::engine::{SimResult, SpanKind, Timeline};
 use crate::util::json::Value;
 use std::path::Path;
 
@@ -60,6 +63,31 @@ impl Trace {
             }
             t += l.cycles;
         }
+        Trace { spans }
+    }
+
+    /// Build the exact multi-resource trace from a recorded simulation
+    /// timeline: every temp load, per-tile DMA/compute span, exposed L3
+    /// block, and hidden prefetch appears individually on its resource's
+    /// track — the faithful view of the bounded-buffer pipeline.
+    pub fn from_timeline(timeline: &Timeline) -> Trace {
+        let spans = timeline
+            .spans
+            .iter()
+            .map(|s| Span {
+                track: s.resource.track(),
+                name: match s.kind {
+                    SpanKind::TempLoad => format!("{} temps", s.layer),
+                    SpanKind::DmaIn(i) => format!("{} in[{i}]", s.layer),
+                    SpanKind::Compute(i) => format!("{} compute[{i}]", s.layer),
+                    SpanKind::DmaOut(i) => format!("{} out[{i}]", s.layer),
+                    SpanKind::L3Exposed => format!("{} weights (exposed)", s.layer),
+                    SpanKind::L3Prefetch => format!("{} weights (prefetch)", s.layer),
+                },
+                start: s.start,
+                dur: s.dur(),
+            })
+            .collect();
         Trace { spans }
     }
 
@@ -176,6 +204,38 @@ mod tests {
             assert!((0.0..=1.0).contains(&u), "{track}: {u}");
         }
         assert!(tr.track_utilization("cluster") > 0.0);
+    }
+
+    #[test]
+    fn timeline_trace_is_exact_and_valid() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(8, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(32, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .conv("c1", ConvAttrs::standard(64, 3, 1, 1), ElemType::int(8))
+            .relu("r1")
+            .quant("q1", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let s = build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap();
+        let (r, timeline) = crate::sim::simulate_traced(&s);
+        let tr = Trace::from_timeline(&timeline);
+        assert_eq!(tr.spans.len(), timeline.spans.len());
+        assert_eq!(tr.end(), r.total_cycles());
+        // one compute span per simulated tile
+        let tiles: usize = r.layers.iter().map(|l| l.n_tiles).sum();
+        let compute = tr.spans.iter().filter(|x| x.track == "cluster").count();
+        assert_eq!(compute, tiles);
+        // exports the same way as the layer-granularity trace
+        let v = tr.to_chrome_trace();
+        let parsed = Value::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("traceEvents").unwrap().as_arr().unwrap().len(),
+            tr.spans.len()
+        );
     }
 
     #[test]

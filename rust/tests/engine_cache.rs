@@ -29,11 +29,22 @@ fn assert_sims_bit_identical(a: &SimResult, b: &SimResult) {
         assert_eq!(x.compute_cycles, y.compute_cycles);
         assert_eq!(x.dma_l1_cycles, y.dma_l1_cycles);
         assert_eq!(x.dma_l3_cycles, y.dma_l3_cycles);
+        assert_eq!(x.exposed_dma_l1_cycles, y.exposed_dma_l1_cycles);
+        assert_eq!(x.exposed_dma_l3_cycles, y.exposed_dma_l3_cycles);
+        assert_eq!(x.hidden_dma_l3_cycles, y.hidden_dma_l3_cycles);
         assert_eq!(x.stall_cycles, y.stall_cycles);
         assert_eq!(x.l1_used_bytes, y.l1_used_bytes);
         assert_eq!(x.l2_used_bytes, y.l2_used_bytes);
         assert_eq!(x.n_tiles, y.n_tiles);
         assert_eq!(x.double_buffered, y.double_buffered);
+        // the resource-timeline accounting identity holds for every
+        // cached-or-cold layer result
+        assert_eq!(
+            x.compute_cycles + x.exposed_dma_l1_cycles + x.exposed_dma_l3_cycles,
+            x.cycles,
+            "{}",
+            x.name
+        );
     }
 }
 

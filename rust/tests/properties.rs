@@ -218,8 +218,32 @@ fn prop_sim_cycles_monotone_in_cores() {
 }
 
 #[test]
+fn prop_sim_cycles_monotone_in_l2() {
+    // satellite regression: growing L2 (more residency, fewer refetches,
+    // more prefetch hiding) never slows a layer down
+    check_property("sim_monotone_l2", 60, |rng| {
+        let g = random_decorated(rng);
+        let layers = fuse(&g).unwrap();
+        let mut prev = u64::MAX;
+        for l2_kb in [128u64, 256, 512, 1024] {
+            let p = presets::gap8_with(8, l2_kb);
+            let s = match build_schedule(layers.clone(), &p) {
+                Ok(s) => s,
+                Err(aladin::AladinError::Infeasible { .. }) => return,
+                Err(e) => panic!("unexpected error: {e}"),
+            };
+            let cycles = simulate(&s).total_cycles();
+            assert!(cycles <= prev, "L2 {l2_kb}kB: {cycles} > prev {prev}");
+            prev = cycles;
+        }
+    });
+}
+
+#[test]
 fn prop_sim_conservation() {
-    // per-layer: total >= compute, stalls = total - compute
+    // per-layer: the exposed decomposition is exact — compute + exposed
+    // dma-l1 + exposed dma-l3 == cycles — and prefetch hiding never
+    // exceeds the previous layer's micro-DMA-free window
     check_property("sim_conservation", 100, |rng| {
         let g = random_decorated(rng);
         let s = match build_schedule(fuse(&g).unwrap(), &presets::gap8()) {
@@ -231,6 +255,25 @@ fn prop_sim_conservation() {
         for l in &r.layers {
             assert!(l.cycles >= l.compute_cycles, "{}", l.name);
             assert_eq!(l.stall_cycles, l.cycles - l.compute_cycles);
+            assert_eq!(
+                l.compute_cycles + l.exposed_dma_l1_cycles + l.exposed_dma_l3_cycles,
+                l.cycles,
+                "{}",
+                l.name
+            );
+            assert_eq!(
+                l.exposed_dma_l3_cycles + l.hidden_dma_l3_cycles,
+                l.dma_l3_cycles,
+                "{}",
+                l.name
+            );
+        }
+        for w in r.layers.windows(2) {
+            assert!(
+                w[1].hidden_dma_l3_cycles <= w[0].cycles - w[0].exposed_dma_l3_cycles,
+                "{}: prefetch overbooked the micro-DMA channel",
+                w[1].name
+            );
         }
         let u = r.compute_utilization();
         assert!(u > 0.0 && u <= 1.0);
