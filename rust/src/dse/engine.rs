@@ -32,6 +32,7 @@ use crate::coordinator::{
     stage_impl, stage_impl_decorated, stage_platform, ImplModel, PlatformEval,
 };
 use crate::error::{AladinError, Result};
+use crate::exec::{self, EvalVectors, MeasuredAccuracy};
 use crate::graph::ir::Graph;
 use crate::impl_aware::LayerSummary;
 use crate::models::{BlockConfig, BlockImpl, MobileNetConfig};
@@ -176,6 +177,15 @@ pub struct EvalRecord {
     /// sensitivities only across records from a configurable
     /// ([`ModelSource::MobileNet`]) engine.
     pub sensitivity: f64,
+    /// Measured accuracy from the bit-exact integer interpreter
+    /// ([`crate::exec`]), populated when the engine was built
+    /// [`EvalEngine::with_measured_accuracy`]. Hardware-axis-invariant:
+    /// every (cores, L2) point of a grid sharing this record's quant axis
+    /// reports the same value, served from the accuracy-stage cache.
+    pub accuracy: Option<f64>,
+    /// Stable hash of the interpreter's output tensors — the bit-exactness
+    /// witness asserted by the hardware-invariance tests.
+    pub accuracy_fingerprint: Option<u64>,
     /// Parameter memory (kB), incl. LUT / threshold-tree overheads.
     pub param_kb: f64,
     /// Param + peak activation footprint (kB) — the memory axis of the
@@ -233,6 +243,8 @@ impl EvalRecord {
             total_cycles: eval.latency.total_cycles,
             latency_s: eval.latency.latency_s,
             sensitivity,
+            accuracy: None,
+            accuracy_fingerprint: None,
             param_kb,
             mem_kb: param_kb + act_peak_kb,
             peak_l1_kb: eval.peak_l1 as f64 / 1024.0,
@@ -262,7 +274,7 @@ impl crate::util::ToJson for EvalRecord {
             .iter()
             .flat_map(|q| q.bits.iter().map(|&b| crate::util::Value::from(b)))
             .collect();
-        crate::util::Value::obj()
+        let mut doc = crate::util::Value::obj()
             .with("quant", self.quant_label())
             .with("bits", crate::util::Value::Arr(bits))
             .with("cores", self.cores)
@@ -274,7 +286,11 @@ impl crate::util::ToJson for EvalRecord {
             .with("mem_kb", self.mem_kb)
             .with("peak_l1_kb", self.peak_l1_kb)
             .with("peak_l2_kb", self.peak_l2_kb)
-            .with("l3_traffic_kb", self.l3_traffic_kb)
+            .with("l3_traffic_kb", self.l3_traffic_kb);
+        if let Some(a) = self.accuracy {
+            doc.set("accuracy", a);
+        }
+        doc
     }
 }
 
@@ -345,10 +361,17 @@ pub struct CacheStats {
     pub sim_computed: usize,
     /// Stage-2/3 lookups served from the cache.
     pub sim_hits: usize,
+    /// Measured-accuracy stage (integer interpreter) computations actually
+    /// executed — hardware-axis-invariant, so a Fig.-7 grid shares one per
+    /// quantization configuration.
+    pub acc_computed: usize,
+    /// Accuracy-stage lookups served from the cache.
+    pub acc_hits: usize,
 }
 
 impl CacheStats {
-    /// Total pipeline-stage recomputations across both stages.
+    /// Total pipeline-stage recomputations across the two latency stages
+    /// (the accuracy stage is counted separately in `acc_computed`).
     pub fn recomputations(&self) -> usize {
         self.impl_computed + self.sim_computed
     }
@@ -367,6 +390,8 @@ impl crate::util::ToJson for CacheStats {
             .with("impl_hits", self.impl_hits)
             .with("sim_computed", self.sim_computed)
             .with("sim_hits", self.sim_hits)
+            .with("acc_computed", self.acc_computed)
+            .with("acc_hits", self.acc_hits)
             .with("recomputations", self.recomputations())
             .with("naive_recomputations", self.naive_recomputations())
     }
@@ -434,8 +459,14 @@ pub struct EvalEngine {
     base: PlatformSpec,
     base_key: u64,
     threads: usize,
+    /// Eval vectors for the measured-accuracy stage plus their precomputed
+    /// content hash (`None` = proxy only). The hash is taken once at
+    /// attach time — `evaluate` rebuilds cache keys per candidate and must
+    /// not re-hash the (immutable) vector data every call.
+    accuracy_vectors: Option<(Arc<EvalVectors>, u64)>,
     impl_stage: Memo<ImplModel>,
     sim_stage: Memo<PlatformEval>,
+    acc_stage: Memo<MeasuredAccuracy>,
 }
 
 impl EvalEngine {
@@ -450,8 +481,10 @@ impl EvalEngine {
             base,
             base_key,
             threads,
+            accuracy_vectors: None,
             impl_stage: Memo::new(),
             sim_stage: Memo::new(),
+            acc_stage: Memo::new(),
         }
     }
 
@@ -471,6 +504,17 @@ impl EvalEngine {
         self
     }
 
+    /// Enable the measured-accuracy stage: every evaluated record gains an
+    /// `accuracy` measured by the bit-exact integer interpreter over
+    /// `vectors`, memoized per quantization configuration (content-hash
+    /// keyed like `stage_impl`, hardware-axis-invariant — a Fig. 7 grid
+    /// runs the interpreter once per quant axis, not once per point).
+    pub fn with_measured_accuracy(mut self, vectors: Arc<EvalVectors>) -> Self {
+        let hash = vectors.content_hash();
+        self.accuracy_vectors = Some((vectors, hash));
+        self
+    }
+
     /// The base platform whose knobs the hardware axis varies.
     pub fn base_platform(&self) -> &PlatformSpec {
         &self.base
@@ -483,6 +527,8 @@ impl EvalEngine {
             impl_hits: self.impl_stage.hits.load(Ordering::Relaxed),
             sim_computed: self.sim_stage.computed.load(Ordering::Relaxed),
             sim_hits: self.sim_stage.hits.load(Ordering::Relaxed),
+            acc_computed: self.acc_stage.computed.load(Ordering::Relaxed),
+            acc_hits: self.acc_stage.hits.load(Ordering::Relaxed),
         }
     }
 
@@ -531,6 +577,24 @@ impl EvalEngine {
         }
     }
 
+    /// The measured-accuracy stage through its cache: keyed by the
+    /// quant-axis content hash (`impl_key`) + vector-set hash only — no
+    /// hardware knob enters the key, so every (cores, L2) point of a grid
+    /// reuses one interpreter evaluation per quantization configuration.
+    fn stage_accuracy(
+        &self,
+        impl_key: u64,
+        impl_model: &ImplModel,
+        vectors: &Arc<EvalVectors>,
+        vectors_hash: u64,
+    ) -> Result<Arc<MeasuredAccuracy>> {
+        let acc_key = crate::util::hash::combine(impl_key, vectors_hash);
+        let decorated = impl_model.decorated.clone();
+        let vectors = vectors.clone();
+        self.acc_stage
+            .get_or_compute(acc_key, move || exec::measure(decorated, &vectors))
+    }
+
     /// Evaluate one design vector through the staged cache.
     pub fn evaluate(&self, vector: &DesignVector) -> Result<EvalRecord> {
         let impl_key = self.impl_key(vector.quant.as_ref());
@@ -543,13 +607,19 @@ impl EvalEngine {
         let eval = self
             .sim_stage
             .get_or_compute(sim_key, || stage_platform(&impl_model.fused, &platform))?;
-        Ok(EvalRecord::derive(
+        let mut record = EvalRecord::derive(
             vector.clone(),
             &self.effective_bits(vector),
             &impl_model,
             &eval,
             &platform,
-        ))
+        );
+        if let Some((vectors, vectors_hash)) = &self.accuracy_vectors {
+            let acc = self.stage_accuracy(impl_key, &impl_model, vectors, *vectors_hash)?;
+            record.accuracy = Some(acc.accuracy);
+            record.accuracy_fingerprint = Some(acc.output_fingerprint);
+        }
+        Ok(record)
     }
 
     /// Evaluate a batch, aborting on the first (lowest-index) failure.
@@ -714,9 +784,13 @@ impl JointSpace {
 pub struct JointResult {
     /// Every successfully evaluated candidate, in enumeration order.
     pub records: Vec<EvalRecord>,
-    /// Indices into `records` of the 3-axis Pareto front over
-    /// (sensitivity, latency, param+activation memory), all minimized.
+    /// Indices into `records` of the 3-axis Pareto front, all minimized:
+    /// (sensitivity proxy, latency, param+activation memory) — or, when
+    /// `measured` is set, (1 − measured accuracy, latency, memory) with
+    /// the accuracy axis coming from the integer interpreter.
     pub front: Vec<usize>,
+    /// True when the accuracy axis is the interpreter-measured one.
+    pub measured: bool,
     /// Candidates screened out as unevaluable (infeasible tiling, invalid
     /// platform corner, …), with the reason. Infeasibility is a screening
     /// outcome of the design loop (paper §V), not a fatal error.
@@ -742,10 +816,31 @@ pub fn explore_joint(
     space: &JointSpace,
     threads: Option<usize>,
 ) -> Result<JointResult> {
+    explore_joint_measured(base_model, base_platform, space, threads, None)
+}
+
+/// [`explore_joint`] with an optional measured-accuracy stage: when
+/// `accuracy_vectors` is set, every candidate carries an interpreter-
+/// measured accuracy and the front's first axis becomes `1 − accuracy`
+/// instead of the `sensitivity_proxy` (CLI
+/// `aladin dse --joint --measured-accuracy`). The accuracy stage is cached
+/// by quant-axis content hash, so the hardware grid reuses one interpreter
+/// evaluation per quantization configuration.
+pub fn explore_joint_measured(
+    base_model: MobileNetConfig,
+    base_platform: PlatformSpec,
+    space: &JointSpace,
+    threads: Option<usize>,
+    accuracy_vectors: Option<Arc<EvalVectors>>,
+) -> Result<JointResult> {
     let n_blocks = base_model.blocks.len();
+    let measured = accuracy_vectors.is_some();
     let mut engine = EvalEngine::for_mobilenet(base_model, base_platform);
     if let Some(t) = threads {
         engine = engine.with_threads(t);
+    }
+    if let Some(v) = accuracy_vectors {
+        engine = engine.with_measured_accuracy(v);
     }
     let vectors = space.vectors(n_blocks);
     let mut records = Vec::new();
@@ -758,12 +853,19 @@ pub fn explore_joint(
     }
     let points: Vec<[f64; 3]> = records
         .iter()
-        .map(|r| [r.sensitivity, r.latency_s, r.mem_kb])
+        .map(|r| {
+            let axis0 = match r.accuracy {
+                Some(a) => 1.0 - a,
+                None => r.sensitivity,
+            };
+            [axis0, r.latency_s, r.mem_kb]
+        })
         .collect();
     let front = super::pareto::pareto_min_indices(&points);
     Ok(JointResult {
         records,
         front,
+        measured,
         skipped,
         stats: engine.stats(),
     })
@@ -932,6 +1034,54 @@ mod tests {
         let s = engine.stats();
         assert_eq!(s.sim_computed, 1, "failures are memoized too");
         assert_eq!(s.sim_hits, 1);
+    }
+
+    #[test]
+    fn measured_accuracy_stage_is_hardware_invariant_and_cached() {
+        let vectors = Arc::new(crate::models::cifar_vectors(2));
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8())
+            .with_measured_accuracy(vectors);
+        let a = engine.evaluate(&DesignVector::of_hw(2, 256)).unwrap();
+        let b = engine.evaluate(&DesignVector::of_hw(8, 512)).unwrap();
+        let (acc_a, acc_b) = (a.accuracy.unwrap(), b.accuracy.unwrap());
+        assert_eq!(acc_a.to_bits(), acc_b.to_bits());
+        assert_eq!(a.accuracy_fingerprint, b.accuracy_fingerprint);
+        assert!((0.0..=1.0).contains(&acc_a));
+        let s = engine.stats();
+        assert_eq!(s.acc_computed, 1, "one interpreter run per quant axis");
+        assert_eq!(s.acc_hits, 1);
+    }
+
+    #[test]
+    fn joint_measured_front_uses_interpreter_axis() {
+        let space = JointSpace {
+            bits: vec![4, 8],
+            impls: vec![BlockImpl::Im2col],
+            tail_k: 0,
+            cores: vec![2, 8],
+            l2_kb: vec![256, 512],
+        };
+        let r = explore_joint_measured(
+            small_case2(),
+            presets::gap8(),
+            &space,
+            Some(2),
+            Some(Arc::new(crate::models::cifar_vectors(2))),
+        )
+        .unwrap();
+        assert!(r.measured);
+        assert_eq!(r.records.len(), 8);
+        assert!(r.records.iter().all(|x| x.accuracy.is_some()));
+        assert!(!r.front.is_empty());
+        // one interpreter evaluation per quant configuration, shared across
+        // the four hardware points each
+        assert_eq!(r.stats.acc_computed, 2);
+        assert_eq!(r.stats.acc_hits, 6);
+        // the proxy-only path stays accuracy-free
+        let plain = explore_joint(small_case2(), presets::gap8(), &space, Some(2)).unwrap();
+        assert!(!plain.measured);
+        assert!(plain.records.iter().all(|x| x.accuracy.is_none()));
+        assert_eq!(plain.stats.acc_computed, 0);
     }
 
     #[test]

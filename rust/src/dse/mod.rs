@@ -9,8 +9,8 @@ pub mod pareto;
 pub mod quant_search;
 
 pub use engine::{
-    explore_joint, CacheStats, DesignVector, EvalEngine, EvalRecord, HwAxis, JointResult,
-    JointSpace, ModelSource, QuantAxis, MAX_TAIL_K,
+    explore_joint, explore_joint_measured, CacheStats, DesignVector, EvalEngine, EvalRecord,
+    HwAxis, JointResult, JointSpace, ModelSource, QuantAxis, MAX_TAIL_K,
 };
 pub use grid::{speedups, DesignPoint, GridSearch};
 pub use pareto::{best_feasible, pareto_front, pareto_min_indices, Candidate};

@@ -1,0 +1,169 @@
+//! Measured accuracy through the bit-exact interpreter — the accuracy axis
+//! of the (accuracy, latency, memory) trade-off, computed with on-device
+//! semantics instead of the `sensitivity_proxy` stand-in, and without the
+//! feature-gated PJRT runtime.
+//!
+//! With no trained checkpoints bundled, "accuracy" is defined as *top-1
+//! fidelity*: the fraction of evaluation vectors on which the integer
+//! execution's argmax agrees with the float reference running the same
+//! deterministic teacher weights. All quantization candidates of a
+//! topology share the teacher (see [`super::params`]), so fidelity
+//! differences across DSE candidates isolate the deployed arithmetic —
+//! exactly the quantity the quantization axis trades against latency.
+
+use crate::error::Result;
+use crate::graph::ir::Graph;
+use crate::util::{Prng, StableHasher};
+use std::sync::Arc;
+
+use super::interp::Executable;
+
+/// A bundled set of evaluation vectors (synthetic, deterministic).
+#[derive(Debug, Clone)]
+pub struct EvalVectors {
+    /// Input dims, e.g. `[3, 32, 32]`.
+    pub dims: Vec<usize>,
+    /// One flat `dims`-shaped input per vector, values in `[-1, 1)`.
+    pub inputs: Vec<Vec<f64>>,
+    /// Seed the set was generated from (0 for hand-made sets).
+    pub seed: u64,
+}
+
+impl EvalVectors {
+    /// Deterministic synthetic vectors: uniform in `[-1, 1)` from the
+    /// in-tree PRNG, reproducible across runs and platforms.
+    pub fn synthetic(seed: u64, dims: Vec<usize>, n: usize) -> Self {
+        let len: usize = dims.iter().product();
+        let mut rng = Prng::new(seed);
+        let inputs = (0..n)
+            .map(|_| (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        Self { dims, inputs, seed }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    /// Stable content hash — part of the DSE accuracy-stage cache key.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.write_u64(self.seed);
+        h.write_usize(self.dims.len());
+        for &d in &self.dims {
+            h.write_usize(d);
+        }
+        h.write_usize(self.inputs.len());
+        for v in &self.inputs {
+            for &x in v {
+                h.write_f64(x);
+            }
+        }
+        h.finish()
+    }
+}
+
+/// Result of one measured-accuracy evaluation.
+#[derive(Debug, Clone)]
+pub struct MeasuredAccuracy {
+    pub model: String,
+    /// Evaluation vectors run.
+    pub n: usize,
+    /// Vectors whose integer top-1 matched the float reference.
+    pub matches: usize,
+    /// `matches / n` — the measured accuracy axis.
+    pub accuracy: f64,
+    /// Stable hash of every integer output tensor: bit-exactness witness
+    /// (equal across repeated runs and across hardware-axis changes).
+    pub output_fingerprint: u64,
+}
+
+/// Measure top-1 fidelity of the integer execution of a decorated graph
+/// against its float reference over `vectors`.
+pub fn measure(graph: Arc<Graph>, vectors: &EvalVectors) -> Result<MeasuredAccuracy> {
+    let model = graph.name.clone();
+    let exe = Executable::lower(graph, vectors)?;
+    let mut matches = 0usize;
+    let mut h = StableHasher::new();
+    h.write_usize(vectors.inputs.len());
+    for (i, v) in vectors.inputs.iter().enumerate() {
+        let out = exe.run_int(v)?;
+        h.write_usize(out.dims.len());
+        for &d in &out.dims {
+            h.write_usize(d);
+        }
+        for &x in &out.data {
+            h.write_u64(x as u64);
+        }
+        if out.argmax() == exe.calibration().ref_top1[i] {
+            matches += 1;
+        }
+    }
+    let n = vectors.inputs.len();
+    Ok(MeasuredAccuracy {
+        model,
+        n,
+        matches,
+        accuracy: matches as f64 / n.max(1) as f64,
+        output_fingerprint: h.finish(),
+    })
+}
+
+impl crate::util::ToJson for MeasuredAccuracy {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("model", self.model.clone())
+            .with("n_vectors", self.n)
+            .with("matches", self.matches)
+            .with("accuracy", self.accuracy)
+            .with("output_fingerprint", format!("{:016x}", self.output_fingerprint))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::impl_aware::decorate;
+    use crate::models;
+
+    fn lenet_decorated(bits: u8) -> Arc<Graph> {
+        let (g, cfg) = models::lenet(bits, (3, 32, 32), 10);
+        Arc::new(decorate(g, &cfg).unwrap())
+    }
+
+    #[test]
+    fn synthetic_vectors_deterministic_and_bounded() {
+        let a = EvalVectors::synthetic(7, vec![3, 4, 4], 5);
+        let b = EvalVectors::synthetic(7, vec![3, 4, 4], 5);
+        assert_eq!(a.inputs, b.inputs);
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.inputs[0].len(), 48);
+        assert!(a.inputs.iter().flatten().all(|x| (-1.0..1.0).contains(x)));
+        assert_eq!(a.content_hash(), b.content_hash());
+        let c = EvalVectors::synthetic(8, vec![3, 4, 4], 5);
+        assert_ne!(a.content_hash(), c.content_hash());
+    }
+
+    #[test]
+    fn measure_reports_consistent_counts() {
+        let v = EvalVectors::synthetic(3, vec![3, 32, 32], 4);
+        let r = measure(lenet_decorated(8), &v).unwrap();
+        assert_eq!(r.n, 4);
+        assert!(r.matches <= r.n);
+        assert!((0.0..=1.0).contains(&r.accuracy));
+        assert!((r.accuracy - r.matches as f64 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_is_bit_identical_across_runs() {
+        let v = EvalVectors::synthetic(11, vec![3, 32, 32], 3);
+        let a = measure(lenet_decorated(4), &v).unwrap();
+        let b = measure(lenet_decorated(4), &v).unwrap();
+        assert_eq!(a.output_fingerprint, b.output_fingerprint);
+        assert_eq!(a.matches, b.matches);
+    }
+}

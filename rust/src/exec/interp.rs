@@ -1,0 +1,1134 @@
+//! The bit-exact integer QNN interpreter.
+//!
+//! Runs the *decorated* graph with the actual deployed arithmetic — the
+//! same implementation choices the cost model charges for (paper §VI):
+//!
+//! - weights quantized through [`UniformQuantizer`] (per-tensor) or
+//!   per-channel symmetric quantizers when the block's requantization is
+//!   channel-wise ([`crate::quant::ChannelwiseQuantizer`] semantics);
+//! - linear ops executed as integer MACs, or through the materialized
+//!   multiplication [`MulLut`] when the node's `impl_label` is `lut`
+//!   (bit-identical by construction — the table stores every product);
+//! - requantization per the node's implementation label:
+//!   [`DyadicScale::apply`] (multiply + shift, ties away),
+//!   [`ThresholdTree`] comparison trees, or a materialized [`QuantLut`]
+//!   for narrow accumulators;
+//! - average pooling with the §VI-E shift-style rounded division, ReLU as
+//!   the integer comparator.
+//!
+//! Accumulation uses a wide (i64) temporary with saturating writeback into
+//! the layer's accumulator [`ElemType`] — the deterministic DSP semantics.
+//! Everything is derived from the graph + a deterministic float teacher
+//! ([`super::params`]), so repeated runs are bit-identical and nothing
+//! depends on the hardware axis: the same decorated graph produces the
+//! same outputs for every (cores, L2) point of a DSE grid.
+//!
+//! The [`Executable`] also embeds the float-reference path (real
+//! arithmetic over the same teacher weights) used for calibration of
+//! activation ranges and as the golden cross-check for measured accuracy.
+
+use crate::error::{AladinError, Result};
+use crate::graph::ir::{ConvAttrs, EdgeId, Graph, NodeId, Op, PoolAttrs};
+use crate::graph::tensor::ElemType;
+use crate::graph::topo;
+use crate::quant::{DyadicScale, MulLut, QuantLut, ThresholdTree, UniformQuantizer};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::params::{synthesize, NodeParams};
+use super::tensor::{TensorF, TensorI};
+
+/// Maximum dyadic shift used when fitting requant factors (the platform's
+/// widest precision minus one, paper §VI-C).
+const MAX_DYADIC_SHIFT: u8 = 31;
+
+/// Scale metadata of an activation edge: the real value represented by one
+/// integer unit, per-tensor or per-output-channel (accumulator edges of
+/// channel-wise quantized layers).
+#[derive(Debug, Clone)]
+pub enum Scale {
+    Tensor(f64),
+    Channel(Vec<f64>),
+}
+
+impl Scale {
+    fn at(&self, c: usize) -> f64 {
+        match self {
+            Scale::Tensor(s) => *s,
+            Scale::Channel(v) => v[c.min(v.len() - 1)],
+        }
+    }
+
+    fn channels(&self) -> usize {
+        match self {
+            Scale::Tensor(_) => 1,
+            Scale::Channel(v) => v.len(),
+        }
+    }
+}
+
+/// Normalized geometry of a linear node.
+#[derive(Debug, Clone)]
+enum LinearKind {
+    /// Convolution geometry (direct Conv nodes and the im2col/LUT MatMul
+    /// rewrites, whose `from_conv` retains the original attributes).
+    Conv(ConvAttrs),
+    /// Dense `[m, k] @ [k]` (Gemm and conv-free MatMul).
+    Dense { m: usize, k: usize },
+}
+
+/// Integer lowering of one linear node.
+#[derive(Debug, Clone)]
+struct LinearLowered {
+    kind: LinearKind,
+    /// Quantized weights in the parameter edge's layout.
+    wq: Vec<i64>,
+    /// Bias at accumulator scale: `round(bias / (S_in * S_w,c))`.
+    bias_q: Vec<i64>,
+    /// Accumulator element type (saturating writeback target).
+    acc: ElemType,
+    /// Materialized multiplication table when the impl label is `lut`.
+    lut: Option<MulLut>,
+}
+
+/// Integer lowering of one requantization node.
+#[derive(Debug, Clone)]
+enum RequantKind {
+    /// Per-channel dyadic multiply+shift (len 1 for per-tensor).
+    Dyadic(Vec<DyadicScale>),
+    /// Per-channel comparison trees.
+    Tree(Vec<ThresholdTree>),
+    /// Materialized accumulator→output table (per-tensor, narrow acc only).
+    Lut(Box<QuantLut>),
+}
+
+#[derive(Debug, Clone)]
+struct RequantLowered {
+    kind: RequantKind,
+    out: ElemType,
+}
+
+/// Per-node integer execution plan.
+#[derive(Debug, Clone)]
+enum Lowered {
+    Skip,
+    Linear(Box<LinearLowered>),
+    Requant(RequantLowered),
+    Relu,
+    MaxPool(PoolAttrs),
+    AvgPool(PoolAttrs, ElemType),
+    Flatten,
+    Add {
+        a_rescale: DyadicScale,
+        b_rescale: DyadicScale,
+        out: ElemType,
+    },
+}
+
+/// The float-reference network: graph + deterministic teacher parameters.
+#[derive(Debug)]
+struct FloatNet {
+    graph: Arc<Graph>,
+    order: Vec<NodeId>,
+    input_edge: EdgeId,
+    output_edge: EdgeId,
+    kinds: Vec<Option<LinearKind>>,
+    params: HashMap<usize, NodeParams>,
+}
+
+/// Calibration record produced while lowering: per-edge activation ranges
+/// from the float reference and its top-1 labels on the eval vectors.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Max |activation| seen on each edge across the calibration set.
+    pub edge_max_abs: Vec<f64>,
+    /// Float-reference argmax per calibration vector (the golden labels).
+    pub ref_top1: Vec<usize>,
+}
+
+/// A lowered, executable QNN: integer plan + float reference.
+#[derive(Debug)]
+pub struct Executable {
+    net: FloatNet,
+    lowered: Vec<Lowered>,
+    input_quant: UniformQuantizer,
+    calibration: Calibration,
+}
+
+fn unsupported(msg: impl Into<String>) -> AladinError {
+    AladinError::Unsupported(msg.into())
+}
+
+fn shape_err(at: &str, expected: String, got: String) -> AladinError {
+    AladinError::ShapeMismatch {
+        at: at.into(),
+        expected,
+        got,
+    }
+}
+
+/// Rounded division with ties away from zero — for power-of-two divisors
+/// this is exactly the §VI-E shift approximation with a sign-mirrored bias,
+/// matching [`DyadicScale::apply`]'s `Rounding::Nearest`.
+fn div_round_ties_away(v: i64, d: i64) -> i64 {
+    debug_assert!(d > 0);
+    if v >= 0 {
+        (v + d / 2) / d
+    } else {
+        -((-v + d / 2) / d)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// integer kernels
+// ---------------------------------------------------------------------------
+
+fn mul_maybe_lut(lut: Option<&MulLut>, w: i64, x: i64) -> i64 {
+    match lut {
+        Some(l) => l.mul(w, x),
+        None => w * x,
+    }
+}
+
+fn conv_int(
+    x: &TensorI,
+    attrs: &ConvAttrs,
+    w: &[i64],
+    bias: &[i64],
+    acc: ElemType,
+    lut: Option<&MulLut>,
+) -> TensorI {
+    let (cin, h, wd) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, wd);
+    let cout = attrs.out_channels;
+    let cpg = cin / attrs.groups;
+    let out_per_group = (cout / attrs.groups).max(1);
+    let (kh, kw) = attrs.kernel;
+    let (sh, sw) = attrs.stride;
+    let (ph, pw) = attrs.padding;
+    let mut out = vec![0i64; cout * oh * ow];
+    for oc in 0..cout {
+        let ic0 = (oc / out_per_group) * cpg;
+        let w0 = oc * cpg * kh * kw;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut sum = bias[oc];
+                for ic in 0..cpg {
+                    for ky in 0..kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // zero padding: symmetric quant, 0 == real 0
+                        }
+                        let xrow = (ic0 + ic) * h * wd + iy as usize * wd;
+                        let wrow = w0 + ic * kh * kw + ky * kw;
+                        for kx in 0..kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            sum += mul_maybe_lut(lut, w[wrow + kx], x.data[xrow + ix as usize]);
+                        }
+                    }
+                }
+                out[oc * oh * ow + oy * ow + ox] = acc.clamp(sum);
+            }
+        }
+    }
+    TensorI::new(vec![cout, oh, ow], out)
+}
+
+fn dense_int(
+    x: &TensorI,
+    m: usize,
+    k: usize,
+    w: &[i64],
+    bias: &[i64],
+    acc: ElemType,
+    lut: Option<&MulLut>,
+) -> TensorI {
+    let mut out = vec![0i64; m];
+    for (of, o) in out.iter_mut().enumerate() {
+        let mut sum = bias[of];
+        let row = of * k;
+        for (&wi, &xi) in w[row..row + k].iter().zip(x.data.iter()) {
+            sum += mul_maybe_lut(lut, wi, xi);
+        }
+        *o = acc.clamp(sum);
+    }
+    TensorI::new(vec![m], out)
+}
+
+fn max_pool_int(x: &TensorI, attrs: &PoolAttrs) -> TensorI {
+    let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, w);
+    let mut out = vec![0i64; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = i64::MIN;
+                for ky in 0..attrs.kernel.0 {
+                    let iy = (oy * attrs.stride.0 + ky) as isize - attrs.padding.0 as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..attrs.kernel.1 {
+                        let ix = (ox * attrs.stride.1 + kx) as isize - attrs.padding.1 as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        best = best.max(x.data[ch * h * w + iy as usize * w + ix as usize]);
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = if best == i64::MIN { 0 } else { best };
+            }
+        }
+    }
+    TensorI::new(vec![c, oh, ow], out)
+}
+
+fn avg_pool_int(x: &TensorI, attrs: &PoolAttrs, elem: ElemType) -> TensorI {
+    let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, w);
+    let area = (attrs.kernel.0 * attrs.kernel.1) as i64;
+    let mut out = vec![0i64; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut sum = 0i64;
+                for ky in 0..attrs.kernel.0 {
+                    let iy = (oy * attrs.stride.0 + ky) as isize - attrs.padding.0 as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..attrs.kernel.1 {
+                        let ix = (ox * attrs.stride.1 + kx) as isize - attrs.padding.1 as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        sum += x.data[ch * h * w + iy as usize * w + ix as usize];
+                    }
+                }
+                // §VI-E: division by the kernel area approximated by shift
+                // (ties away, matching the dyadic rescale's Nearest mode)
+                out[ch * oh * ow + oy * ow + ox] = elem.clamp(div_round_ties_away(sum, area));
+            }
+        }
+    }
+    TensorI::new(vec![c, oh, ow], out)
+}
+
+/// Index into a per-channel parameter list: element `flat / stride`,
+/// degenerate to 0 for per-tensor (n == 1) lists.
+fn chan_index(flat: usize, stride: usize, n: usize) -> usize {
+    if n == 1 {
+        0
+    } else {
+        (flat / stride).min(n - 1)
+    }
+}
+
+fn requant_int(x: &TensorI, rq: &RequantLowered) -> TensorI {
+    let spatial = match x.dims.len() {
+        3 => x.dims[1] * x.dims[2],
+        _ => 1,
+    };
+    let data: Vec<i64> = match &rq.kind {
+        RequantKind::Dyadic(scales) => x
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let c = chan_index(i, spatial, scales.len());
+                rq.out.clamp(scales[c].apply(v))
+            })
+            .collect(),
+        RequantKind::Tree(trees) => x
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let c = chan_index(i, spatial, trees.len());
+                trees[c].apply(v)
+            })
+            .collect(),
+        RequantKind::Lut(lut) => x.data.iter().map(|&v| lut.apply(v)).collect(),
+    };
+    TensorI::new(x.dims.clone(), data)
+}
+
+// ---------------------------------------------------------------------------
+// float kernels (the golden reference)
+// ---------------------------------------------------------------------------
+
+fn conv_f(x: &TensorF, attrs: &ConvAttrs, w: &[f64], bias: &[f64]) -> TensorF {
+    let (cin, h, wd) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, wd);
+    let cout = attrs.out_channels;
+    let cpg = cin / attrs.groups;
+    let out_per_group = (cout / attrs.groups).max(1);
+    let (kh, kw) = attrs.kernel;
+    let (sh, sw) = attrs.stride;
+    let (ph, pw) = attrs.padding;
+    let mut out = vec![0f64; cout * oh * ow];
+    for oc in 0..cout {
+        let ic0 = (oc / out_per_group) * cpg;
+        let w0 = oc * cpg * kh * kw;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut sum = bias[oc];
+                for ic in 0..cpg {
+                    for ky in 0..kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let xrow = (ic0 + ic) * h * wd + iy as usize * wd;
+                        let wrow = w0 + ic * kh * kw + ky * kw;
+                        for kx in 0..kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            sum += w[wrow + kx] * x.data[xrow + ix as usize];
+                        }
+                    }
+                }
+                out[oc * oh * ow + oy * ow + ox] = sum;
+            }
+        }
+    }
+    TensorF::new(vec![cout, oh, ow], out)
+}
+
+fn dense_f(x: &TensorF, m: usize, k: usize, w: &[f64], bias: &[f64]) -> TensorF {
+    let mut out = vec![0f64; m];
+    for (of, o) in out.iter_mut().enumerate() {
+        let mut sum = bias[of];
+        let row = of * k;
+        for (&wi, &xi) in w[row..row + k].iter().zip(x.data.iter()) {
+            sum += wi * xi;
+        }
+        *o = sum;
+    }
+    TensorF::new(vec![m], out)
+}
+
+fn max_pool_f(x: &TensorF, attrs: &PoolAttrs) -> TensorF {
+    let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, w);
+    let mut out = vec![0f64; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = f64::NEG_INFINITY;
+                for ky in 0..attrs.kernel.0 {
+                    let iy = (oy * attrs.stride.0 + ky) as isize - attrs.padding.0 as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..attrs.kernel.1 {
+                        let ix = (ox * attrs.stride.1 + kx) as isize - attrs.padding.1 as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        best = best.max(x.data[ch * h * w + iy as usize * w + ix as usize]);
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = if best.is_finite() { best } else { 0.0 };
+            }
+        }
+    }
+    TensorF::new(vec![c, oh, ow], out)
+}
+
+fn avg_pool_f(x: &TensorF, attrs: &PoolAttrs) -> TensorF {
+    let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, w);
+    let area = (attrs.kernel.0 * attrs.kernel.1) as f64;
+    let mut out = vec![0f64; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut sum = 0f64;
+                for ky in 0..attrs.kernel.0 {
+                    let iy = (oy * attrs.stride.0 + ky) as isize - attrs.padding.0 as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..attrs.kernel.1 {
+                        let ix = (ox * attrs.stride.1 + kx) as isize - attrs.padding.1 as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        sum += x.data[ch * h * w + iy as usize * w + ix as usize];
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = sum / area;
+            }
+        }
+    }
+    TensorF::new(vec![c, oh, ow], out)
+}
+
+// ---------------------------------------------------------------------------
+// the float-reference network
+// ---------------------------------------------------------------------------
+
+impl FloatNet {
+    fn build(graph: Arc<Graph>) -> Result<FloatNet> {
+        let g = &*graph;
+        let input_node = *g
+            .inputs()
+            .first()
+            .ok_or_else(|| unsupported("graph has no Input node"))?;
+        let input_edge = g
+            .output_edge(input_node)
+            .ok_or_else(|| unsupported("Input node has no output edge"))?
+            .id;
+        let output_node = *g
+            .outputs()
+            .first()
+            .ok_or_else(|| unsupported("graph has no Output node"))?;
+        let output_edge = g
+            .data_input(output_node)
+            .ok_or_else(|| unsupported("Output node has no data input"))?
+            .id;
+        let order = topo::compute_order(g)?;
+        let params = synthesize(g);
+
+        let mut kinds: Vec<Option<LinearKind>> = vec![None; g.nodes.len()];
+        for node in &g.nodes {
+            let kind = match &node.op {
+                Op::Conv(attrs) => Some(LinearKind::Conv(attrs.clone())),
+                Op::MatMul(attrs) => match &attrs.from_conv {
+                    Some(c) => Some(LinearKind::Conv(c.clone())),
+                    None if attrs.n == 1 => Some(LinearKind::Dense {
+                        m: attrs.m,
+                        k: attrs.k,
+                    }),
+                    None => {
+                        return Err(unsupported(format!(
+                            "MatMul `{}` with N={} has no conv geometry",
+                            node.name, attrs.n
+                        )))
+                    }
+                },
+                Op::Gemm(_) => {
+                    let p = params.get(&node.id.0).ok_or_else(|| {
+                        unsupported(format!("Gemm `{}` has no weight parameter", node.name))
+                    })?;
+                    let m = p.weight_dims[0];
+                    Some(LinearKind::Dense {
+                        m,
+                        k: p.weight.len() / m.max(1),
+                    })
+                }
+                Op::Input
+                | Op::Output
+                | Op::Quant(_)
+                | Op::Relu
+                | Op::MaxPool(_)
+                | Op::AvgPool(_)
+                | Op::Add
+                | Op::Flatten => None,
+            };
+            if kind.is_some() && !params.contains_key(&node.id.0) {
+                return Err(unsupported(format!(
+                    "linear node `{}` has no weight parameter edge",
+                    node.name
+                )));
+            }
+            kinds[node.id.0] = kind;
+        }
+        Ok(FloatNet {
+            graph,
+            order,
+            input_edge,
+            output_edge,
+            kinds,
+            params,
+        })
+    }
+
+    fn data_inputs(&self, id: NodeId) -> Vec<EdgeId> {
+        let g = &*self.graph;
+        g.node(id)
+            .inputs
+            .iter()
+            .copied()
+            .filter(|&e| !g.edge(e).is_param())
+            .collect()
+    }
+
+    /// Run the float reference, returning every activation-edge tensor.
+    fn run_edges(&self, input: &[f64]) -> Result<Vec<Option<TensorF>>> {
+        let g = &*self.graph;
+        let in_spec = &g.edge(self.input_edge).spec;
+        if input.len() != in_spec.num_elems() {
+            return Err(shape_err(
+                "exec input",
+                in_spec.num_elems().to_string(),
+                input.len().to_string(),
+            ));
+        }
+        let mut edges: Vec<Option<TensorF>> = vec![None; g.edges.len()];
+        edges[self.input_edge.0] = Some(TensorF::new(in_spec.dims.clone(), input.to_vec()));
+        for &id in &self.order {
+            let node = g.node(id);
+            let Some(out_edge) = g.output_edge(id).map(|e| e.id) else {
+                continue;
+            };
+            let ins = self.data_inputs(id);
+            let first = *ins
+                .first()
+                .ok_or_else(|| unsupported(format!("node `{}` has no data input", node.name)))?;
+            let y = {
+                let x = edges[first.0]
+                    .as_ref()
+                    .ok_or_else(|| unsupported(format!("edge for `{}` not computed", node.name)))?;
+                match &node.op {
+                    Op::Conv(_) | Op::MatMul(_) | Op::Gemm(_) => {
+                        let p = &self.params[&id.0];
+                        match self.kinds[id.0].as_ref().expect("linear kind resolved") {
+                            LinearKind::Conv(attrs) => conv_f(x, attrs, &p.weight, &p.bias),
+                            LinearKind::Dense { m, k } => {
+                                if x.len() != *k {
+                                    return Err(shape_err(
+                                        &node.name,
+                                        k.to_string(),
+                                        x.len().to_string(),
+                                    ));
+                                }
+                                dense_f(x, *m, *k, &p.weight, &p.bias)
+                            }
+                        }
+                    }
+                    // the reference is ideal real arithmetic: requant = identity
+                    Op::Quant(_) => x.clone(),
+                    Op::Relu => TensorF::new(
+                        x.dims.clone(),
+                        x.data.iter().map(|&v| v.max(0.0)).collect(),
+                    ),
+                    Op::MaxPool(attrs) => max_pool_f(x, attrs),
+                    Op::AvgPool(attrs) => avg_pool_f(x, attrs),
+                    Op::Flatten => TensorF::new(vec![x.len()], x.data.clone()),
+                    Op::Add => {
+                        let b_edge = *ins.get(1).ok_or_else(|| {
+                            unsupported(format!("Add `{}` needs two inputs", node.name))
+                        })?;
+                        let b = edges[b_edge.0].as_ref().ok_or_else(|| {
+                            unsupported(format!("Add `{}` input not computed", node.name))
+                        })?;
+                        if b.len() != x.len() {
+                            return Err(shape_err(
+                                &node.name,
+                                x.len().to_string(),
+                                b.len().to_string(),
+                            ));
+                        }
+                        TensorF::new(
+                            x.dims.clone(),
+                            x.data.iter().zip(&b.data).map(|(a, b)| a + b).collect(),
+                        )
+                    }
+                    Op::Input | Op::Output => continue,
+                }
+            };
+            edges[out_edge.0] = Some(y);
+        }
+        Ok(edges)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lowering
+// ---------------------------------------------------------------------------
+
+/// Follow the activation path downstream until the next Quant node; its
+/// `channelwise` attribute decides whether the producing linear layer uses
+/// per-channel weight quantizers (the §II-A "filter-wise" configuration).
+fn downstream_channelwise(g: &Graph, id: NodeId) -> bool {
+    let mut cur = id;
+    for _ in 0..8 {
+        let succs = g.successors(cur);
+        let Some(&next) = succs.first() else {
+            return false;
+        };
+        match &g.node(next).op {
+            Op::Quant(a) => return a.channelwise,
+            Op::Output => return false,
+            _ => cur = next,
+        }
+    }
+    false
+}
+
+/// Per-channel (or per-tensor) symmetric weight max-abs statistics.
+fn weight_scales(weight: &[f64], m: usize, per_channel: bool, w_elem: ElemType) -> Vec<f64> {
+    let q_max = w_elem.max_value() as f64;
+    let max_abs = |vals: &[f64]| vals.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(1e-12);
+    if per_channel && m > 0 && weight.len() % m == 0 {
+        let chunk = weight.len() / m;
+        (0..m)
+            .map(|c| max_abs(&weight[c * chunk..(c + 1) * chunk]) / q_max)
+            .collect()
+    } else {
+        vec![max_abs(weight) / q_max]
+    }
+}
+
+impl Executable {
+    /// Lower a decorated graph into the executable integer plan, calibrating
+    /// activation ranges on `vectors` through the float reference.
+    pub fn lower(graph: Arc<Graph>, vectors: &super::accuracy::EvalVectors) -> Result<Executable> {
+        if vectors.inputs.is_empty() {
+            return Err(unsupported("measured accuracy needs at least one eval vector"));
+        }
+        let net = FloatNet::build(graph)?;
+
+        // -- calibration: float reference over the eval vectors
+        let n_edges = net.graph.edges.len();
+        let mut edge_max_abs = vec![0.0f64; n_edges];
+        let mut ref_top1 = Vec::with_capacity(vectors.inputs.len());
+        for v in &vectors.inputs {
+            let edges = net.run_edges(v)?;
+            for (i, t) in edges.iter().enumerate() {
+                if let Some(t) = t {
+                    edge_max_abs[i] = edge_max_abs[i].max(t.max_abs());
+                }
+            }
+            let out = edges[net.output_edge.0]
+                .as_ref()
+                .ok_or_else(|| unsupported("float reference produced no output"))?;
+            ref_top1.push(out.argmax());
+        }
+
+        // -- input quantizer (symmetric over the calibrated input range)
+        let g = net.graph.clone();
+        let in_elem = g.edge(net.input_edge).spec.elem;
+        let input_quant =
+            UniformQuantizer::symmetric(edge_max_abs[net.input_edge.0].max(1e-9), in_elem);
+
+        // -- per-edge scale propagation + per-node integer lowering
+        let mut edge_scale: Vec<Option<Scale>> = vec![None; n_edges];
+        edge_scale[net.input_edge.0] = Some(Scale::Tensor(input_quant.scale));
+        let mut lowered: Vec<Lowered> = vec![Lowered::Skip; g.nodes.len()];
+
+        for &id in &net.order {
+            let node = g.node(id);
+            let Some(out_edge) = g.output_edge(id).map(|e| e.id) else {
+                continue;
+            };
+            let ins = net.data_inputs(id);
+            let first = *ins
+                .first()
+                .ok_or_else(|| unsupported(format!("node `{}` has no data input", node.name)))?;
+            let in_scale = edge_scale[first.0]
+                .clone()
+                .ok_or_else(|| unsupported(format!("no scale for the input of `{}`", node.name)))?;
+            let impl_label = node
+                .ann
+                .as_ref()
+                .map(|a| a.impl_label.clone())
+                .unwrap_or_default();
+
+            match &node.op {
+                Op::Conv(_) | Op::MatMul(_) | Op::Gemm(_) => {
+                    let kind = net.kinds[id.0]
+                        .clone()
+                        .ok_or_else(|| unsupported(format!("`{}` not a linear node", node.name)))?;
+                    let p = &net.params[&id.0];
+                    let Scale::Tensor(s_in) = in_scale else {
+                        return Err(unsupported(format!(
+                            "linear node `{}` fed by a per-channel-scaled edge",
+                            node.name
+                        )));
+                    };
+                    let w_elem = g
+                        .param_inputs(id)
+                        .first()
+                        .map(|e| e.spec.elem)
+                        .ok_or_else(|| unsupported(format!("`{}` has no weight edge", node.name)))?;
+                    let x_elem = g.edge(first).spec.elem;
+                    let acc = g.edge(out_edge).spec.elem;
+                    let m = p.weight_dims[0];
+                    let per_channel =
+                        matches!(kind, LinearKind::Conv(_)) && downstream_channelwise(&g, id);
+                    let scales = weight_scales(&p.weight, m, per_channel, w_elem);
+                    let chunk = match scales.len() {
+                        1 => p.weight.len(),
+                        _ => p.weight.len() / m,
+                    };
+                    let wq: Vec<i64> = p
+                        .weight
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &w)| {
+                            let c = chan_index(i, chunk, scales.len());
+                            w_elem.clamp((w / scales[c]).round() as i64)
+                        })
+                        .collect();
+                    let bias_q: Vec<i64> = p
+                        .bias
+                        .iter()
+                        .enumerate()
+                        .map(|(c, &b)| {
+                            let sw = scales[chan_index(c, 1, scales.len())];
+                            acc.clamp((b / (s_in * sw)).round() as i64)
+                        })
+                        .collect();
+                    let lut = if impl_label == "lut" {
+                        Some(MulLut::build(w_elem, x_elem, acc))
+                    } else {
+                        None
+                    };
+                    let out_scale = if scales.len() == 1 {
+                        Scale::Tensor(scales[0] * s_in)
+                    } else {
+                        Scale::Channel(scales.iter().map(|&sw| sw * s_in).collect())
+                    };
+                    edge_scale[out_edge.0] = Some(out_scale);
+                    lowered[id.0] = Lowered::Linear(Box::new(LinearLowered {
+                        kind,
+                        wq,
+                        bias_q,
+                        acc,
+                        lut,
+                    }));
+                }
+                Op::Quant(attrs) => {
+                    let to = attrs.to;
+                    let acc_elem = g.edge(first).spec.elem;
+                    let s_out = edge_max_abs[out_edge.0].max(1e-9) / to.max_value() as f64;
+                    let factors: Vec<f64> = (0..in_scale.channels())
+                        .map(|c| in_scale.at(c) / s_out)
+                        .collect();
+                    let kind = match impl_label.as_str() {
+                        "threshold-tree" => RequantKind::Tree(
+                            factors
+                                .iter()
+                                .map(|&f| {
+                                    ThresholdTree::from_uniform_scale(1.0 / f, acc_elem, to)
+                                })
+                                .collect(),
+                        ),
+                        "lut" if factors.len() == 1 => {
+                            let d = DyadicScale::fit(factors[0], MAX_DYADIC_SHIFT);
+                            match QuantLut::build(acc_elem, to, move |v| d.apply(v)) {
+                                Some(lut) => RequantKind::Lut(Box::new(lut)),
+                                // Eq. 7 infeasible for this accumulator width:
+                                // execute the function the table would store
+                                None => RequantKind::Dyadic(vec![d]),
+                            }
+                        }
+                        _ => RequantKind::Dyadic(
+                            factors
+                                .iter()
+                                .map(|&f| DyadicScale::fit(f, MAX_DYADIC_SHIFT))
+                                .collect(),
+                        ),
+                    };
+                    edge_scale[out_edge.0] = Some(Scale::Tensor(s_out));
+                    lowered[id.0] = Lowered::Requant(RequantLowered { kind, out: to });
+                }
+                Op::Relu => {
+                    edge_scale[out_edge.0] = Some(in_scale);
+                    lowered[id.0] = Lowered::Relu;
+                }
+                Op::MaxPool(attrs) => {
+                    edge_scale[out_edge.0] = Some(in_scale);
+                    lowered[id.0] = Lowered::MaxPool(attrs.clone());
+                }
+                Op::AvgPool(attrs) => {
+                    edge_scale[out_edge.0] = Some(in_scale);
+                    lowered[id.0] =
+                        Lowered::AvgPool(attrs.clone(), g.edge(out_edge).spec.elem);
+                }
+                Op::Flatten => {
+                    let Scale::Tensor(s) = in_scale else {
+                        return Err(unsupported(format!(
+                            "Flatten `{}` over a per-channel-scaled edge",
+                            node.name
+                        )));
+                    };
+                    edge_scale[out_edge.0] = Some(Scale::Tensor(s));
+                    lowered[id.0] = Lowered::Flatten;
+                }
+                Op::Add => {
+                    let b_edge = *ins.get(1).ok_or_else(|| {
+                        unsupported(format!("Add `{}` needs two inputs", node.name))
+                    })?;
+                    let (Scale::Tensor(sa), Some(Scale::Tensor(sb))) =
+                        (in_scale, edge_scale[b_edge.0].clone())
+                    else {
+                        return Err(unsupported(format!(
+                            "Add `{}` needs per-tensor-scaled inputs",
+                            node.name
+                        )));
+                    };
+                    let s_out = sa.max(sb);
+                    edge_scale[out_edge.0] = Some(Scale::Tensor(s_out));
+                    lowered[id.0] = Lowered::Add {
+                        a_rescale: DyadicScale::fit(sa / s_out, MAX_DYADIC_SHIFT),
+                        b_rescale: DyadicScale::fit(sb / s_out, MAX_DYADIC_SHIFT),
+                        out: g.edge(out_edge).spec.elem,
+                    };
+                }
+                Op::Input | Op::Output => {}
+            }
+        }
+
+        Ok(Executable {
+            net,
+            lowered,
+            input_quant,
+            calibration: Calibration {
+                edge_max_abs,
+                ref_top1,
+            },
+        })
+    }
+
+    /// The calibration record (activation ranges + golden labels).
+    pub fn calibration(&self) -> &Calibration {
+        &self.calibration
+    }
+
+    /// The input activation quantizer.
+    pub fn input_quant(&self) -> &UniformQuantizer {
+        &self.input_quant
+    }
+
+    /// Run the integer plan, returning every activation-edge tensor
+    /// (per-layer outputs — the hardware-invariance property tests assert
+    /// over these).
+    pub fn run_int_edges(&self, input: &[f64]) -> Result<Vec<Option<TensorI>>> {
+        let g = &*self.net.graph;
+        let in_spec = &g.edge(self.net.input_edge).spec;
+        if input.len() != in_spec.num_elems() {
+            return Err(shape_err(
+                "exec input",
+                in_spec.num_elems().to_string(),
+                input.len().to_string(),
+            ));
+        }
+        let mut edges: Vec<Option<TensorI>> = vec![None; g.edges.len()];
+        edges[self.net.input_edge.0] = Some(TensorI::new(
+            in_spec.dims.clone(),
+            input.iter().map(|&r| self.input_quant.quantize(r)).collect(),
+        ));
+        for &id in &self.net.order {
+            let node = g.node(id);
+            let Some(out_edge) = g.output_edge(id).map(|e| e.id) else {
+                continue;
+            };
+            let ins = self.net.data_inputs(id);
+            let first = *ins
+                .first()
+                .ok_or_else(|| unsupported(format!("node `{}` has no data input", node.name)))?;
+            let y = {
+                let x = edges[first.0]
+                    .as_ref()
+                    .ok_or_else(|| unsupported(format!("edge for `{}` not computed", node.name)))?;
+                match &self.lowered[id.0] {
+                    Lowered::Skip => continue,
+                    Lowered::Linear(l) => match &l.kind {
+                        LinearKind::Conv(attrs) => {
+                            if x.dims.len() != 3 {
+                                return Err(shape_err(
+                                    &node.name,
+                                    "[C,H,W]".into(),
+                                    format!("{:?}", x.dims),
+                                ));
+                            }
+                            conv_int(x, attrs, &l.wq, &l.bias_q, l.acc, l.lut.as_ref())
+                        }
+                        LinearKind::Dense { m, k } => {
+                            if x.len() != *k {
+                                return Err(shape_err(
+                                    &node.name,
+                                    k.to_string(),
+                                    x.len().to_string(),
+                                ));
+                            }
+                            dense_int(x, *m, *k, &l.wq, &l.bias_q, l.acc, l.lut.as_ref())
+                        }
+                    },
+                    Lowered::Requant(rq) => requant_int(x, rq),
+                    Lowered::Relu => TensorI::new(
+                        x.dims.clone(),
+                        x.data.iter().map(|&v| v.max(0)).collect(),
+                    ),
+                    Lowered::MaxPool(attrs) => max_pool_int(x, attrs),
+                    Lowered::AvgPool(attrs, elem) => avg_pool_int(x, attrs, *elem),
+                    Lowered::Flatten => TensorI::new(vec![x.len()], x.data.clone()),
+                    Lowered::Add {
+                        a_rescale,
+                        b_rescale,
+                        out,
+                    } => {
+                        let b_edge = *ins.get(1).ok_or_else(|| {
+                            unsupported(format!("Add `{}` needs two inputs", node.name))
+                        })?;
+                        let b = edges[b_edge.0].as_ref().ok_or_else(|| {
+                            unsupported(format!("Add `{}` input not computed", node.name))
+                        })?;
+                        if b.len() != x.len() {
+                            return Err(shape_err(
+                                &node.name,
+                                x.len().to_string(),
+                                b.len().to_string(),
+                            ));
+                        }
+                        TensorI::new(
+                            x.dims.clone(),
+                            x.data
+                                .iter()
+                                .zip(&b.data)
+                                .map(|(&a, &bb)| {
+                                    out.clamp(a_rescale.apply(a) + b_rescale.apply(bb))
+                                })
+                                .collect(),
+                        )
+                    }
+                }
+            };
+            edges[out_edge.0] = Some(y);
+        }
+        Ok(edges)
+    }
+
+    /// Run the integer plan and return the network output tensor.
+    pub fn run_int(&self, input: &[f64]) -> Result<TensorI> {
+        let mut edges = self.run_int_edges(input)?;
+        edges[self.net.output_edge.0]
+            .take()
+            .ok_or_else(|| unsupported("integer plan produced no output"))
+    }
+
+    /// Run the float reference and return the network output tensor.
+    pub fn run_float(&self, input: &[f64]) -> Result<TensorF> {
+        let mut edges = self.net.run_edges(input)?;
+        edges[self.net.output_edge.0]
+            .take()
+            .ok_or_else(|| unsupported("float reference produced no output"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_round_ties_away_matches_f64_round() {
+        for v in -40i64..=40 {
+            for d in [1i64, 2, 4, 9] {
+                assert_eq!(
+                    div_round_ties_away(v, d),
+                    (v as f64 / d as f64).round() as i64,
+                    "v={v} d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_int_identity_kernel() {
+        // 1x1 conv, weight 2, bias 1: y = 2x + 1
+        let x = TensorI::new(vec![1, 2, 2], vec![1, -3, 5, 0]);
+        let attrs = ConvAttrs::standard(1, 1, 1, 0);
+        let y = conv_int(&x, &attrs, &[2], &[1], ElemType::int(32), None);
+        assert_eq!(y.dims, vec![1, 2, 2]);
+        assert_eq!(y.data, vec![3, -5, 11, 1]);
+    }
+
+    #[test]
+    fn conv_int_lut_bit_identical_to_mac() {
+        let x = TensorI::new(vec![2, 3, 3], (0..18).map(|i| (i % 7) - 3).collect());
+        let attrs = ConvAttrs::standard(2, 3, 1, 1);
+        let w: Vec<i64> = (0..36).map(|i| (i % 5) - 2).collect();
+        let bias = vec![1, -1];
+        let acc = ElemType::int(16);
+        let plain = conv_int(&x, &attrs, &w, &bias, acc, None);
+        let lut = MulLut::build(ElemType::int(4), ElemType::int(4), acc);
+        let via_lut = conv_int(&x, &attrs, &w, &bias, acc, Some(&lut));
+        assert_eq!(plain, via_lut);
+    }
+
+    #[test]
+    fn depthwise_conv_reads_own_channel_only() {
+        // 2 channels, 1x1 depthwise, weights [10, 100]
+        let x = TensorI::new(vec![2, 1, 1], vec![3, 5]);
+        let attrs = ConvAttrs::depthwise(2, 1, 1, 0);
+        let y = conv_int(&x, &attrs, &[10, 100], &[0, 0], ElemType::int(32), None);
+        assert_eq!(y.data, vec![30, 500]);
+    }
+
+    #[test]
+    fn dense_int_known_values() {
+        let x = TensorI::new(vec![3], vec![1, 2, 3]);
+        // w = [[1,0,-1],[2,2,2]]
+        let y = dense_int(&x, 2, 3, &[1, 0, -1, 2, 2, 2], &[5, 0], ElemType::int(32), None);
+        assert_eq!(y.data, vec![1 - 3 + 5, 2 + 4 + 6]);
+    }
+
+    #[test]
+    fn accumulator_saturates() {
+        let x = TensorI::new(vec![2], vec![100, 100]);
+        let y = dense_int(&x, 1, 2, &[100, 100], &[0], ElemType::int(16), None);
+        assert_eq!(y.data, vec![ElemType::int(16).max_value()]);
+    }
+
+    #[test]
+    fn pools_known_values() {
+        let x = TensorI::new(vec![1, 2, 2], vec![1, 4, -2, 3]);
+        let attrs = PoolAttrs::square(2, 2);
+        assert_eq!(max_pool_int(&x, &attrs).data, vec![4]);
+        // avg: (1+4-2+3)/4 = 1.5 -> ties away -> 2
+        assert_eq!(avg_pool_int(&x, &attrs, ElemType::int(8)).data, vec![2]);
+        let neg = TensorI::new(vec![1, 2, 2], vec![-1, -4, 2, -3]);
+        // (-1-4+2-3)/4 = -1.5 -> -2
+        assert_eq!(avg_pool_int(&neg, &attrs, ElemType::int(8)).data, vec![-2]);
+    }
+
+    #[test]
+    fn requant_dyadic_vs_tree_consistent() {
+        let x = TensorI::new(vec![1, 2, 2], vec![-33, -32, 31, 100]);
+        let out = ElemType::int(4);
+        let acc = ElemType::int(16);
+        let f = 1.0 / 16.0; // exact dyadic
+        let dy = requant_int(
+            &x,
+            &RequantLowered {
+                kind: RequantKind::Dyadic(vec![DyadicScale::fit(f, 31)]),
+                out,
+            },
+        );
+        let tr = requant_int(
+            &x,
+            &RequantLowered {
+                kind: RequantKind::Tree(vec![ThresholdTree::from_uniform_scale(
+                    1.0 / f,
+                    acc,
+                    out,
+                )]),
+                out,
+            },
+        );
+        assert_eq!(dy, tr);
+        assert_eq!(dy.data, vec![-2, -2, 2, 6]);
+    }
+
+    #[test]
+    fn requant_per_channel_uses_channel_factor() {
+        let x = TensorI::new(vec![2, 1, 1], vec![100, 100]);
+        let rq = RequantLowered {
+            kind: RequantKind::Dyadic(vec![
+                DyadicScale::fit(0.5, 31),
+                DyadicScale::fit(0.25, 31),
+            ]),
+            out: ElemType::int(8),
+        };
+        assert_eq!(requant_int(&x, &rq).data, vec![50, 25]);
+    }
+}

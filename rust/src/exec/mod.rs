@@ -1,0 +1,25 @@
+//! `exec` — the bit-exact integer QNN interpreter.
+//!
+//! Executes the *decorated* graph with the deployed arithmetic the cost
+//! model charges for: quantized weights ([`crate::quant::UniformQuantizer`]
+//! / channel-wise symmetric fits), integer MACs or multiplication-LUT
+//! lookups, dyadic / threshold-tree / LUT requantization per the layer's
+//! implementation label, comparator ReLU and shift-style average pooling.
+//! A float-reference executor over the same deterministic teacher weights
+//! provides calibration and the golden top-1 labels, so measured accuracy
+//! needs no PJRT runtime and no trained artifacts.
+//!
+//! The interpreter is hardware-axis-invariant by construction (it never
+//! sees a platform spec), which is what lets the DSE engine cache one
+//! accuracy evaluation per quantization configuration across a whole
+//! hardware grid ([`crate::dse::EvalEngine`] `stage_accuracy`).
+
+pub mod accuracy;
+pub mod interp;
+pub mod params;
+pub mod tensor;
+
+pub use accuracy::{measure, EvalVectors, MeasuredAccuracy};
+pub use interp::{Calibration, Executable, Scale};
+pub use params::{synthesize, NodeParams};
+pub use tensor::{TensorF, TensorI};

@@ -1,0 +1,119 @@
+//! Deterministic synthetic parameters for the interpreter's workloads.
+//!
+//! The repository bundles no trained checkpoints (the PJRT artifact path is
+//! feature-gated and optional), so the measured-accuracy axis is defined as
+//! *fidelity against a fixed float teacher*: every linear node gets
+//! deterministic float weights/biases synthesized from a stable content
+//! hash of its name and parameter shape. The seed deliberately excludes
+//! the graph name and the weight element type, so every quantization
+//! candidate of the same topology (int8 vs int4 vs int2, im2col vs LUT)
+//! is measured against the *same* teacher — accuracy differences across
+//! DSE candidates then reflect the deployed arithmetic, nothing else.
+
+use crate::graph::ir::{Graph, Op};
+use crate::util::{Prng, StableHasher};
+use std::collections::HashMap;
+
+/// Float parameters of one linear node.
+#[derive(Debug, Clone)]
+pub struct NodeParams {
+    /// Flat weights in the parameter edge's layout
+    /// (`[Cout, Cin/groups, kh, kw]` for convolutions, `[out, in]` for
+    /// fully-connected layers).
+    pub weight: Vec<f64>,
+    pub weight_dims: Vec<usize>,
+    /// One bias per output channel / feature.
+    pub bias: Vec<f64>,
+}
+
+/// Stable seed for a parameter tensor: node name + shape. Excludes the
+/// graph name and element types on purpose (see module docs).
+fn param_seed(node_name: &str, dims: &[usize]) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_str(node_name);
+    h.write_usize(dims.len());
+    for &d in dims {
+        h.write_usize(d);
+    }
+    h.finish()
+}
+
+/// Synthesize float parameters for every linear node of a graph, keyed by
+/// node index. Weights are `normal(0, 1/sqrt(fan_in))` (the usual init
+/// scale, keeping activations O(1) through the depth), biases small
+/// uniform values.
+pub fn synthesize(g: &Graph) -> HashMap<usize, NodeParams> {
+    let mut out = HashMap::new();
+    for node in &g.nodes {
+        if !matches!(node.op, Op::Conv(_) | Op::Gemm(_) | Op::MatMul(_)) {
+            continue;
+        }
+        let params = g.param_inputs(node.id);
+        let Some(w_edge) = params.first() else { continue };
+        let w_dims = w_edge.spec.dims.clone();
+        let n_w = w_edge.spec.num_elems();
+        let cout = w_dims.first().copied().unwrap_or(1).max(1);
+        let fan_in = (n_w / cout).max(1);
+        let sigma = 1.0 / (fan_in as f64).sqrt();
+
+        let mut rng = Prng::new(param_seed(&node.name, &w_dims));
+        let weight: Vec<f64> = (0..n_w).map(|_| rng.normal() * sigma).collect();
+        let bias: Vec<f64> = (0..cout).map(|_| rng.uniform(-0.05, 0.05)).collect();
+        out.insert(node.id.0, NodeParams { weight, weight_dims: w_dims, bias });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::impl_aware::decorate;
+    use crate::models;
+
+    #[test]
+    fn deterministic_and_shape_faithful() {
+        let (g, cfg) = models::lenet(8, (3, 32, 32), 10);
+        let d = decorate(g, &cfg).unwrap();
+        let a = synthesize(&d);
+        let b = synthesize(&d);
+        assert!(!a.is_empty());
+        for (id, pa) in &a {
+            let pb = &b[id];
+            assert_eq!(pa.weight, pb.weight);
+            assert_eq!(pa.bias, pb.bias);
+            assert_eq!(
+                pa.weight.len(),
+                pa.weight_dims.iter().product::<usize>()
+            );
+            assert_eq!(pa.bias.len(), pa.weight_dims[0]);
+        }
+    }
+
+    #[test]
+    fn teacher_shared_across_bit_widths() {
+        // same topology at different precisions -> identical float teacher
+        let build = |bits: u8| {
+            let (g, cfg) = models::lenet(bits, (3, 32, 32), 10);
+            decorate(g, &cfg).unwrap()
+        };
+        let p8 = synthesize(&build(8));
+        let p2 = synthesize(&build(2));
+        assert_eq!(p8.len(), p2.len());
+        for (id, a) in &p8 {
+            assert_eq!(a.weight, p2[id].weight, "node {id}");
+        }
+    }
+
+    #[test]
+    fn weights_scaled_by_fan_in() {
+        let (g, cfg) = models::lenet(8, (3, 32, 32), 10);
+        let d = decorate(g, &cfg).unwrap();
+        for p in synthesize(&d).values() {
+            let n = p.weight.len() as f64;
+            let var = p.weight.iter().map(|w| w * w).sum::<f64>() / n;
+            let fan_in = (p.weight.len() / p.weight_dims[0]) as f64;
+            // empirical variance within 3x of 1/fan_in
+            assert!(var > 0.0 && var < 3.0 / fan_in, "var={var} fan={fan_in}");
+        }
+    }
+}

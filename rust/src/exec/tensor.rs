@@ -1,0 +1,103 @@
+//! Dense tensors for the bit-exact interpreter: an integer tensor holding
+//! quantized values (the on-device representation) and a float tensor for
+//! the golden reference executor. Layout is row-major over the QONNX
+//! `[C, H, W]` (or `[F]`) dims carried on the graph edges.
+
+/// Integer tensor — quantized activation/accumulator values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorI {
+    pub dims: Vec<usize>,
+    pub data: Vec<i64>,
+}
+
+impl TensorI {
+    pub fn new(dims: Vec<usize>, data: Vec<i64>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Index of the first maximal element (the deployed top-1 rule: ties
+    /// break toward the lowest class index, same as the float reference).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0usize;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Float tensor — the golden-reference real-arithmetic values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF {
+    pub dims: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl TensorF {
+    pub fn new(dims: Vec<usize>, data: Vec<f64>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Largest absolute value (calibration statistic); 0.0 when empty.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    /// Index of the first maximal element (NaN never wins a `>`).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0usize;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins() {
+        let t = TensorI::new(vec![4], vec![1, 7, 7, 3]);
+        assert_eq!(t.argmax(), 1);
+        let f = TensorF::new(vec![3], vec![0.5, 0.5, -1.0]);
+        assert_eq!(f.argmax(), 0);
+    }
+
+    #[test]
+    fn max_abs_over_signs() {
+        let f = TensorF::new(vec![3], vec![0.5, -2.5, 1.0]);
+        assert!((f.max_abs() - 2.5).abs() < 1e-12);
+        assert_eq!(TensorF::new(vec![0], vec![]).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let t = TensorI::new(vec![2, 3], vec![0; 6]);
+        assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
+    }
+}

@@ -17,14 +17,19 @@
 //!    utilization (paper §VIII-B);
 //! 5. [`analysis`] + [`dse`] — latency bounds, deadline screening, and the
 //!    hardware design-space exploration of paper §VIII-C;
-//! 6. [`models`] — the MobileNetV1 workload and the Table-I cases;
-//! 7. [`runtime`] — PJRT-based execution of the AOT-compiled quantized
+//! 6. [`exec`] — a bit-exact integer interpreter of the decorated graph
+//!    (deployed arithmetic: quantized weights, LUT multiplies, dyadic /
+//!    threshold-tree requant) plus a float golden reference — the measured
+//!    accuracy axis, no deployment required;
+//! 7. [`models`] — the MobileNetV1 workload and the Table-I cases;
+//! 8. [`runtime`] — PJRT-based execution of the AOT-compiled quantized
 //!    inference graphs for the accuracy column of Table I.
 
 pub mod analysis;
 pub mod coordinator;
 pub mod dse;
 pub mod error;
+pub mod exec;
 pub mod graph;
 pub mod impl_aware;
 pub mod models;

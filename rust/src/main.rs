@@ -4,7 +4,7 @@
 
 use aladin::analysis::Feasibility;
 use aladin::coordinator::Pipeline;
-use aladin::dse::{explore_joint, GridSearch, JointSpace, MAX_TAIL_K};
+use aladin::dse::{explore_joint_measured, GridSearch, JointSpace, MAX_TAIL_K};
 use aladin::error::Result;
 use aladin::graph::ir::Graph;
 use aladin::impl_aware::ImplConfig;
@@ -31,6 +31,10 @@ USAGE:
                   [--model case1|case2|case3] [--bits 4,8] [--impls im2col,lut]
                   [--tail-k <k>] [--cores 2,4,8] [--l2-kb 256,320,512]
                   [--threads <n>] [--platform <p>] [--width-mult <f64>] [--json]
+                  [--measured-accuracy [--vectors <n>]]
+  aladin eval     [--model case1|case2|case3|lenet|<file.qonnx.json>]
+                  [--impl-config <file.yaml>] [--vectors <n>]
+                  [--width-mult <f64>] [--json] [--out <file.json>]
   aladin accuracy [--artifacts <dir>] [--json]
   aladin screen   --deadline-ms <f64> [--width-mult <f64>]
   aladin trace    [--model <m>] [--out trace.json] [--width-mult <f64>]
@@ -240,7 +244,16 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
     };
     let platform = load_platform(&args.get_or("platform", "gap8"))?;
     let threads = args.get_parsed::<usize>("threads").map_err(io_err)?;
-    let result = explore_joint(case, platform, &space, threads)?;
+    // --measured-accuracy: run the bit-exact interpreter once per quant
+    // configuration (cached across the hardware grid) and make it the
+    // front's accuracy axis instead of the sensitivity proxy
+    let accuracy_vectors = if args.flag("measured-accuracy") {
+        let n = args.get_parsed::<usize>("vectors").map_err(io_err)?.unwrap_or(16);
+        Some(std::sync::Arc::new(models::cifar_vectors(n)))
+    } else {
+        None
+    };
+    let result = explore_joint_measured(case, platform, &space, threads, accuracy_vectors)?;
 
     let skipped_label = |v: &aladin::dse::DesignVector| {
         let quant = v
@@ -268,6 +281,7 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
             .collect();
         let doc = Value::obj()
             .with("model", model)
+            .with("measured_accuracy", result.measured)
             .with("records", ToJson::to_json(&result.records))
             .with("front", Value::Arr(front))
             .with("skipped", Value::Arr(skipped))
@@ -276,23 +290,33 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    let measured_note = if result.measured {
+        ", interpreter-measured accuracy"
+    } else {
+        ""
+    };
     println!(
-        "== joint quantization × hardware DSE — {model} ({} candidates) ==",
-        result.records.len()
+        "== joint quantization × hardware DSE — {model} ({} candidates{measured_note}) ==",
+        result.records.len(),
     );
+    let acc_col = if result.measured { "accuracy" } else { "sens" };
     println!(
         "{:<24} {:>5} {:>7} {:>14} {:>11} {:>9} {:>10} {:>9} {:>7}",
-        "quant", "cores", "L2 kB", "cycles", "latency ms", "sens", "param kB", "mem kB", "pareto"
+        "quant", "cores", "L2 kB", "cycles", "latency ms", acc_col, "param kB", "mem kB", "pareto"
     );
     for (i, r) in result.records.iter().enumerate() {
+        let acc_val = match r.accuracy {
+            Some(a) if result.measured => a,
+            _ => r.sensitivity,
+        };
         println!(
-            "{:<24} {:>5} {:>7} {:>14} {:>11.3} {:>9.2} {:>10.1} {:>9.1} {:>7}",
+            "{:<24} {:>5} {:>7} {:>14} {:>11.3} {:>9.3} {:>10.1} {:>9.1} {:>7}",
             r.quant_label(),
             r.cores,
             r.l2_kb,
             r.total_cycles,
             r.latency_s * 1e3,
-            r.sensitivity,
+            acc_val,
             r.param_kb,
             r.mem_kb,
             if result.front.contains(&i) { "*" } else { "" }
@@ -309,8 +333,13 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
         }
     }
     let s = result.stats;
+    let axis0 = if result.measured {
+        "measured accuracy"
+    } else {
+        "sensitivity"
+    };
     println!(
-        "\nPareto front (sensitivity × latency × memory): {} of {} candidates",
+        "\nPareto front ({axis0} × latency × memory): {} of {} candidates",
         result.front.len(),
         result.records.len()
     );
@@ -319,6 +348,13 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
          stage-2 schedule+sim {} computed / {} cached",
         s.impl_computed, s.impl_hits, s.sim_computed, s.sim_hits
     );
+    if result.measured {
+        println!(
+            "       accuracy stage (integer interpreter): {} computed / {} cached \
+             — hardware-axis-invariant, one per quant configuration",
+            s.acc_computed, s.acc_hits
+        );
+    }
     println!(
         "       {} stage recomputations for {} candidates × 2 stages ({} uncached)",
         s.recomputations(),
@@ -331,6 +367,13 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
 fn cmd_dse(args: &Args) -> Result<()> {
     if args.flag("joint") {
         return cmd_dse_joint(args);
+    }
+    if args.flag("measured-accuracy") {
+        return Err(io_err(
+            "--measured-accuracy requires --joint (the plain hardware grid keeps a \
+             fixed model; the accuracy axis varies with the quantization axis)"
+                .into(),
+        ));
     }
     let model = args.get_or("model", "case2");
     let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
@@ -367,6 +410,58 @@ fn cmd_dse(args: &Args) -> Result<()> {
             p.peak_l2_kb,
             p.l3_traffic_kb
         );
+    }
+    Ok(())
+}
+
+/// Measured accuracy via the bit-exact integer interpreter: decorate the
+/// model, lower it with the deployed arithmetic, and report top-1 fidelity
+/// against the float reference — no PJRT, no artifacts.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "lenet");
+    let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
+    let (g, mut cfg) = load_model(&model, width_mult)?;
+    if let Some(path) = args.get("impl-config") {
+        cfg = ImplConfig::from_file(path)?;
+    }
+    let decorated = std::sync::Arc::new(aladin::impl_aware::decorate(g, &cfg)?);
+    let dims = decorated
+        .inputs()
+        .first()
+        .and_then(|&n| decorated.output_edge(n))
+        .map(|e| e.spec.dims.clone())
+        .ok_or_else(|| io_err("model has no input edge".into()))?;
+    let n = args.get_parsed::<usize>("vectors").map_err(io_err)?.unwrap_or(64);
+    let vectors = aladin::exec::EvalVectors::synthetic(models::EVAL_VECTOR_SEED, dims, n);
+
+    let t0 = std::time::Instant::now();
+    let report = aladin::exec::measure(decorated, &vectors)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let doc = report
+        .to_json()
+        .with("eval_seconds", secs)
+        .with("vectors_per_sec", report.n as f64 / secs.max(1e-12));
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, doc.to_string_pretty())?;
+    }
+    if args.flag("json") {
+        println!("{}", doc.to_string_pretty());
+        return Ok(());
+    }
+    println!("== measured accuracy (bit-exact integer interpreter) — {model} ==");
+    println!(
+        "top-1 fidelity vs float reference: {}/{} = {:.4}",
+        report.matches, report.n, report.accuracy
+    );
+    println!(
+        "output fingerprint {:016x}  ({:.1} vectors/sec, {:.3} s total)",
+        report.output_fingerprint,
+        report.n as f64 / secs.max(1e-12),
+        secs
+    );
+    if let Some(path) = args.get("out") {
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -496,7 +591,7 @@ fn io_err(msg: String) -> aladin::AladinError {
 }
 
 fn main() {
-    let args = match Args::from_env(&["json", "joint", "bottlenecks"]) {
+    let args = match Args::from_env(&["json", "joint", "bottlenecks", "measured-accuracy"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -506,6 +601,7 @@ fn main() {
     let result: Result<()> = match args.subcommand.as_deref() {
         Some("analyze") => cmd_analyze(&args),
         Some("dse") => cmd_dse(&args),
+        Some("eval") => cmd_eval(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("screen") => cmd_screen(&args),
         Some("trace") => cmd_trace(&args),

@@ -12,9 +12,27 @@
 //! | Accuracy   | 0.83         | 0.77         | 0.78         |
 
 use super::mobilenet::{BlockConfig, BlockImpl, MobileNetConfig};
+use crate::exec::EvalVectors;
 
 /// Paper-reported accuracies for reference in reports (Table I bottom row).
 pub const PAPER_ACCURACY: [(&str, f64); 3] = [("case1", 0.83), ("case2", 0.77), ("case3", 0.78)];
+
+/// Seed of the bundled synthetic evaluation vectors (`aladin eval`, the
+/// measured-accuracy DSE stage, and the golden interpreter tests all share
+/// it so results are comparable across runs and PRs).
+pub const EVAL_VECTOR_SEED: u64 = 0xA1AD_1E5D;
+
+/// Bundled CIFAR-shaped evaluation vectors (`[3, 32, 32]`, values in
+/// `[-1, 1)`) — the input domain of every bundled workload.
+pub fn cifar_vectors(n: usize) -> EvalVectors {
+    EvalVectors::synthetic(EVAL_VECTOR_SEED, vec![3, 32, 32], n)
+}
+
+/// The bundled LeNet test vectors (same CIFAR-shaped input domain; named
+/// separately so golden tests read as intended).
+pub fn lenet_vectors(n: usize) -> EvalVectors {
+    cifar_vectors(n)
+}
 
 /// Case 1 — all-int8 baseline, pure im2col.
 pub fn case1() -> MobileNetConfig {

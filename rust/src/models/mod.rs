@@ -6,7 +6,10 @@ pub mod lenet;
 pub mod mobilenet;
 pub mod resnet;
 
-pub use cases::{all_cases, case1, case2, case3, table1_rows, PAPER_ACCURACY};
+pub use cases::{
+    all_cases, case1, case2, case3, cifar_vectors, lenet_vectors, table1_rows,
+    EVAL_VECTOR_SEED, PAPER_ACCURACY,
+};
 pub use lenet::lenet;
 pub use resnet::resnet8;
 pub use mobilenet::{BlockConfig, BlockImpl, MobileNetConfig};

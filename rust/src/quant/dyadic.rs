@@ -5,6 +5,7 @@
 //! precision (usually 30 or 31). The rescale then becomes a multiply plus a
 //! right shift — no division in hardware.
 
+use super::uniform::Rounding;
 
 /// A dyadic approximation `M / 2^n` of a real scale factor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -13,6 +14,11 @@ pub struct DyadicScale {
     pub m: u64,
     /// Right-shift amount (positive, < platform max precision).
     pub n: u8,
+    /// Rounding mode applied by [`DyadicScale::apply`]. Defaults to
+    /// [`Rounding::Nearest`] (ties away from zero), matching Eq. (1)'s
+    /// `Int()` and the threshold-tree requantization path — the two
+    /// integer requant implementations must agree on every half-tie.
+    pub rounding: Rounding,
 }
 
 impl DyadicScale {
@@ -28,10 +34,20 @@ impl DyadicScale {
         loop {
             let m = (scale * (1u64 << n) as f64).round();
             if m <= u32::MAX as f64 || n == 1 {
-                return Self { m: m.max(1.0) as u64, n };
+                return Self {
+                    m: m.max(1.0) as u64,
+                    n,
+                    rounding: Rounding::Nearest,
+                };
             }
             n -= 1;
         }
+    }
+
+    /// Same dyadic pair with a different rounding mode.
+    pub fn with_rounding(mut self, rounding: Rounding) -> Self {
+        self.rounding = rounding;
+        self
     }
 
     /// The real value this dyadic pair represents.
@@ -44,13 +60,31 @@ impl DyadicScale {
         ((self.value() - scale) / scale).abs()
     }
 
-    /// Apply the rescale to an accumulator value with rounding:
-    /// `(acc * M + 2^(n-1)) >> n` (round-to-nearest via bias).
+    /// Apply the rescale to an accumulator value, honouring the configured
+    /// [`Rounding`] mode:
+    ///
+    /// - [`Rounding::Nearest`]: round half *away from zero*, like
+    ///   `f64::round` / Eq. (1)'s `Int()`. The naive `(acc*M + 2^(n-1)) >> n`
+    ///   bias trick rounds half toward +∞ instead, which disagrees with the
+    ///   threshold-tree requant on every negative half-tie — so negative
+    ///   products take the mirrored path.
+    /// - [`Rounding::Floor`] / [`Rounding::Ceil`]: plain arithmetic shift /
+    ///   its negated mirror.
     pub fn apply(&self, acc: i64) -> i64 {
         let prod = acc as i128 * self.m as i128;
-        let bias = 1i128 << (self.n - 1);
-        // arithmetic shift with round-to-nearest, correct for negatives
-        ((prod + bias) >> self.n) as i64
+        let shifted = match self.rounding {
+            Rounding::Nearest => {
+                let bias = 1i128 << (self.n - 1);
+                if prod >= 0 {
+                    (prod + bias) >> self.n
+                } else {
+                    -((-prod + bias) >> self.n)
+                }
+            }
+            Rounding::Floor => prod >> self.n,
+            Rounding::Ceil => -((-prod) >> self.n),
+        };
+        shifted as i64
     }
 
     /// Number of primitive shift/multiply steps for the BOPs model
@@ -70,6 +104,8 @@ impl DyadicScale {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::tensor::ElemType;
+    use crate::quant::ThresholdTree;
 
     #[test]
     fn fit_is_accurate_for_small_scales() {
@@ -100,13 +136,61 @@ mod tests {
         }
     }
 
+    /// Regression: the old `(prod + bias) >> n` rounded negative half-ties
+    /// toward +∞ (`-1.5 -> -1`), disagreeing with `Rounding::Nearest`
+    /// (ties away, `f64::round`) which the uniform quantizer and the
+    /// threshold-tree path implement. The misnamed `apply_rounds_to_nearest`
+    /// test used to pin the wrong `-1.5 -> -1` behaviour.
     #[test]
-    fn apply_rounds_to_nearest() {
+    fn apply_rounds_ties_away_from_zero() {
         // scale = 0.5 exactly: m/2^n = 1/2
-        let d = DyadicScale { m: 1, n: 1 };
+        let d = DyadicScale::fit(0.5, 1);
+        assert_eq!((d.m, d.n), (1, 1));
         assert_eq!(d.apply(3), 2); // 1.5 rounds away to 2
         assert_eq!(d.apply(2), 1);
-        assert_eq!(d.apply(-3), -1); // -1.5 + bias path: rounds to -1
+        assert_eq!(d.apply(-3), -2); // -1.5 rounds away to -2
+        assert_eq!(d.apply(-2), -1);
+        // exhaustive agreement with f64::round on the exact 0.5 scale
+        for acc in -64i64..=64 {
+            assert_eq!(d.apply(acc), (acc as f64 * 0.5).round() as i64, "acc={acc}");
+        }
+    }
+
+    #[test]
+    fn floor_and_ceil_modes() {
+        let d = DyadicScale::fit(0.5, 1);
+        let f = d.with_rounding(Rounding::Floor);
+        let c = d.with_rounding(Rounding::Ceil);
+        assert_eq!(f.apply(3), 1); // floor(1.5)
+        assert_eq!(f.apply(-3), -2); // floor(-1.5)
+        assert_eq!(c.apply(3), 2); // ceil(1.5)
+        assert_eq!(c.apply(-3), -1); // ceil(-1.5)
+        for acc in -32i64..=32 {
+            assert_eq!(f.apply(acc), (acc as f64 * 0.5).floor() as i64, "acc={acc}");
+            assert_eq!(c.apply(acc), (acc as f64 * 0.5).ceil() as i64, "acc={acc}");
+        }
+    }
+
+    /// The two integer requant paths must agree everywhere — including the
+    /// half-ties the old bias trick got wrong: a dyadic multiply by an
+    /// exact `1/2^k` matches the threshold tree built for the same uniform
+    /// requantization scale.
+    #[test]
+    fn dyadic_and_threshold_tree_agree_on_ties() {
+        for k in [1u8, 2, 3] {
+            let scale = (1u64 << k) as f64; // requant divisor 2^k
+            let d = DyadicScale::fit(1.0 / scale, 31);
+            let tree =
+                ThresholdTree::from_uniform_scale(scale, ElemType::int(16), ElemType::int(8));
+            let out = ElemType::int(8);
+            for acc in -1000i64..=1000 {
+                assert_eq!(
+                    out.clamp(d.apply(acc)),
+                    tree.apply(acc),
+                    "acc={acc} k={k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -33,7 +33,11 @@ impl NonUniformQuantizer {
         for k in (1..half_levels).rev() {
             edges.push(beta / (1u64 << (half_levels - k)) as f64);
         }
-        edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Screen non-finite edges (a NaN/inf beta must not panic the sort)
+        // and order with the total ordering, mirroring the
+        // `dse::pareto::best_feasible` NaN fix.
+        edges.retain(|e| e.is_finite());
+        edges.sort_by(|a, b| a.total_cmp(b));
         edges.dedup();
         let levels = Self::midpoint_levels(&edges, beta);
         Self { edges, levels, target }
@@ -116,6 +120,23 @@ mod tests {
             let rr = q.dequantize(q.quantize(r));
             // error bounded by the widest bin
             assert!((r - rr).abs() <= 0.51, "r={r} rr={rr}");
+        }
+    }
+
+    /// Regression: the edge sort used `partial_cmp(..).unwrap()`, which
+    /// panics on NaN; non-finite betas now screen out rather than abort.
+    #[test]
+    fn non_finite_beta_does_not_panic() {
+        let q = NonUniformQuantizer::powers_of_two(f64::INFINITY, ElemType::int(4));
+        // every infinite edge screened; the zero edge always survives
+        assert!(q.edges.iter().all(|e| e.is_finite()));
+        assert!(q.edges.contains(&0.0));
+        // quantize stays monotone over the surviving edges
+        let mut prev = i64::MIN;
+        for i in -20..20 {
+            let v = q.quantize(i as f64 / 10.0);
+            assert!(v >= prev);
+            prev = v;
         }
     }
 

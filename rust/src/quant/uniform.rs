@@ -33,11 +33,17 @@ impl UniformQuantizer {
         assert!(beta > alpha, "degenerate range [{alpha}, {beta}]");
         let levels = (target.levels() - 1) as f64;
         let scale = (beta - alpha) / levels;
-        // Zero-point chosen so alpha maps to the minimum representable value.
+        // Zero-point chosen so alpha maps to the minimum representable
+        // value: quantize(alpha) = round(alpha/S) - Z = qmin requires
+        // Z = round(alpha/S) - qmin, stored as-is (negating it here flipped
+        // quantize(alpha) to 2*round(alpha/S) - qmin, which saturated every
+        // asymmetric signed range; the error cancels only when
+        // round(alpha/S) == 0 and qmin == 0, i.e. the unsigned alpha = 0
+        // corner the original test covered).
         let zero_point = (alpha / scale).round() as i64 - target.min_value();
         Self {
             scale,
-            zero_point: -zero_point,
+            zero_point,
             target,
             rounding: Rounding::Nearest,
         }
@@ -141,6 +147,61 @@ mod tests {
         let hi = q.quantize(6.0);
         assert!(lo >= 0 && hi <= 255 && hi > lo);
         assert!(q.error(3.0) <= q.scale);
+    }
+
+    /// Regression for the zero-point sign flip: for any signed target,
+    /// `quantize(alpha)` landed on `2*round(alpha/S) - qmin` instead of
+    /// `qmin`, saturating asymmetric signed ranges (0.0 mapped to +127 for
+    /// `from_range(0.0, 6.0, int8)`). The uint8 alpha = 0 case cancels the
+    /// error, which is why the original test missed it.
+    #[test]
+    fn from_range_endpoints_cover_signed_and_unsigned() {
+        // signed asymmetric — the case that saturated before the fix
+        let q = UniformQuantizer::from_range(0.0, 6.0, ElemType::int(8));
+        assert_eq!(q.quantize(0.0), -128);
+        assert_eq!(q.quantize(6.0), 127);
+        assert!(q.quantize(3.0).abs() <= 1, "midpoint near 0, got {}", q.quantize(3.0));
+
+        // signed symmetric
+        let q = UniformQuantizer::from_range(-1.0, 1.0, ElemType::int(8));
+        assert_eq!(q.quantize(-1.0), -128);
+        assert_eq!(q.quantize(1.0), 127);
+        assert_eq!(q.quantize(0.0), 0);
+
+        // unsigned asymmetric with negative alpha
+        let q = UniformQuantizer::from_range(-2.0, 6.0, ElemType::uint(8));
+        assert_eq!(q.quantize(-2.0), 0);
+        assert_eq!(q.quantize(6.0), 255);
+
+        // unsigned with alpha = 0 (the historical blind spot still holds)
+        let q = UniformQuantizer::from_range(0.0, 6.0, ElemType::uint(8));
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.quantize(6.0), 255);
+    }
+
+    #[test]
+    fn from_range_round_trip_error_bounded_by_half_scale() {
+        let quantizers = [
+            UniformQuantizer::from_range(0.0, 6.0, ElemType::int(8)),
+            UniformQuantizer::from_range(-1.0, 1.0, ElemType::int(4)),
+            UniformQuantizer::from_range(-2.0, 6.0, ElemType::uint(8)),
+            UniformQuantizer::from_range(0.5, 2.5, ElemType::uint(4)),
+        ];
+        for q in &quantizers {
+            let (alpha, beta) = (
+                q.dequantize(q.target.min_value()),
+                q.dequantize(q.target.max_value()),
+            );
+            for i in 0..=100 {
+                let r = alpha + (beta - alpha) * i as f64 / 100.0;
+                assert!(
+                    q.error(r) <= q.scale / 2.0 + 1e-9,
+                    "r={r} err={} scale={}",
+                    q.error(r),
+                    q.scale
+                );
+            }
+        }
     }
 
     #[test]

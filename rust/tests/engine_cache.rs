@@ -4,14 +4,15 @@
 //! Pareto front is deterministic across thread counts.
 
 use aladin::dse::{
-    explore_joint, DesignVector, EvalEngine, GridSearch, HwAxis, JointResult, JointSpace,
-    QuantAxis,
+    explore_joint, explore_joint_measured, DesignVector, EvalEngine, GridSearch, HwAxis,
+    JointResult, JointSpace, QuantAxis,
 };
 use aladin::impl_aware::decorate;
 use aladin::models;
 use aladin::models::{BlockImpl, MobileNetConfig};
 use aladin::platform::presets;
 use aladin::sim::SimResult;
+use std::sync::Arc;
 
 fn small(mut case: MobileNetConfig) -> MobileNetConfig {
     case.width_mult = 0.25; // keep integration runs fast
@@ -155,6 +156,72 @@ fn joint_pareto_front_deterministic_across_thread_counts() {
     assert_eq!(r1.front, r4.front);
     assert_eq!(r1.front, r7.front);
     assert!(!r1.front.is_empty());
+}
+
+#[test]
+fn measured_accuracy_stage_cache_hits_across_fig7_hw_grid() {
+    // the acceptance criterion for `--measured-accuracy`: the accuracy
+    // stage is keyed by the quant-axis content hash only, so the whole
+    // Fig. 7 hardware grid reuses ONE interpreter evaluation — and every
+    // point reports bit-identical accuracy (hardware-axis invariance).
+    let vectors = Arc::new(models::cifar_vectors(3));
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+        .with_measured_accuracy(vectors);
+    let grid: Vec<DesignVector> = [2usize, 4, 8]
+        .iter()
+        .flat_map(|&c| [256u64, 320, 512].iter().map(move |&l2| DesignVector::of_hw(c, l2)))
+        .collect();
+    let records = engine.evaluate_all(&grid).unwrap();
+    assert_eq!(records.len(), 9);
+
+    let acc = records[0].accuracy.expect("measured accuracy populated");
+    let fp = records[0].accuracy_fingerprint.expect("fingerprint populated");
+    assert!((0.0..=1.0).contains(&acc));
+    for r in &records {
+        assert_eq!(r.accuracy.unwrap().to_bits(), acc.to_bits());
+        assert_eq!(r.accuracy_fingerprint.unwrap(), fp);
+    }
+    let s = engine.stats();
+    assert_eq!(s.acc_computed, 1, "one interpreter eval for 9 hardware points");
+    assert_eq!(s.acc_hits, 8);
+    // the latency stages keep their own accounting
+    assert_eq!(s.impl_computed, 1);
+    assert_eq!(s.sim_computed, 9);
+}
+
+#[test]
+fn joint_measured_accuracy_is_deterministic_across_thread_counts() {
+    let space = JointSpace {
+        bits: vec![4, 8],
+        impls: vec![BlockImpl::Im2col],
+        tail_k: 0,
+        cores: vec![2, 8],
+        l2_kb: vec![256, 512],
+    };
+    let run = |threads: usize| {
+        explore_joint_measured(
+            small(models::case2()),
+            presets::gap8(),
+            &space,
+            Some(threads),
+            Some(Arc::new(models::cifar_vectors(2))),
+        )
+        .unwrap()
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    assert!(r1.measured && r4.measured);
+    let acc = |r: &JointResult| -> Vec<u64> {
+        r.records
+            .iter()
+            .map(|x| x.accuracy.unwrap().to_bits())
+            .collect()
+    };
+    assert_eq!(acc(&r1), acc(&r4));
+    assert_eq!(r1.front, r4.front);
+    // per quant configuration: exactly one interpreter run
+    assert_eq!(r1.stats.acc_computed, 2);
+    assert_eq!(r4.stats.acc_computed, 2);
 }
 
 #[test]
