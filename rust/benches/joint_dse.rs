@@ -14,9 +14,13 @@
 //! the per-PR perf trajectory accumulates.
 
 use aladin::coordinator::Pipeline;
-use aladin::dse::{explore_joint, EvalEngine, GridSearch, JointSpace};
+use aladin::dse::{
+    evolve, explore_joint, normalized_front_hypervolume, objectives, EvalEngine, EvoConfig,
+    GridSearch, JointSpace, SearchSpace,
+};
 use aladin::impl_aware::decorate;
 use aladin::models;
+use aladin::models::BlockImpl;
 use aladin::platform::presets;
 use aladin::util::bench::{bench, BenchStats};
 use aladin::util::json::Value;
@@ -121,6 +125,109 @@ fn main() {
         space.quant_axes(10).len(),
         js.sim_computed
     );
+
+    // (d) evolutionary search vs exhaustive enumeration. Front quality is
+    // compared on the tiny uniform grid (18 candidates, ground truth
+    // enumerable); throughput is additionally measured on a per-layer
+    // space far beyond enumeration (6^10 x 9 ≈ 5.4e8 points).
+    let exhaustive_rate = joint.records.len() as f64 / joint_bench.median.as_secs_f64();
+    let small_space = SearchSpace {
+        bits: space.bits.clone(),
+        impls: space.impls.clone(),
+        n_blocks: 10,
+        cores: space.cores.clone(),
+        l2_kb: space.l2_kb.clone(),
+    };
+    let evo_cfg_small = EvoConfig {
+        population: 24,
+        generations: 3,
+        seed: 17,
+        max_evals: 200,
+        ..EvoConfig::default()
+    };
+    let case_evo = case.clone();
+    let evo_small_bench = bench("joint_dse/evo_small_grid/case2", 1, 3, || {
+        let engine = EvalEngine::for_mobilenet(case_evo.clone(), presets::gap8());
+        evolve(&engine, &small_space, &evo_cfg_small).unwrap().evaluations
+    });
+    let engine = EvalEngine::for_mobilenet(case.clone(), presets::gap8());
+    let evo_small = evolve(&engine, &small_space, &evo_cfg_small).unwrap();
+    let evo_small_rate = evo_small.evaluations as f64 / evo_small_bench.median.as_secs_f64();
+
+    // shared normalization so the two hypervolumes are comparable
+    let exh_pts: Vec<[f64; 3]> = joint.records.iter().map(objectives).collect();
+    let evo_pts: Vec<[f64; 3]> = evo_small.records.iter().map(objectives).collect();
+    let mut union = exh_pts.clone();
+    union.extend(evo_pts);
+    let exh_hv = normalized_front_hypervolume(&union, &joint.front);
+    let evo_front_shifted: Vec<usize> =
+        evo_small.front.iter().map(|&i| i + exh_pts.len()).collect();
+    let evo_hv = normalized_front_hypervolume(&union, &evo_front_shifted);
+    println!(
+        "evo vs exhaustive (tiny grid): exhaustive {exhaustive_rate:.2} cand/s hv {exh_hv:.4}, \
+         evo {evo_small_rate:.2} cand/s hv {evo_hv:.4} ({} evals, {} pruned)",
+        evo_small.evaluations,
+        evo_small.pruned.len()
+    );
+
+    let big_space = SearchSpace {
+        bits: vec![2, 4, 8],
+        impls: vec![BlockImpl::Im2col, BlockImpl::Lut],
+        n_blocks: 10,
+        cores: vec![2, 4, 8],
+        l2_kb: vec![256, 320, 512],
+    };
+    // big_space has 54 uniform seed genomes (3 bits x 2 impls x 9 hw), so
+    // the budget must exceed 54 or generation 0 exhausts it before any
+    // crossover/mutation runs and the metrics measure seed enumeration
+    let evo_cfg_big = EvoConfig {
+        population: 16,
+        generations: 8,
+        seed: 23,
+        max_evals: if tiny { 80 } else { 160 },
+        ..EvoConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let engine = EvalEngine::for_mobilenet(case.clone(), presets::gap8());
+    let evo_big = evolve(&engine, &big_space, &evo_cfg_big).unwrap();
+    let big_secs = t0.elapsed().as_secs_f64();
+    let evo_big_rate = evo_big.evaluations as f64 / big_secs.max(1e-12);
+    let big_pts: Vec<[f64; 3]> = evo_big.records.iter().map(objectives).collect();
+    let big_hv = normalized_front_hypervolume(&big_pts, &evo_big.front);
+    println!(
+        "evo on {:.3e}-point space: {} evals in {big_secs:.2}s ({evo_big_rate:.2} cand/s), \
+         front {} hv {big_hv:.4}, {} pruned unevaluated",
+        big_space.size(),
+        evo_big.evaluations,
+        evo_big.front.len(),
+        evo_big.pruned.len()
+    );
+
+    if let Ok(path) = std::env::var("BENCH_SEARCH_JSON_OUT") {
+        let doc = Value::obj()
+            .with("bench", "search_dse")
+            .with("tiny", tiny)
+            .with("width_mult", case.width_mult)
+            .with("exhaustive_cand_per_sec", exhaustive_rate)
+            .with("exhaustive_front_hypervolume", exh_hv)
+            .with("exhaustive_candidates", joint.records.len())
+            .with("evo_cand_per_sec", evo_small_rate)
+            .with("evo_front_hypervolume", evo_hv)
+            .with("evo_evaluations", evo_small.evaluations)
+            .with("evo_pruned", evo_small.pruned.len())
+            .with("big_space_points", big_space.size())
+            .with("big_evo_cand_per_sec", evo_big_rate)
+            .with("big_evo_front_hypervolume", big_hv)
+            .with("big_evo_evaluations", evo_big.evaluations)
+            .with("big_evo_front", evo_big.front.len())
+            .with("big_evo_pruned", evo_big.pruned.len())
+            .with(
+                "runs",
+                Value::Arr(vec![stats_json(&joint_bench), stats_json(&evo_small_bench)]),
+            );
+        std::fs::write(&path, doc.to_string_pretty()).expect("write search bench json");
+        println!("wrote search bench timings to {path}");
+    }
 
     if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
         let doc = Value::obj()

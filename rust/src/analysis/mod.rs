@@ -1,5 +1,12 @@
 //! Latency analysis, per-resource bottleneck attribution, and deadline
 //! screening of candidate configurations.
+//!
+//! Everything here consumes a finished [`crate::sim::SimResult`], so it
+//! inherits the simulation stage's cache axis — (quantization axis ×
+//! hardware axis); see the staged-memoization contract in [`crate::dse`].
+//! For screening *before* simulating, the DSE search uses the analytic
+//! bound in [`crate::sim::lower_bound_cycles`] instead of these exact
+//! attributions.
 
 pub mod bottleneck;
 pub mod latency;

@@ -121,6 +121,18 @@ impl QuantAxis {
             h.write_u8(impl_tag(i));
         }
     }
+
+    /// Stable content hash of the per-layer genome (bits + implementation
+    /// per block). Two axes with equal hashes decorate to the same model,
+    /// so the engine's quant-dependent stage caches (`stage_impl`,
+    /// `stage_accuracy`) deduplicate them; the evolutionary search
+    /// ([`crate::dse::search`]) also uses it to recognize already-evaluated
+    /// genomes.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = StableHasher::new();
+        self.write(&mut h);
+        h.finish()
+    }
 }
 
 /// The hardware axis of a design vector: the Fig. 7 reconfiguration knobs.
@@ -137,11 +149,14 @@ pub struct HwAxis {
 /// sweep sets only `hw`, a pure-quantization search only `quant`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DesignVector {
+    /// The quantization axis (`None` = the engine's base model).
     pub quant: Option<QuantAxis>,
+    /// The hardware axis (`None` = the engine's base platform).
     pub hw: Option<HwAxis>,
 }
 
 impl DesignVector {
+    /// A pure-hardware candidate: base model on a reconfigured platform.
     pub fn of_hw(cores: usize, l2_kb: u64) -> Self {
         Self {
             quant: None,
@@ -149,6 +164,7 @@ impl DesignVector {
         }
     }
 
+    /// A pure-quantization candidate: `quant` on the base platform.
     pub fn of_quant(quant: QuantAxis) -> Self {
         Self {
             quant: Some(quant),
@@ -164,11 +180,15 @@ impl DesignVector {
 /// Everything the engine produces for one evaluated design vector.
 #[derive(Debug, Clone)]
 pub struct EvalRecord {
+    /// The candidate this record evaluates.
     pub vector: DesignVector,
     /// Resolved platform knobs (base platform when `vector.hw` is `None`).
     pub cores: usize,
+    /// Resolved L2 capacity in kB.
     pub l2_kb: u64,
+    /// Simulated end-to-end inference latency in cycles.
     pub total_cycles: u64,
+    /// `total_cycles` at the platform clock, in seconds.
     pub latency_s: f64,
     /// Sensitivity proxy: precision loss weighted by physical MAC volume
     /// (stand-in for the Hessian-trace sensitivity of [33]; lower is
@@ -191,9 +211,13 @@ pub struct EvalRecord {
     /// Param + peak activation footprint (kB) — the memory axis of the
     /// joint Pareto front.
     pub mem_kb: f64,
+    /// Peak L1 scratchpad utilization (kB).
     pub peak_l1_kb: f64,
+    /// Peak L2 scratchpad utilization (kB).
     pub peak_l2_kb: f64,
+    /// Total L3 DMA traffic (kB).
     pub l3_traffic_kb: f64,
+    /// The full per-layer simulation result.
     pub sim: SimResult,
     /// (layer, tiles_c, tiles_h, double_buffered) per scheduled layer.
     pub tilings: Vec<(String, usize, usize, bool)>,
@@ -215,6 +239,27 @@ pub(crate) fn sensitivity_proxy(summary: &[LayerSummary], bits: &[u8]) -> f64 {
         .sum()
 }
 
+/// (param kB, param + peak activation kB) of a stage-1 snapshot — the
+/// hardware-invariant memory metrics shared by `EvalRecord::derive` and
+/// the search's cheap screening stage ([`EvalEngine::screen_metrics`]),
+/// factored out so the two paths can never disagree.
+fn impl_memory_kb(impl_model: &ImplModel) -> (f64, f64) {
+    let param_kb = impl_model
+        .impl_summary
+        .iter()
+        .map(|r| r.param_mem_bits)
+        .sum::<u64>() as f64
+        / 8192.0;
+    let act_peak_kb = impl_model
+        .impl_summary
+        .iter()
+        .map(|r| r.input_mem_bits + r.output_mem_bits)
+        .max()
+        .unwrap_or(0) as f64
+        / 8192.0;
+    (param_kb, param_kb + act_peak_kb)
+}
+
 impl EvalRecord {
     fn derive(
         vector: DesignVector,
@@ -223,19 +268,7 @@ impl EvalRecord {
         eval: &PlatformEval,
         platform: &PlatformSpec,
     ) -> Self {
-        let param_kb = impl_model
-            .impl_summary
-            .iter()
-            .map(|r| r.param_mem_bits)
-            .sum::<u64>() as f64
-            / 8192.0;
-        let act_peak_kb = impl_model
-            .impl_summary
-            .iter()
-            .map(|r| r.input_mem_bits + r.output_mem_bits)
-            .max()
-            .unwrap_or(0) as f64
-            / 8192.0;
+        let (param_kb, mem_kb) = impl_memory_kb(impl_model);
         let sensitivity = sensitivity_proxy(&impl_model.impl_summary, effective_bits);
         EvalRecord {
             cores: platform.cores,
@@ -246,7 +279,7 @@ impl EvalRecord {
             accuracy: None,
             accuracy_fingerprint: None,
             param_kb,
-            mem_kb: param_kb + act_peak_kb,
+            mem_kb,
             peak_l1_kb: eval.peak_l1 as f64 / 1024.0,
             peak_l2_kb: eval.peak_l2 as f64 / 1024.0,
             l3_traffic_kb: eval.l3_traffic as f64 / 1024.0,
@@ -292,6 +325,21 @@ impl crate::util::ToJson for EvalRecord {
         }
         doc
     }
+}
+
+/// Hardware-invariant metrics of a candidate's quantization axis computed
+/// from the stage-1 snapshot alone ([`EvalEngine::screen_metrics`]) — the
+/// cheap half of the search's prune-before-simulate screen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScreenMetrics {
+    /// Parameter memory (kB), incl. LUT / threshold-tree overheads —
+    /// bit-identical to [`EvalRecord::param_kb`].
+    pub param_kb: f64,
+    /// Param + peak activation footprint (kB) — bit-identical to
+    /// [`EvalRecord::mem_kb`].
+    pub mem_kb: f64,
+    /// Sensitivity proxy — bit-identical to [`EvalRecord::sensitivity`].
+    pub sensitivity: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -367,6 +415,12 @@ pub struct CacheStats {
     pub acc_computed: usize,
     /// Accuracy-stage lookups served from the cache.
     pub acc_hits: usize,
+    /// Analytic lower-bound stage (schedule + ideal-overlap bound, no
+    /// timeline) computations actually executed — the search's cheap
+    /// pruning stage.
+    pub bound_computed: usize,
+    /// Lower-bound-stage lookups served from the cache.
+    pub bound_hits: usize,
 }
 
 impl CacheStats {
@@ -392,6 +446,8 @@ impl crate::util::ToJson for CacheStats {
             .with("sim_hits", self.sim_hits)
             .with("acc_computed", self.acc_computed)
             .with("acc_hits", self.acc_hits)
+            .with("bound_computed", self.bound_computed)
+            .with("bound_hits", self.bound_hits)
             .with("recomputations", self.recomputations())
             .with("naive_recomputations", self.naive_recomputations())
     }
@@ -467,9 +523,11 @@ pub struct EvalEngine {
     impl_stage: Memo<ImplModel>,
     sim_stage: Memo<PlatformEval>,
     acc_stage: Memo<MeasuredAccuracy>,
+    bound_stage: Memo<u64>,
 }
 
 impl EvalEngine {
+    /// Engine over an arbitrary [`ModelSource`] and base platform.
     pub fn new(source: ModelSource, base: PlatformSpec) -> Self {
         let base_key = match &source {
             ModelSource::MobileNet(c) => mobilenet_key(c),
@@ -485,6 +543,7 @@ impl EvalEngine {
             impl_stage: Memo::new(),
             sim_stage: Memo::new(),
             acc_stage: Memo::new(),
+            bound_stage: Memo::new(),
         }
     }
 
@@ -520,6 +579,11 @@ impl EvalEngine {
         &self.base
     }
 
+    /// The eval-vector set of the measured-accuracy stage, when enabled.
+    pub fn accuracy_vectors(&self) -> Option<&Arc<EvalVectors>> {
+        self.accuracy_vectors.as_ref().map(|(v, _)| v)
+    }
+
     /// Snapshot of the cache counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
@@ -529,6 +593,8 @@ impl EvalEngine {
             sim_hits: self.sim_stage.hits.load(Ordering::Relaxed),
             acc_computed: self.acc_stage.computed.load(Ordering::Relaxed),
             acc_hits: self.acc_stage.hits.load(Ordering::Relaxed),
+            bound_computed: self.bound_stage.computed.load(Ordering::Relaxed),
+            bound_hits: self.bound_stage.hits.load(Ordering::Relaxed),
         }
     }
 
@@ -595,14 +661,25 @@ impl EvalEngine {
             .get_or_compute(acc_key, move || exec::measure(decorated, &vectors))
     }
 
-    /// Evaluate one design vector through the staged cache.
-    pub fn evaluate(&self, vector: &DesignVector) -> Result<EvalRecord> {
-        let impl_key = self.impl_key(vector.quant.as_ref());
-        let impl_model = self.impl_model(vector.quant.as_ref())?;
-        let platform = match vector.hw {
+    /// Resolve the platform a vector's hardware axis selects.
+    fn resolve_platform(&self, vector: &DesignVector) -> PlatformSpec {
+        match vector.hw {
             Some(hw) => self.base.reconfigure(hw.cores, hw.l2_kb * 1024),
             None => self.base.clone(),
-        };
+        }
+    }
+
+    /// Evaluate one vector with an explicit (possibly `None`) accuracy
+    /// vector set — the shared body of [`EvalEngine::evaluate`] and the
+    /// successive-halving path of [`crate::dse::search`].
+    fn evaluate_inner(
+        &self,
+        vector: &DesignVector,
+        accuracy: Option<&(Arc<EvalVectors>, u64)>,
+    ) -> Result<EvalRecord> {
+        let impl_key = self.impl_key(vector.quant.as_ref());
+        let impl_model = self.impl_model(vector.quant.as_ref())?;
+        let platform = self.resolve_platform(vector);
         let sim_key = crate::util::hash::combine(impl_key, platform.content_hash());
         let eval = self
             .sim_stage
@@ -614,12 +691,67 @@ impl EvalEngine {
             &eval,
             &platform,
         );
-        if let Some((vectors, vectors_hash)) = &self.accuracy_vectors {
+        if let Some((vectors, vectors_hash)) = accuracy {
             let acc = self.stage_accuracy(impl_key, &impl_model, vectors, *vectors_hash)?;
             record.accuracy = Some(acc.accuracy);
             record.accuracy_fingerprint = Some(acc.output_fingerprint);
         }
         Ok(record)
+    }
+
+    /// Evaluate one design vector through the staged cache.
+    pub fn evaluate(&self, vector: &DesignVector) -> Result<EvalRecord> {
+        self.evaluate_inner(vector, self.accuracy_vectors.as_ref())
+    }
+
+    /// [`EvalEngine::evaluate`] with the accuracy stage run on an explicit
+    /// vector set instead of the engine's attached one — the
+    /// successive-halving searchers screen candidates on a small subset and
+    /// spend the full set only on front survivors. The accuracy cache keys
+    /// on the vector-set content hash, so both tiers coexist in one cache.
+    pub fn evaluate_with_vectors(
+        &self,
+        vector: &DesignVector,
+        vectors: Arc<EvalVectors>,
+    ) -> Result<EvalRecord> {
+        let hash = vectors.content_hash();
+        self.evaluate_inner(vector, Some(&(vectors, hash)))
+    }
+
+    /// The cheap screening stage: analytic latency **lower bound** in
+    /// cycles for a vector, from the (cached) stage-1 model and a schedule
+    /// build only — no timeline simulation, no interpreter
+    /// ([`crate::sim::lower_bound_cycles`]). Memoized per (quant, platform)
+    /// pair like the simulation stage, but in its own table so bound
+    /// lookups never count as simulations in [`CacheStats`].
+    pub fn latency_lower_bound(&self, vector: &DesignVector) -> Result<u64> {
+        let impl_key = self.impl_key(vector.quant.as_ref());
+        let impl_model = self.impl_model(vector.quant.as_ref())?;
+        let platform = self.resolve_platform(vector);
+        let key = crate::util::hash::combine(impl_key, platform.content_hash());
+        let bound = self.bound_stage.get_or_compute(key, || {
+            let schedule =
+                crate::platform_aware::build_schedule(impl_model.fused.to_vec(), &platform)?;
+            Ok(crate::sim::lower_bound_cycles(&schedule))
+        })?;
+        Ok(*bound)
+    }
+
+    /// Hardware-invariant screening metrics of a vector's quantization
+    /// axis, from the (cached) stage-1 model alone: exact memory footprint
+    /// and sensitivity proxy, with no scheduling or simulation. The values
+    /// are bit-identical to the corresponding [`EvalRecord`] fields (they
+    /// share one computation path), which is what makes dominance pruning
+    /// against them sound.
+    pub fn screen_metrics(&self, vector: &DesignVector) -> Result<ScreenMetrics> {
+        let impl_model = self.impl_model(vector.quant.as_ref())?;
+        let (param_kb, mem_kb) = impl_memory_kb(&impl_model);
+        let sensitivity = sensitivity_proxy(&impl_model.impl_summary, &self.effective_bits(vector));
+        Ok(ScreenMetrics {
+            param_kb,
+            mem_kb,
+            sensitivity,
+        })
     }
 
     /// Evaluate a batch, aborting on the first (lowest-index) failure.
@@ -633,15 +765,30 @@ impl EvalEngine {
     /// back in input order regardless of worker count, so downstream Pareto
     /// fronts are deterministic across thread counts.
     pub fn try_evaluate_all(&self, vectors: &[DesignVector]) -> Vec<Result<EvalRecord>> {
+        self.try_evaluate_all_with(vectors, self.accuracy_vectors.clone())
+    }
+
+    /// [`EvalEngine::try_evaluate_all`] with an explicit accuracy vector
+    /// set (`None` disables the accuracy stage for this batch) — the batch
+    /// form of [`EvalEngine::evaluate_with_vectors`].
+    pub fn try_evaluate_all_with(
+        &self,
+        vectors: &[DesignVector],
+        accuracy: Option<(Arc<EvalVectors>, u64)>,
+    ) -> Vec<Result<EvalRecord>> {
         if vectors.is_empty() {
             return Vec::new();
         }
         let workers = self.threads.min(vectors.len());
         if workers <= 1 {
-            return vectors.iter().map(|v| self.evaluate(v)).collect();
+            return vectors
+                .iter()
+                .map(|v| self.evaluate_inner(v, accuracy.as_ref()))
+                .collect();
         }
 
         let next = AtomicUsize::new(0);
+        let accuracy = &accuracy;
         let per_worker: Vec<Vec<(usize, Result<EvalRecord>)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
@@ -653,7 +800,7 @@ impl EvalEngine {
                             if i >= vectors.len() {
                                 break;
                             }
-                            out.push((i, self.evaluate(&vectors[i])));
+                            out.push((i, self.evaluate_inner(&vectors[i], accuracy.as_ref())));
                         }
                         out
                     })
@@ -851,16 +998,7 @@ pub fn explore_joint_measured(
             Err(e) => skipped.push((vector.clone(), e)),
         }
     }
-    let points: Vec<[f64; 3]> = records
-        .iter()
-        .map(|r| {
-            let axis0 = match r.accuracy {
-                Some(a) => 1.0 - a,
-                None => r.sensitivity,
-            };
-            [axis0, r.latency_s, r.mem_kb]
-        })
-        .collect();
+    let points: Vec<[f64; 3]> = records.iter().map(super::search::objectives).collect();
     let front = super::pareto::pareto_min_indices(&points);
     Ok(JointResult {
         records,
@@ -1082,6 +1220,54 @@ mod tests {
         assert!(!plain.measured);
         assert!(plain.records.iter().all(|x| x.accuracy.is_none()));
         assert_eq!(plain.stats.acc_computed, 0);
+    }
+
+    #[test]
+    fn lower_bound_stage_is_sound_and_memoized() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        for v in [DesignVector::of_hw(2, 256), DesignVector::of_hw(8, 512)] {
+            let bound = engine.latency_lower_bound(&v).unwrap();
+            let full = engine.evaluate(&v).unwrap();
+            let cycles = full.total_cycles;
+            assert!(bound <= cycles, "bound {bound} > simulated {cycles}");
+            assert!(bound > 0);
+            // memoized: a second lookup is a hit, not a recomputation
+            engine.latency_lower_bound(&v).unwrap();
+        }
+        let s = engine.stats();
+        assert_eq!(s.bound_computed, 2);
+        assert_eq!(s.bound_hits, 2);
+        // bound lookups never count as simulations
+        assert_eq!(s.sim_computed, 2);
+    }
+
+    #[test]
+    fn screen_metrics_bit_identical_to_full_record() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let v = DesignVector {
+            quant: Some(QuantAxis::uniform(4, BlockImpl::Im2col, 10)),
+            hw: Some(HwAxis { cores: 4, l2_kb: 320 }),
+        };
+        let cheap = engine.screen_metrics(&v).unwrap();
+        let full = engine.evaluate(&v).unwrap();
+        assert_eq!(cheap.param_kb.to_bits(), full.param_kb.to_bits());
+        assert_eq!(cheap.mem_kb.to_bits(), full.mem_kb.to_bits());
+        assert_eq!(cheap.sensitivity.to_bits(), full.sensitivity.to_bits());
+        // screening shares the stage-1 cache with the full evaluation
+        assert_eq!(engine.stats().impl_computed, 1);
+    }
+
+    #[test]
+    fn quant_axis_content_hash_tracks_genome() {
+        let a = QuantAxis::uniform(4, BlockImpl::Im2col, 10);
+        let b = QuantAxis::uniform(4, BlockImpl::Im2col, 10);
+        assert_eq!(a.content_hash(), b.content_hash());
+        let mut c = a.clone();
+        c.bits[3] = 8;
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = a.clone();
+        d.impls[0] = BlockImpl::Lut;
+        assert_ne!(a.content_hash(), d.content_hash());
     }
 
     #[test]

@@ -20,13 +20,21 @@ use crate::sim::SimResult;
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
+    /// Cluster core count of this grid point.
     pub cores: usize,
+    /// L2 capacity (kB) of this grid point.
     pub l2_kb: u64,
+    /// Simulated end-to-end latency in cycles.
     pub total_cycles: u64,
+    /// `total_cycles` at the platform clock, in seconds.
     pub latency_s: f64,
+    /// Peak L1 scratchpad utilization (kB).
     pub peak_l1_kb: f64,
+    /// Peak L2 scratchpad utilization (kB).
     pub peak_l2_kb: f64,
+    /// Total L3 DMA traffic (kB).
     pub l3_traffic_kb: f64,
+    /// The full per-layer simulation result.
     pub sim: SimResult,
     /// (layer, tiles_c, tiles_h, double_buffered) per layer — the Fig. 7
     /// bottom-row "tiling configurations".
@@ -53,7 +61,9 @@ impl From<EvalRecord> for DesignPoint {
 pub struct GridSearch {
     /// Base platform whose knobs are varied.
     pub base: PlatformSpec,
+    /// Cluster core counts to explore.
     pub cores: Vec<usize>,
+    /// L2 capacities (kB) to explore.
     pub l2_kb: Vec<u64>,
 }
 

@@ -1,17 +1,48 @@
 //! Design-space exploration: the unified joint quantization×hardware
 //! evaluation engine ([`engine`]), the Fig. 7 hardware grid search
-//! ([`grid`]), mixed-precision searchers ([`quant_search`]), and Pareto
-//! screening of candidate configurations ([`pareto`]).
+//! ([`grid`]), mixed-precision searchers ([`quant_search`]), the
+//! evolutionary multi-objective searcher over per-layer genomes
+//! ([`search`]), and Pareto screening of candidate configurations
+//! ([`pareto`]).
+//!
+//! ## The staged-memoization contract
+//!
+//! Every searcher evaluates candidates through one [`engine::EvalEngine`],
+//! whose pipeline stages are memoized by stable content hashes. Which axis
+//! of a [`engine::DesignVector`] each stage's cache key depends on is the
+//! load-bearing invariant:
+//!
+//! | stage | work | cache key depends on |
+//! |---|---|---|
+//! | `stage_impl` | validate + decorate + fuse | base model + **quantization axis** only |
+//! | `stage_platform` | schedule + timeline simulation | quantization axis × **hardware axis** |
+//! | `stage_accuracy` | bit-exact integer interpreter | quantization axis × **eval-vector set** (hardware-invariant) |
+//! | bound stage | schedule + analytic lower bound | quantization axis × hardware axis |
+//!
+//! Consequences searchers exploit: a hardware sweep re-decorates nothing
+//! (one `stage_impl` per quantization configuration); a whole hardware
+//! grid reuses **one** interpreter run per quantization configuration
+//! (the accuracy stage never sees a platform); and the evolutionary
+//! search's cheap screens ([`engine::EvalEngine::screen_metrics`],
+//! [`engine::EvalEngine::latency_lower_bound`]) ride the same caches, so
+//! pruning a candidate costs at most a schedule build — never a
+//! simulation or an interpreter run.
 
 pub mod engine;
 pub mod grid;
 pub mod pareto;
 pub mod quant_search;
+pub mod search;
 
 pub use engine::{
     explore_joint, explore_joint_measured, CacheStats, DesignVector, EvalEngine, EvalRecord,
-    HwAxis, JointResult, JointSpace, ModelSource, QuantAxis, MAX_TAIL_K,
+    HwAxis, JointResult, JointSpace, ModelSource, QuantAxis, ScreenMetrics, MAX_TAIL_K,
 };
 pub use grid::{speedups, DesignPoint, GridSearch};
-pub use pareto::{best_feasible, pareto_front, pareto_min_indices, Candidate};
+pub use pareto::{best_feasible, pareto_front, pareto_min_2d, pareto_min_indices, Candidate};
 pub use quant_search::{exhaustive_pareto, greedy_memory, greedy_memory_on, QuantCandidate};
+pub use search::{
+    crowding_distance, evolve, evolve_with, hypervolume, non_dominated_sort,
+    normalized_front_hypervolume, objectives, EvoConfig, EvoResult, GenerationStat, Genome,
+    PruneReason, SearchSpace,
+};

@@ -6,6 +6,7 @@
 /// A candidate configuration's evaluated metrics.
 #[derive(Debug, Clone)]
 pub struct Candidate {
+    /// Candidate label (model / configuration name).
     pub name: String,
     /// Classification accuracy in [0, 1] (higher better).
     pub accuracy: f64,
@@ -44,19 +45,101 @@ pub fn pareto_front(candidates: &[Candidate]) -> Vec<Candidate> {
 /// (sensitivity, latency, memory). Ties (bit-identical points) are all
 /// kept, and input order is preserved, so the front is deterministic for a
 /// fixed candidate enumeration regardless of evaluation parallelism.
+///
+/// When one axis is constant (bit-identical, non-NaN) across every point —
+/// common for the evolutionary search's per-generation fronts when the
+/// measured-accuracy axis saturates — the problem collapses to two
+/// objectives and the O(n log n) [`pareto_min_2d`] sweep is used instead
+/// of the O(n²) scan.
 pub fn pareto_min_indices(points: &[[f64; 3]]) -> Vec<usize> {
-    let dominates = |a: &[f64; 3], b: &[f64; 3]| {
-        a.iter().zip(b.iter()).all(|(x, y)| x <= y)
-            && a.iter().zip(b.iter()).any(|(x, y)| x < y)
-    };
+    // constant-axis fast path: domination on a constant axis is always
+    // `<=` and never `<`, so it reduces exactly to the other two axes
+    if points.len() >= 2 {
+        for axis in 0..3 {
+            let v0 = points[0][axis];
+            if !v0.is_nan() && points.iter().all(|p| p[axis].to_bits() == v0.to_bits()) {
+                let (a, b) = match axis {
+                    0 => (1, 2),
+                    1 => (0, 2),
+                    _ => (0, 1),
+                };
+                let pts2: Vec<[f64; 2]> = points.iter().map(|p| [p[a], p[b]]).collect();
+                return pareto_min_2d(&pts2);
+            }
+        }
+    }
     (0..points.len())
         .filter(|&i| {
             !points
                 .iter()
                 .enumerate()
-                .any(|(j, p)| j != i && dominates(p, &points[i]))
+                .any(|(j, p)| j != i && dominates_min(p, &points[i]))
         })
         .collect()
+}
+
+/// `a` dominates `b` under minimization: no worse on every axis, strictly
+/// better on at least one. NaN coordinates satisfy neither `<=` nor `<`,
+/// so NaN points never dominate and are never dominated. This is the one
+/// dominance predicate shared by [`pareto_min_indices`] and the
+/// evolutionary search ([`crate::dse::search`]) — the fast paths and the
+/// pruning soundness argument are all stated against it.
+pub fn dominates_min(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a.iter().zip(b.iter()).all(|(x, y)| x <= y) && a.iter().zip(b.iter()).any(|(x, y)| x < y)
+}
+
+/// Two-objective Pareto front (both axes minimized) in O(n log n): sort by
+/// the first axis and sweep with the running second-axis minimum, instead
+/// of the all-pairs O(n²) scan — per-generation fronts over large
+/// evolutionary populations would otherwise dominate search wall-clock.
+///
+/// Semantics match [`pareto_min_indices`] exactly (the
+/// `prop_pareto_2d_fast_path_agrees` property asserts it on random
+/// inputs): bit-identical ties are all kept, input order is preserved, and
+/// points with a NaN coordinate neither dominate nor are dominated.
+pub fn pareto_min_2d(points: &[[f64; 2]]) -> Vec<usize> {
+    let n = points.len();
+    let mut keep = vec![false; n];
+    let mut sweep: Vec<usize> = Vec::with_capacity(n);
+    for (i, p) in points.iter().enumerate() {
+        if p[0].is_nan() || p[1].is_nan() {
+            keep[i] = true; // NaN points are incomparable: always kept
+        } else {
+            sweep.push(i);
+        }
+    }
+    sweep.sort_by(|&a, &b| {
+        points[a][0]
+            .total_cmp(&points[b][0])
+            .then(points[a][1].total_cmp(&points[b][1]))
+            .then(a.cmp(&b))
+    });
+    // best (minimal) y among points with strictly smaller x; `None` until
+    // a first x-group has passed (an INFINITY sentinel would wrongly
+    // count a y = +inf point as dominated by "nothing")
+    let mut best_prev_y: Option<f64> = None;
+    let mut k = 0;
+    while k < sweep.len() {
+        let x = points[sweep[k]][0];
+        // the numerically-equal-x group (== merges -0.0 and 0.0, matching
+        // the generic scan's `<`/`<=` semantics)
+        let mut j = k;
+        let mut group_min_y = points[sweep[k]][1];
+        while j < sweep.len() && points[sweep[j]][0] == x {
+            group_min_y = group_min_y.min(points[sweep[j]][1]);
+            j += 1;
+        }
+        for &idx in &sweep[k..j] {
+            let y = points[idx][1];
+            // kept unless a strictly-smaller-x point has y <= ours, or a
+            // same-x point has strictly smaller y (NaNs were screened out,
+            // so these comparisons are total here)
+            keep[idx] = best_prev_y.map(|p| p > y).unwrap_or(true) && y <= group_min_y;
+        }
+        best_prev_y = Some(best_prev_y.map(|p| p.min(group_min_y)).unwrap_or(group_min_y));
+        k = j;
+    }
+    (0..n).filter(|&i| keep[i]).collect()
 }
 
 /// Filter candidates meeting a deadline (cycles), then return the
@@ -147,5 +230,58 @@ mod tests {
         assert_eq!(pareto_min_indices(&pts), vec![0, 2, 3]);
         assert!(pareto_min_indices(&[]).is_empty());
         assert_eq!(pareto_min_indices(&[[1.0, 2.0, 3.0]]), vec![0]);
+    }
+
+    /// Reference O(n²) scan with the exact semantics of the generic path.
+    fn naive_2d(points: &[[f64; 2]]) -> Vec<usize> {
+        let dom = |a: &[f64; 2], b: &[f64; 2]| {
+            a.iter().zip(b.iter()).all(|(x, y)| x <= y)
+                && a.iter().zip(b.iter()).any(|(x, y)| x < y)
+        };
+        (0..points.len())
+            .filter(|&i| {
+                !points
+                    .iter()
+                    .enumerate()
+                    .any(|(j, p)| j != i && dom(p, &points[i]))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fast_2d_front_matches_naive_on_edge_cases() {
+        let cases: &[&[[f64; 2]]] = &[
+            &[],
+            &[[1.0, 1.0]],
+            &[[1.0, 1.0], [1.0, 1.0]],                     // exact ties kept
+            &[[1.0, 2.0], [2.0, 1.0], [2.0, 2.0]],         // one dominated
+            &[[0.0, 5.0], [0.0, 4.0], [0.0, 4.0]],         // same-x group
+            &[[1.0, f64::NAN], [0.5, 1.0], [2.0, 2.0]],    // NaN incomparable
+            &[[-0.0, 5.0], [0.0, 5.0], [0.0, 6.0]],        // signed-zero ties
+            &[[1.0, f64::INFINITY]],                       // lone +inf kept
+            &[[1.0, f64::INFINITY], [2.0, 3.0]],           // +inf incomparable
+            &[[1.0, f64::INFINITY], [0.5, f64::INFINITY]], // +inf dominated on x
+        ];
+        for pts in cases {
+            assert_eq!(pareto_min_2d(pts), naive_2d(pts), "case {pts:?}");
+        }
+    }
+
+    #[test]
+    fn constant_axis_fast_path_matches_generic() {
+        // axis 0 constant: reduces to a 2-D front over (axis 1, axis 2)
+        let pts = [
+            [7.0, 1.0, 5.0],
+            [7.0, 2.0, 4.0],
+            [7.0, 3.0, 5.0], // dominated by [1] on both free axes
+            [7.0, 1.0, 5.0], // tie of [0]
+        ];
+        assert_eq!(pareto_min_indices(&pts), vec![0, 1, 3]);
+        // NaN constant axis must NOT collapse (NaN never dominates)
+        let nan_axis = [
+            [f64::NAN, 1.0, 1.0],
+            [f64::NAN, 2.0, 2.0], // kept: NaN axis never satisfies `<=`
+        ];
+        assert_eq!(pareto_min_indices(&nan_axis), vec![0, 1]);
     }
 }

@@ -1,0 +1,1018 @@
+//! Scalable multi-objective design-space search: an NSGA-II-style
+//! evolutionary explorer over the **per-layer** quantization × hardware
+//! genome, with cheap-first pruning so spaces far beyond enumeration
+//! (`(bits × impls)^layers × cores × L2` — easily ≥ 10⁶ candidates) stay
+//! tractable under a bounded evaluation budget.
+//!
+//! The paper's exhaustive sweeps ([`crate::dse::GridSearch`],
+//! [`crate::dse::quant_search::exhaustive_pareto`]) cannot reach the
+//! layer-wise mixed-precision space of §III/§VII; QUIDAM/QADAM-style
+//! co-exploration needs Pareto-directed search instead. This module keeps
+//! the single evaluation path — everything still flows through the
+//! memoized [`EvalEngine`] — and adds:
+//!
+//! - [`Genome`] / [`SearchSpace`] — the per-layer bits/impl genome joined
+//!   with the hardware axis, plus deterministic random/mutate/crossover
+//!   operators driven by [`crate::util::Prng`];
+//! - NSGA-II machinery — [`non_dominated_sort`], [`crowding_distance`],
+//!   and exact 3-objective [`hypervolume`];
+//! - cheap-first pruning — the analytic latency lower bound
+//!   ([`EvalEngine::latency_lower_bound`], backed by
+//!   [`crate::sim::lower_bound_cycles`]) and the exact hardware-invariant
+//!   memory/sensitivity screen ([`EvalEngine::screen_metrics`]) reject
+//!   candidates that provably cannot enter the front *before* the
+//!   simulate/interpret stages run;
+//! - a successive-halving accuracy budget — with measured accuracy
+//!   enabled, candidates are screened on a small eval-vector subset and
+//!   only front survivors are re-measured on the full set.
+//!
+//! Determinism: all randomness comes from one seeded [`crate::util::Prng`]
+//! on the driving thread, and batch evaluation returns results in input
+//! order regardless of the engine's worker count — the same seed yields a
+//! bit-identical final front on 1 or 8 threads.
+//!
+//! ## Pruning soundness
+//!
+//! A candidate is bound-pruned only when an already-evaluated record
+//! dominates its *optimistic* objective vector: exact sensitivity (or a
+//! perfect accuracy of 1.0 in measured mode), the latency **lower bound**,
+//! and the exact memory footprint. Since the true latency can only be
+//! larger than the bound and the other axes are exact (resp. optimistic),
+//! domination of the optimistic vector implies domination of the true one
+//! — a pruned candidate could never have entered the final front. The
+//! `search_evo` integration tests re-evaluate pruned candidates in full to
+//! assert exactly this.
+//!
+//! While successive halving is active, dominance pruning is disabled
+//! entirely (the memory/deadline feasibility screens stay on): screen-tier
+//! accuracies are provisional — survivors are re-measured on the full
+//! vector set — so a screen-tier-perfect record is not a sound dominator.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use super::engine::{CacheStats, DesignVector, EvalEngine, EvalRecord, HwAxis, QuantAxis};
+use super::pareto::{dominates_min, pareto_min_2d, pareto_min_indices};
+use crate::error::{AladinError, Result};
+use crate::exec::EvalVectors;
+use crate::models::BlockImpl;
+use crate::util::{Prng, StableHasher};
+
+// ---------------------------------------------------------------------------
+// genome + search space
+// ---------------------------------------------------------------------------
+
+/// One point of the per-layer search space: a per-block quantization
+/// genome joined with an optional hardware gene. This is the shared genome
+/// of every searcher in [`crate::dse`] — the evolutionary explorer mutates
+/// it, [`crate::dse::quant_search::greedy_memory`] descends it block by
+/// block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Genome {
+    /// Per-block bits + implementation (the quantization chromosome).
+    pub quant: QuantAxis,
+    /// Hardware gene (`None` = the engine's base platform).
+    pub hw: Option<HwAxis>,
+}
+
+impl Genome {
+    /// Uniform genome: every block at `bits`/`implementation`.
+    pub fn uniform(
+        bits: u8,
+        implementation: BlockImpl,
+        n_blocks: usize,
+        hw: Option<HwAxis>,
+    ) -> Self {
+        Self {
+            quant: QuantAxis::uniform(bits, implementation, n_blocks),
+            hw,
+        }
+    }
+
+    /// The design vector this genome evaluates as.
+    pub fn vector(&self) -> DesignVector {
+        DesignVector {
+            quant: Some(self.quant.clone()),
+            hw: self.hw,
+        }
+    }
+
+    /// Stable content hash of the whole genome (quant chromosome +
+    /// hardware gene) — the dedup key of the evolutionary archive. Keyed
+    /// like the engine's stage caches, so equal-hash genomes hit the same
+    /// cache entries.
+    pub fn key(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.write_u64(self.quant.content_hash());
+        match self.hw {
+            None => h.write_u8(0),
+            Some(hw) => {
+                h.write_u8(1);
+                h.write_usize(hw.cores);
+                h.write_u64(hw.l2_kb);
+            }
+        }
+        h.finish()
+    }
+
+    /// Copy with block `i`'s precision halved (8→4→2) — the greedy
+    /// searcher's move operator.
+    pub fn with_halved_block(&self, i: usize) -> Genome {
+        let mut g = self.clone();
+        if let Some(b) = g.quant.bits.get_mut(i) {
+            *b /= 2;
+        }
+        g
+    }
+
+    /// Human-readable label: quant label plus the hardware gene.
+    pub fn label(&self) -> String {
+        match self.hw {
+            Some(hw) => format!("{} @{}c/{}kB", self.quant.label(), hw.cores, hw.l2_kb),
+            None => self.quant.label(),
+        }
+    }
+}
+
+/// The per-layer joint search space: per-block alphabets × hardware knobs.
+/// Unlike [`crate::dse::JointSpace`] (which enumerates uniform or
+/// tail-varied assignments), every block chooses independently — the space
+/// has `(|bits| · |impls|)^n_blocks · |cores| · |l2_kb|` points and is
+/// meant to be *searched*, not enumerated.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Per-block precision alphabet.
+    pub bits: Vec<u8>,
+    /// Per-block implementation alphabet.
+    pub impls: Vec<BlockImpl>,
+    /// Number of blocks in the genome (10 for the Table-I MobileNet).
+    pub n_blocks: usize,
+    /// Cluster core counts the hardware gene may take.
+    pub cores: Vec<usize>,
+    /// L2 capacities (kB) the hardware gene may take.
+    pub l2_kb: Vec<u64>,
+}
+
+impl SearchSpace {
+    /// Total number of candidate points (as `f64`: the whole point of the
+    /// evolutionary search is that this routinely exceeds `u64`).
+    pub fn size(&self) -> f64 {
+        ((self.bits.len() * self.impls.len()) as f64).powi(self.n_blocks as i32)
+            * (self.cores.len().max(1) * self.l2_kb.len().max(1)) as f64
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.bits.is_empty()
+            || self.impls.is_empty()
+            || self.cores.is_empty()
+            || self.l2_kb.is_empty()
+            || self.n_blocks == 0
+        {
+            return Err(AladinError::Dse(
+                "search space needs non-empty bits/impls/cores/l2_kb alphabets and at \
+                 least one block"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn random_hw(&self, rng: &mut Prng) -> HwAxis {
+        HwAxis {
+            cores: *rng.choice(&self.cores),
+            l2_kb: *rng.choice(&self.l2_kb),
+        }
+    }
+
+    /// Uniformly random genome.
+    pub fn random(&self, rng: &mut Prng) -> Genome {
+        let bits = (0..self.n_blocks).map(|_| *rng.choice(&self.bits)).collect();
+        let impls = (0..self.n_blocks).map(|_| *rng.choice(&self.impls)).collect();
+        Genome {
+            quant: QuantAxis { bits, impls },
+            hw: Some(self.random_hw(rng)),
+        }
+    }
+
+    /// Deterministic anchor genomes: every uniform (bits, impl) assignment
+    /// crossed with every hardware point. Seeding the initial population
+    /// with these guarantees the archive contains the enumerable uniform
+    /// sub-grid (the small space where the exhaustive front is ground
+    /// truth).
+    pub fn uniform_seeds(&self) -> Vec<Genome> {
+        let mut out = Vec::new();
+        for &b in &self.bits {
+            for &i in &self.impls {
+                for &cores in &self.cores {
+                    for &l2_kb in &self.l2_kb {
+                        out.push(Genome::uniform(
+                            b,
+                            i,
+                            self.n_blocks,
+                            Some(HwAxis { cores, l2_kb }),
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-gene mutation: each block's bits and implementation — and each
+    /// hardware knob — is redrawn from its alphabet with probability `p`.
+    pub fn mutate(&self, genome: &mut Genome, rng: &mut Prng, p: f64) {
+        for b in genome.quant.bits.iter_mut() {
+            if rng.chance(p) {
+                *b = *rng.choice(&self.bits);
+            }
+        }
+        for i in genome.quant.impls.iter_mut() {
+            if rng.chance(p) {
+                *i = *rng.choice(&self.impls);
+            }
+        }
+        let mut hw = genome.hw.unwrap_or_else(|| self.random_hw(rng));
+        if rng.chance(p) {
+            hw.cores = *rng.choice(&self.cores);
+        }
+        if rng.chance(p) {
+            hw.l2_kb = *rng.choice(&self.l2_kb);
+        }
+        genome.hw = Some(hw);
+    }
+
+    /// Uniform crossover: every gene (per-block bits, per-block impl,
+    /// cores, L2) comes from either parent with equal probability.
+    pub fn crossover(&self, a: &Genome, b: &Genome, rng: &mut Prng) -> Genome {
+        let n = self.n_blocks;
+        let pick_bits = |x: &Genome, i: usize| x.quant.bits.get(i).copied().unwrap_or(8);
+        let pick_impl =
+            |x: &Genome, i: usize| x.quant.impls.get(i).copied().unwrap_or(BlockImpl::Im2col);
+        let bits = (0..n)
+            .map(|i| if rng.chance(0.5) { pick_bits(a, i) } else { pick_bits(b, i) })
+            .collect();
+        let impls = (0..n)
+            .map(|i| if rng.chance(0.5) { pick_impl(a, i) } else { pick_impl(b, i) })
+            .collect();
+        let ha = a.hw.unwrap_or_else(|| self.random_hw(rng));
+        let hb = b.hw.unwrap_or(ha);
+        let hw = HwAxis {
+            cores: if rng.chance(0.5) { ha.cores } else { hb.cores },
+            l2_kb: if rng.chance(0.5) { ha.l2_kb } else { hb.l2_kb },
+        };
+        Genome {
+            quant: QuantAxis { bits, impls },
+            hw: Some(hw),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// configuration + results
+// ---------------------------------------------------------------------------
+
+/// Knobs of the evolutionary search (CLI `aladin dse --search evo`).
+#[derive(Debug, Clone)]
+pub struct EvoConfig {
+    /// Population size per generation.
+    pub population: usize,
+    /// Number of offspring generations after the seeded generation 0.
+    pub generations: usize,
+    /// PRNG seed — same seed ⇒ bit-identical final front, independent of
+    /// the engine's thread count.
+    pub seed: u64,
+    /// Hard cap on full candidate evaluations across the whole run.
+    pub max_evals: usize,
+    /// Probability an offspring is produced by crossover (otherwise a
+    /// mutated copy of one tournament winner).
+    pub crossover_p: f64,
+    /// Per-gene mutation probability; `0.0` selects the adaptive default
+    /// `1 / (n_blocks + 2)`.
+    pub mutation_p: f64,
+    /// Enable the cheap-first screens (lower-bound dominance pruning +
+    /// memory/deadline feasibility).
+    pub prune: bool,
+    /// Successive-halving screen tier: number of eval vectors used during
+    /// evolution when measured accuracy is enabled (`0` = always use the
+    /// engine's full set). Front survivors are re-measured on the full
+    /// set.
+    pub screen_vectors: usize,
+    /// Optional memory-feasibility screen: candidates whose exact
+    /// param+activation footprint exceeds this are rejected unevaluated.
+    pub mem_budget_kb: Option<f64>,
+    /// Optional deadline screen: candidates whose latency *lower bound*
+    /// already misses this are rejected unevaluated (sound: the true
+    /// latency can only be larger).
+    pub max_latency_s: Option<f64>,
+}
+
+impl Default for EvoConfig {
+    fn default() -> Self {
+        Self {
+            population: 32,
+            generations: 12,
+            seed: 0xA1AD1,
+            max_evals: 2000,
+            crossover_p: 0.9,
+            mutation_p: 0.0,
+            prune: true,
+            screen_vectors: 0,
+            mem_budget_kb: None,
+            max_latency_s: None,
+        }
+    }
+}
+
+/// Why a candidate was rejected before full evaluation.
+#[derive(Debug, Clone)]
+pub enum PruneReason {
+    /// An evaluated record dominates the candidate's optimistic objective
+    /// vector built from the analytic latency lower bound (in cycles).
+    Bound {
+        /// The analytic lower bound that sealed the rejection.
+        lb_cycles: u64,
+    },
+    /// Exact memory footprint exceeds the configured budget.
+    Memory {
+        /// The candidate's exact param+activation footprint (kB).
+        mem_kb: f64,
+    },
+    /// Latency lower bound alone misses the configured deadline.
+    Deadline {
+        /// The analytic lower bound (cycles) that misses the deadline.
+        lb_cycles: u64,
+    },
+    /// The candidate could not be screened at all (e.g. L1-infeasible
+    /// tiling or an invalid platform corner).
+    Infeasible(String),
+}
+
+/// Per-generation progress record, streamed to the caller while the
+/// search runs (the CLI prints one line per entry).
+#[derive(Debug, Clone)]
+pub struct GenerationStat {
+    /// Generation index (0 = the seeded initial population).
+    pub generation: usize,
+    /// New full evaluations performed this generation.
+    pub new_evals: usize,
+    /// Cumulative full evaluations so far.
+    pub evaluated: usize,
+    /// Candidates rejected this generation by lower-bound dominance.
+    pub pruned_bound: usize,
+    /// Candidates rejected this generation by the memory/deadline screens.
+    pub pruned_feasibility: usize,
+    /// Candidates rejected this generation as unevaluable (infeasible
+    /// tiling, invalid platform corner, …).
+    pub infeasible: usize,
+    /// Size of the archive-wide Pareto front after this generation.
+    pub front_size: usize,
+    /// Hypervolume of that front, objectives normalized to the archive's
+    /// bounds with reference point (1.1, 1.1, 1.1).
+    pub hypervolume: f64,
+}
+
+/// Result of one evolutionary search run.
+#[derive(Debug)]
+pub struct EvoResult {
+    /// Every fully evaluated candidate, in evaluation order (the archive).
+    /// With successive halving active, front survivors carry the
+    /// full-vector re-measured accuracy.
+    pub records: Vec<EvalRecord>,
+    /// Indices into `records` of the final Pareto front (all axes
+    /// minimized: accuracy loss / sensitivity, latency, memory).
+    pub front: Vec<usize>,
+    /// One entry per generation, in order.
+    pub generations: Vec<GenerationStat>,
+    /// Total full evaluations (`records.len()`), always `<=`
+    /// [`EvoConfig::max_evals`].
+    pub evaluations: usize,
+    /// Candidates rejected before evaluation, with the reason. Bound-pruned
+    /// entries are the ones the soundness tests re-evaluate.
+    pub pruned: Vec<(Genome, PruneReason)>,
+    /// True when the accuracy axis came from the integer interpreter.
+    pub measured: bool,
+    /// Engine cache counters at the end of the run.
+    pub stats: CacheStats,
+}
+
+impl EvoResult {
+    /// The Pareto-optimal records themselves.
+    pub fn front_records(&self) -> Vec<&EvalRecord> {
+        self.front.iter().map(|&i| &self.records[i]).collect()
+    }
+}
+
+/// The minimized objective vector of a record: (accuracy loss when
+/// measured, else the sensitivity proxy; latency in seconds; memory in
+/// kB). Shared by the searcher, its tests, and the benches so front
+/// comparisons always agree on the axes.
+pub fn objectives(r: &EvalRecord) -> [f64; 3] {
+    let axis0 = match r.accuracy {
+        Some(a) => 1.0 - a,
+        None => r.sensitivity,
+    };
+    [axis0, r.latency_s, r.mem_kb]
+}
+
+// ---------------------------------------------------------------------------
+// NSGA-II machinery
+// ---------------------------------------------------------------------------
+
+/// Fast non-dominated sorting: partition point indices into fronts
+/// (front 0 = non-dominated, front 1 = non-dominated once front 0 is
+/// removed, …). Deterministic: within a front, indices stay in input
+/// order.
+pub fn non_dominated_sort(points: &[[f64; 3]]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<usize> = vec![0; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates_min(&points[i], &points[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// NSGA-II crowding distance of each member of `front` (indices into
+/// `points`); boundary points get `f64::INFINITY`. Returned aligned with
+/// `front`.
+pub fn crowding_distance(points: &[[f64; 3]], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let mut dist = vec![0.0f64; m];
+    for axis in 0..3 {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            points[front[a]][axis]
+                .total_cmp(&points[front[b]][axis])
+                .then(front[a].cmp(&front[b]))
+        });
+        let lo = points[front[order[0]]][axis];
+        let hi = points[front[order[m - 1]]][axis];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if !span.is_finite() || span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            dist[order[w]] +=
+                (points[front[order[w + 1]]][axis] - points[front[order[w - 1]]][axis]) / span;
+        }
+    }
+    dist
+}
+
+/// Area of the union of rectangles `[x_i, rx] × [y_i, ry]` (the 2-D
+/// dominated region of a minimized point set w.r.t. the reference corner).
+fn area2d(pts: &[(f64, f64)], rx: f64, ry: f64) -> f64 {
+    let mut v: Vec<(f64, f64)> = pts
+        .iter()
+        .copied()
+        .filter(|&(x, y)| x < rx && y < ry)
+        .collect();
+    v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut area = 0.0;
+    let mut best_y = ry;
+    for (x, y) in v {
+        if y < best_y {
+            area += (rx - x) * (best_y - y);
+            best_y = y;
+        }
+    }
+    area
+}
+
+/// Exact hypervolume (all objectives minimized) of `points` w.r.t.
+/// `reference`: the measure of the region dominated by the set and
+/// bounded by the reference point. Points not strictly better than the
+/// reference on every axis (or with non-finite coordinates) contribute
+/// nothing. O(n² log n) — fine for front-sized sets.
+pub fn hypervolume(points: &[[f64; 3]], reference: [f64; 3]) -> f64 {
+    let pts: Vec<[f64; 3]> = points
+        .iter()
+        .copied()
+        .filter(|p| {
+            p.iter().all(|v| v.is_finite()) && p.iter().zip(&reference).all(|(v, r)| v < r)
+        })
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..pts.len()).collect();
+    order.sort_by(|&a, &b| pts[a][2].total_cmp(&pts[b][2]));
+    let mut hv = 0.0;
+    let mut k = 0;
+    while k < order.len() {
+        let z = pts[order[k]][2];
+        let z_next = if k + 1 < order.len() {
+            pts[order[k + 1]][2]
+        } else {
+            reference[2]
+        };
+        if z_next > z {
+            let slab: Vec<(f64, f64)> =
+                order[..=k].iter().map(|&i| (pts[i][0], pts[i][1])).collect();
+            hv += (z_next - z) * area2d(&slab, reference[0], reference[1]);
+        }
+        k += 1;
+    }
+    hv
+}
+
+/// Hypervolume of `front` (indices into `all`) with every objective
+/// normalized to `all`'s min–max bounds and reference point
+/// (1.1, 1.1, 1.1) — the per-generation progress metric streamed by the
+/// evolutionary search. Degenerate axes (min == max) normalize to 0.
+pub fn normalized_front_hypervolume(all: &[[f64; 3]], front: &[usize]) -> f64 {
+    if all.is_empty() || front.is_empty() {
+        return 0.0;
+    }
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for p in all {
+        for a in 0..3 {
+            if p[a].is_finite() {
+                lo[a] = lo[a].min(p[a]);
+                hi[a] = hi[a].max(p[a]);
+            }
+        }
+    }
+    let norm = |p: &[f64; 3]| -> [f64; 3] {
+        let mut q = [0.0; 3];
+        for a in 0..3 {
+            let span = hi[a] - lo[a];
+            q[a] = if span > 0.0 { (p[a] - lo[a]) / span } else { 0.0 };
+        }
+        q
+    };
+    let pts: Vec<[f64; 3]> = front.iter().map(|&i| norm(&all[i])).collect();
+    hypervolume(&pts, [1.1, 1.1, 1.1])
+}
+
+// ---------------------------------------------------------------------------
+// the evolutionary driver
+// ---------------------------------------------------------------------------
+
+/// How many offspring-generation attempts are made per requested offspring
+/// before giving up (small spaces exhaust themselves).
+const OFFSPRING_ATTEMPT_FACTOR: usize = 16;
+
+/// Binary tournament on (rank, crowding distance, archive index).
+fn tournament(rng: &mut Prng, pop: &[usize], rank: &[usize], crowd: &[f64]) -> usize {
+    let a = rng.range(0, pop.len() - 1);
+    let b = rng.range(0, pop.len() - 1);
+    let better = |x: usize, y: usize| -> bool {
+        rank[x] < rank[y]
+            || (rank[x] == rank[y]
+                && (crowd[x] > crowd[y] || (crowd[x] == crowd[y] && pop[x] < pop[y])))
+    };
+    if better(a, b) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Run the evolutionary search on `engine` over `space`. Equivalent to
+/// [`evolve_with`] with a no-op progress callback.
+pub fn evolve(engine: &EvalEngine, space: &SearchSpace, cfg: &EvoConfig) -> Result<EvoResult> {
+    evolve_with(engine, space, cfg, |_| {})
+}
+
+/// Run the evolutionary search, invoking `on_generation` after every
+/// generation with the streaming progress record (front size, normalized
+/// hypervolume, evaluation/prune counters).
+pub fn evolve_with(
+    engine: &EvalEngine,
+    space: &SearchSpace,
+    cfg: &EvoConfig,
+    mut on_generation: impl FnMut(&GenerationStat),
+) -> Result<EvoResult> {
+    space.validate()?;
+    if cfg.population < 2 || cfg.max_evals == 0 {
+        return Err(AladinError::Dse(
+            "evolutionary search needs population >= 2 and a positive evaluation budget"
+                .into(),
+        ));
+    }
+    let mut rng = Prng::new(cfg.seed);
+    let mutation_p = if cfg.mutation_p > 0.0 {
+        cfg.mutation_p
+    } else {
+        1.0 / (space.n_blocks as f64 + 2.0)
+    };
+    let measured = engine.accuracy_vectors().is_some();
+    let clock_hz = engine.base_platform().clock_hz;
+
+    // successive-halving screen tier (measured mode only)
+    let mut halving = false;
+    let screen_tier: Option<(Arc<EvalVectors>, u64)> = match engine.accuracy_vectors() {
+        Some(full) if cfg.screen_vectors > 0 && cfg.screen_vectors < full.len() => {
+            halving = true;
+            let sub = Arc::new(full.truncated(cfg.screen_vectors));
+            let hash = sub.content_hash();
+            Some((sub, hash))
+        }
+        Some(full) => {
+            let hash = full.content_hash();
+            Some((full.clone(), hash))
+        }
+        None => None,
+    };
+
+    // With halving the dominance prune is unsound (disabled below), so
+    // unless a feasibility screen is configured the whole cheap-first
+    // stage can reject nothing — skip it rather than paying a schedule
+    // build per candidate for no possible prune.
+    let screening_active = cfg.prune
+        && !(halving && cfg.mem_budget_kb.is_none() && cfg.max_latency_s.is_none());
+
+    let mut records: Vec<EvalRecord> = Vec::new();
+    let mut genomes: Vec<Genome> = Vec::new(); // aligned with records
+    let mut objs: Vec<[f64; 3]> = Vec::new(); // aligned with records
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut pruned: Vec<(Genome, PruneReason)> = Vec::new();
+    let mut generations: Vec<GenerationStat> = Vec::new();
+    let mut population: Vec<usize> = Vec::new(); // archive indices
+    // archive front used for dominance pruning, recomputed per generation
+    let mut prune_front: Vec<usize> = Vec::new();
+
+    for generation in 0..=cfg.generations {
+        // ---- candidate generation ---------------------------------------
+        let mut candidates: Vec<Genome> = Vec::new();
+        if generation == 0 {
+            // deterministic anchors first: the whole uniform sub-grid
+            candidates = space.uniform_seeds();
+            let mut keys: HashSet<u64> = candidates.iter().map(|g| g.key()).collect();
+            let mut attempts = 0;
+            while candidates.len() < cfg.population
+                && attempts < cfg.population * OFFSPRING_ATTEMPT_FACTOR
+            {
+                attempts += 1;
+                let g = space.random(&mut rng);
+                if keys.insert(g.key()) {
+                    candidates.push(g);
+                }
+            }
+        } else {
+            if population.is_empty() {
+                break; // nothing evaluable survived — space exhausted
+            }
+            // rank + crowding of the current population for selection
+            let pop_pts: Vec<[f64; 3]> = population.iter().map(|&i| objs[i]).collect();
+            let fronts = non_dominated_sort(&pop_pts);
+            let mut rank = vec![0usize; population.len()];
+            let mut crowd = vec![0.0f64; population.len()];
+            for (r, front) in fronts.iter().enumerate() {
+                let cd = crowding_distance(&pop_pts, front);
+                for (&local, d) in front.iter().zip(cd) {
+                    rank[local] = r;
+                    crowd[local] = d;
+                }
+            }
+            let mut attempts = 0;
+            let mut batch_keys: HashSet<u64> = HashSet::new();
+            while candidates.len() < cfg.population
+                && attempts < cfg.population * OFFSPRING_ATTEMPT_FACTOR
+            {
+                attempts += 1;
+                let pa = tournament(&mut rng, &population, &rank, &crowd);
+                let mut child = if rng.chance(cfg.crossover_p) {
+                    let pb = tournament(&mut rng, &population, &rank, &crowd);
+                    space.crossover(&genomes[population[pa]], &genomes[population[pb]], &mut rng)
+                } else {
+                    genomes[population[pa]].clone()
+                };
+                space.mutate(&mut child, &mut rng, mutation_p);
+                let key = child.key();
+                if !seen.contains(&key) && batch_keys.insert(key) {
+                    candidates.push(child);
+                }
+            }
+            if candidates.is_empty() {
+                break; // no unseen genomes reachable — stop early
+            }
+        }
+
+        // ---- cheap-first screening --------------------------------------
+        let mut pruned_bound = 0usize;
+        let mut pruned_feasibility = 0usize;
+        let mut infeasible = 0usize;
+        let mut to_eval: Vec<Genome> = Vec::new();
+        for genome in candidates {
+            let key = genome.key();
+            if !seen.insert(key) {
+                continue;
+            }
+            if !screening_active {
+                to_eval.push(genome);
+                continue;
+            }
+            let vector = genome.vector();
+            let metrics = match engine.screen_metrics(&vector) {
+                Ok(m) => m,
+                Err(e) => {
+                    infeasible += 1;
+                    pruned.push((genome, PruneReason::Infeasible(e.to_string())));
+                    continue;
+                }
+            };
+            if let Some(budget) = cfg.mem_budget_kb {
+                if metrics.mem_kb > budget {
+                    pruned_feasibility += 1;
+                    pruned.push((genome, PruneReason::Memory { mem_kb: metrics.mem_kb }));
+                    continue;
+                }
+            }
+            let lb_cycles = match engine.latency_lower_bound(&vector) {
+                Ok(b) => b,
+                Err(e) => {
+                    infeasible += 1;
+                    pruned.push((genome, PruneReason::Infeasible(e.to_string())));
+                    continue;
+                }
+            };
+            if let Some(deadline) = cfg.max_latency_s {
+                if lb_cycles as f64 / clock_hz > deadline {
+                    pruned_feasibility += 1;
+                    pruned.push((genome, PruneReason::Deadline { lb_cycles }));
+                    continue;
+                }
+            }
+            // dominance pruning against the archive front: the optimistic
+            // vector uses the exact sensitivity (or perfect accuracy in
+            // measured mode), the latency lower bound, and exact memory
+            let opt_acc_loss = if measured { 0.0 } else { metrics.sensitivity };
+            let lb_s = lb_cycles as f64 / clock_hz;
+            let optimistic = [opt_acc_loss, lb_s, metrics.mem_kb];
+            let dominated = prune_front.iter().any(|&i| dominates_min(&objs[i], &optimistic));
+            if dominated {
+                pruned_bound += 1;
+                pruned.push((genome, PruneReason::Bound { lb_cycles }));
+                continue;
+            }
+            to_eval.push(genome);
+        }
+
+        // ---- budget + batch evaluation ----------------------------------
+        let remaining = cfg.max_evals.saturating_sub(records.len());
+        // candidates cut by the budget were never screened out on merit:
+        // un-mark them so a later generation may re-propose them (the
+        // budget only stays open if some of this batch fails to evaluate)
+        for dropped in to_eval.iter().skip(remaining) {
+            seen.remove(&dropped.key());
+        }
+        to_eval.truncate(remaining);
+        let vectors: Vec<DesignVector> = to_eval.iter().map(|g| g.vector()).collect();
+        let outcomes = engine.try_evaluate_all_with(&vectors, screen_tier.clone());
+        let mut new_idx: Vec<usize> = Vec::new();
+        for (genome, outcome) in to_eval.into_iter().zip(outcomes) {
+            match outcome {
+                Ok(r) => {
+                    objs.push(objectives(&r));
+                    records.push(r);
+                    genomes.push(genome);
+                    new_idx.push(records.len() - 1);
+                }
+                Err(e) => {
+                    infeasible += 1;
+                    pruned.push((genome, PruneReason::Infeasible(e.to_string())));
+                }
+            }
+        }
+        let new_evals = new_idx.len();
+
+        // ---- environmental selection ------------------------------------
+        let mut pool: Vec<usize> = population.clone();
+        pool.extend(&new_idx);
+        let pool_pts: Vec<[f64; 3]> = pool.iter().map(|&i| objs[i]).collect();
+        let fronts = non_dominated_sort(&pool_pts);
+        let mut next_pop: Vec<usize> = Vec::new();
+        for front in &fronts {
+            if next_pop.len() + front.len() <= cfg.population {
+                next_pop.extend(front.iter().map(|&l| pool[l]));
+            } else {
+                let cd = crowding_distance(&pool_pts, front);
+                let mut ranked: Vec<(usize, f64)> = front.iter().copied().zip(cd).collect();
+                ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(pool[a.0].cmp(&pool[b.0])));
+                for (l, _) in ranked.into_iter().take(cfg.population - next_pop.len()) {
+                    next_pop.push(pool[l]);
+                }
+            }
+            if next_pop.len() >= cfg.population {
+                break;
+            }
+        }
+        population = next_pop;
+
+        // ---- per-generation archive front + stats -----------------------
+        // Dominance pruning stays OFF while successive halving is active:
+        // screen-tier accuracies are not final (survivors get re-measured
+        // on the full set), so "perfect on the screen tier" cannot soundly
+        // dominate a candidate's optimistic accuracy of 0.
+        if !halving {
+            prune_front = archive_front(&records, &objs, measured);
+        }
+        let full_front = pareto_min_indices(&objs);
+        let stat = GenerationStat {
+            generation,
+            new_evals,
+            evaluated: records.len(),
+            pruned_bound,
+            pruned_feasibility,
+            infeasible,
+            front_size: full_front.len(),
+            hypervolume: normalized_front_hypervolume(&objs, &full_front),
+        };
+        on_generation(&stat);
+        generations.push(stat);
+
+        if records.len() >= cfg.max_evals {
+            break;
+        }
+    }
+
+    // ---- final front (+ successive-halving refinement) ------------------
+    let mut front = pareto_min_indices(&objs);
+    if halving && !front.is_empty() {
+        // re-measure survivors on the full vector set; the screen-tier
+        // accuracies of non-survivors stay as-is, so the refined front is
+        // recomputed among the survivors only
+        for &i in &front {
+            if let Ok(full) = engine.evaluate(&records[i].vector) {
+                objs[i] = objectives(&full);
+                records[i] = full;
+            }
+        }
+        let survivor_pts: Vec<[f64; 3]> = front.iter().map(|&i| objs[i]).collect();
+        let refined = pareto_min_indices(&survivor_pts);
+        front = refined.into_iter().map(|l| front[l]).collect();
+    }
+
+    Ok(EvoResult {
+        evaluations: records.len(),
+        records,
+        front,
+        generations,
+        pruned,
+        measured,
+        stats: engine.stats(),
+    })
+}
+
+/// The archive front used for dominance pruning. In measured mode only
+/// perfect-accuracy records can dominate an optimistic candidate (whose
+/// accuracy axis is 0), so the front collapses to the 2-D
+/// (latency, memory) fast path ([`pareto_min_2d`]); proxy mode keeps the
+/// full 3-axis front.
+fn archive_front(records: &[EvalRecord], objs: &[[f64; 3]], measured: bool) -> Vec<usize> {
+    if !measured {
+        return pareto_min_indices(objs);
+    }
+    let perfect: Vec<usize> = records
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.accuracy.map(|a| a >= 1.0).unwrap_or(false))
+        .map(|(i, _)| i)
+        .collect();
+    let pts: Vec<[f64; 2]> = perfect.iter().map(|&i| [objs[i][1], objs[i][2]]).collect();
+    pareto_min_2d(&pts).into_iter().map(|l| perfect[l]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_dominated_sort_ranks_fronts() {
+        let pts = [
+            [1.0, 1.0, 1.0], // front 0
+            [2.0, 2.0, 2.0], // front 1 (dominated by 0)
+            [0.5, 3.0, 1.0], // front 0
+            [3.0, 3.0, 3.0], // front 2
+        ];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts, vec![vec![0, 2], vec![1], vec![3]]);
+    }
+
+    #[test]
+    fn crowding_boundary_points_infinite() {
+        let pts = [
+            [0.0, 4.0, 0.0],
+            [1.0, 3.0, 0.0],
+            [2.0, 2.0, 0.0],
+            [4.0, 0.0, 0.0],
+        ];
+        let front = vec![0, 1, 2, 3];
+        let cd = crowding_distance(&pts, &front);
+        assert!(cd[0].is_infinite());
+        assert!(cd[3].is_infinite());
+        assert!(cd[1].is_finite() && cd[1] > 0.0);
+        assert!(cd[2].is_finite() && cd[2] > 0.0);
+        // small fronts are all-boundary
+        assert!(crowding_distance(&pts, &[0, 1]).iter().all(|d| d.is_infinite()));
+    }
+
+    #[test]
+    fn hypervolume_known_values() {
+        let unit = [[0.0, 0.0, 0.0]];
+        assert!((hypervolume(&unit, [1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let half = [[0.5, 0.5, 0.5]];
+        assert!((hypervolume(&half, [1.0, 1.0, 1.0]) - 0.125).abs() < 1e-12);
+        let two = [[0.0, 0.5, 0.0], [0.5, 0.0, 0.0]];
+        assert!((hypervolume(&two, [1.0, 1.0, 1.0]) - 0.75).abs() < 1e-12);
+        // a dominated point adds nothing
+        let with_dom = [[0.0, 0.5, 0.0], [0.5, 0.0, 0.0], [0.6, 0.6, 0.5]];
+        assert!((hypervolume(&with_dom, [1.0, 1.0, 1.0]) - 0.75).abs() < 1e-12);
+        // points at or beyond the reference contribute nothing
+        assert_eq!(hypervolume(&[[1.0, 0.0, 0.0]], [1.0, 1.0, 1.0]), 0.0);
+        assert_eq!(hypervolume(&[], [1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn normalized_hypervolume_bounded() {
+        let all = [
+            [0.0, 10.0, 5.0],
+            [1.0, 5.0, 7.0],
+            [2.0, 1.0, 9.0],
+            [2.0, 10.0, 9.0],
+        ];
+        let front = vec![0usize, 1, 2];
+        let hv = normalized_front_hypervolume(&all, &front);
+        assert!(hv > 0.0 && hv <= 1.1f64.powi(3), "hv={hv}");
+    }
+
+    #[test]
+    fn genome_key_and_mutation_stay_in_alphabet() {
+        let space = SearchSpace {
+            bits: vec![2, 4, 8],
+            impls: vec![BlockImpl::Im2col, BlockImpl::Lut],
+            n_blocks: 10,
+            cores: vec![2, 4, 8],
+            l2_kb: vec![256, 512],
+        };
+        assert!(space.size() >= 1e6);
+        let mut rng = Prng::new(9);
+        let a = space.random(&mut rng);
+        let b = space.random(&mut rng);
+        assert_eq!(a.key(), a.clone().key());
+        let mut child = space.crossover(&a, &b, &mut rng);
+        space.mutate(&mut child, &mut rng, 0.5);
+        assert_eq!(child.quant.bits.len(), 10);
+        for &bit in &child.quant.bits {
+            assert!(space.bits.contains(&bit));
+        }
+        for &i in &child.quant.impls {
+            assert!(space.impls.contains(&i));
+        }
+        let hw = child.hw.unwrap();
+        assert!(space.cores.contains(&hw.cores));
+        assert!(space.l2_kb.contains(&hw.l2_kb));
+    }
+
+    #[test]
+    fn uniform_seeds_cover_the_uniform_grid() {
+        let space = SearchSpace {
+            bits: vec![4, 8],
+            impls: vec![BlockImpl::Im2col],
+            n_blocks: 10,
+            cores: vec![2, 8],
+            l2_kb: vec![256],
+        };
+        let seeds = space.uniform_seeds();
+        assert_eq!(seeds.len(), 2 * 2);
+        let keys: HashSet<u64> = seeds.iter().map(|g| g.key()).collect();
+        assert_eq!(keys.len(), seeds.len(), "seeds must be distinct");
+    }
+
+    #[test]
+    fn halved_block_is_the_greedy_move() {
+        let g = Genome::uniform(8, BlockImpl::Im2col, 10, None);
+        let h = g.with_halved_block(3);
+        assert_eq!(h.quant.bits[3], 4);
+        assert!(h.quant.bits.iter().enumerate().all(|(i, &b)| b == if i == 3 { 4 } else { 8 }));
+        assert_ne!(g.key(), h.key());
+    }
+}

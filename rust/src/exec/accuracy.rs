@@ -41,12 +41,29 @@ impl EvalVectors {
         Self { dims, inputs, seed }
     }
 
+    /// Number of evaluation vectors in the set.
     pub fn len(&self) -> usize {
         self.inputs.len()
     }
 
+    /// True when the set holds no vectors.
     pub fn is_empty(&self) -> bool {
         self.inputs.is_empty()
+    }
+
+    /// The first `n` vectors as a new set — the successive-halving screen
+    /// tier of the evolutionary search ([`crate::dse::search`]): candidates
+    /// are measured on a small prefix, full sets are spent only on front
+    /// survivors. A prefix of a synthetic set is bit-identical to the full
+    /// set's first `n` vectors, so screen-tier accuracies are consistent
+    /// across budget tiers. With `n >= len()`, the clone hashes identically
+    /// to the original and shares its accuracy-cache entries.
+    pub fn truncated(&self, n: usize) -> EvalVectors {
+        EvalVectors {
+            dims: self.dims.clone(),
+            inputs: self.inputs.iter().take(n).cloned().collect(),
+            seed: self.seed,
+        }
     }
 
     /// Stable content hash — part of the DSE accuracy-stage cache key.
@@ -70,6 +87,7 @@ impl EvalVectors {
 /// Result of one measured-accuracy evaluation.
 #[derive(Debug, Clone)]
 pub struct MeasuredAccuracy {
+    /// Name of the evaluated model.
     pub model: String,
     /// Evaluation vectors run.
     pub n: usize,
@@ -146,6 +164,19 @@ mod tests {
         assert_eq!(a.content_hash(), b.content_hash());
         let c = EvalVectors::synthetic(8, vec![3, 4, 4], 5);
         assert_ne!(a.content_hash(), c.content_hash());
+    }
+
+    #[test]
+    fn truncated_is_a_bit_identical_prefix() {
+        let full = EvalVectors::synthetic(7, vec![3, 4, 4], 8);
+        let sub = full.truncated(3);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.inputs[..], full.inputs[..3]);
+        assert_ne!(sub.content_hash(), full.content_hash());
+        // n >= len clones the set, hash included (shared cache entries)
+        let same = full.truncated(100);
+        assert_eq!(same.len(), full.len());
+        assert_eq!(same.content_hash(), full.content_hash());
     }
 
     #[test]

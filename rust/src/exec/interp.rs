@@ -47,7 +47,9 @@ const MAX_DYADIC_SHIFT: u8 = 31;
 /// channel-wise quantized layers).
 #[derive(Debug, Clone)]
 pub enum Scale {
+    /// One scale for the whole tensor.
     Tensor(f64),
+    /// One scale per output channel (channel-wise quantized layers).
     Channel(Vec<f64>),
 }
 

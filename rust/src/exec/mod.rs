@@ -12,7 +12,12 @@
 //! The interpreter is hardware-axis-invariant by construction (it never
 //! sees a platform spec), which is what lets the DSE engine cache one
 //! accuracy evaluation per quantization configuration across a whole
-//! hardware grid ([`crate::dse::EvalEngine`] `stage_accuracy`).
+//! hardware grid ([`crate::dse::EvalEngine`] `stage_accuracy`): its cache
+//! key is (quantization axis, [`EvalVectors`] content hash) and nothing
+//! else — see the staged-memoization contract in [`crate::dse`]. The
+//! evolutionary search exploits the vector-set half of the key for its
+//! successive-halving budget ([`EvalVectors::truncated`]): screen-tier and
+//! full-tier measurements coexist in one cache.
 
 pub mod accuracy;
 pub mod interp;

@@ -21,6 +21,7 @@ pub struct NodeParams {
     /// (`[Cout, Cin/groups, kh, kw]` for convolutions, `[out, in]` for
     /// fully-connected layers).
     pub weight: Vec<f64>,
+    /// Shape of `weight` (the parameter edge's dims).
     pub weight_dims: Vec<usize>,
     /// One bias per output channel / feature.
     pub bias: Vec<f64>,

@@ -6,20 +6,25 @@
 /// Integer tensor — quantized activation/accumulator values.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorI {
+    /// Shape, row-major (`[C, H, W]` or `[F]`).
     pub dims: Vec<usize>,
+    /// Flat element storage (`dims` product elements).
     pub data: Vec<i64>,
 }
 
 impl TensorI {
+    /// Tensor from shape + flat data (lengths must agree).
     pub fn new(dims: Vec<usize>, data: Vec<i64>) -> Self {
         debug_assert_eq!(dims.iter().product::<usize>(), data.len());
         Self { dims, data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -40,20 +45,25 @@ impl TensorI {
 /// Float tensor — the golden-reference real-arithmetic values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorF {
+    /// Shape, row-major (`[C, H, W]` or `[F]`).
     pub dims: Vec<usize>,
+    /// Flat element storage (`dims` product elements).
     pub data: Vec<f64>,
 }
 
 impl TensorF {
+    /// Tensor from shape + flat data (lengths must agree).
     pub fn new(dims: Vec<usize>, data: Vec<f64>) -> Self {
         debug_assert_eq!(dims.iter().product::<usize>(), data.len());
         Self { dims, data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -14,9 +14,11 @@
 //!    double-buffered schedules (paper §VII);
 //! 4. [`sim`] — an event-driven cycle simulator of the abstract platform
 //!    (the GVSoC substitute) producing per-layer cycles and L1/L2
-//!    utilization (paper §VIII-B);
-//! 5. [`analysis`] + [`dse`] — latency bounds, deadline screening, and the
-//!    hardware design-space exploration of paper §VIII-C;
+//!    utilization (paper §VIII-B), plus the analytic latency lower bound
+//!    the searchers prune with;
+//! 5. [`analysis`] + [`dse`] — latency bounds, deadline screening, the
+//!    hardware design-space exploration of paper §VIII-C, and the
+//!    evolutionary per-layer mixed-precision search ([`dse::search`]);
 //! 6. [`exec`] — a bit-exact integer interpreter of the decorated graph
 //!    (deployed arithmetic: quantized weights, LUT multiplies, dyadic /
 //!    threshold-tree requant) plus a float golden reference — the measured
@@ -24,20 +26,40 @@
 //! 7. [`models`] — the MobileNetV1 workload and the Table-I cases;
 //! 8. [`runtime`] — PJRT-based execution of the AOT-compiled quantized
 //!    inference graphs for the accuracy column of Table I.
+//!
+//! An end-to-end walkthrough (QONNX ingest → joint DSE → bottleneck
+//! report → trace export) lives in `docs/GUIDE.md`.
 
+// The missing-docs lint is rolled out module by module: the public DSE and
+// exec surfaces are fully documented and enforced; the exempted modules
+// below await their own documentation pass before the allow is dropped.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod analysis;
+#[allow(missing_docs)]
 pub mod coordinator;
 pub mod dse;
+#[allow(missing_docs)]
 pub mod error;
 pub mod exec;
+#[allow(missing_docs)]
 pub mod graph;
+#[allow(missing_docs)]
 pub mod impl_aware;
+#[allow(missing_docs)]
 pub mod models;
+#[allow(missing_docs)]
 pub mod platform;
+#[allow(missing_docs)]
 pub mod platform_aware;
+#[allow(missing_docs)]
 pub mod quant;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod sim;
+#[allow(missing_docs)]
 pub mod util;
 
 pub use error::{AladinError, Result};

@@ -4,7 +4,10 @@
 
 use aladin::analysis::Feasibility;
 use aladin::coordinator::Pipeline;
-use aladin::dse::{explore_joint_measured, GridSearch, JointSpace, MAX_TAIL_K};
+use aladin::dse::{
+    evolve_with, explore_joint_measured, EvalEngine, EvoConfig, GridSearch, JointSpace,
+    SearchSpace, MAX_TAIL_K,
+};
 use aladin::error::Result;
 use aladin::graph::ir::Graph;
 use aladin::impl_aware::ImplConfig;
@@ -32,6 +35,15 @@ USAGE:
                   [--tail-k <k>] [--cores 2,4,8] [--l2-kb 256,320,512]
                   [--threads <n>] [--platform <p>] [--width-mult <f64>] [--json]
                   [--measured-accuracy [--vectors <n>]]
+  aladin dse --search evo
+                  [--model case1|case2|case3] [--bits 2,4,8] [--impls im2col,lut]
+                  [--cores 2,4,8] [--l2-kb 256,320,512]
+                  [--population <K>] [--generations <N>] [--seed <S>]
+                  [--max-evals <E>] [--mem-budget-kb <M>] [--deadline-ms <D>]
+                  [--no-prune] [--threads <n>] [--platform <p>] [--width-mult <f64>]
+                  [--json] [--measured-accuracy [--vectors <n>] [--screen-vectors <k>]]
+  aladin export   [--model case1|case2|case3|lenet] [--width-mult <f64>]
+                  [--out model.qonnx.json]
   aladin eval     [--model case1|case2|case3|lenet|<file.qonnx.json>]
                   [--impl-config <file.yaml>] [--vectors <n>]
                   [--width-mult <f64>] [--json] [--out <file.json>]
@@ -205,20 +217,7 @@ fn parse_impls(args: &Args) -> Result<Vec<BlockImpl>> {
 /// Joint quantization × hardware exploration through the shared engine.
 fn cmd_dse_joint(args: &Args) -> Result<()> {
     let model = args.get_or("model", "case2");
-    let mut case = match model.as_str() {
-        "case1" => models::case1(),
-        "case2" => models::case2(),
-        "case3" => models::case3(),
-        other => {
-            return Err(io_err(format!(
-                "--joint explores block configurations and needs a configurable \
-                 model (case1|case2|case3), got `{other}`"
-            )))
-        }
-    };
-    if let Some(w) = args.get_parsed::<f64>("width-mult").map_err(io_err)? {
-        case.width_mult = w;
-    }
+    let case = load_case(&model, args.get_parsed::<f64>("width-mult").map_err(io_err)?)?;
     let tail_k = args.get_parsed::<usize>("tail-k").map_err(io_err)?.unwrap_or(0);
     if tail_k > MAX_TAIL_K {
         return Err(io_err(format!(
@@ -364,7 +363,208 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// A configurable MobileNet case for the joint/evolutionary explorers.
+fn load_case(model: &str, width_mult: Option<f64>) -> Result<aladin::models::MobileNetConfig> {
+    let mut case = match model {
+        "case1" => models::case1(),
+        "case2" => models::case2(),
+        "case3" => models::case3(),
+        other => {
+            return Err(io_err(format!(
+                "this mode explores block configurations and needs a configurable \
+                 model (case1|case2|case3), got `{other}`"
+            )))
+        }
+    };
+    if let Some(w) = width_mult {
+        case.width_mult = w;
+    }
+    Ok(case)
+}
+
+/// Evolutionary multi-objective search over the per-layer genome
+/// (`aladin dse --search evo`), streaming per-generation front hypervolume.
+fn cmd_dse_search(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "case2");
+    let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
+    let case = load_case(&model, width_mult)?;
+    let n_blocks = case.blocks.len();
+
+    let space = SearchSpace {
+        bits: args
+            .get_list::<u8>("bits")
+            .map_err(io_err)?
+            .unwrap_or_else(|| vec![2, 4, 8]),
+        impls: match args.get("impls") {
+            None => vec![BlockImpl::Im2col, BlockImpl::Lut],
+            Some(_) => parse_impls(args)?,
+        },
+        n_blocks,
+        cores: args
+            .get_list::<usize>("cores")
+            .map_err(io_err)?
+            .unwrap_or_else(|| vec![2, 4, 8]),
+        l2_kb: args
+            .get_list::<u64>("l2-kb")
+            .map_err(io_err)?
+            .unwrap_or_else(|| vec![256, 320, 512]),
+    };
+
+    let n_vectors = args.get_parsed::<usize>("vectors").map_err(io_err)?.unwrap_or(16);
+    let measured = args.flag("measured-accuracy");
+    let cfg = EvoConfig {
+        population: args
+            .get_parsed::<usize>("population")
+            .map_err(io_err)?
+            .unwrap_or(32),
+        generations: args
+            .get_parsed::<usize>("generations")
+            .map_err(io_err)?
+            .unwrap_or(12),
+        seed: args.get_parsed::<u64>("seed").map_err(io_err)?.unwrap_or(0xA1AD1),
+        max_evals: args
+            .get_parsed::<usize>("max-evals")
+            .map_err(io_err)?
+            .unwrap_or(2000),
+        screen_vectors: args
+            .get_parsed::<usize>("screen-vectors")
+            .map_err(io_err)?
+            .unwrap_or(if measured { n_vectors / 4 } else { 0 }),
+        mem_budget_kb: args.get_parsed::<f64>("mem-budget-kb").map_err(io_err)?,
+        max_latency_s: args
+            .get_parsed::<f64>("deadline-ms")
+            .map_err(io_err)?
+            .map(|ms| ms / 1e3),
+        prune: !args.flag("no-prune"),
+        ..EvoConfig::default()
+    };
+
+    let platform = load_platform(&args.get_or("platform", "gap8"))?;
+    let mut engine = EvalEngine::for_mobilenet(case, platform);
+    if let Some(t) = args.get_parsed::<usize>("threads").map_err(io_err)? {
+        engine = engine.with_threads(t);
+    }
+    if measured {
+        engine = engine
+            .with_measured_accuracy(std::sync::Arc::new(models::cifar_vectors(n_vectors)));
+    }
+
+    let json = args.flag("json");
+    if !json {
+        println!(
+            "== evolutionary DSE — {model}: {:.3e}-point space, population {}, \
+             budget {} evaluations ==",
+            space.size(),
+            cfg.population,
+            cfg.max_evals
+        );
+    }
+    let result = evolve_with(&engine, &space, &cfg, |s| {
+        if !json {
+            println!(
+                "gen {:>3}: evals {:>5} (+{:<3}) pruned bound {:<3} feas {:<3} \
+                 infeasible {:<3} front {:>3}  hypervolume {:.4}",
+                s.generation,
+                s.evaluated,
+                s.new_evals,
+                s.pruned_bound,
+                s.pruned_feasibility,
+                s.infeasible,
+                s.front_size,
+                s.hypervolume
+            );
+        }
+    })?;
+
+    if json {
+        let generations: Vec<Value> = result
+            .generations
+            .iter()
+            .map(|s| {
+                Value::obj()
+                    .with("generation", s.generation)
+                    .with("new_evals", s.new_evals)
+                    .with("evaluated", s.evaluated)
+                    .with("pruned_bound", s.pruned_bound)
+                    .with("pruned_feasibility", s.pruned_feasibility)
+                    .with("infeasible", s.infeasible)
+                    .with("front_size", s.front_size)
+                    .with("hypervolume", s.hypervolume)
+            })
+            .collect();
+        let front: Vec<Value> = result.front.iter().map(|&i| Value::from(i)).collect();
+        let doc = Value::obj()
+            .with("model", model)
+            .with("space_size", space.size())
+            .with("measured_accuracy", result.measured)
+            .with("evaluations", result.evaluations)
+            .with("pruned", result.pruned.len())
+            .with("records", ToJson::to_json(&result.records))
+            .with("front", Value::Arr(front))
+            .with("generations", Value::Arr(generations))
+            .with("stats", result.stats.to_json());
+        println!("{}", doc.to_string_pretty());
+        return Ok(());
+    }
+
+    let acc_col = if result.measured { "accuracy" } else { "sens" };
+    println!(
+        "\n{:<24} {:>5} {:>7} {:>14} {:>11} {:>9} {:>10} {:>9} {:>7}",
+        "quant", "cores", "L2 kB", "cycles", "latency ms", acc_col, "param kB", "mem kB", "pareto"
+    );
+    let mut order: Vec<usize> = result.front.clone();
+    order.sort_by_key(|&i| result.records[i].total_cycles);
+    for &i in &order {
+        let r = &result.records[i];
+        let acc_val = match r.accuracy {
+            Some(a) if result.measured => a,
+            _ => r.sensitivity,
+        };
+        println!(
+            "{:<24} {:>5} {:>7} {:>14} {:>11.3} {:>9.3} {:>10.1} {:>9.1} {:>7}",
+            r.quant_label(),
+            r.cores,
+            r.l2_kb,
+            r.total_cycles,
+            r.latency_s * 1e3,
+            acc_val,
+            r.param_kb,
+            r.mem_kb,
+            "*"
+        );
+    }
+    let s = result.stats;
+    println!(
+        "\nfinal front: {} of {} evaluated candidates ({} pruned unevaluated) \
+         in a {:.3e}-point space",
+        result.front.len(),
+        result.evaluations,
+        result.pruned.len(),
+        space.size()
+    );
+    println!(
+        "cache: stage-1 {} computed / {} cached, stage-2 {} computed / {} cached, \
+         bound {} computed / {} cached",
+        s.impl_computed, s.impl_hits, s.sim_computed, s.sim_hits, s.bound_computed, s.bound_hits
+    );
+    if result.measured {
+        println!(
+            "       accuracy stage (integer interpreter): {} computed / {} cached",
+            s.acc_computed, s.acc_hits
+        );
+    }
+    Ok(())
+}
+
 fn cmd_dse(args: &Args) -> Result<()> {
+    if let Some(strategy) = args.get("search") {
+        return match strategy {
+            "evo" => cmd_dse_search(args),
+            other => Err(io_err(format!(
+                "unknown --search strategy `{other}` (expected `evo`)"
+            ))),
+        };
+    }
     if args.flag("joint") {
         return cmd_dse_joint(args);
     }
@@ -488,6 +688,22 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Export a model as QONNX-dialect JSON — the ingest format of
+/// `aladin analyze --model <file.qonnx.json>` (see docs/GUIDE.md).
+fn cmd_export(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "case1");
+    let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
+    let (g, _cfg) = load_model(&model, width_mult)?;
+    let out = args.get_or("out", "model.qonnx.json");
+    aladin::graph::qonnx::export(&g).to_file(&out)?;
+    println!(
+        "wrote {out}: {} nodes, {} edges ({model})",
+        g.nodes.len(),
+        g.edges.len()
+    );
+    Ok(())
+}
+
 /// Export a Chrome-trace JSON of the simulated execution timeline (the
 /// exact per-tile resource spans recorded by the simulator).
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -591,7 +807,13 @@ fn io_err(msg: String) -> aladin::AladinError {
 }
 
 fn main() {
-    let args = match Args::from_env(&["json", "joint", "bottlenecks", "measured-accuracy"]) {
+    let args = match Args::from_env(&[
+        "json",
+        "joint",
+        "bottlenecks",
+        "measured-accuracy",
+        "no-prune",
+    ]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -604,6 +826,7 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("screen") => cmd_screen(&args),
+        Some("export") => cmd_export(&args),
         Some("trace") => cmd_trace(&args),
         Some("table1") => {
             cmd_table1();

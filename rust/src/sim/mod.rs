@@ -4,13 +4,25 @@
 //! decomposition per layer, and Fig.-6-style reporting plus per-resource
 //! bottleneck tables ([`report::render_bottlenecks`]) and Chrome-trace
 //! export ([`trace::Trace`]).
+//!
+//! Everything in this module depends on **both** axes of a design vector —
+//! the quantization axis (through the fused layers' precisions and temp
+//! structures) and the hardware axis (cores, memories, DMA timings) — so
+//! the DSE engine caches simulation results per *(quant hash, platform
+//! hash)* pair; see the staged-memoization contract in [`crate::dse`].
+//! [`compute::lower_bound_cycles`] is the cheap analytic companion: a
+//! sound latency lower bound computable from the schedule alone, used by
+//! [`crate::dse::search`] to prune candidates before simulating them.
 
 pub mod compute;
 pub mod engine;
 pub mod report;
 pub mod trace;
 
-pub use compute::{cores_used, lut_contention_factor, tile_compute_cycles, TileComputeCycles};
+pub use compute::{
+    cores_used, layer_lower_bound_cycles, lower_bound_cycles, lut_contention_factor,
+    tile_compute_cycles, TileComputeCycles,
+};
 pub use engine::{
     simulate, simulate_traced, LayerSimResult, ResourceKind, SimResult, SpanKind, Timeline,
     TimelineSpan,

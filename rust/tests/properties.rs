@@ -281,6 +281,111 @@ fn prop_sim_conservation() {
 }
 
 #[test]
+fn prop_lower_bound_never_exceeds_sim() {
+    // satellite regression: the analytic ideal-overlap lower bound
+    // (sim::lower_bound_cycles, the DSE search's pruning stage) must be
+    // sound on the random-layer corpus — never above the full timeline
+    check_property("lower_bound_sound", 100, |rng| {
+        let g = random_decorated(rng);
+        let layers = fuse(&g).unwrap();
+        let cores = [1usize, 2, 4, 8][rng.range(0, 3)];
+        let l2_kb = [128u64, 256, 512][rng.range(0, 2)];
+        let p = presets::gap8_with(cores, l2_kb);
+        let s = match build_schedule(layers, &p) {
+            Ok(s) => s,
+            Err(aladin::AladinError::Infeasible { .. }) => return,
+            Err(e) => panic!("unexpected error: {e}"),
+        };
+        let bound = aladin::sim::lower_bound_cycles(&s);
+        let sim = simulate(&s).total_cycles();
+        assert!(
+            bound <= sim,
+            "bound {bound} > simulated {sim} (cores {cores}, L2 {l2_kb} kB)"
+        );
+        // and it is not vacuous: at least the compute-busy time
+        assert!(bound > 0);
+    });
+}
+
+#[test]
+fn prop_pareto_2d_fast_path_agrees() {
+    // satellite regression: the O(n log n) 2-objective sweep must agree
+    // with the O(n^2) scan on random inputs (ties and clusters included)
+    fn naive_2d(points: &[[f64; 2]]) -> Vec<usize> {
+        let dom = |a: &[f64; 2], b: &[f64; 2]| {
+            a.iter().zip(b.iter()).all(|(x, y)| x <= y)
+                && a.iter().zip(b.iter()).any(|(x, y)| x < y)
+        };
+        (0..points.len())
+            .filter(|&i| {
+                !points
+                    .iter()
+                    .enumerate()
+                    .any(|(j, p)| j != i && dom(p, &points[i]))
+            })
+            .collect()
+    }
+    check_property("pareto_2d_agrees", 300, |rng| {
+        let n = rng.range(0, 40);
+        // a small value alphabet forces plenty of exact ties
+        let pts: Vec<[f64; 2]> = (0..n)
+            .map(|_| {
+                [
+                    rng.range_i64(0, 6) as f64 / 2.0,
+                    rng.range_i64(0, 6) as f64 / 2.0,
+                ]
+            })
+            .collect();
+        assert_eq!(
+            aladin::dse::pareto_min_2d(&pts),
+            naive_2d(&pts),
+            "pts={pts:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_pareto_constant_axis_fast_path_agrees() {
+    // the 3-objective front with one constant axis must match the generic
+    // all-pairs scan (it internally collapses to the 2-D sweep)
+    fn naive_3d(points: &[[f64; 3]]) -> Vec<usize> {
+        let dom = |a: &[f64; 3], b: &[f64; 3]| {
+            a.iter().zip(b.iter()).all(|(x, y)| x <= y)
+                && a.iter().zip(b.iter()).any(|(x, y)| x < y)
+        };
+        (0..points.len())
+            .filter(|&i| {
+                !points
+                    .iter()
+                    .enumerate()
+                    .any(|(j, p)| j != i && dom(p, &points[i]))
+            })
+            .collect()
+    }
+    check_property("pareto_constant_axis_agrees", 200, |rng| {
+        let n = rng.range(1, 30);
+        let constant_axis = rng.range(0, 2);
+        let c = rng.range_i64(-4, 4) as f64;
+        let pts: Vec<[f64; 3]> = (0..n)
+            .map(|_| {
+                let mut p = [
+                    rng.range_i64(0, 8) as f64 / 2.0,
+                    rng.range_i64(0, 8) as f64 / 2.0,
+                    rng.range_i64(0, 8) as f64 / 2.0,
+                ];
+                p[constant_axis] = c;
+                p
+            })
+            .collect();
+        assert_eq!(
+            aladin::dse::pareto_min_indices(&pts),
+            naive_3d(&pts),
+            "pts={pts:?}"
+        );
+    });
+}
+
+#[test]
 fn prop_json_round_trip_random_documents() {
     fn random_value(rng: &mut Prng, depth: usize) -> Value {
         match if depth == 0 { rng.range(0, 3) } else { rng.range(0, 5) } {

@@ -1,0 +1,303 @@
+//! Integration tests for the evolutionary multi-objective searcher
+//! (`dse::search`): seeded determinism across engine thread counts, front
+//! quality against the enumerable exhaustive ground truth, soundness of
+//! the lower-bound pruning, and scalability to spaces far beyond
+//! enumeration under a bounded evaluation budget.
+
+use aladin::dse::{
+    evolve, explore_joint, objectives, EvalEngine, EvoConfig, EvoResult, JointSpace, PruneReason,
+    SearchSpace,
+};
+use aladin::models::{self, BlockImpl, MobileNetConfig};
+use aladin::platform::presets;
+use std::sync::Arc;
+
+fn small(mut case: MobileNetConfig) -> MobileNetConfig {
+    case.width_mult = 0.25; // keep integration runs fast
+    case
+}
+
+fn dominates_or_equals(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+fn strictly_dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+fn assert_front_mutually_nondominated(r: &EvoResult) {
+    for &i in &r.front {
+        for &j in &r.front {
+            if i == j {
+                continue;
+            }
+            let (a, b) = (objectives(&r.records[i]), objectives(&r.records[j]));
+            assert!(!strictly_dominates(&a, &b), "front member {i} dominates {j}");
+        }
+    }
+}
+
+#[test]
+fn evo_front_dominates_or_equals_exhaustive_on_fig7_grid() {
+    // a single quantization configuration × the Fig. 7 hardware grid: the
+    // space is enumerable, so the exhaustive front is ground truth. The
+    // seeded generation 0 covers the whole uniform sub-grid, so the final
+    // evolutionary front must dominate-or-equal every exhaustive point.
+    let space = SearchSpace {
+        bits: vec![8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 4, 8],
+        l2_kb: vec![256, 320, 512],
+    };
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let cfg = EvoConfig {
+        population: 12,
+        generations: 3,
+        seed: 7,
+        ..EvoConfig::default()
+    };
+    let evo = evolve(&engine, &space, &cfg).unwrap();
+    assert!(!evo.front.is_empty());
+    assert_front_mutually_nondominated(&evo);
+
+    let jspace = JointSpace {
+        bits: vec![8],
+        impls: vec![BlockImpl::Im2col],
+        tail_k: 0,
+        cores: vec![2, 4, 8],
+        l2_kb: vec![256, 320, 512],
+    };
+    let exh = explore_joint(small(models::case2()), presets::gap8(), &jspace, Some(2)).unwrap();
+    assert!(!exh.front.is_empty());
+    for &fi in &exh.front {
+        let target = objectives(&exh.records[fi]);
+        assert!(
+            evo.front
+                .iter()
+                .any(|&i| dominates_or_equals(&objectives(&evo.records[i]), &target)),
+            "exhaustive front point {fi} not dominated-or-equalled by the evo front"
+        );
+    }
+}
+
+#[test]
+fn evo_front_covers_exhaustive_uniform_quant_grid() {
+    // the default joint grid (2 uniform quant configs × 9 hardware points)
+    // embeds in the per-layer space; the uniform seeds guarantee those 18
+    // candidates are all in the archive, so the evo front must
+    // dominate-or-equal the exhaustive front of the embedded grid.
+    let space = SearchSpace {
+        bits: vec![4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 4, 8],
+        l2_kb: vec![256, 320, 512],
+    };
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let cfg = EvoConfig {
+        population: 24,
+        generations: 2,
+        seed: 13,
+        ..EvoConfig::default()
+    };
+    let evo = evolve(&engine, &space, &cfg).unwrap();
+
+    let exh = explore_joint(
+        small(models::case2()),
+        presets::gap8(),
+        &JointSpace::default_grid(),
+        Some(2),
+    )
+    .unwrap();
+    for &fi in &exh.front {
+        let target = objectives(&exh.records[fi]);
+        assert!(
+            evo.front
+                .iter()
+                .any(|&i| dominates_or_equals(&objectives(&evo.records[i]), &target)),
+            "embedded uniform-grid front point {fi} not covered"
+        );
+    }
+}
+
+#[test]
+fn seeded_search_is_bit_identical_across_thread_counts() {
+    let space = SearchSpace {
+        bits: vec![4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 8],
+        l2_kb: vec![256, 512],
+    };
+    let run = |threads: usize| -> EvoResult {
+        let engine = EvalEngine::for_mobilenet(small(models::case1()), presets::gap8())
+            .with_threads(threads);
+        let cfg = EvoConfig {
+            population: 10,
+            generations: 3,
+            max_evals: 60,
+            seed: 42,
+            ..EvoConfig::default()
+        };
+        evolve(&engine, &space, &cfg).unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    let signature = |r: &EvoResult| -> Vec<(String, u64, u64, u64)> {
+        r.records
+            .iter()
+            .map(|x| {
+                (
+                    x.quant_label(),
+                    x.total_cycles,
+                    x.sensitivity.to_bits(),
+                    x.mem_kb.to_bits(),
+                )
+            })
+            .collect()
+    };
+    assert_eq!(a.evaluations, b.evaluations);
+    assert_eq!(signature(&a), signature(&b), "archive differs across thread counts");
+    assert_eq!(a.front, b.front, "final front differs across thread counts");
+    for (&i, &j) in a.front.iter().zip(&b.front) {
+        assert_eq!(
+            objectives(&a.records[i]).map(f64::to_bits),
+            objectives(&b.records[j]).map(f64::to_bits)
+        );
+    }
+    // the per-generation trajectory is deterministic too
+    let gens = |r: &EvoResult| -> Vec<(usize, usize, u64)> {
+        r.generations
+            .iter()
+            .map(|g| (g.evaluated, g.front_size, g.hypervolume.to_bits()))
+            .collect()
+    };
+    assert_eq!(gens(&a), gens(&b));
+}
+
+#[test]
+fn evo_scales_to_a_million_point_space_under_budget() {
+    // acceptance criterion: a per-layer space of >= 10^6 candidates
+    // completes under a bounded evaluation budget (<= 2000, here far less)
+    let space = SearchSpace {
+        bits: vec![2, 4, 8],
+        impls: vec![BlockImpl::Im2col, BlockImpl::Lut],
+        n_blocks: 10,
+        cores: vec![2, 4, 8],
+        l2_kb: vec![256, 320, 512],
+    };
+    assert!(space.size() >= 1e6, "space too small: {}", space.size());
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let cfg = EvoConfig {
+        population: 16,
+        generations: 6,
+        max_evals: 120,
+        seed: 3,
+        ..EvoConfig::default()
+    };
+    let r = evolve(&engine, &space, &cfg).unwrap();
+    assert!(r.evaluations <= 120, "budget exceeded: {}", r.evaluations);
+    assert_eq!(r.evaluations, r.records.len());
+    assert!(!r.front.is_empty());
+    assert_front_mutually_nondominated(&r);
+    assert!(!r.generations.is_empty());
+    for g in &r.generations {
+        assert!(g.hypervolume.is_finite() && g.hypervolume >= 0.0);
+        assert!(g.evaluated <= cfg.max_evals);
+    }
+    // mixed per-layer genomes actually appear (the space is not uniform)
+    assert!(
+        r.records.iter().any(|x| {
+            x.vector
+                .quant
+                .as_ref()
+                .map(|q| q.bits.windows(2).any(|w| w[0] != w[1]))
+                .unwrap_or(false)
+        }),
+        "no mixed-precision genome was ever evaluated"
+    );
+}
+
+#[test]
+fn bound_pruned_candidates_could_not_enter_the_front() {
+    // acceptance criterion: pruning is sound — re-evaluating every
+    // bound-pruned candidate in full, each is dominated-or-equalled by the
+    // final front, and the bound never exceeded the true cycles.
+    let space = SearchSpace {
+        bits: vec![2, 4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 8],
+        l2_kb: vec![256, 512],
+    };
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let cfg = EvoConfig {
+        population: 16,
+        generations: 5,
+        max_evals: 100,
+        seed: 5,
+        ..EvoConfig::default()
+    };
+    let r = evolve(&engine, &space, &cfg).unwrap();
+    let front_objs: Vec<[f64; 3]> = r.front.iter().map(|&i| objectives(&r.records[i])).collect();
+    let bound_pruned = r
+        .pruned
+        .iter()
+        .filter(|(_, why)| matches!(why, PruneReason::Bound { .. }))
+        .count();
+    let mut checked = 0usize;
+    for (genome, reason) in &r.pruned {
+        let PruneReason::Bound { lb_cycles } = reason else {
+            continue;
+        };
+        let full = engine.evaluate(&genome.vector()).unwrap();
+        assert!(
+            *lb_cycles <= full.total_cycles,
+            "{}: bound {lb_cycles} > true cycles {}",
+            genome.label(),
+            full.total_cycles
+        );
+        let obj = objectives(&full);
+        assert!(
+            front_objs.iter().any(|f| dominates_or_equals(f, &obj)),
+            "pruned candidate {} would have entered the front",
+            genome.label()
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, bound_pruned);
+}
+
+#[test]
+fn measured_search_with_successive_halving_refines_survivors() {
+    let space = SearchSpace {
+        bits: vec![4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 8],
+        l2_kb: vec![256, 512],
+    };
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+        .with_measured_accuracy(Arc::new(models::cifar_vectors(8)));
+    let cfg = EvoConfig {
+        population: 8,
+        generations: 2,
+        max_evals: 24,
+        seed: 9,
+        screen_vectors: 2,
+        ..EvoConfig::default()
+    };
+    let r = evolve(&engine, &space, &cfg).unwrap();
+    assert!(r.measured);
+    assert!(!r.front.is_empty());
+    assert!(r.records.iter().all(|x| x.accuracy.is_some()));
+    for &i in &r.front {
+        let a = r.records[i].accuracy.unwrap();
+        assert!((0.0..=1.0).contains(&a));
+    }
+    // the screen tier really ran the interpreter on fewer vectors: the
+    // accuracy stage computed both tiers but the totals stay bounded by
+    // (distinct quant genomes) x 2
+    assert!(r.stats.acc_computed >= 1);
+}
