@@ -9,6 +9,7 @@ use aladin::models;
 use aladin::platform::presets;
 use aladin::platform_aware::{build_schedule, fuse};
 use aladin::sim::simulate;
+use std::sync::Arc;
 
 fn main() {
     println!("=== ablations: per-mechanism contribution to simulated latency ===\n");
@@ -22,13 +23,12 @@ fn main() {
         let (g, cfg) = case.build();
         let decorated = decorate(g, &cfg).unwrap();
         let layers = fuse(&decorated).unwrap();
-        let platform = presets::gap8();
+        let platform = Arc::new(presets::gap8());
 
-        let baseline = simulate(&build_schedule(layers.clone(), &platform).unwrap())
-            .total_cycles();
+        let baseline = simulate(&build_schedule(&layers, &platform).unwrap()).total_cycles();
 
         // ablation 1: no double buffering (single-buffered tiles)
-        let mut s = build_schedule(layers.clone(), &platform).unwrap();
+        let mut s = build_schedule(&layers, &platform).unwrap();
         for l in &mut s.layers {
             l.tile.double_buffered = false;
         }
@@ -36,9 +36,10 @@ fn main() {
 
         // ablation 2: no LUT bank contention (pretend the table spans all
         // banks — the replicated-LUT architecture of [21])
-        let mut p2 = platform.clone();
+        let mut p2 = (*platform).clone();
         p2.l1_banks = 16;
-        let mut s2 = build_schedule(layers.clone(), &p2).unwrap();
+        let p2 = Arc::new(p2);
+        let mut s2 = build_schedule(&layers, &p2).unwrap();
         // emulate "replicated LUT": temp bits spread over whole L1
         for l in &mut s2.layers {
             if l.layer.uses_mul_lut() {
@@ -48,7 +49,7 @@ fn main() {
         let no_contention = simulate(&s2).total_cycles();
 
         // ablation 3: no L3 prefetch overlap
-        let mut s3 = build_schedule(layers.clone(), &platform).unwrap();
+        let mut s3 = build_schedule(&layers, &platform).unwrap();
         for l in &mut s3.layers {
             l.l2.prefetchable = false;
         }

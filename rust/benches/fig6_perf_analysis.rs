@@ -50,9 +50,9 @@ fn main() {
         let name = case.name.clone();
         let (g, cfg) = case.build();
         let decorated = decorate(g, &cfg).unwrap();
-        let platform = presets::gap8();
+        let platform = std::sync::Arc::new(presets::gap8());
         bench(&format!("fig6/fuse+tile+simulate/{name}"), 3, 20, || {
-            let schedule = build_schedule(fuse(&decorated).unwrap(), &platform).unwrap();
+            let schedule = build_schedule(&fuse(&decorated).unwrap(), &platform).unwrap();
             simulate(&schedule).total_cycles()
         });
     }

@@ -16,7 +16,7 @@
 use aladin::coordinator::Pipeline;
 use aladin::dse::{
     evolve, explore_joint, normalized_front_hypervolume, objectives, EvalEngine, EvoConfig,
-    GridSearch, JointSpace, SearchSpace,
+    Genome, GridSearch, HwAxis, JointSpace, SearchSpace,
 };
 use aladin::impl_aware::decorate;
 use aladin::models;
@@ -24,6 +24,7 @@ use aladin::models::BlockImpl;
 use aladin::platform::presets;
 use aladin::util::bench::{bench, BenchStats};
 use aladin::util::json::Value;
+use aladin::util::prng::Prng;
 use aladin::util::ToJson;
 
 fn stats_json(s: &BenchStats) -> Value {
@@ -202,6 +203,88 @@ fn main() {
         evo_big.front.len(),
         evo_big.pruned.len()
     );
+
+    // (e) layer-grained incremental evaluation on the evo mutation
+    // workload: a chain of 1–2-gene offspring evaluated via the delta path
+    // (one warm engine, evaluate_delta against the parent) vs the
+    // full-recompute path (a cold engine per candidate — what every
+    // distinct genome cost before the layer-grained tier)
+    let mutation_space = SearchSpace {
+        bits: vec![2, 4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 4, 8],
+        l2_kb: vec![256, 320, 512],
+    };
+    let chain_len = if tiny { 8 } else { 16 };
+    let mut rng = Prng::new(41);
+    let mut chain: Vec<Genome> = Vec::with_capacity(chain_len + 1);
+    chain.push(Genome::uniform(
+        8,
+        BlockImpl::Im2col,
+        10,
+        Some(HwAxis { cores: 8, l2_kb: 512 }),
+    ));
+    while chain.len() <= chain_len {
+        let mut next = chain.last().unwrap().clone();
+        mutation_space.mutate(&mut next, &mut rng, 0.12);
+        if next.key() != chain.last().unwrap().key() {
+            chain.push(next);
+        }
+    }
+
+    // full recompute: every mutant pays the whole pipeline from the root
+    let t0 = std::time::Instant::now();
+    let mut full_cycles: Vec<u64> = Vec::with_capacity(chain_len);
+    for g in &chain[1..] {
+        let cold = EvalEngine::for_mobilenet(case.clone(), presets::gap8()).with_threads(1);
+        full_cycles.push(cold.evaluate(&g.vector()).unwrap().total_cycles);
+    }
+    let full_secs = t0.elapsed().as_secs_f64();
+
+    // incremental: one warm engine, each offspring diffed against its parent
+    let warm = EvalEngine::for_mobilenet(case.clone(), presets::gap8()).with_threads(1);
+    warm.evaluate(&chain[0].vector()).unwrap();
+    let t0 = std::time::Instant::now();
+    let mut inc_cycles: Vec<u64> = Vec::with_capacity(chain_len);
+    for w in chain.windows(2) {
+        inc_cycles.push(
+            warm.evaluate_delta(&w[0].vector(), &w[1].vector())
+                .unwrap()
+                .total_cycles,
+        );
+    }
+    let inc_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(full_cycles, inc_cycles, "incremental path must be bit-identical");
+
+    let full_rate = chain_len as f64 / full_secs.max(1e-12);
+    let inc_rate = chain_len as f64 / inc_secs.max(1e-12);
+    let warm_stats = warm.stats();
+    println!(
+        "incremental vs full on {chain_len} mutation offspring: full {full_rate:.2} cand/s, \
+         incremental {inc_rate:.2} cand/s ({:.2}x) — layer units {} computed / {} spliced, \
+         {} incremental re-decorations reusing {} node decorations",
+        inc_rate / full_rate,
+        warm_stats.layer_computed,
+        warm_stats.layer_hits,
+        warm_stats.impl_delta,
+        warm_stats.nodes_reused
+    );
+
+    if let Ok(path) = std::env::var("BENCH_INCR_JSON_OUT") {
+        let doc = Value::obj()
+            .with("bench", "incremental_dse")
+            .with("tiny", tiny)
+            .with("width_mult", case.width_mult)
+            .with("chain_len", chain_len)
+            .with("full_cand_per_sec", full_rate)
+            .with("incremental_cand_per_sec", inc_rate)
+            .with("speedup", inc_rate / full_rate)
+            .with("bit_identical", true)
+            .with("cache_stats", warm_stats.to_json());
+        std::fs::write(&path, doc.to_string_pretty()).expect("write incremental bench json");
+        println!("wrote incremental bench timings to {path}");
+    }
 
     if let Ok(path) = std::env::var("BENCH_SEARCH_JSON_OUT") {
         let doc = Value::obj()

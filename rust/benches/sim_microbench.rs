@@ -9,12 +9,13 @@ use aladin::platform::presets;
 use aladin::platform_aware::{build_schedule, fuse, plan_layer};
 use aladin::sim::simulate;
 use aladin::util::bench::bench;
+use std::sync::Arc;
 
 fn main() {
     println!("=== pipeline stage microbenchmarks (Case 1, width 1.0) ===");
     let case = models::case1();
     let (g, cfg) = case.build();
-    let platform = presets::gap8();
+    let platform = Arc::new(presets::gap8());
 
     bench("stage/build_graph", 3, 30, || models::case1().build().0.nodes.len());
 
@@ -34,15 +35,15 @@ fn main() {
     });
 
     bench("stage/build_schedule", 3, 50, || {
-        build_schedule(layers.clone(), &platform).unwrap().layers.len()
+        build_schedule(&layers, &platform).unwrap().layers.len()
     });
 
-    let schedule = build_schedule(layers.clone(), &platform).unwrap();
+    let schedule = build_schedule(&layers, &platform).unwrap();
     bench("stage/simulate", 3, 50, || simulate(&schedule).total_cycles());
 
     bench("e2e/full_pipeline_case1", 2, 20, || {
         let (g, cfg) = models::case1().build();
-        Pipeline::new(platform.clone(), cfg)
+        Pipeline::new((*platform).clone(), cfg)
             .analyze(g)
             .unwrap()
             .latency

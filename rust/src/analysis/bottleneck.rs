@@ -175,7 +175,13 @@ mod tests {
             .relu("r0")
             .quant("q0", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8_with(cores, l2_kb)).unwrap())
+        simulate(
+            &build_schedule(
+                &fuse(&g).unwrap(),
+                &std::sync::Arc::new(presets::gap8_with(cores, l2_kb)),
+            )
+            .unwrap(),
+        )
     }
 
     #[test]
@@ -223,8 +229,13 @@ mod tests {
             .relu("r0")
             .quant("q0", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        let s =
-            simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8_with(8, 256)).unwrap());
+        let s = simulate(
+            &build_schedule(
+                &fuse(&g).unwrap(),
+                &std::sync::Arc::new(presets::gap8_with(8, 256)),
+            )
+            .unwrap(),
+        );
         let report = BottleneckReport::from_sim(&s);
         let l = &report.layers[0];
         assert!(

@@ -113,7 +113,8 @@ mod tests {
             .relu("r1")
             .quant("q1", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        let sim = simulate(&build_schedule(fuse(&g).unwrap(), &p).unwrap());
+        let sim =
+            simulate(&build_schedule(&fuse(&g).unwrap(), &std::sync::Arc::new(p.clone())).unwrap());
         (LatencyBound::from_sim(&sim, &p), p)
     }
 

@@ -8,6 +8,6 @@
 pub mod pipeline;
 
 pub use pipeline::{
-    stage_impl, stage_impl_decorated, stage_platform, stage_platform_traced, Analysis, ImplModel,
-    Pipeline, PlatformEval,
+    stage_impl, stage_impl_decorated, stage_impl_incremental, stage_platform,
+    stage_platform_traced, Analysis, ImplModel, Pipeline, PlatformEval,
 };

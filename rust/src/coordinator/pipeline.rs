@@ -22,7 +22,9 @@ use crate::analysis::{check_deadline, Feasibility, LatencyBound};
 use crate::error::Result;
 use crate::graph::ir::Graph;
 use crate::graph::{qonnx, validate};
-use crate::impl_aware::{decorate, layer_summaries, ImplConfig, LayerSummary};
+use crate::impl_aware::{
+    decorate, decorate_incremental, layer_summaries, ImplConfig, LayerSummary,
+};
 use crate::platform::PlatformSpec;
 use crate::platform_aware::{build_schedule, fuse, FusedLayer, NetworkSchedule};
 use crate::sim::{simulate, simulate_traced, SimResult, Timeline};
@@ -40,6 +42,13 @@ pub struct ImplModel {
     /// rewrites applied). Shared, not cloned: the DSE cache holds one
     /// snapshot per quantization config.
     pub decorated: Arc<Graph>,
+    /// The canonical (pre-decoration) graph — the base snapshot
+    /// [`stage_impl_incremental`] diffs against to reuse unchanged node
+    /// decorations. `None` for pre-decorated sources.
+    pub canonical: Option<Arc<Graph>>,
+    /// The implementation config the graph was decorated under. `None` for
+    /// pre-decorated sources.
+    pub impl_config: Option<Arc<ImplConfig>>,
     /// Fig.-5 per-layer rows extracted from the decorated graph.
     pub impl_summary: Vec<LayerSummary>,
     /// Fused schedulable layers (input to the platform-aware stage).
@@ -68,19 +77,59 @@ pub struct PlatformEval {
 }
 
 /// Stage 1 (paper §V step 1, §VI): validate a canonical graph, decorate it
-/// under `cfg`, and fuse it into schedulable layers.
+/// under `cfg`, and fuse it into schedulable layers. The canonical graph
+/// and config are retained in the snapshot so later candidates can
+/// re-decorate incrementally against it ([`stage_impl_incremental`]).
 pub fn stage_impl(canonical: Graph, cfg: &ImplConfig) -> Result<ImplModel> {
     validate::validate(&canonical)?;
     let model = canonical.name.clone();
+    let snapshot = Arc::new(canonical.clone());
     let decorated = Arc::new(decorate(canonical, cfg)?);
     let impl_summary = layer_summaries(&decorated);
     let fused = fuse(&decorated)?;
     Ok(ImplModel {
         model,
         decorated,
+        canonical: Some(snapshot),
+        impl_config: Some(Arc::new(cfg.clone())),
         impl_summary,
         fused,
     })
+}
+
+/// [`stage_impl`] with a delta fast path: re-decorate `canonical` under
+/// `cfg` by splicing unchanged node decorations from `base`
+/// ([`crate::impl_aware::decorate_incremental`]). Returns the snapshot
+/// plus the number of node decorations reused (0 when the base carries no
+/// canonical snapshot or differs structurally — both fall back to the full
+/// pass). The resulting [`ImplModel`] is bit-identical to [`stage_impl`]'s.
+pub fn stage_impl_incremental(
+    canonical: Graph,
+    cfg: &ImplConfig,
+    base: &ImplModel,
+) -> Result<(ImplModel, usize)> {
+    let (Some(base_canonical), Some(base_cfg)) = (&base.canonical, &base.impl_config) else {
+        return Ok((stage_impl(canonical, cfg)?, 0));
+    };
+    validate::validate(&canonical)?;
+    let model = canonical.name.clone();
+    let snapshot = Arc::new(canonical.clone());
+    let (decorated, reused) =
+        decorate_incremental(canonical, cfg, base_canonical, &base.decorated, base_cfg)?;
+    let decorated = Arc::new(decorated);
+    let impl_summary = layer_summaries(&decorated);
+    let fused = fuse(&decorated)?;
+    Ok((
+        ImplModel {
+            model,
+            decorated,
+            canonical: Some(snapshot),
+            impl_config: Some(Arc::new(cfg.clone())),
+            impl_summary,
+            fused,
+        },
+        reused,
+    ))
 }
 
 /// Stage 1 for an *already decorated* graph (e.g. handed straight to the
@@ -89,6 +138,8 @@ pub fn stage_impl(canonical: Graph, cfg: &ImplConfig) -> Result<ImplModel> {
 pub fn stage_impl_decorated(decorated: Arc<Graph>) -> Result<ImplModel> {
     Ok(ImplModel {
         model: decorated.name.clone(),
+        canonical: None,
+        impl_config: None,
         impl_summary: layer_summaries(&decorated),
         fused: fuse(&decorated)?,
         decorated,
@@ -98,7 +149,7 @@ pub fn stage_impl_decorated(decorated: Arc<Graph>) -> Result<ImplModel> {
 /// Stages 2+3 (paper §VII + §VIII-B): schedule fused layers on a platform
 /// and simulate the result.
 pub fn stage_platform(fused: &[FusedLayer], platform: &PlatformSpec) -> Result<PlatformEval> {
-    let schedule = build_schedule(fused.to_vec(), platform)?;
+    let schedule = build_schedule(fused, &Arc::new(platform.clone()))?;
     let sim = simulate(&schedule);
     Ok(assemble_eval(&schedule, sim, platform))
 }
@@ -110,7 +161,7 @@ pub fn stage_platform_traced(
     fused: &[FusedLayer],
     platform: &PlatformSpec,
 ) -> Result<(PlatformEval, Timeline)> {
-    let schedule = build_schedule(fused.to_vec(), platform)?;
+    let schedule = build_schedule(fused, &Arc::new(platform.clone()))?;
     let (sim, timeline) = simulate_traced(&schedule);
     Ok((assemble_eval(&schedule, sim, platform), timeline))
 }
@@ -215,7 +266,7 @@ impl Pipeline {
 
     /// The platform-aware model alone (for inspection / DSE reuse).
     pub fn schedule(&self, decorated: &Graph) -> Result<NetworkSchedule> {
-        build_schedule(fuse(decorated)?, &self.platform)
+        build_schedule(&fuse(decorated)?, &Arc::new(self.platform.clone()))
     }
 
     /// Load a QONNX-dialect JSON model and analyze it.
@@ -335,5 +386,37 @@ mod tests {
         let again = stage_impl_decorated(full.decorated.clone()).unwrap();
         assert_eq!(full.fused.len(), again.fused.len());
         assert_eq!(full.impl_summary.len(), again.impl_summary.len());
+    }
+
+    #[test]
+    fn stage_impl_incremental_is_bit_identical_to_full_stage() {
+        // base: uniform int8; mutant: one block flipped to int4 — the
+        // incremental snapshot must equal the from-scratch one everywhere
+        let mut base_case = models::case2();
+        base_case.width_mult = 0.25;
+        let mut mut_case = base_case.clone();
+        mut_case.blocks[4] = crate::models::BlockConfig::new(4, crate::models::BlockImpl::Im2col);
+
+        let (bg, bcfg) = base_case.build();
+        let base = stage_impl(bg, &bcfg).unwrap();
+        assert!(base.canonical.is_some());
+
+        let (mg, mcfg) = mut_case.build();
+        let full = stage_impl(mg.clone(), &mcfg).unwrap();
+        let (inc, reused) = stage_impl_incremental(mg, &mcfg, &base).unwrap();
+        assert!(reused > 0, "a one-block change must reuse distant nodes");
+
+        assert_eq!(inc.fused.len(), full.fused.len());
+        for (a, b) in inc.fused.iter().zip(&full.fused) {
+            assert_eq!(a.content_hash(), b.content_hash(), "{}", a.name);
+        }
+        assert_eq!(inc.impl_summary.len(), full.impl_summary.len());
+        for (a, b) in inc.impl_summary.iter().zip(&full.impl_summary) {
+            assert_eq!(a.macs, b.macs, "{}", a.name);
+            assert_eq!(a.bops, b.bops, "{}", a.name);
+            assert_eq!(a.param_mem_bits, b.param_mem_bits, "{}", a.name);
+            assert_eq!(a.input_mem_bits, b.input_mem_bits, "{}", a.name);
+            assert_eq!(a.output_mem_bits, b.output_mem_bits, "{}", a.name);
+        }
     }
 }

@@ -13,7 +13,14 @@
 //!   evaluation cache** keyed by stable content hashes of (model config,
 //!   impl config, platform spec): candidates sharing a decorated graph or
 //!   fused layer list skip straight to scheduling/simulation instead of
-//!   recomputing from the QONNX root. Batches run on a work-queue executor
+//!   recomputing from the QONNX root. Beneath the whole-model stage caches
+//!   sits a **layer-grained tier**: each fused layer's tile plan and
+//!   coupling-free simulation is cached per
+//!   (fused-layer content hash × platform hash) unit key, and whole-model
+//!   misses are assembled by *splicing* cached layer units plus
+//!   recomputing only the cross-layer coupling terms — so
+//!   [`EvalEngine::evaluate_delta`] makes a k-gene mutation cost k layer
+//!   units, not a full re-simulation. Batches run on a work-queue executor
 //!   over `std::thread::scope`, bounded by available parallelism;
 //! - [`JointSpace`] / [`explore_joint`] — the joint quantization×hardware
 //!   product explorer (CLI `aladin dse --joint`), streaming a 3-axis
@@ -28,8 +35,9 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::analysis::LatencyBound;
 use crate::coordinator::{
-    stage_impl, stage_impl_decorated, stage_platform, ImplModel, PlatformEval,
+    stage_impl, stage_impl_decorated, stage_impl_incremental, ImplModel, PlatformEval,
 };
 use crate::error::{AladinError, Result};
 use crate::exec::{self, EvalVectors, MeasuredAccuracy};
@@ -37,7 +45,8 @@ use crate::graph::ir::Graph;
 use crate::impl_aware::LayerSummary;
 use crate::models::{BlockConfig, BlockImpl, MobileNetConfig};
 use crate::platform::PlatformSpec;
-use crate::sim::SimResult;
+use crate::platform_aware::{schedule_layer, FusedLayer, LayerSchedule};
+use crate::sim::{couple_layer, simulate_layer_pipeline, LayerPipeline, SimResult};
 use crate::util::StableHasher;
 
 // ---------------------------------------------------------------------------
@@ -373,6 +382,17 @@ impl<T> Memo<T> {
     }
 
     fn get_or_compute(&self, key: u64, f: impl FnOnce() -> Result<T>) -> Result<Arc<T>> {
+        self.get_or_compute_flagged(key, f).map(|(v, _)| v)
+    }
+
+    /// [`Memo::get_or_compute`] that also reports whether the lookup was a
+    /// cache hit (the slot already existed) — the layer-grained tier uses
+    /// this to count spliced units.
+    fn get_or_compute_flagged(
+        &self,
+        key: u64,
+        f: impl FnOnce() -> Result<T>,
+    ) -> Result<(Arc<T>, bool)> {
         let (slot, fresh) = {
             let mut slots = self.slots.lock().expect("memo lock poisoned");
             match slots.entry(key) {
@@ -392,7 +412,7 @@ impl<T> Memo<T> {
             f().map(Arc::new).map_err(Arc::new)
         });
         match outcome {
-            Ok(v) => Ok(v.clone()),
+            Ok(v) => Ok((v.clone(), !fresh)),
             Err(e) => Err(e.replay()),
         }
     }
@@ -421,6 +441,21 @@ pub struct CacheStats {
     pub bound_computed: usize,
     /// Lower-bound-stage lookups served from the cache.
     pub bound_hits: usize,
+    /// Layer-grained units (per-fused-layer tile plan + coupling-free
+    /// simulation) actually computed.
+    pub layer_computed: usize,
+    /// Layer-unit lookups served from the cache — each one is a fused
+    /// layer whose plan + simulation were spliced instead of recomputed.
+    pub layer_hits: usize,
+    /// Platform-stage evaluations (simulation or lower bound) that spliced
+    /// at least one cached layer unit.
+    pub spliced: usize,
+    /// Stage-1 snapshots built incrementally from a base snapshot
+    /// ([`EvalEngine::evaluate_delta`]).
+    pub impl_delta: usize,
+    /// Decorated nodes copied from base snapshots across all incremental
+    /// stage-1 computations.
+    pub nodes_reused: usize,
 }
 
 impl CacheStats {
@@ -448,6 +483,11 @@ impl crate::util::ToJson for CacheStats {
             .with("acc_hits", self.acc_hits)
             .with("bound_computed", self.bound_computed)
             .with("bound_hits", self.bound_hits)
+            .with("layer_computed", self.layer_computed)
+            .with("layer_hits", self.layer_hits)
+            .with("spliced", self.spliced)
+            .with("impl_delta", self.impl_delta)
+            .with("nodes_reused", self.nodes_reused)
             .with("recomputations", self.recomputations())
             .with("naive_recomputations", self.naive_recomputations())
     }
@@ -509,10 +549,21 @@ fn graph_key(g: &Graph) -> u64 {
     h.finish()
 }
 
+/// One layer-grained cache unit: the platform-dependent tile plan + L2
+/// residency of a single fused layer (cross-layer `prefetchable` left
+/// unresolved) and its coupling-free simulation. Keyed by
+/// (fused-layer content hash × platform content hash), so every candidate
+/// sharing the layer — across quantization genomes and search generations
+/// — splices the same unit.
+struct LayerUnit {
+    sched: LayerSchedule,
+    pipe: LayerPipeline,
+}
+
 /// The shared, thread-safe design-space evaluation engine.
 pub struct EvalEngine {
     source: ModelSource,
-    base: PlatformSpec,
+    base: Arc<PlatformSpec>,
     base_key: u64,
     threads: usize,
     /// Eval vectors for the measured-accuracy stage plus their precomputed
@@ -524,6 +575,13 @@ pub struct EvalEngine {
     sim_stage: Memo<PlatformEval>,
     acc_stage: Memo<MeasuredAccuracy>,
     bound_stage: Memo<u64>,
+    /// The layer-grained tier beneath the whole-model stage caches: one
+    /// (tile plan + coupling-free simulation) per unique
+    /// (fused layer, platform) pair.
+    layer_stage: Memo<LayerUnit>,
+    spliced: AtomicUsize,
+    impl_delta: AtomicUsize,
+    nodes_reused: AtomicUsize,
 }
 
 impl EvalEngine {
@@ -536,7 +594,7 @@ impl EvalEngine {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         Self {
             source,
-            base,
+            base: Arc::new(base),
             base_key,
             threads,
             accuracy_vectors: None,
@@ -544,6 +602,10 @@ impl EvalEngine {
             sim_stage: Memo::new(),
             acc_stage: Memo::new(),
             bound_stage: Memo::new(),
+            layer_stage: Memo::new(),
+            spliced: AtomicUsize::new(0),
+            impl_delta: AtomicUsize::new(0),
+            nodes_reused: AtomicUsize::new(0),
         }
     }
 
@@ -595,6 +657,11 @@ impl EvalEngine {
             acc_hits: self.acc_stage.hits.load(Ordering::Relaxed),
             bound_computed: self.bound_stage.computed.load(Ordering::Relaxed),
             bound_hits: self.bound_stage.hits.load(Ordering::Relaxed),
+            layer_computed: self.layer_stage.computed.load(Ordering::Relaxed),
+            layer_hits: self.layer_stage.hits.load(Ordering::Relaxed),
+            spliced: self.spliced.load(Ordering::Relaxed),
+            impl_delta: self.impl_delta.load(Ordering::Relaxed),
+            nodes_reused: self.nodes_reused.load(Ordering::Relaxed),
         }
     }
 
@@ -633,6 +700,156 @@ impl EvalEngine {
             })
     }
 
+    /// Stage 1 through the cache with the delta fast path: on a miss, the
+    /// new snapshot is built incrementally against `base`'s cached snapshot
+    /// ([`stage_impl_incremental`] — unchanged node decorations are spliced
+    /// instead of recomputed). Bit-identical to [`EvalEngine::impl_model`];
+    /// falls back to the full path when no usable base exists or the base
+    /// equals the candidate.
+    fn impl_model_delta(
+        &self,
+        quant: Option<&QuantAxis>,
+        base: Option<&DesignVector>,
+    ) -> Result<Arc<ImplModel>> {
+        let key = self.impl_key(quant);
+        let base_model = match (base, &self.source) {
+            (Some(b), ModelSource::MobileNet(_))
+                if quant.is_some() && self.impl_key(b.quant.as_ref()) != key =>
+            {
+                self.impl_model(b.quant.as_ref()).ok()
+            }
+            _ => None,
+        };
+        let Some(base_model) = base_model else {
+            return self.impl_model(quant);
+        };
+        self.impl_stage.get_or_compute(key, || match &self.source {
+            ModelSource::MobileNet(src) => {
+                let mut case = src.clone();
+                if let Some(q) = quant {
+                    q.apply(&mut case);
+                }
+                let (g, cfg) = case.build();
+                let (model, reused) = stage_impl_incremental(g, &cfg, &base_model)?;
+                self.impl_delta.fetch_add(1, Ordering::Relaxed);
+                self.nodes_reused.fetch_add(reused, Ordering::Relaxed);
+                Ok(model)
+            }
+            ModelSource::Decorated(_) => Err(AladinError::Unsupported(
+                "quantization axis requires a configurable model source \
+                 (EvalEngine::for_mobilenet)"
+                    .into(),
+            )),
+        })
+    }
+
+    /// The layer-grained tier: one cached (tile plan + coupling-free
+    /// simulation) unit per (fused-layer content, platform) pair. Returns
+    /// the units in network order; counts a splice when any unit was
+    /// served from the cache.
+    fn layer_units(
+        &self,
+        fused: &[FusedLayer],
+        platform: &Arc<PlatformSpec>,
+    ) -> Result<Vec<Arc<LayerUnit>>> {
+        platform.validate()?;
+        let phash = platform.content_hash();
+        let mut units = Vec::with_capacity(fused.len());
+        let mut reused = 0usize;
+        for layer in fused {
+            let key = crate::util::hash::combine(layer.content_hash(), phash);
+            let (unit, hit) = self.layer_stage.get_or_compute_flagged(key, || {
+                let sched = schedule_layer(layer, platform)?;
+                let pipe = simulate_layer_pipeline(&sched, platform);
+                Ok(LayerUnit { sched, pipe })
+            })?;
+            if hit {
+                reused += 1;
+            }
+            units.push(unit);
+        }
+        if reused > 0 {
+            self.spliced.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(units)
+    }
+
+    /// Stage 2/3 by splicing layer-grained units: resolve the cross-layer
+    /// prefetch coupling ([`crate::platform_aware::link_prefetch`]'s rule)
+    /// and the L3 hide windows over the cached per-layer results — the
+    /// explicit composition pass. Bit-identical to
+    /// [`crate::coordinator::stage_platform`], which runs the same
+    /// per-layer core monolithically.
+    fn stage_platform_spliced(
+        &self,
+        fused: &[FusedLayer],
+        platform: &Arc<PlatformSpec>,
+    ) -> Result<PlatformEval> {
+        let units = self.layer_units(fused, platform)?;
+        let mut layers = Vec::with_capacity(units.len());
+        let mut tilings = Vec::with_capacity(units.len());
+        let (mut peak_l1, mut peak_l2, mut l3_traffic) = (0u64, 0u64, 0u64);
+        // the first layer's weights are prefetched during model load
+        let mut hide_window = u64::MAX;
+        let mut prev_l2_used: Option<u64> = None;
+        for unit in &units {
+            let l2 = &unit.sched.l2;
+            let prefetchable = l2.prefetch_ok(prev_l2_used, platform.l2_bytes);
+            let result = couple_layer(&unit.pipe, prefetchable, hide_window);
+            hide_window = unit.pipe.pipeline_cycles;
+            prev_l2_used = Some(l2.l2_used_bytes);
+            peak_l1 = peak_l1.max(unit.sched.tile.l1_used_bytes);
+            peak_l2 = peak_l2.max(l2.l2_used_bytes);
+            l3_traffic += l2.l3_bytes();
+            tilings.push((
+                unit.sched.layer.name.clone(),
+                unit.sched.tile.tiles_c,
+                unit.sched.tile.tiles_h,
+                unit.sched.tile.double_buffered,
+            ));
+            layers.push(result);
+        }
+        let sim = SimResult {
+            platform: platform.name.clone(),
+            cores: platform.cores,
+            l2_kb: platform.l2_bytes / 1024,
+            layers,
+        };
+        let latency = LatencyBound::from_sim(&sim, platform);
+        Ok(PlatformEval {
+            platform: platform.name.clone(),
+            sim,
+            latency,
+            peak_l1,
+            peak_l2,
+            l3_traffic,
+            tilings,
+        })
+    }
+
+    /// The analytic latency lower bound assembled from layer-grained
+    /// units: per layer `max(compute busy, L2<->L1 busy)` plus the L3
+    /// transfer when not prefetchable — bit-identical to
+    /// [`crate::sim::lower_bound_cycles`] over the built schedule, but
+    /// served from (and warming) the layer cache.
+    fn lower_bound_spliced(
+        &self,
+        fused: &[FusedLayer],
+        platform: &Arc<PlatformSpec>,
+    ) -> Result<u64> {
+        let units = self.layer_units(fused, platform)?;
+        let mut total = 0u64;
+        let mut prev_l2_used: Option<u64> = None;
+        for unit in &units {
+            let l2 = &unit.sched.l2;
+            let prefetchable = l2.prefetch_ok(prev_l2_used, platform.l2_bytes);
+            let exposed_l3_min = if prefetchable { 0 } else { unit.pipe.dma_l3_cycles };
+            total += unit.pipe.compute_cycles.max(unit.pipe.dma_l1_cycles) + exposed_l3_min;
+            prev_l2_used = Some(l2.l2_used_bytes);
+        }
+        Ok(total)
+    }
+
     /// The per-block bit widths a vector actually evaluates: its quant
     /// axis when present, otherwise the base model's blocks.
     fn effective_bits(&self, vector: &DesignVector) -> Vec<u8> {
@@ -661,29 +878,34 @@ impl EvalEngine {
             .get_or_compute(acc_key, move || exec::measure(decorated, &vectors))
     }
 
-    /// Resolve the platform a vector's hardware axis selects.
-    fn resolve_platform(&self, vector: &DesignVector) -> PlatformSpec {
+    /// Resolve the platform a vector's hardware axis selects. Shared, not
+    /// deep-cloned, when the vector keeps the base platform.
+    fn resolve_platform(&self, vector: &DesignVector) -> Arc<PlatformSpec> {
         match vector.hw {
-            Some(hw) => self.base.reconfigure(hw.cores, hw.l2_kb * 1024),
-            None => self.base.clone(),
+            Some(hw) => Arc::new(self.base.reconfigure(hw.cores, hw.l2_kb * 1024)),
+            None => Arc::clone(&self.base),
         }
     }
 
     /// Evaluate one vector with an explicit (possibly `None`) accuracy
-    /// vector set — the shared body of [`EvalEngine::evaluate`] and the
+    /// vector set and an optional delta base — the shared body of
+    /// [`EvalEngine::evaluate`], [`EvalEngine::evaluate_delta`], and the
     /// successive-halving path of [`crate::dse::search`].
     fn evaluate_inner(
         &self,
         vector: &DesignVector,
+        base: Option<&DesignVector>,
         accuracy: Option<&(Arc<EvalVectors>, u64)>,
     ) -> Result<EvalRecord> {
         let impl_key = self.impl_key(vector.quant.as_ref());
-        let impl_model = self.impl_model(vector.quant.as_ref())?;
+        let impl_model = self.impl_model_delta(vector.quant.as_ref(), base)?;
         let platform = self.resolve_platform(vector);
         let sim_key = crate::util::hash::combine(impl_key, platform.content_hash());
         let eval = self
             .sim_stage
-            .get_or_compute(sim_key, || stage_platform(&impl_model.fused, &platform))?;
+            .get_or_compute(sim_key, || {
+                self.stage_platform_spliced(&impl_model.fused, &platform)
+            })?;
         let mut record = EvalRecord::derive(
             vector.clone(),
             &self.effective_bits(vector),
@@ -701,7 +923,25 @@ impl EvalEngine {
 
     /// Evaluate one design vector through the staged cache.
     pub fn evaluate(&self, vector: &DesignVector) -> Result<EvalRecord> {
-        self.evaluate_inner(vector, self.accuracy_vectors.as_ref())
+        self.evaluate_inner(vector, None, self.accuracy_vectors.as_ref())
+    }
+
+    /// [`EvalEngine::evaluate`] with a **delta fast path** for candidates
+    /// derived from an already-evaluated `base` (the common case in
+    /// [`crate::dse::search`], whose mutation/crossover offspring flip 1–2
+    /// genes): a stage-1 miss re-decorates incrementally against the
+    /// base's snapshot, and the platform stages splice cached layer-grained
+    /// units, so a k-gene mutation recomputes only the k changed layer
+    /// units (plus their precision-coupled neighbors and the cross-layer
+    /// coupling terms). **Bit-identical** to [`EvalEngine::evaluate`] —
+    /// asserted by the mutation-chain property tests — because every
+    /// spliced path shares its computation with the monolithic one.
+    pub fn evaluate_delta(
+        &self,
+        base: &DesignVector,
+        vector: &DesignVector,
+    ) -> Result<EvalRecord> {
+        self.evaluate_inner(vector, Some(base), self.accuracy_vectors.as_ref())
     }
 
     /// [`EvalEngine::evaluate`] with the accuracy stage run on an explicit
@@ -715,24 +955,24 @@ impl EvalEngine {
         vectors: Arc<EvalVectors>,
     ) -> Result<EvalRecord> {
         let hash = vectors.content_hash();
-        self.evaluate_inner(vector, Some(&(vectors, hash)))
+        self.evaluate_inner(vector, None, Some(&(vectors, hash)))
     }
 
     /// The cheap screening stage: analytic latency **lower bound** in
-    /// cycles for a vector, from the (cached) stage-1 model and a schedule
-    /// build only — no timeline simulation, no interpreter
-    /// ([`crate::sim::lower_bound_cycles`]). Memoized per (quant, platform)
-    /// pair like the simulation stage, but in its own table so bound
-    /// lookups never count as simulations in [`CacheStats`].
+    /// cycles for a vector, from the (cached) stage-1 model and the
+    /// layer-grained tier only — no whole-network timeline, no interpreter.
+    /// Bit-identical to [`crate::sim::lower_bound_cycles`] over the built
+    /// schedule. Memoized per (quant, platform) pair like the simulation
+    /// stage, but in its own table so bound lookups never count as
+    /// simulations in [`CacheStats`]; the layer units it computes are
+    /// shared with any later full evaluation of the same layers.
     pub fn latency_lower_bound(&self, vector: &DesignVector) -> Result<u64> {
         let impl_key = self.impl_key(vector.quant.as_ref());
         let impl_model = self.impl_model(vector.quant.as_ref())?;
         let platform = self.resolve_platform(vector);
         let key = crate::util::hash::combine(impl_key, platform.content_hash());
         let bound = self.bound_stage.get_or_compute(key, || {
-            let schedule =
-                crate::platform_aware::build_schedule(impl_model.fused.to_vec(), &platform)?;
-            Ok(crate::sim::lower_bound_cycles(&schedule))
+            self.lower_bound_spliced(&impl_model.fused, &platform)
         })?;
         Ok(*bound)
     }
@@ -776,19 +1016,53 @@ impl EvalEngine {
         vectors: &[DesignVector],
         accuracy: Option<(Arc<EvalVectors>, u64)>,
     ) -> Vec<Result<EvalRecord>> {
+        self.batch_eval(vectors, None, accuracy)
+    }
+
+    /// The batch form of [`EvalEngine::evaluate_delta`]: evaluate
+    /// `vectors[i]` with `bases[i]` as its delta base (`None` entries take
+    /// the full path). `bases` must be as long as `vectors`. Results come
+    /// back in input order regardless of worker count and are bit-identical
+    /// to [`EvalEngine::try_evaluate_all_with`].
+    pub fn try_evaluate_all_delta(
+        &self,
+        vectors: &[DesignVector],
+        bases: &[Option<DesignVector>],
+        accuracy: Option<(Arc<EvalVectors>, u64)>,
+    ) -> Vec<Result<EvalRecord>> {
+        assert_eq!(
+            vectors.len(),
+            bases.len(),
+            "one delta base (possibly None) per vector"
+        );
+        self.batch_eval(vectors, Some(bases), accuracy)
+    }
+
+    /// Shared work-queue body of the batch evaluators.
+    fn batch_eval(
+        &self,
+        vectors: &[DesignVector],
+        bases: Option<&[Option<DesignVector>]>,
+        accuracy: Option<(Arc<EvalVectors>, u64)>,
+    ) -> Vec<Result<EvalRecord>> {
         if vectors.is_empty() {
             return Vec::new();
         }
+        let base_of = |i: usize| -> Option<&DesignVector> {
+            bases.and_then(|b| b.get(i)).and_then(|o| o.as_ref())
+        };
         let workers = self.threads.min(vectors.len());
         if workers <= 1 {
             return vectors
                 .iter()
-                .map(|v| self.evaluate_inner(v, accuracy.as_ref()))
+                .enumerate()
+                .map(|(i, v)| self.evaluate_inner(v, base_of(i), accuracy.as_ref()))
                 .collect();
         }
 
         let next = AtomicUsize::new(0);
         let accuracy = &accuracy;
+        let base_of = &base_of;
         let per_worker: Vec<Vec<(usize, Result<EvalRecord>)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
@@ -800,7 +1074,10 @@ impl EvalEngine {
                             if i >= vectors.len() {
                                 break;
                             }
-                            out.push((i, self.evaluate_inner(&vectors[i], accuracy.as_ref())));
+                            out.push((
+                                i,
+                                self.evaluate_inner(&vectors[i], base_of(i), accuracy.as_ref()),
+                            ));
                         }
                         out
                     })
@@ -1255,6 +1532,40 @@ mod tests {
         assert_eq!(cheap.sensitivity.to_bits(), full.sensitivity.to_bits());
         // screening shares the stage-1 cache with the full evaluation
         assert_eq!(engine.stats().impl_computed, 1);
+    }
+
+    #[test]
+    fn evaluate_delta_matches_evaluate_and_counts_reuse() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let base_q = QuantAxis::uniform(8, BlockImpl::Im2col, 10);
+        let hw = HwAxis { cores: 4, l2_kb: 320 };
+        let base = DesignVector {
+            quant: Some(base_q.clone()),
+            hw: Some(hw),
+        };
+        let warm = engine.evaluate(&base).unwrap();
+        assert!(warm.total_cycles > 0);
+        let mut q = base_q.clone();
+        q.bits[3] = 4;
+        let v = DesignVector {
+            quant: Some(q),
+            hw: Some(hw),
+        };
+        let d = engine.evaluate_delta(&base, &v).unwrap();
+        // reference: a from-scratch evaluation on a cold engine
+        let fresh = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let r = fresh.evaluate(&v).unwrap();
+        assert_eq!(d.total_cycles, r.total_cycles);
+        assert_eq!(d.latency_s.to_bits(), r.latency_s.to_bits());
+        assert_eq!(d.sensitivity.to_bits(), r.sensitivity.to_bits());
+        assert_eq!(d.param_kb.to_bits(), r.param_kb.to_bits());
+        assert_eq!(d.mem_kb.to_bits(), r.mem_kb.to_bits());
+        assert_eq!(d.tilings, r.tilings);
+        let s = engine.stats();
+        assert_eq!(s.impl_delta, 1, "stage-1 miss must take the incremental path");
+        assert!(s.nodes_reused > 0, "distant nodes must be copied, not redone");
+        assert!(s.layer_hits > 0, "unchanged layer units must be spliced");
+        assert!(s.spliced > 0);
     }
 
     #[test]

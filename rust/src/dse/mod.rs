@@ -17,16 +17,32 @@
 //! | `stage_impl` | validate + decorate + fuse | base model + **quantization axis** only |
 //! | `stage_platform` | schedule + timeline simulation | quantization axis × **hardware axis** |
 //! | `stage_accuracy` | bit-exact integer interpreter | quantization axis × **eval-vector set** (hardware-invariant) |
-//! | bound stage | schedule + analytic lower bound | quantization axis × hardware axis |
+//! | bound stage | layer units + analytic lower bound | quantization axis × hardware axis |
+//! | **layer tier** | per-fused-layer tile plan + coupling-free simulation | **fused-layer content** × hardware axis |
+//!
+//! The layer tier sits *beneath* the whole-model stages: a `stage_platform`
+//! or bound miss is assembled by **splicing** cached layer-grained units
+//! (key = fused-layer content hash × platform hash) and recomputing only
+//! the cross-layer coupling terms (prefetchability and the L3
+//! prefetch-hiding window) — so candidates that share layers, which is
+//! every mutation/crossover offspring in [`search`], recompute only what
+//! their genes actually changed. [`engine::EvalEngine::evaluate_delta`]
+//! adds the platform-independent counterpart: a stage-1 miss re-decorates
+//! incrementally against the base candidate's snapshot. Both paths are
+//! **bit-identical** to the from-scratch pipeline (they share its
+//! computation), which the mutation-chain property tests assert.
 //!
 //! Consequences searchers exploit: a hardware sweep re-decorates nothing
 //! (one `stage_impl` per quantization configuration); a whole hardware
 //! grid reuses **one** interpreter run per quantization configuration
-//! (the accuracy stage never sees a platform); and the evolutionary
-//! search's cheap screens ([`engine::EvalEngine::screen_metrics`],
+//! (the accuracy stage never sees a platform); a k-gene mutation
+//! recomputes exactly the changed layer units plus coupling terms; and
+//! the evolutionary search's cheap screens
+//! ([`engine::EvalEngine::screen_metrics`],
 //! [`engine::EvalEngine::latency_lower_bound`]) ride the same caches, so
-//! pruning a candidate costs at most a schedule build — never a
-//! simulation or an interpreter run.
+//! pruning a candidate costs at most the layer units a later full
+//! evaluation would reuse anyway — never a whole-network simulation or an
+//! interpreter run.
 
 pub mod engine;
 pub mod grid;

@@ -304,6 +304,13 @@ pub struct EvoConfig {
     /// already misses this are rejected unevaluated (sound: the true
     /// latency can only be larger).
     pub max_latency_s: Option<f64>,
+    /// Use the engine's layer-grained delta fast path
+    /// ([`EvalEngine::evaluate_delta`]) for mutation/crossover offspring:
+    /// each child is evaluated against its (already-evaluated) first
+    /// parent, so a k-gene mutation recomputes only the changed layer
+    /// units. Results are bit-identical with the path on or off (CLI
+    /// `--no-delta` disables it for A/B benchmarking).
+    pub delta: bool,
 }
 
 impl Default for EvoConfig {
@@ -319,6 +326,7 @@ impl Default for EvoConfig {
             screen_vectors: 0,
             mem_budget_kb: None,
             max_latency_s: None,
+            delta: true,
         }
     }
 }
@@ -661,11 +669,17 @@ pub fn evolve_with(
 
     for generation in 0..=cfg.generations {
         // ---- candidate generation ---------------------------------------
-        let mut candidates: Vec<Genome> = Vec::new();
+        // each candidate carries an optional delta base: the design vector
+        // of its (already-evaluated) first parent, which the engine's
+        // layer-grained fast path diffs against
+        let mut candidates: Vec<(Genome, Option<DesignVector>)> = Vec::new();
         if generation == 0 {
             // deterministic anchors first: the whole uniform sub-grid
-            candidates = space.uniform_seeds();
-            let mut keys: HashSet<u64> = candidates.iter().map(|g| g.key()).collect();
+            let mut keys: HashSet<u64> = HashSet::new();
+            for g in space.uniform_seeds() {
+                keys.insert(g.key());
+                candidates.push((g, None));
+            }
             let mut attempts = 0;
             while candidates.len() < cfg.population
                 && attempts < cfg.population * OFFSPRING_ATTEMPT_FACTOR
@@ -673,7 +687,7 @@ pub fn evolve_with(
                 attempts += 1;
                 let g = space.random(&mut rng);
                 if keys.insert(g.key()) {
-                    candidates.push(g);
+                    candidates.push((g, None));
                 }
             }
         } else {
@@ -708,7 +722,8 @@ pub fn evolve_with(
                 space.mutate(&mut child, &mut rng, mutation_p);
                 let key = child.key();
                 if !seen.contains(&key) && batch_keys.insert(key) {
-                    candidates.push(child);
+                    let base = cfg.delta.then(|| genomes[population[pa]].vector());
+                    candidates.push((child, base));
                 }
             }
             if candidates.is_empty() {
@@ -720,14 +735,14 @@ pub fn evolve_with(
         let mut pruned_bound = 0usize;
         let mut pruned_feasibility = 0usize;
         let mut infeasible = 0usize;
-        let mut to_eval: Vec<Genome> = Vec::new();
-        for genome in candidates {
+        let mut to_eval: Vec<(Genome, Option<DesignVector>)> = Vec::new();
+        for (genome, base) in candidates {
             let key = genome.key();
             if !seen.insert(key) {
                 continue;
             }
             if !screening_active {
-                to_eval.push(genome);
+                to_eval.push((genome, base));
                 continue;
             }
             let vector = genome.vector();
@@ -773,7 +788,7 @@ pub fn evolve_with(
                 pruned.push((genome, PruneReason::Bound { lb_cycles }));
                 continue;
             }
-            to_eval.push(genome);
+            to_eval.push((genome, base));
         }
 
         // ---- budget + batch evaluation ----------------------------------
@@ -781,14 +796,23 @@ pub fn evolve_with(
         // candidates cut by the budget were never screened out on merit:
         // un-mark them so a later generation may re-propose them (the
         // budget only stays open if some of this batch fails to evaluate)
-        for dropped in to_eval.iter().skip(remaining) {
+        for (dropped, _) in to_eval.iter().skip(remaining) {
             seen.remove(&dropped.key());
         }
         to_eval.truncate(remaining);
-        let vectors: Vec<DesignVector> = to_eval.iter().map(|g| g.vector()).collect();
-        let outcomes = engine.try_evaluate_all_with(&vectors, screen_tier.clone());
+        let vectors: Vec<DesignVector> = to_eval.iter().map(|(g, _)| g.vector()).collect();
+        // the delta fast path: offspring evaluate against their parent's
+        // cached snapshot (bit-identical either way — cfg.delta only
+        // changes how a cache miss is computed, never what it computes)
+        let outcomes = if cfg.delta {
+            let bases: Vec<Option<DesignVector>> =
+                to_eval.iter().map(|(_, b)| b.clone()).collect();
+            engine.try_evaluate_all_delta(&vectors, &bases, screen_tier.clone())
+        } else {
+            engine.try_evaluate_all_with(&vectors, screen_tier.clone())
+        };
         let mut new_idx: Vec<usize> = Vec::new();
-        for (genome, outcome) in to_eval.into_iter().zip(outcomes) {
+        for ((genome, _), outcome) in to_eval.into_iter().zip(outcomes) {
             match outcome {
                 Ok(r) => {
                     objs.push(objectives(&r));

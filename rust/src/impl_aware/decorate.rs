@@ -27,6 +27,128 @@ pub fn decorate(mut g: Graph, cfg: &ImplConfig) -> Result<Graph> {
     Ok(g)
 }
 
+/// Whether two graphs have identical wiring (node/edge counts, names, and
+/// connectivity) — the precondition for index-aligned incremental
+/// re-decoration.
+fn same_structure(a: &Graph, b: &Graph) -> bool {
+    a.nodes.len() == b.nodes.len()
+        && a.edges.len() == b.edges.len()
+        && a.nodes
+            .iter()
+            .zip(&b.nodes)
+            .all(|(x, y)| x.name == y.name && x.inputs == y.inputs && x.outputs == y.outputs)
+        && a.edges
+            .iter()
+            .zip(&b.edges)
+            .all(|(x, y)| x.from == y.from && x.to == y.to && x.kind == y.kind)
+}
+
+/// Whether a node's decoration inputs (its adjacent edge specs) are
+/// unchanged between two structurally identical graphs.
+fn adjacent_specs_equal(a: &Graph, b: &Graph, id: NodeId) -> bool {
+    if a.data_input(id).map(|e| &e.spec) != b.data_input(id).map(|e| &e.spec) {
+        return false;
+    }
+    if a.output_edge(id).map(|e| &e.spec) != b.output_edge(id).map(|e| &e.spec) {
+        return false;
+    }
+    let pa = a.param_inputs(id);
+    let pb = b.param_inputs(id);
+    pa.len() == pb.len() && pa.iter().zip(&pb).all(|(x, y)| x.spec == y.spec)
+}
+
+/// Incrementally decorate `g` against a previously decorated **base
+/// snapshot**: nodes whose decoration inputs (op, adjacent edge specs,
+/// resolved implementation choice) are unchanged copy their decorated op
+/// and annotations from `base_decorated` instead of recomputing them.
+/// Returns the decorated graph plus the number of node decorations reused.
+///
+/// Bit-identity with [`decorate`] is maintained by construction:
+///
+/// - a node is re-decorated through the same [`decorate_node`] /
+///   `apply` path whenever it changed **or any graph-adjacent node
+///   changed** (one-hop dilation), so every edge annotation with a changed
+///   contributor receives both of its endpoint contributions via the same
+///   order-independent `max`;
+/// - edges with **no changed endpoint** copy their annotation from the
+///   base snapshot before the re-decoration sweep (a re-decorated but
+///   content-unchanged endpoint then contributes a value already included
+///   in that annotation — the `max` is a no-op);
+/// - graphs that differ structurally fall back to a full [`decorate`].
+///
+/// This is the platform-independent half of the DSE engine's delta path
+/// ([`crate::dse::engine::EvalEngine::evaluate_delta`]): an evolutionary
+/// offspring that flips one block's genes re-decorates only that block's
+/// nodes plus the precision-coupled neighbors.
+pub fn decorate_incremental(
+    mut g: Graph,
+    cfg: &ImplConfig,
+    base_canonical: &Graph,
+    base_decorated: &Graph,
+    base_cfg: &ImplConfig,
+) -> Result<(Graph, usize)> {
+    if !same_structure(&g, base_canonical) || !same_structure(&g, base_decorated) {
+        return Ok((decorate(g, cfg)?, 0));
+    }
+    cfg.check_against(&g)?;
+    let order = topo::compute_order(&g)?;
+
+    // which nodes' decoration inputs changed vs. the base canonical graph
+    let n = g.nodes.len();
+    let mut changed = vec![false; n];
+    for i in 0..n {
+        let now = &g.nodes[i];
+        let was = &base_canonical.nodes[i];
+        changed[i] = now.op != was.op
+            || cfg.resolve(now)? != base_cfg.resolve(was)?
+            || !adjacent_specs_equal(&g, base_canonical, now.id);
+    }
+
+    // one-hop dilation: every node sharing an edge with a changed node is
+    // re-decorated too, so changed edges get both endpoint contributions
+    let mut recompute = changed.clone();
+    for e in &g.edges {
+        let endpoint_changed = e.from.map(|f| changed[f.0]).unwrap_or(false)
+            || e.to.iter().any(|t| changed[t.0]);
+        if endpoint_changed {
+            if let Some(f) = e.from {
+                recompute[f.0] = true;
+            }
+            for t in &e.to {
+                recompute[t.0] = true;
+            }
+        }
+    }
+
+    // pre-copy annotations of edges with no changed endpoint
+    for i in 0..g.edges.len() {
+        let e = &g.edges[i];
+        let endpoint_changed = e.from.map(|f| changed[f.0]).unwrap_or(false)
+            || e.to.iter().any(|t| changed[t.0]);
+        if !endpoint_changed {
+            g.edges[i].ann = base_decorated.edges[i].ann;
+        }
+    }
+
+    let mut reused = 0usize;
+    for id in order {
+        if recompute[id.0] {
+            let choice = cfg.resolve(g.node(id))?;
+            let deco = decorate_node(&g, id, &choice)?;
+            apply(&mut g, id, &choice, deco)?;
+        } else {
+            let base_node = &base_decorated.nodes[id.0];
+            let node = g.node_mut(id);
+            node.op = base_node.op.clone();
+            node.ann = base_node.ann.clone();
+            if base_node.ann.is_some() {
+                reused += 1;
+            }
+        }
+    }
+    Ok((g, reused))
+}
+
 /// Compute the decoration for a single node without mutating the graph.
 pub fn decorate_node(g: &Graph, id: NodeId, choice: &ImplChoice) -> Result<Option<OpDecoration>> {
     let node = g.node(id);
@@ -453,5 +575,71 @@ mod tests {
         assert!(g.total_macs() > 0);
         assert!(g.total_bops() > g.total_macs());
         assert!(g.total_param_bits() > 0);
+    }
+
+    fn assert_decorations_identical(a: &Graph, b: &Graph) {
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.op, y.op, "{}", x.name);
+            assert_eq!(x.ann, y.ann, "{}", x.name);
+        }
+        for (x, y) in a.edges.iter().zip(&b.edges) {
+            assert_eq!(x.ann, y.ann, "edge {}", x.name);
+        }
+    }
+
+    #[test]
+    fn incremental_identical_config_reuses_every_decoration() {
+        let cfg = ImplConfig::default();
+        let base = decorate(sample(), &cfg).unwrap();
+        let (inc, reused) =
+            decorate_incremental(sample(), &cfg, &sample(), &base, &cfg).unwrap();
+        assert_decorations_identical(&inc, &base);
+        // every annotated node (all but Input/Output) is copied, none recomputed
+        let annotated = base.nodes.iter().filter(|n| n.ann.is_some()).count();
+        assert_eq!(reused, annotated);
+    }
+
+    #[test]
+    fn incremental_config_change_matches_full_redecoration() {
+        let base_cfg = ImplConfig::default();
+        let base = decorate(sample(), &base_cfg).unwrap();
+        // flip conv1 to the LUT implementation — only its neighborhood may
+        // be re-decorated, and the result must equal a from-scratch pass
+        let mut cfg = ImplConfig::default();
+        cfg.set_node(
+            "conv1",
+            NodeImplSpec {
+                implementation: Some("lut".into()),
+                ..Default::default()
+            },
+        );
+        let full = decorate(sample(), &cfg).unwrap();
+        let (inc, reused) =
+            decorate_incremental(sample(), &cfg, &sample(), &base, &base_cfg).unwrap();
+        assert_decorations_identical(&inc, &full);
+        // distant nodes (conv0 and its fused chain) were copied, not redone
+        assert!(reused > 0, "no decoration reuse on a one-node change");
+    }
+
+    #[test]
+    fn incremental_falls_back_on_structural_mismatch() {
+        let cfg = ImplConfig::default();
+        let base = decorate(sample(), &cfg).unwrap();
+        // a structurally different canonical graph: full decorate fallback
+        let mut b = GraphBuilder::new(
+            "other",
+            TensorSpec::chw(3, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("cx", ConvAttrs::standard(4, 3, 1, 1), ElemType::int(8))
+            .relu("rx")
+            .quant("qx", ElemType::int(8), false);
+        let other = b.finish();
+        let full = decorate(other.clone(), &cfg).unwrap();
+        let (inc, reused) =
+            decorate_incremental(other, &cfg, &sample(), &base, &cfg).unwrap();
+        assert_eq!(reused, 0);
+        assert_decorations_identical(&inc, &full);
     }
 }

@@ -7,4 +7,4 @@ pub mod decorate;
 pub mod ops;
 
 pub use config::{ActImpl, ImplChoice, ImplConfig, ImplDefaults, LinearImpl, NodeImplSpec, QuantImpl};
-pub use decorate::{decorate, layer_summaries, LayerSummary};
+pub use decorate::{decorate, decorate_incremental, layer_summaries, LayerSummary};

@@ -30,9 +30,10 @@
 //! An end-to-end walkthrough (QONNX ingest → joint DSE → bottleneck
 //! report → trace export) lives in `docs/GUIDE.md`.
 
-// The missing-docs lint is rolled out module by module: the public DSE and
-// exec surfaces are fully documented and enforced; the exempted modules
-// below await their own documentation pass before the allow is dropped.
+// The missing-docs lint is rolled out module by module: the public DSE,
+// exec, and sim surfaces are fully documented and enforced; the exempted
+// modules below await their own documentation pass before the allow is
+// dropped.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)]
@@ -57,7 +58,6 @@ pub mod platform_aware;
 pub mod quant;
 #[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod sim;
 #[allow(missing_docs)]
 pub mod util;

@@ -30,18 +30,20 @@ USAGE:
                   [--bottlenecks [--trace-out <file.json>]]
   aladin dse      [--model <m>] [--cores 2,4,8] [--l2-kb 256,320,512]
                   [--platform gap8|stm32n6|<file.json>] [--width-mult <f64>] [--json]
+                  [--cache-stats]
   aladin dse --joint
                   [--model case1|case2|case3] [--bits 4,8] [--impls im2col,lut]
                   [--tail-k <k>] [--cores 2,4,8] [--l2-kb 256,320,512]
                   [--threads <n>] [--platform <p>] [--width-mult <f64>] [--json]
-                  [--measured-accuracy [--vectors <n>]]
+                  [--measured-accuracy [--vectors <n>]] [--cache-stats]
   aladin dse --search evo
                   [--model case1|case2|case3] [--bits 2,4,8] [--impls im2col,lut]
                   [--cores 2,4,8] [--l2-kb 256,320,512]
                   [--population <K>] [--generations <N>] [--seed <S>]
                   [--max-evals <E>] [--mem-budget-kb <M>] [--deadline-ms <D>]
-                  [--no-prune] [--threads <n>] [--platform <p>] [--width-mult <f64>]
-                  [--json] [--measured-accuracy [--vectors <n>] [--screen-vectors <k>]]
+                  [--no-prune] [--no-delta] [--threads <n>] [--platform <p>]
+                  [--width-mult <f64>] [--json] [--cache-stats]
+                  [--measured-accuracy [--vectors <n>] [--screen-vectors <k>]]
   aladin export   [--model case1|case2|case3|lenet] [--width-mult <f64>]
                   [--out model.qonnx.json]
   aladin eval     [--model case1|case2|case3|lenet|<file.qonnx.json>]
@@ -360,6 +362,14 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
         result.records.len(),
         s.naive_recomputations()
     );
+    if args.flag("cache-stats") {
+        println!(
+            "       layer tier: {} units computed / {} spliced from cache \
+             ({} evaluations reused at least one unit)",
+            s.layer_computed, s.layer_hits, s.spliced
+        );
+        println!("\ncache stats:\n{}", s.to_json().to_string_pretty());
+    }
     Ok(())
 }
 
@@ -436,6 +446,7 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
             .map_err(io_err)?
             .map(|ms| ms / 1e3),
         prune: !args.flag("no-prune"),
+        delta: !args.flag("no-delta"),
         ..EvoConfig::default()
     };
 
@@ -553,6 +564,14 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
             s.acc_computed, s.acc_hits
         );
     }
+    if args.flag("cache-stats") {
+        println!(
+            "       layer tier: {} units computed / {} spliced, {} incremental \
+             re-decorations reusing {} node decorations",
+            s.layer_computed, s.layer_hits, s.impl_delta, s.nodes_reused
+        );
+        println!("\ncache stats:\n{}", s.to_json().to_string_pretty());
+    }
     Ok(())
 }
 
@@ -589,9 +608,21 @@ fn cmd_dse(args: &Args) -> Result<()> {
             .map_err(io_err)?
             .unwrap_or_else(|| vec![256, 320, 512]),
     };
-    let points = grid.run_canonical(g, &cfg)?;
+    // drive the grid through an explicit engine (identical results to
+    // GridSearch::run_canonical) so --cache-stats can report the layer
+    // tier's hit/miss/splice counters for the run
+    let decorated = aladin::impl_aware::decorate(g, &cfg)?;
+    let engine = EvalEngine::for_decorated(decorated, grid.base.clone());
+    let points = grid.run_on(&engine)?;
     if args.flag("json") {
-        println!("{}", points.to_json().to_string_pretty());
+        if args.flag("cache-stats") {
+            let doc = Value::obj()
+                .with("points", points.to_json())
+                .with("cache_stats", engine.stats().to_json());
+            println!("{}", doc.to_string_pretty());
+        } else {
+            println!("{}", points.to_json().to_string_pretty());
+        }
         return Ok(());
     }
     println!("== HW design-space exploration (Fig. 7) — {model} ==");
@@ -610,6 +641,9 @@ fn cmd_dse(args: &Args) -> Result<()> {
             p.peak_l2_kb,
             p.l3_traffic_kb
         );
+    }
+    if args.flag("cache-stats") {
+        println!("\ncache stats:\n{}", engine.stats().to_json().to_string_pretty());
     }
     Ok(())
 }
@@ -813,6 +847,8 @@ fn main() {
         "bottlenecks",
         "measured-accuracy",
         "no-prune",
+        "no-delta",
+        "cache-stats",
     ]) {
         Ok(a) => a,
         Err(e) => {

@@ -56,7 +56,8 @@ mod tests {
     fn lenet_end_to_end_simulation() {
         let (g, cfg) = lenet(4, (3, 32, 32), 10);
         let d = decorate(g, &cfg).unwrap();
-        let s = build_schedule(fuse(&d).unwrap(), &presets::gap8()).unwrap();
+        let s =
+            build_schedule(&fuse(&d).unwrap(), &std::sync::Arc::new(presets::gap8())).unwrap();
         let r = simulate(&s);
         assert!(r.total_cycles() > 0);
         // RC_1 RC_2 RP_1 RP_2 FC_1..3 + flatten

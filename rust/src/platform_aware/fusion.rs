@@ -10,6 +10,7 @@ use crate::graph::ir::*;
 use crate::graph::tensor::ElemType;
 use crate::graph::topo;
 use crate::impl_aware::config::{LinearImpl, QuantImpl};
+use crate::util::StableHasher;
 
 /// The computation performed by one fused layer.
 #[derive(Debug, Clone)]
@@ -89,6 +90,22 @@ pub struct FusedLayer {
     pub output_bits: u64,
 }
 
+fn write_elem(h: &mut StableHasher, e: ElemType) {
+    h.write_u8(e.bits);
+    h.write_u8(e.signed as u8);
+}
+
+fn write_dims(h: &mut StableHasher, d: (usize, usize, usize)) {
+    h.write_usize(d.0);
+    h.write_usize(d.1);
+    h.write_usize(d.2);
+}
+
+fn write_pair(h: &mut StableHasher, p: (usize, usize)) {
+    h.write_usize(p.0);
+    h.write_usize(p.1);
+}
+
 impl FusedLayer {
     /// Whether this layer carries a LUT-based matmul.
     pub fn uses_mul_lut(&self) -> bool {
@@ -99,6 +116,103 @@ impl FusedLayer {
                 ..
             }
         )
+    }
+
+    /// Stable content hash over every field the platform-aware stages
+    /// (tiling, L2 residency, cycle model) read — the platform-independent
+    /// half of the DSE engine's **layer-grained unit key**: combined with a
+    /// platform content hash it addresses one cached (tile plan,
+    /// coupling-free simulation) unit, so candidates that share a fused
+    /// layer splice its evaluation instead of recomputing it
+    /// ([`crate::dse::engine`]).
+    pub fn content_hash(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.write_str(&self.name);
+        h.write_usize(self.node_names.len());
+        for n in &self.node_names {
+            h.write_str(n);
+        }
+        match &self.kind {
+            LayerKind::Linear {
+                m,
+                k,
+                n,
+                groups,
+                in_dims,
+                out_dims,
+                kernel,
+                stride,
+                padding,
+                w_type,
+                x_type,
+                acc_type,
+                y_type,
+                strategy,
+                quant,
+                quant_channelwise,
+                has_relu,
+                depthwise,
+            } => {
+                h.write_u8(0);
+                h.write_usize(*m);
+                h.write_usize(*k);
+                h.write_usize(*n);
+                h.write_usize(*groups);
+                write_dims(&mut h, *in_dims);
+                write_dims(&mut h, *out_dims);
+                write_pair(&mut h, *kernel);
+                write_pair(&mut h, *stride);
+                write_pair(&mut h, *padding);
+                write_elem(&mut h, *w_type);
+                write_elem(&mut h, *x_type);
+                write_elem(&mut h, *acc_type);
+                write_elem(&mut h, *y_type);
+                h.write_u8(match strategy {
+                    LinearImpl::Im2col => 0,
+                    LinearImpl::Lut => 1,
+                    LinearImpl::Direct => 2,
+                });
+                h.write_u8(match quant {
+                    None => 0,
+                    Some(QuantImpl::Dyadic) => 1,
+                    Some(QuantImpl::Thresholds) => 2,
+                    Some(QuantImpl::Lut) => 3,
+                });
+                h.write_u8(*quant_channelwise as u8);
+                h.write_u8(*has_relu as u8);
+                h.write_u8(*depthwise as u8);
+            }
+            LayerKind::Pool {
+                in_dims,
+                out_dims,
+                kernel,
+                padding,
+                x_type,
+                is_avg,
+                has_relu,
+            } => {
+                h.write_u8(1);
+                write_dims(&mut h, *in_dims);
+                write_dims(&mut h, *out_dims);
+                write_pair(&mut h, *kernel);
+                write_pair(&mut h, *padding);
+                write_elem(&mut h, *x_type);
+                h.write_u8(*is_avg as u8);
+                h.write_u8(*has_relu as u8);
+            }
+            LayerKind::Elementwise { elems, x_type } => {
+                h.write_u8(2);
+                h.write_usize(*elems);
+                write_elem(&mut h, *x_type);
+            }
+        }
+        h.write_u64(self.macs_physical);
+        h.write_u64(self.bops);
+        h.write_u64(self.param_bits);
+        h.write_u64(self.temp_bits);
+        h.write_u64(self.input_bits);
+        h.write_u64(self.output_bits);
+        h.finish()
     }
 }
 
@@ -523,6 +637,26 @@ mod tests {
         let layers = fuse(&g).unwrap();
         let total_layer_bops: u64 = layers.iter().map(|l| l.bops).sum();
         assert_eq!(total_layer_bops, g.total_bops());
+    }
+
+    #[test]
+    fn content_hash_tracks_platform_relevant_fields() {
+        let layers = fuse(&decorated()).unwrap();
+        let rc1 = layers.iter().find(|l| l.name == "RC_1").unwrap();
+        // stable across identical builds
+        let again = fuse(&decorated()).unwrap();
+        let rc1b = again.iter().find(|l| l.name == "RC_1").unwrap();
+        assert_eq!(rc1.content_hash(), rc1b.content_hash());
+        // distinct layers hash apart
+        let rc2 = layers.iter().find(|l| l.name == "RC_2").unwrap();
+        assert_ne!(rc1.content_hash(), rc2.content_hash());
+        // any scheduled-against field perturbs the hash
+        let mut t = rc1.clone();
+        t.temp_bits += 8;
+        assert_ne!(rc1.content_hash(), t.content_hash());
+        let mut p = rc1.clone();
+        p.param_bits += 8;
+        assert_ne!(rc1.content_hash(), p.content_hash());
     }
 
     #[test]

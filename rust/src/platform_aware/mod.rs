@@ -2,11 +2,20 @@
 //! Dory-style L1 tiling with double buffering, and L2/L3 residency
 //! planning. The output ([`schedule::NetworkSchedule`]) is what the cycle
 //! simulator executes.
+//!
+//! Every pass exposes a **per-fused-layer entry point** next to the
+//! whole-network driver — [`plan_layer`] (tiling), [`schedule_layer`]
+//! (tiling + L2 residency), with [`link_prefetch`] as the explicit
+//! cross-layer composition — so the DSE engine can splice cached
+//! layer-grained units instead of re-planning whole networks
+//! ([`crate::dse::engine`]).
 
 pub mod fusion;
 pub mod schedule;
 pub mod tiling;
 
 pub use fusion::{fuse, FusedLayer, LayerKind};
-pub use schedule::{build_schedule, L2Plan, LayerSchedule, NetworkSchedule};
+pub use schedule::{
+    build_schedule, link_prefetch, schedule_layer, L2Plan, LayerSchedule, NetworkSchedule,
+};
 pub use tiling::{plan_layer, TilePlan};

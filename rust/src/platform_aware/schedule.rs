@@ -13,6 +13,7 @@ use super::fusion::FusedLayer;
 use super::tiling::{plan_layer, TilePlan};
 use crate::error::Result;
 use crate::platform::PlatformSpec;
+use std::sync::Arc;
 
 /// L2 residency decision for one layer.
 #[derive(Debug, Clone)]
@@ -42,6 +43,30 @@ pub struct L2Plan {
     pub prefetchable: bool,
 }
 
+impl L2Plan {
+    /// Whether this layer's weights can prefetch from L3 while the
+    /// previous layer (peak L2 use `prev_l2_used`; `None` for the first
+    /// layer, which prefetches during model load) still occupies L2 —
+    /// the single cross-layer coupling rule of the schedule, shared by
+    /// [`link_prefetch`] and the DSE engine's layer-splice path so the
+    /// two can never disagree.
+    pub fn prefetch_ok(&self, prev_l2_used: Option<u64>, l2_bytes: u64) -> bool {
+        self.fits_l2
+            && match prev_l2_used {
+                Some(prev) => prev + self.weight_bytes <= l2_bytes,
+                None => true,
+            }
+    }
+
+    /// Total L3<->L2 traffic of the layer in bytes (weight fetches ×
+    /// refetches + spill write-back and read-back) — the one formula
+    /// behind [`NetworkSchedule::l3_traffic`] and the simulator's
+    /// micro-DMA load.
+    pub fn l3_bytes(&self) -> u64 {
+        self.weight_bytes * self.weight_refetches + 2 * self.spill_bytes
+    }
+}
+
 /// A fully planned layer: fusion result + L1 tiling + L2 residency.
 #[derive(Debug, Clone)]
 pub struct LayerSchedule {
@@ -51,9 +76,11 @@ pub struct LayerSchedule {
 }
 
 /// The platform-aware model of the whole network, ready for simulation.
+/// The platform is shared (`Arc`), not deep-cloned per schedule: the DSE
+/// engine builds many schedules against one resolved spec.
 #[derive(Debug, Clone)]
 pub struct NetworkSchedule {
-    pub platform: PlatformSpec,
+    pub platform: Arc<PlatformSpec>,
     pub layers: Vec<LayerSchedule>,
 }
 
@@ -70,10 +97,7 @@ impl NetworkSchedule {
 
     /// Total L3 DMA traffic in bytes (weight fetches + spills).
     pub fn l3_traffic(&self) -> u64 {
-        self.layers
-            .iter()
-            .map(|l| l.l2.weight_bytes * l.l2.weight_refetches + 2 * l.l2.spill_bytes)
-            .sum()
+        self.layers.iter().map(|l| l.l2.l3_bytes()).sum()
     }
 }
 
@@ -118,30 +142,53 @@ fn plan_l2(layer: &FusedLayer, tile: &TilePlan, platform: &PlatformSpec) -> L2Pl
     }
 }
 
-/// Build the complete platform-aware schedule for a list of fused layers.
+/// Per-fused-layer entry point: plan one layer in isolation — L1 tiling
+/// plus L2 residency. The cross-layer `prefetchable` flag is left `false`
+/// until [`link_prefetch`] resolves it against the predecessor; everything
+/// else depends only on (layer content, platform), which is what makes the
+/// result cacheable per layer-grained unit key in the DSE engine
+/// ([`crate::dse::engine`]).
+pub fn schedule_layer(layer: &FusedLayer, platform: &PlatformSpec) -> Result<LayerSchedule> {
+    let tile = plan_layer(layer, platform)?;
+    let l2 = plan_l2(layer, &tile, platform);
+    Ok(LayerSchedule {
+        layer: layer.clone(),
+        tile,
+        l2,
+    })
+}
+
+/// The explicit cross-layer composition pass: resolve each layer's
+/// `prefetchable` flag. Weight prefetch is possible when the layer's
+/// weights fit in L2 next to the *previous* layer's resident working set
+/// (the first layer prefetches during model load and is always considered
+/// hidden). This is the only adjacent-layer coupling in the schedule, so
+/// splicing cached per-layer plans plus re-running this pass is
+/// bit-identical to a monolithic [`build_schedule`].
+pub fn link_prefetch(layers: &mut [LayerSchedule], l2_bytes: u64) {
+    let mut prev_used: Option<u64> = None;
+    for ls in layers.iter_mut() {
+        ls.l2.prefetchable = ls.l2.prefetch_ok(prev_used, l2_bytes);
+        prev_used = Some(ls.l2.l2_used_bytes);
+    }
+}
+
+/// Build the complete platform-aware schedule for a list of fused layers:
+/// [`schedule_layer`] per layer, then the [`link_prefetch`] composition
+/// pass. Takes a borrowed slice and a shared platform, so per-candidate
+/// callers copy no model-sized state.
 pub fn build_schedule(
-    layers: Vec<FusedLayer>,
-    platform: &PlatformSpec,
+    layers: &[FusedLayer],
+    platform: &Arc<PlatformSpec>,
 ) -> Result<NetworkSchedule> {
     platform.validate()?;
-    let mut planned: Vec<LayerSchedule> = Vec::with_capacity(layers.len());
-    for layer in layers {
-        let tile = plan_layer(&layer, platform)?;
-        let mut l2 = plan_l2(&layer, &tile, platform);
-        // weight prefetch is possible when this layer's weights fit next
-        // to the *previous* layer's resident working set (the first layer
-        // prefetches during model load and is always considered hidden)
-        l2.prefetchable = l2.fits_l2
-            && match planned.last() {
-                Some(prev) => {
-                    prev.l2.l2_used_bytes + l2.weight_bytes <= platform.l2_bytes
-                }
-                None => true,
-            };
-        planned.push(LayerSchedule { layer, tile, l2 });
-    }
+    let mut planned = layers
+        .iter()
+        .map(|layer| schedule_layer(layer, platform))
+        .collect::<Result<Vec<LayerSchedule>>>()?;
+    link_prefetch(&mut planned, platform.l2_bytes);
     Ok(NetworkSchedule {
-        platform: platform.clone(),
+        platform: Arc::clone(platform),
         layers: planned,
     })
 }
@@ -166,7 +213,7 @@ mod tests {
             .relu("r0")
             .quant("q0", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        build_schedule(fuse(&g).unwrap(), platform).unwrap()
+        build_schedule(&fuse(&g).unwrap(), &Arc::new(platform.clone())).unwrap()
     }
     use crate::platform::PlatformSpec;
 
@@ -226,10 +273,44 @@ mod tests {
             .flatten("f")
             .gemm("fc", 10, ElemType::int(8));
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        let s = build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap();
+        let s = build_schedule(&fuse(&g).unwrap(), &Arc::new(presets::gap8())).unwrap();
         assert_eq!(s.layers.len(), 5); // RC_1 RC_2 RC_3 flat FC_1
         for l in &s.layers {
             assert!(l.tile.l1_used_bytes <= presets::gap8().l1_bytes);
+        }
+    }
+
+    #[test]
+    fn per_layer_planning_plus_linking_matches_build_schedule() {
+        // the layer-grained contract: schedule_layer per layer +
+        // link_prefetch is bit-identical to the monolithic builder
+        let mut b = GraphBuilder::new(
+            "inc",
+            TensorSpec::chw(32, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(128, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .conv("c1", ConvAttrs::standard(256, 3, 1, 1), ElemType::int(8))
+            .relu("r1")
+            .quant("q1", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let layers = fuse(&g).unwrap();
+        let platform = presets::gap8_with(8, 256);
+        let whole = build_schedule(&layers, &Arc::new(platform.clone())).unwrap();
+        let mut parts: Vec<LayerSchedule> = layers
+            .iter()
+            .map(|l| schedule_layer(l, &platform).unwrap())
+            .collect();
+        // before linking, no layer claims prefetchability
+        assert!(parts.iter().all(|l| !l.l2.prefetchable));
+        link_prefetch(&mut parts, platform.l2_bytes);
+        assert_eq!(parts.len(), whole.layers.len());
+        for (a, b) in parts.iter().zip(&whole.layers) {
+            assert_eq!(a.l2.prefetchable, b.l2.prefetchable, "{}", a.layer.name);
+            assert_eq!(a.l2.l2_used_bytes, b.l2.l2_used_bytes);
+            assert_eq!(a.tile.n_tiles(), b.tile.n_tiles());
         }
     }
 }

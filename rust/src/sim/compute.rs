@@ -39,6 +39,7 @@ pub struct TileComputeCycles {
 }
 
 impl TileComputeCycles {
+    /// Sum of every component: the tile's total compute-phase cycles.
     pub fn total(&self) -> u64 {
         self.mac_cycles
             + self.unpack_cycles
@@ -225,11 +226,10 @@ pub fn layer_lower_bound_cycles(ls: &LayerSchedule, platform: &PlatformSpec) -> 
     let dma_busy = dma.cycles(plan.temp_bytes)
         + (dma.cycles(plan.tile_in_dma_bytes()) + dma.cycles(plan.tile_output_bytes)) * n_tiles;
 
-    let l3_bytes = ls.l2.weight_bytes * ls.l2.weight_refetches + 2 * ls.l2.spill_bytes;
     let exposed_l3_min = if ls.l2.prefetchable {
         0 // best case: fully hidden under the previous layer
     } else {
-        platform.dma_l3_l2.cycles(l3_bytes)
+        platform.dma_l3_l2.cycles(ls.l2.l3_bytes())
     };
 
     compute_busy.max(dma_busy) + exposed_l3_min
@@ -401,7 +401,11 @@ mod tests {
             .relu("r1")
             .quant("q1", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        crate::platform_aware::build_schedule(fuse(&g).unwrap(), platform).unwrap()
+        crate::platform_aware::build_schedule(
+            &fuse(&g).unwrap(),
+            &std::sync::Arc::new(platform.clone()),
+        )
+        .unwrap()
     }
 
     #[test]

@@ -28,6 +28,17 @@
 //! compute-/DMA-bound verdicts, and — via [`simulate_traced`] — a span
 //! [`Timeline`] exportable as Chrome-trace JSON
 //! ([`crate::sim::trace::Trace::from_timeline`]).
+//!
+//! The engine is factored into a **per-layer core** and an **explicit
+//! cross-layer composition pass**: [`simulate_layer_pipeline`] runs one
+//! layer's bounded-buffer pipeline in isolation (a [`LayerPipeline`],
+//! dependent only on the layer content and the platform — cacheable per
+//! layer-grained unit key), and [`couple_layer`] recomputes only the
+//! adjacent-layer coupling term — how much of the layer's L3 prefetch
+//! hides in the predecessor's micro-DMA-free window. [`simulate`] is
+//! exactly that composition, so the DSE engine's spliced per-layer cache
+//! ([`crate::dse::engine`]) is bit-identical to a monolithic run by
+//! construction.
 
 use super::compute::tile_compute_cycles;
 use crate::platform_aware::schedule::{LayerSchedule, NetworkSchedule};
@@ -77,13 +88,18 @@ pub enum SpanKind {
 pub struct TimelineSpan {
     /// Scheduler name of the layer this span belongs to.
     pub layer: String,
+    /// Hardware resource the span occupies.
     pub resource: ResourceKind,
+    /// What the resource was doing.
     pub kind: SpanKind,
+    /// First busy cycle (absolute, from inference start).
     pub start: u64,
+    /// One past the last busy cycle.
     pub end: u64,
 }
 
 impl TimelineSpan {
+    /// Span duration in cycles.
     pub fn dur(&self) -> u64 {
         self.end - self.start
     }
@@ -92,6 +108,7 @@ impl TimelineSpan {
 /// The recorded multi-resource timeline of a whole-network simulation.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
+    /// Every recorded span, in recording order.
     pub spans: Vec<TimelineSpan>,
 }
 
@@ -122,6 +139,7 @@ impl Timeline {
 /// `cycles == compute_cycles + exposed_dma_l1_cycles + exposed_dma_l3_cycles`.
 #[derive(Debug, Clone)]
 pub struct LayerSimResult {
+    /// Scheduler name of the layer.
     pub name: String,
     /// Total cycles from layer start to last write-back.
     pub cycles: u64,
@@ -144,19 +162,26 @@ pub struct LayerSimResult {
     /// Cycles the cluster stalled waiting for data
     /// (== exposed_dma_l1_cycles + exposed_dma_l3_cycles).
     pub stall_cycles: u64,
-    /// Peak L1/L2 utilization in bytes.
+    /// Peak L1 utilization in bytes.
     pub l1_used_bytes: u64,
+    /// Peak L2 utilization in bytes.
     pub l2_used_bytes: u64,
+    /// Number of tiles executed.
     pub n_tiles: usize,
+    /// Whether the tile pipeline was double buffered.
     pub double_buffered: bool,
 }
 
 /// Whole-network simulation result.
 #[derive(Debug, Clone)]
 pub struct SimResult {
+    /// Platform name the schedule was simulated on.
     pub platform: String,
+    /// Cluster core count of that platform.
     pub cores: usize,
+    /// L2 capacity (kB) of that platform.
     pub l2_kb: u64,
+    /// Per-layer results, in execution order.
     pub layers: Vec<LayerSimResult>,
 }
 
@@ -167,6 +192,7 @@ impl SimResult {
         self.layers.iter().map(|l| l.cycles).sum()
     }
 
+    /// Total cluster stall cycles across layers.
     pub fn total_stalls(&self) -> u64 {
         self.layers.iter().map(|l| l.stall_cycles).sum()
     }
@@ -184,18 +210,56 @@ struct LayerRun {
     spans: Vec<TimelineSpan>,
 }
 
-/// Simulate one layer's resource pipeline starting at absolute cycle
-/// `base`. `l3_hide_window` is the previous layer's micro-DMA-free time
-/// (its cycles minus its own exposed L3 traffic) — the only window this
-/// layer's weight prefetch may hide in. Spans are recorded only when
-/// `record` is set (the DSE hot path skips them).
-fn simulate_layer(
+/// Coupling-free cycle accounting of one scheduled layer: everything the
+/// bounded-buffer engine derives from the layer and the platform **alone**,
+/// independent of where the layer sits in the network. This is the
+/// per-layer core of the simulator — the DSE engine caches one
+/// `LayerPipeline` per (fused-layer content, platform) unit key and splices
+/// cached layers into whole-network results, recomputing only the
+/// cross-layer L3 coupling via [`couple_layer`].
+#[derive(Debug, Clone)]
+pub struct LayerPipeline {
+    /// Scheduler name of the layer.
+    pub name: String,
+    /// Tile-pipeline span in cycles: temp load + bounded-buffer tile
+    /// pipeline, measured from the end of the exposed-L3 head to the last
+    /// write-back. Also the micro-DMA-free window the *next* layer's
+    /// prefetch may hide in.
+    pub pipeline_cycles: u64,
+    /// Cycles the cluster cores spend computing.
+    pub compute_cycles: u64,
+    /// L2<->L1 channel cycles not covered by compute
+    /// (`pipeline_cycles - compute_cycles`).
+    pub exposed_dma_l1_cycles: u64,
+    /// Total busy cycles of the L2<->L1 channel (temp load + per-tile
+    /// DMA-in/out), hidden or not.
+    pub dma_l1_cycles: u64,
+    /// Total cycles of this layer's L3<->L2 traffic (weight fetches,
+    /// re-streams, spills), before the hidden/exposed split.
+    pub dma_l3_cycles: u64,
+    /// Peak L1 utilization in bytes.
+    pub l1_used_bytes: u64,
+    /// Peak L2 utilization in bytes.
+    pub l2_used_bytes: u64,
+    /// Number of tiles in the pipeline.
+    pub n_tiles: usize,
+    /// Whether the tile pipeline is double buffered.
+    pub double_buffered: bool,
+}
+
+/// The bounded-buffer tile pipeline of one layer, starting at absolute
+/// cycle `t0`. Translation-invariant: every event is `t0` plus a duration,
+/// so `(pipeline_end - t0, compute_busy)` is independent of `t0` — which is
+/// what lets [`simulate_layer_pipeline`] run it at `t0 = 0` and cache the
+/// result per layer while [`simulate_traced`] replays it at the layer's
+/// real offset for span recording. Returns `(pipeline_end, compute_busy)`.
+fn run_tile_pipeline(
     ls: &LayerSchedule,
     platform: &crate::platform::PlatformSpec,
-    base: u64,
-    l3_hide_window: u64,
+    t0: u64,
     record: bool,
-) -> LayerRun {
+    spans: &mut Vec<TimelineSpan>,
+) -> (u64, u64) {
     let plan = &ls.tile;
     let n_tiles = plan.n_tiles();
     let dma = &platform.dma_l2_l1;
@@ -209,23 +273,6 @@ fn simulate_layer(
     // temp structures (LUT / threshold trees) loaded into L1 once per layer
     let temp_load = dma.cycles(plan.temp_bytes);
 
-    // --- L3 micro-DMA ----------------------------------------------------
-    // Weights must reach L2 before the cluster can consume them. When L2
-    // has room next to the previous layer's working set, the prefetch
-    // overlaps the previous layer's execution — but the micro-DMA is a
-    // single channel, so only the previous layer's L3-free window hides
-    // traffic; the excess is exposed at the head of this layer. Streamed
-    // weights (L2 too small) serialize entirely.
-    let l3_bytes = ls.l2.weight_bytes * ls.l2.weight_refetches + 2 * ls.l2.spill_bytes;
-    let dma_l3_cycles = platform.dma_l3_l2.cycles(l3_bytes);
-    let (hidden_l3, exposed_l3) = if ls.l2.prefetchable {
-        let hidden = dma_l3_cycles.min(l3_hide_window);
-        (hidden, dma_l3_cycles - hidden)
-    } else {
-        (0, dma_l3_cycles)
-    };
-
-    let mut spans: Vec<TimelineSpan> = Vec::new();
     let mut span = |resource: ResourceKind, kind: SpanKind, start: u64, end: u64| {
         if record && end > start {
             spans.push(TimelineSpan {
@@ -237,10 +284,6 @@ fn simulate_layer(
             });
         }
     };
-
-    // the tile pipeline starts once the exposed L3 remainder is in L2
-    let t0 = base + exposed_l3;
-    span(ResourceKind::DmaL3, SpanKind::L3Exposed, base, t0);
 
     // --- event-driven tile pipeline over compute + L2<->L1 DMA -----------
     let mut dma_free: u64 = t0;
@@ -315,30 +358,121 @@ fn simulate_layer(
     }
 
     let pipeline_end = out_done.last().copied().unwrap_or(dma_free);
-    let cycles = pipeline_end - base;
+    (pipeline_end, compute_busy)
+}
 
-    // exact exposed decomposition: everything in the tile-pipeline window
-    // that is not compute is time spent waiting on the L2<->L1 channel
-    let exposed_l1 = (pipeline_end - t0) - compute_busy;
+/// Per-layer core of the simulator: run one scheduled layer's bounded
+/// buffer pipeline in isolation. The result depends only on (layer
+/// content, platform) — `ls.l2.prefetchable` is deliberately **not** read,
+/// so the same `LayerPipeline` serves every network position and every
+/// predecessor; the position-dependent L3 hidden/exposed split is applied
+/// afterwards by [`couple_layer`].
+pub fn simulate_layer_pipeline(
+    ls: &LayerSchedule,
+    platform: &crate::platform::PlatformSpec,
+) -> LayerPipeline {
+    let plan = &ls.tile;
+    let n_tiles = plan.n_tiles();
+    let dma = &platform.dma_l2_l1;
+    let dma_in_one = dma.cycles(plan.tile_in_dma_bytes());
+    let dma_out_one = dma.cycles(plan.tile_output_bytes);
+    let temp_load = dma.cycles(plan.temp_bytes);
 
-    LayerRun {
-        result: LayerSimResult {
-            name: ls.layer.name.clone(),
-            cycles,
-            compute_cycles: compute_busy,
-            dma_l1_cycles: temp_load + (dma_in_one + dma_out_one) * n_tiles as u64,
-            dma_l3_cycles,
-            exposed_dma_l1_cycles: exposed_l1,
-            exposed_dma_l3_cycles: exposed_l3,
-            hidden_dma_l3_cycles: hidden_l3,
-            stall_cycles: exposed_l1 + exposed_l3,
-            l1_used_bytes: plan.l1_used_bytes,
-            l2_used_bytes: ls.l2.l2_used_bytes,
-            n_tiles,
-            double_buffered: plan.double_buffered,
-        },
-        spans,
+    let mut spans = Vec::new();
+    let (pipeline_end, compute_busy) = run_tile_pipeline(ls, platform, 0, false, &mut spans);
+
+    LayerPipeline {
+        name: ls.layer.name.clone(),
+        pipeline_cycles: pipeline_end,
+        compute_cycles: compute_busy,
+        exposed_dma_l1_cycles: pipeline_end - compute_busy,
+        dma_l1_cycles: temp_load + (dma_in_one + dma_out_one) * n_tiles as u64,
+        dma_l3_cycles: platform.dma_l3_l2.cycles(ls.l2.l3_bytes()),
+        l1_used_bytes: plan.l1_used_bytes,
+        l2_used_bytes: ls.l2.l2_used_bytes,
+        n_tiles,
+        double_buffered: plan.double_buffered,
     }
+}
+
+/// The explicit cross-layer composition step: splice one per-layer
+/// [`LayerPipeline`] into a network position. `l3_hide_window` is the
+/// predecessor's micro-DMA-free time (its `pipeline_cycles`; `u64::MAX`
+/// for the first layer, whose weights prefetch during model load) — the
+/// only window this layer's weight prefetch may hide in, because the
+/// micro-DMA is a single channel. The returned result preserves the exact
+/// decomposition
+/// `compute_cycles + exposed_dma_l1_cycles + exposed_dma_l3_cycles == cycles`.
+pub fn couple_layer(
+    p: &LayerPipeline,
+    prefetchable: bool,
+    l3_hide_window: u64,
+) -> LayerSimResult {
+    // Weights must reach L2 before the cluster can consume them. When L2
+    // has room next to the previous layer's working set, the prefetch
+    // overlaps the previous layer's execution; the excess is exposed at
+    // the head of this layer. Streamed weights (L2 too small) serialize
+    // entirely.
+    let (hidden_l3, exposed_l3) = if prefetchable {
+        let hidden = p.dma_l3_cycles.min(l3_hide_window);
+        (hidden, p.dma_l3_cycles - hidden)
+    } else {
+        (0, p.dma_l3_cycles)
+    };
+    LayerSimResult {
+        name: p.name.clone(),
+        cycles: exposed_l3 + p.pipeline_cycles,
+        compute_cycles: p.compute_cycles,
+        dma_l1_cycles: p.dma_l1_cycles,
+        dma_l3_cycles: p.dma_l3_cycles,
+        exposed_dma_l1_cycles: p.exposed_dma_l1_cycles,
+        exposed_dma_l3_cycles: exposed_l3,
+        hidden_dma_l3_cycles: hidden_l3,
+        stall_cycles: p.exposed_dma_l1_cycles + exposed_l3,
+        l1_used_bytes: p.l1_used_bytes,
+        l2_used_bytes: p.l2_used_bytes,
+        n_tiles: p.n_tiles,
+        double_buffered: p.double_buffered,
+    }
+}
+
+/// Simulate one layer's resource pipeline starting at absolute cycle
+/// `base` — exactly [`simulate_layer_pipeline`] + [`couple_layer`]
+/// (there is no second copy of the coupling math), plus an optional span
+/// recording pass: when `record` is set, the (translation-invariant) tile
+/// pipeline is replayed at the layer's absolute offset purely to emit
+/// [`TimelineSpan`]s.
+fn simulate_layer(
+    ls: &LayerSchedule,
+    platform: &crate::platform::PlatformSpec,
+    base: u64,
+    l3_hide_window: u64,
+    record: bool,
+) -> LayerRun {
+    let pipe = simulate_layer_pipeline(ls, platform);
+    let result = couple_layer(&pipe, ls.l2.prefetchable, l3_hide_window);
+
+    let mut spans: Vec<TimelineSpan> = Vec::new();
+    if record {
+        // the tile pipeline starts once the exposed L3 remainder is in L2
+        let t0 = base + result.exposed_dma_l3_cycles;
+        if t0 > base {
+            spans.push(TimelineSpan {
+                layer: ls.layer.name.clone(),
+                resource: ResourceKind::DmaL3,
+                kind: SpanKind::L3Exposed,
+                start: base,
+                end: t0,
+            });
+        }
+        let (pipeline_end, compute_busy) =
+            run_tile_pipeline(ls, platform, t0, true, &mut spans);
+        // translation invariance: the replay reproduces the cached numbers
+        debug_assert_eq!(pipeline_end - t0, pipe.pipeline_cycles);
+        debug_assert_eq!(compute_busy, pipe.compute_cycles);
+    }
+
+    LayerRun { result, spans }
 }
 
 fn simulate_inner(schedule: &NetworkSchedule, record: bool) -> (SimResult, Timeline) {
@@ -382,7 +516,10 @@ fn simulate_inner(schedule: &NetworkSchedule, record: bool) -> (SimResult, Timel
 }
 
 /// Simulate the full network schedule (no span recording — the DSE hot
-/// path).
+/// path). Implemented as the per-layer core ([`simulate_layer_pipeline`])
+/// plus the explicit cross-layer composition ([`couple_layer`]) — the same
+/// two halves the DSE engine's layer-grained cache splices — so cached and
+/// monolithic evaluations are bit-identical by construction.
 pub fn simulate(schedule: &NetworkSchedule) -> SimResult {
     simulate_inner(schedule, false).0
 }
@@ -434,6 +571,7 @@ mod tests {
     use crate::impl_aware::{decorate, ImplConfig};
     use crate::platform::presets;
     use crate::platform_aware::{build_schedule, fuse};
+    use std::sync::Arc;
 
     fn net(cout: usize, platform: &crate::platform::PlatformSpec) -> SimResult {
         let mut b = GraphBuilder::new(
@@ -445,7 +583,7 @@ mod tests {
             .relu("r0")
             .quant("q0", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        let s = build_schedule(fuse(&g).unwrap(), platform).unwrap();
+        let s = build_schedule(&fuse(&g).unwrap(), &Arc::new(platform.clone())).unwrap();
         simulate(&s)
     }
 
@@ -465,7 +603,7 @@ mod tests {
             .relu("r1")
             .quant("q1", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        build_schedule(fuse(&g).unwrap(), platform).unwrap()
+        build_schedule(&fuse(&g).unwrap(), &Arc::new(platform.clone())).unwrap()
     }
 
     #[test]
@@ -570,6 +708,38 @@ mod tests {
         assert_eq!(timeline.end(), traced.total_cycles());
         // untraced runs record nothing
         assert!(simulate_inner(&s, false).1.spans.is_empty());
+    }
+
+    #[test]
+    fn per_layer_core_plus_coupling_matches_monolithic_simulation() {
+        // the layer-grained contract: simulate_layer_pipeline per layer +
+        // couple_layer composition is bit-identical to simulate(), and the
+        // pipeline core is independent of the layer's network position
+        for l2_kb in [256u64, 512] {
+            let s = chain_schedule(&presets::gap8_with(8, l2_kb));
+            let whole = simulate(&s);
+            let mut hide = u64::MAX;
+            for (ls, expect) in s.layers.iter().zip(&whole.layers) {
+                let pipe = simulate_layer_pipeline(ls, &s.platform);
+                let got = couple_layer(&pipe, ls.l2.prefetchable, hide);
+                hide = pipe.pipeline_cycles;
+                assert_eq!(got.cycles, expect.cycles, "{}", expect.name);
+                assert_eq!(got.compute_cycles, expect.compute_cycles);
+                assert_eq!(got.exposed_dma_l1_cycles, expect.exposed_dma_l1_cycles);
+                assert_eq!(got.exposed_dma_l3_cycles, expect.exposed_dma_l3_cycles);
+                assert_eq!(got.hidden_dma_l3_cycles, expect.hidden_dma_l3_cycles);
+                assert_eq!(got.stall_cycles, expect.stall_cycles);
+                // the exact decomposition survives the splice
+                assert_eq!(
+                    got.compute_cycles + got.exposed_dma_l1_cycles + got.exposed_dma_l3_cycles,
+                    got.cycles
+                );
+                // the coupling-free core never depends on the predecessor
+                let again = simulate_layer_pipeline(ls, &s.platform);
+                assert_eq!(again.pipeline_cycles, pipe.pipeline_cycles);
+                assert_eq!(again.dma_l3_cycles, pipe.dma_l3_cycles);
+            }
+        }
     }
 
     #[test]
@@ -681,7 +851,8 @@ mod tests {
             .relu("r2")
             .quant("q2", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        let s = build_schedule(fuse(&g).unwrap(), &presets::gap8_with(8, 512)).unwrap();
+        let s =
+            build_schedule(&fuse(&g).unwrap(), &Arc::new(presets::gap8_with(8, 512))).unwrap();
         let r = simulate(&s);
         assert_eq!(r.layers.len(), 3);
         let (rc2, rc3) = (&r.layers[1], &r.layers[2]);

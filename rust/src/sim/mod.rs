@@ -9,10 +9,15 @@
 //! the quantization axis (through the fused layers' precisions and temp
 //! structures) and the hardware axis (cores, memories, DMA timings) — so
 //! the DSE engine caches simulation results per *(quant hash, platform
-//! hash)* pair; see the staged-memoization contract in [`crate::dse`].
-//! [`compute::lower_bound_cycles`] is the cheap analytic companion: a
-//! sound latency lower bound computable from the schedule alone, used by
-//! [`crate::dse::search`] to prune candidates before simulating them.
+//! hash)* pair, and — since the layer-grained refactor — per
+//! *(fused-layer hash, platform hash)* unit beneath that: the per-layer
+//! core [`engine::simulate_layer_pipeline`] plus the cross-layer coupling
+//! pass [`engine::couple_layer`] let cached layers be spliced into whole
+//! networks bit-identically; see the staged-memoization contract in
+//! [`crate::dse`]. [`compute::lower_bound_cycles`] is the cheap analytic
+//! companion: a sound latency lower bound computable from the schedule
+//! alone, used by [`crate::dse::search`] to prune candidates before
+//! simulating them.
 
 pub mod compute;
 pub mod engine;
@@ -24,8 +29,8 @@ pub use compute::{
     tile_compute_cycles, TileComputeCycles,
 };
 pub use engine::{
-    simulate, simulate_traced, LayerSimResult, ResourceKind, SimResult, SpanKind, Timeline,
-    TimelineSpan,
+    couple_layer, simulate, simulate_layer_pipeline, simulate_traced, LayerPipeline,
+    LayerSimResult, ResourceKind, SimResult, SpanKind, Timeline, TimelineSpan,
 };
 pub use report::{fig6_rows, render_bottlenecks, render_comparison, Fig6Row};
 pub use trace::{Span, Trace};

@@ -8,11 +8,17 @@ use std::fmt::Write as _;
 /// One Fig.-6 row: per-layer cycles and memory utilization.
 #[derive(Debug, Clone)]
 pub struct Fig6Row {
+    /// Scheduler name of the layer (RC_k / RP_k / FC_k).
     pub layer: String,
+    /// Simulated cycles of the layer.
     pub cycles: u64,
+    /// Peak L1 utilization (kB).
     pub l1_kb: f64,
+    /// Peak L2 utilization (kB).
     pub l2_kb: f64,
+    /// Number of L1 tiles the layer executed in.
     pub n_tiles: usize,
+    /// Whether the tile pipeline was double buffered.
     pub double_buffered: bool,
 }
 
@@ -151,6 +157,7 @@ mod tests {
     use crate::platform::presets;
     use crate::platform_aware::{build_schedule, fuse};
     use crate::sim::engine::simulate;
+    use std::sync::Arc;
 
     fn sim() -> SimResult {
         let mut b = GraphBuilder::new(
@@ -164,7 +171,7 @@ mod tests {
             .flatten("fl")
             .gemm("fc", 10, ElemType::int(8));
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap())
+        simulate(&build_schedule(&fuse(&g).unwrap(), &Arc::new(presets::gap8())).unwrap())
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::path::Path;
 pub struct Span {
     /// Track name ("cluster", "dma-l1", "dma-l3").
     pub track: &'static str,
+    /// Human-readable span label (layer name + phase).
     pub name: String,
     /// Start cycle (absolute, from inference start).
     pub start: u64,
@@ -25,6 +26,7 @@ pub struct Span {
 /// A recorded execution trace.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// Every span of the trace, in recording order.
     pub spans: Vec<Span>,
 }
 
@@ -123,6 +125,7 @@ impl Trace {
             .with("displayTimeUnit", "ms")
     }
 
+    /// Write the Chrome-trace JSON to `path`.
     pub fn write_chrome_trace(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         std::fs::write(path, self.to_chrome_trace().to_string_pretty())
     }
@@ -149,6 +152,7 @@ mod tests {
     use crate::platform::presets;
     use crate::platform_aware::{build_schedule, fuse};
     use crate::sim::simulate;
+    use std::sync::Arc;
 
     fn sim() -> SimResult {
         let mut b = GraphBuilder::new(
@@ -163,7 +167,7 @@ mod tests {
             .relu("r1")
             .quant("q1", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        simulate(&build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap())
+        simulate(&build_schedule(&fuse(&g).unwrap(), &Arc::new(presets::gap8())).unwrap())
     }
 
     #[test]
@@ -220,7 +224,7 @@ mod tests {
             .relu("r1")
             .quant("q1", ElemType::int(8), false);
         let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
-        let s = build_schedule(fuse(&g).unwrap(), &presets::gap8()).unwrap();
+        let s = build_schedule(&fuse(&g).unwrap(), &Arc::new(presets::gap8())).unwrap();
         let (r, timeline) = crate::sim::simulate_traced(&s);
         let tr = Trace::from_timeline(&timeline);
         assert_eq!(tr.spans.len(), timeline.spans.len());
@@ -239,7 +243,7 @@ mod tests {
     }
 
     #[test]
-    fn file_export(){
+    fn file_export() {
         let tr = Trace::from_sim(&sim());
         let dir = crate::util::tempdir::tempdir().unwrap();
         let p = dir.file("trace.json");

@@ -14,6 +14,21 @@ use aladin::platform::presets;
 use aladin::sim::SimResult;
 use std::sync::Arc;
 
+fn assert_records_bit_identical(a: &aladin::dse::EvalRecord, b: &aladin::dse::EvalRecord) {
+    assert_eq!(a.cores, b.cores);
+    assert_eq!(a.l2_kb, b.l2_kb);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+    assert_eq!(a.sensitivity.to_bits(), b.sensitivity.to_bits());
+    assert_eq!(a.param_kb.to_bits(), b.param_kb.to_bits());
+    assert_eq!(a.mem_kb.to_bits(), b.mem_kb.to_bits());
+    assert_eq!(a.peak_l1_kb.to_bits(), b.peak_l1_kb.to_bits());
+    assert_eq!(a.peak_l2_kb.to_bits(), b.peak_l2_kb.to_bits());
+    assert_eq!(a.l3_traffic_kb.to_bits(), b.l3_traffic_kb.to_bits());
+    assert_eq!(a.tilings, b.tilings);
+    assert_sims_bit_identical(&a.sim, &b.sim);
+}
+
 fn small(mut case: MobileNetConfig) -> MobileNetConfig {
     case.width_mult = 0.25; // keep integration runs fast
     case
@@ -222,6 +237,149 @@ fn joint_measured_accuracy_is_deterministic_across_thread_counts() {
     // per quant configuration: exactly one interpreter run
     assert_eq!(r1.stats.acc_computed, 2);
     assert_eq!(r4.stats.acc_computed, 2);
+}
+
+/// Fused layers of `small(case2)` under a quant axis — the ground truth
+/// for "which layer-grained units did a mutation actually change".
+fn fused_under(axis: &QuantAxis) -> Vec<aladin::platform_aware::FusedLayer> {
+    let mut case = small(models::case2());
+    axis.apply(&mut case);
+    let (g, cfg) = case.build();
+    aladin::coordinator::stage_impl(g, &cfg).unwrap().fused
+}
+
+fn changed_units(a: &QuantAxis, b: &QuantAxis) -> usize {
+    let fa = fused_under(a);
+    let fb = fused_under(b);
+    assert_eq!(fa.len(), fb.len());
+    fa.iter()
+        .zip(&fb)
+        .filter(|(x, y)| x.content_hash() != y.content_hash())
+        .count()
+}
+
+#[test]
+fn k_gene_mutation_recomputes_exactly_the_changed_layer_units() {
+    // the acceptance criterion for the layer-grained tier: a k-gene
+    // mutation recomputes exactly the k changed blocks' layer units (plus
+    // the precision-coupled neighbor), never the whole network
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let hw = HwAxis { cores: 4, l2_kb: 320 };
+    let base_q = QuantAxis::uniform(8, BlockImpl::Im2col, 10);
+    let base = DesignVector {
+        quant: Some(base_q.clone()),
+        hw: Some(hw),
+    };
+    let rec = engine.evaluate(&base).unwrap();
+    let total_layers = rec.sim.layers.len();
+    let s0 = engine.stats();
+    assert_eq!(s0.layer_computed, total_layers, "cold run computes every unit");
+
+    // k = 1: one block's bits flip
+    let mut q1 = base_q.clone();
+    q1.bits[4] = 4;
+    let v1 = DesignVector {
+        quant: Some(q1.clone()),
+        hw: Some(hw),
+    };
+    engine.evaluate_delta(&base, &v1).unwrap();
+    let s1 = engine.stats();
+    let expected1 = changed_units(&base_q, &q1);
+    assert!(expected1 > 0, "a bit flip must change some layer unit");
+    assert!(
+        expected1 < total_layers / 2,
+        "a 1-gene mutation may not invalidate most of the network \
+         ({expected1} of {total_layers})"
+    );
+    assert_eq!(
+        s1.layer_computed - s0.layer_computed,
+        expected1,
+        "1-gene mutation must recompute exactly the changed units"
+    );
+
+    // k = 2: two more blocks flip relative to q1 (block 8 takes a sub-byte
+    // LUT, whose table fits L1 — an 8-bit LUT would be infeasible)
+    let mut q2 = q1.clone();
+    q2.bits[1] = 2;
+    q2.bits[8] = 2;
+    q2.impls[8] = BlockImpl::Lut;
+    let v2 = DesignVector {
+        quant: Some(q2.clone()),
+        hw: Some(hw),
+    };
+    engine.evaluate_delta(&v1, &v2).unwrap();
+    let s2 = engine.stats();
+    let expected2 = changed_units(&q1, &q2);
+    assert!(expected2 > 0 && expected2 < total_layers / 2);
+    assert_eq!(
+        s2.layer_computed - s1.layer_computed,
+        expected2,
+        "2-gene mutation must recompute exactly the changed units"
+    );
+    // the delta path actually engaged on both offspring
+    assert_eq!(s2.impl_delta, 2);
+    assert!(s2.nodes_reused > 0);
+}
+
+#[test]
+fn evaluate_delta_chain_is_bit_identical_to_from_scratch() {
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let hw = HwAxis { cores: 8, l2_kb: 512 };
+    let base_q = QuantAxis::uniform(8, BlockImpl::Im2col, 10);
+    let mut prev = DesignVector {
+        quant: Some(base_q.clone()),
+        hw: Some(hw),
+    };
+    engine.evaluate(&prev).unwrap();
+    // a short hand-built mutation chain: bits, impls, and hardware moves
+    let steps: Vec<DesignVector> = {
+        let mut q_a = base_q.clone();
+        q_a.bits[2] = 4;
+        let mut q_b = q_a.clone();
+        q_b.bits[9] = 4;
+        q_b.impls[9] = BlockImpl::Lut;
+        let q_c = q_b.clone();
+        vec![
+            DesignVector { quant: Some(q_a), hw: Some(hw) },
+            DesignVector { quant: Some(q_b), hw: Some(hw) },
+            DesignVector {
+                quant: Some(q_c),
+                hw: Some(HwAxis { cores: 2, l2_kb: 256 }),
+            },
+        ]
+    };
+    for vector in steps {
+        let delta = engine.evaluate_delta(&prev, &vector).unwrap();
+        // reference: cold engine, full pipeline
+        let scratch = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+            .evaluate(&vector)
+            .unwrap();
+        assert_records_bit_identical(&delta, &scratch);
+        prev = vector;
+    }
+}
+
+#[test]
+fn engine_lower_bound_matches_schedule_level_bound() {
+    // the engine's unit-spliced bound must be bit-identical to
+    // sim::lower_bound_cycles over the built schedule
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let impl_model = {
+        let (g, cfg) = small(models::case2()).build();
+        aladin::coordinator::stage_impl(g, &cfg).unwrap()
+    };
+    for (cores, l2_kb) in [(2usize, 256u64), (4, 320), (8, 512)] {
+        let v = DesignVector::of_hw(cores, l2_kb);
+        let engine_bound = engine.latency_lower_bound(&v).unwrap();
+        let platform = Arc::new(presets::gap8().reconfigure(cores, l2_kb * 1024));
+        let schedule =
+            aladin::platform_aware::build_schedule(&impl_model.fused, &platform).unwrap();
+        assert_eq!(
+            engine_bound,
+            aladin::sim::lower_bound_cycles(&schedule),
+            "c{cores}/l2 {l2_kb}"
+        );
+    }
 }
 
 #[test]

@@ -202,7 +202,7 @@ fn prop_sim_cycles_monotone_in_cores() {
         for cores in [1usize, 2, 4, 8] {
             let p = presets::gap8_with(cores, 512);
             // an oversized LUT can legitimately be L1-infeasible
-            let s = match build_schedule(layers.clone(), &p) {
+            let s = match build_schedule(&layers, &std::sync::Arc::new(p)) {
                 Ok(s) => s,
                 Err(aladin::AladinError::Infeasible { .. }) => return,
                 Err(e) => panic!("unexpected error: {e}"),
@@ -227,7 +227,7 @@ fn prop_sim_cycles_monotone_in_l2() {
         let mut prev = u64::MAX;
         for l2_kb in [128u64, 256, 512, 1024] {
             let p = presets::gap8_with(8, l2_kb);
-            let s = match build_schedule(layers.clone(), &p) {
+            let s = match build_schedule(&layers, &std::sync::Arc::new(p)) {
                 Ok(s) => s,
                 Err(aladin::AladinError::Infeasible { .. }) => return,
                 Err(e) => panic!("unexpected error: {e}"),
@@ -246,7 +246,7 @@ fn prop_sim_conservation() {
     // exceeds the previous layer's micro-DMA-free window
     check_property("sim_conservation", 100, |rng| {
         let g = random_decorated(rng);
-        let s = match build_schedule(fuse(&g).unwrap(), &presets::gap8()) {
+        let s = match build_schedule(&fuse(&g).unwrap(), &std::sync::Arc::new(presets::gap8())) {
             Ok(s) => s,
             Err(aladin::AladinError::Infeasible { .. }) => return,
             Err(e) => panic!("unexpected error: {e}"),
@@ -291,7 +291,7 @@ fn prop_lower_bound_never_exceeds_sim() {
         let cores = [1usize, 2, 4, 8][rng.range(0, 3)];
         let l2_kb = [128u64, 256, 512][rng.range(0, 2)];
         let p = presets::gap8_with(cores, l2_kb);
-        let s = match build_schedule(layers, &p) {
+        let s = match build_schedule(&layers, &std::sync::Arc::new(p)) {
             Ok(s) => s,
             Err(aladin::AladinError::Infeasible { .. }) => return,
             Err(e) => panic!("unexpected error: {e}"),
@@ -465,5 +465,114 @@ fn prop_yamlish_parses_generated_listing1_files() {
         }
         let v = yamlish::parse(&text).unwrap();
         assert_eq!(v.as_obj().unwrap().len(), n);
+    });
+}
+
+#[test]
+fn prop_spliced_engine_matches_monolithic_pipeline() {
+    // tentpole invariant on the random-layer corpus: the engine's
+    // layer-grained splice path (cached per-layer units + cross-layer
+    // composition) is bit-identical to the monolithic
+    // build_schedule + simulate pipeline, and the unit-assembled lower
+    // bound equals the schedule-level one
+    check_property("spliced_vs_monolithic", 40, |rng| {
+        let g = random_decorated(rng);
+        let cores = [2usize, 4, 8][rng.range(0, 2)];
+        let l2_kb = [256u64, 320, 512][rng.range(0, 2)];
+        let engine = aladin::dse::EvalEngine::for_decorated(g.clone(), presets::gap8());
+        let v = aladin::dse::DesignVector::of_hw(cores, l2_kb);
+        let platform =
+            std::sync::Arc::new(presets::gap8().reconfigure(cores, l2_kb * 1024));
+        let layers = fuse(&g).unwrap();
+        match (engine.evaluate(&v), build_schedule(&layers, &platform)) {
+            (Ok(rec), Ok(s)) => {
+                let sim = simulate(&s);
+                assert_eq!(rec.total_cycles, sim.total_cycles());
+                assert_eq!(rec.sim.layers.len(), sim.layers.len());
+                for (a, b) in rec.sim.layers.iter().zip(&sim.layers) {
+                    assert_eq!(a.cycles, b.cycles, "{}", a.name);
+                    assert_eq!(a.compute_cycles, b.compute_cycles, "{}", a.name);
+                    assert_eq!(a.exposed_dma_l1_cycles, b.exposed_dma_l1_cycles, "{}", a.name);
+                    assert_eq!(a.exposed_dma_l3_cycles, b.exposed_dma_l3_cycles, "{}", a.name);
+                    assert_eq!(a.hidden_dma_l3_cycles, b.hidden_dma_l3_cycles, "{}", a.name);
+                    assert_eq!(
+                        a.compute_cycles + a.exposed_dma_l1_cycles + a.exposed_dma_l3_cycles,
+                        a.cycles,
+                        "{}",
+                        a.name
+                    );
+                }
+                let engine_bound = engine.latency_lower_bound(&v).unwrap();
+                assert_eq!(engine_bound, aladin::sim::lower_bound_cycles(&s));
+            }
+            (Err(_), Err(_)) => {} // both screens agree the corner is infeasible
+            (a, b) => panic!("spliced vs monolithic disagree: {a:?} vs {b:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_mutation_chain_delta_bit_identical_to_scratch() {
+    // the delta fast path (incremental re-decoration + spliced layer
+    // units) over random single- and multi-gene mutation chains must be
+    // bit-identical to a from-scratch evaluation on a cold engine —
+    // cycles, decomposition fields, peak memories, and tilings
+    use aladin::dse::{EvalEngine, SearchSpace};
+    use aladin::models::{self, BlockImpl};
+
+    fn assert_bit_identical(a: &aladin::dse::EvalRecord, b: &aladin::dse::EvalRecord) {
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        assert_eq!(a.sensitivity.to_bits(), b.sensitivity.to_bits());
+        assert_eq!(a.param_kb.to_bits(), b.param_kb.to_bits());
+        assert_eq!(a.mem_kb.to_bits(), b.mem_kb.to_bits());
+        assert_eq!(a.peak_l1_kb.to_bits(), b.peak_l1_kb.to_bits());
+        assert_eq!(a.peak_l2_kb.to_bits(), b.peak_l2_kb.to_bits());
+        assert_eq!(a.l3_traffic_kb.to_bits(), b.l3_traffic_kb.to_bits());
+        assert_eq!(a.tilings, b.tilings);
+        assert_eq!(a.sim.layers.len(), b.sim.layers.len());
+        for (x, y) in a.sim.layers.iter().zip(&b.sim.layers) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.cycles, y.cycles, "{}", x.name);
+            assert_eq!(x.compute_cycles, y.compute_cycles, "{}", x.name);
+            assert_eq!(x.dma_l1_cycles, y.dma_l1_cycles, "{}", x.name);
+            assert_eq!(x.dma_l3_cycles, y.dma_l3_cycles, "{}", x.name);
+            assert_eq!(x.exposed_dma_l1_cycles, y.exposed_dma_l1_cycles, "{}", x.name);
+            assert_eq!(x.exposed_dma_l3_cycles, y.exposed_dma_l3_cycles, "{}", x.name);
+            assert_eq!(x.hidden_dma_l3_cycles, y.hidden_dma_l3_cycles, "{}", x.name);
+            assert_eq!(x.l1_used_bytes, y.l1_used_bytes, "{}", x.name);
+            assert_eq!(x.l2_used_bytes, y.l2_used_bytes, "{}", x.name);
+            assert_eq!(x.n_tiles, y.n_tiles, "{}", x.name);
+        }
+    }
+
+    check_property("delta_chain_bit_identical", 6, |rng| {
+        let mut case = models::case2();
+        case.width_mult = 0.25;
+        let engine = EvalEngine::for_mobilenet(case.clone(), presets::gap8());
+        let space = SearchSpace {
+            bits: vec![2, 4, 8],
+            impls: vec![BlockImpl::Im2col, BlockImpl::Lut],
+            n_blocks: 10,
+            cores: vec![2, 4, 8],
+            l2_kb: vec![256, 320, 512],
+        };
+        let mut cur = space.random(rng);
+        // seed the base snapshot; an infeasible start is fine (the delta
+        // path then falls back to full computation on the next step)
+        let _ = engine.evaluate(&cur.vector());
+        for _ in 0..3 {
+            let mut next = cur.clone();
+            space.mutate(&mut next, rng, 0.25);
+            let delta = engine.evaluate_delta(&cur.vector(), &next.vector());
+            let scratch = EvalEngine::for_mobilenet(case.clone(), presets::gap8())
+                .evaluate(&next.vector());
+            match (delta, scratch) {
+                (Ok(a), Ok(b)) => assert_bit_identical(&a, &b),
+                (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+                (a, b) => panic!("delta vs scratch disagree: {a:?} vs {b:?}"),
+            }
+            cur = next;
+        }
     });
 }

@@ -301,3 +301,60 @@ fn measured_search_with_successive_halving_refines_survivors() {
     // (distinct quant genomes) x 2
     assert!(r.stats.acc_computed >= 1);
 }
+
+#[test]
+fn seeded_front_identical_with_delta_path_on_and_off_across_threads() {
+    // acceptance criterion for the layer-grained delta path: a seeded evo
+    // run produces the same archive and front with the delta path enabled
+    // and disabled, on 1 and 8 engine threads — incremental evaluation is
+    // bit-identical, not merely close
+    let space = SearchSpace {
+        bits: vec![2, 4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 8],
+        l2_kb: vec![256, 512],
+    };
+    let run = |threads: usize, delta: bool| -> EvoResult {
+        let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+            .with_threads(threads);
+        let cfg = EvoConfig {
+            population: 10,
+            generations: 3,
+            max_evals: 60,
+            seed: 99,
+            delta,
+            ..EvoConfig::default()
+        };
+        evolve(&engine, &space, &cfg).unwrap()
+    };
+    let signature = |r: &EvoResult| -> Vec<(String, usize, u64, u64, u64, u64)> {
+        r.records
+            .iter()
+            .map(|x| {
+                (
+                    x.quant_label(),
+                    x.cores,
+                    x.l2_kb,
+                    x.total_cycles,
+                    x.sensitivity.to_bits(),
+                    x.mem_kb.to_bits(),
+                )
+            })
+            .collect()
+    };
+    let reference = run(1, true);
+    assert!(reference.evaluations > 0);
+    for (threads, delta) in [(1usize, false), (8, true), (8, false)] {
+        let other = run(threads, delta);
+        assert_eq!(
+            signature(&reference),
+            signature(&other),
+            "archive differs (threads {threads}, delta {delta})"
+        );
+        assert_eq!(
+            reference.front, other.front,
+            "front differs (threads {threads}, delta {delta})"
+        );
+    }
+}
