@@ -1,0 +1,113 @@
+//! Bench: scalar reference interpreter vs the batched im2col/GEMM executor.
+//!
+//! Measures the integer forward pass of the decorated LeNet in vectors/sec
+//! on the scalar golden path (one vector at a time through
+//! `run_int_edges_in`) against the data-oriented batched path
+//! (`run_int_batched_outputs`: SoA vector batches, one GEMM per layer,
+//! `std::thread::scope` workers). Lowering and float calibration happen
+//! once, outside the timed region, so the numbers isolate interpreter
+//! throughput.
+//!
+//! Bit-identity is asserted in-bench: every per-vector batched output must
+//! equal the scalar output, and the `measure_scalar` / `measure_batched`
+//! records must carry the same fingerprint — a mismatch panics, which
+//! fails the CI smoke job.
+//!
+//! CI smoke mode: `BENCH_TINY=1` shrinks the vector set so the bench runs
+//! in seconds, and `BENCH_INTERP_JSON_OUT=<path>` writes the throughputs
+//! as a JSON artifact (`BENCH_interp.json`) with keys
+//! `scalar_vectors_per_sec`, `batched_vectors_per_sec`, `speedup`,
+//! `threads`.
+
+use std::sync::Arc;
+
+use aladin::exec::{measure_batched, measure_scalar, Executable, Scratch};
+use aladin::impl_aware::decorate;
+use aladin::models;
+use aladin::util::bench::{bench, BenchStats};
+use aladin::util::json::Value;
+
+fn stats_json(s: &BenchStats) -> Value {
+    Value::obj()
+        .with("name", s.name.clone())
+        .with("iters", s.iters)
+        .with("min_us", s.min.as_micros() as u64)
+        .with("median_us", s.median.as_micros() as u64)
+        .with("mean_us", s.mean.as_micros() as u64)
+        .with("max_us", s.max.as_micros() as u64)
+}
+
+fn main() {
+    let tiny = std::env::var("BENCH_TINY").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let n_vectors = if tiny { 32 } else { 128 };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 8);
+    println!(
+        "=== interpreter: scalar reference vs batched im2col GEMM \
+         (lenet_int8, {n_vectors} vectors, {threads} threads{}) ===",
+        if tiny { ", tiny" } else { "" }
+    );
+
+    let (g, cfg) = models::lenet(8, (3, 32, 32), 10);
+    let graph = Arc::new(decorate(g, &cfg).unwrap());
+    let vectors = models::lenet_vectors(n_vectors);
+    let exe = Executable::lower(graph.clone(), &vectors).unwrap();
+
+    // scalar golden path: one vector at a time, shared scratch arena
+    let scalar_outputs = |exe: &Executable| {
+        let mut scratch = Scratch::new();
+        vectors
+            .inputs
+            .iter()
+            .map(|v| exe.run_int_in(v, &mut scratch).unwrap())
+            .collect::<Vec<_>>()
+    };
+    let scalar = bench("interp/scalar_reference", 1, 5, || scalar_outputs(&exe).len());
+
+    // batched path: SoA batches over the same executable, worker threads
+    let batched = bench("interp/batched_gemm", 1, 5, || {
+        exe.run_int_batched_outputs(&vectors.inputs, threads).unwrap().len()
+    });
+
+    // bit-identity gate: per-vector outputs and the full measured records
+    let scalar_outs = scalar_outputs(&exe);
+    let batched_outs = exe.run_int_batched_outputs(&vectors.inputs, threads).unwrap();
+    assert_eq!(
+        scalar_outs, batched_outs,
+        "batched interpreter output diverged from the scalar reference"
+    );
+    let rs = measure_scalar(graph.clone(), &vectors).unwrap();
+    let rb = measure_batched(graph, &vectors, threads).unwrap();
+    assert_eq!(
+        rs.output_fingerprint, rb.output_fingerprint,
+        "measure_scalar / measure_batched fingerprints diverged"
+    );
+    assert_eq!(rs.matches, rb.matches, "top-1 match counts diverged");
+
+    let n = n_vectors as f64;
+    let scalar_rate = n / scalar.median.as_secs_f64().max(1e-12);
+    let batched_rate = n / batched.median.as_secs_f64().max(1e-12);
+    let speedup = batched_rate / scalar_rate;
+    println!(
+        "\nthroughput: scalar {scalar_rate:.1} vectors/sec, batched {batched_rate:.1} \
+         vectors/sec ({speedup:.2}x at {threads} threads), outputs bit-identical \
+         (fingerprint {:016x})",
+        rb.output_fingerprint
+    );
+
+    if let Ok(path) = std::env::var("BENCH_INTERP_JSON_OUT") {
+        let doc = Value::obj()
+            .with("bench", "interp_batch")
+            .with("tiny", tiny)
+            .with("model", "lenet_int8")
+            .with("n_vectors", n_vectors)
+            .with("threads", threads)
+            .with("scalar_vectors_per_sec", scalar_rate)
+            .with("batched_vectors_per_sec", batched_rate)
+            .with("speedup", speedup)
+            .with("bit_identical", true)
+            .with("output_fingerprint", format!("{:016x}", rb.output_fingerprint))
+            .with("runs", Value::Arr(vec![stats_json(&scalar), stats_json(&batched)]));
+        std::fs::write(&path, doc.to_string_pretty()).expect("write interp bench json");
+        println!("wrote interpreter bench timings to {path}");
+    }
+}

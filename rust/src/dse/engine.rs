@@ -864,6 +864,9 @@ impl EvalEngine {
     /// quant-axis content hash (`impl_key`) + vector-set hash only — no
     /// hardware knob enters the key, so every (cores, L2) point of a grid
     /// reuses one interpreter evaluation per quantization configuration.
+    /// Cache misses run the batched im2col/GEMM interpreter across the
+    /// engine's worker threads — bit-identical to the scalar reference,
+    /// so the thread count never leaks into the record.
     fn stage_accuracy(
         &self,
         impl_key: u64,
@@ -874,8 +877,11 @@ impl EvalEngine {
         let acc_key = crate::util::hash::combine(impl_key, vectors_hash);
         let decorated = impl_model.decorated.clone();
         let vectors = vectors.clone();
+        let threads = self.threads;
         self.acc_stage
-            .get_or_compute(acc_key, move || exec::measure(decorated, &vectors))
+            .get_or_compute(acc_key, move || {
+                exec::measure_batched(decorated, &vectors, threads)
+            })
     }
 
     /// Resolve the platform a vector's hardware axis selects. Shared, not

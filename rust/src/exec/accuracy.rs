@@ -17,6 +17,7 @@ use crate::util::{Prng, StableHasher};
 use std::sync::Arc;
 
 use super::interp::Executable;
+use super::tensor::{Scratch, TensorI};
 
 /// A bundled set of evaluation vectors (synthetic, deterministic).
 #[derive(Debug, Clone)]
@@ -100,16 +101,14 @@ pub struct MeasuredAccuracy {
     pub output_fingerprint: u64,
 }
 
-/// Measure top-1 fidelity of the integer execution of a decorated graph
-/// against its float reference over `vectors`.
-pub fn measure(graph: Arc<Graph>, vectors: &EvalVectors) -> Result<MeasuredAccuracy> {
-    let model = graph.name.clone();
-    let exe = Executable::lower(graph, vectors)?;
-    let mut matches = 0usize;
+/// Fold per-vector network outputs into the measured-accuracy record's
+/// (fingerprint, matches) pair. One hashing scheme serves both execution
+/// paths, so scalar and batched records are comparable bit-for-bit.
+fn fingerprint_and_matches(outs: &[TensorI], ref_top1: &[usize]) -> (u64, usize) {
     let mut h = StableHasher::new();
-    h.write_usize(vectors.inputs.len());
-    for (i, v) in vectors.inputs.iter().enumerate() {
-        let out = exe.run_int(v)?;
+    h.write_usize(outs.len());
+    let mut matches = 0usize;
+    for (i, out) in outs.iter().enumerate() {
         h.write_usize(out.dims.len());
         for &d in &out.dims {
             h.write_usize(d);
@@ -117,18 +116,64 @@ pub fn measure(graph: Arc<Graph>, vectors: &EvalVectors) -> Result<MeasuredAccur
         for &x in &out.data {
             h.write_u64(x as u64);
         }
-        if out.argmax() == exe.calibration().ref_top1[i] {
+        if out.argmax() == ref_top1[i] {
             matches += 1;
         }
     }
-    let n = vectors.inputs.len();
-    Ok(MeasuredAccuracy {
+    (h.finish(), matches)
+}
+
+fn record(model: String, outs: &[TensorI], ref_top1: &[usize]) -> MeasuredAccuracy {
+    let (output_fingerprint, matches) = fingerprint_and_matches(outs, ref_top1);
+    let n = outs.len();
+    MeasuredAccuracy {
         model,
         n,
         matches,
         accuracy: matches as f64 / n.max(1) as f64,
-        output_fingerprint: h.finish(),
-    })
+        output_fingerprint,
+    }
+}
+
+/// Measure top-1 fidelity of the integer execution of a decorated graph
+/// against its float reference over `vectors`.
+///
+/// Runs the batched data-oriented interpreter single-threaded — the record
+/// is bit-identical to [`measure_scalar`]'s (property-tested); use
+/// [`measure_batched`] to spread the eval vectors across worker threads.
+pub fn measure(graph: Arc<Graph>, vectors: &EvalVectors) -> Result<MeasuredAccuracy> {
+    measure_batched(graph, vectors, 1)
+}
+
+/// [`measure`] through the scalar reference interpreter, one vector at a
+/// time — the golden path the batched executor is checked against. A
+/// single [`Scratch`] arena is reused across vectors and layers.
+pub fn measure_scalar(graph: Arc<Graph>, vectors: &EvalVectors) -> Result<MeasuredAccuracy> {
+    let model = graph.name.clone();
+    let exe = Executable::lower(graph, vectors)?;
+    let mut scratch = Scratch::new();
+    let mut outs = Vec::with_capacity(vectors.inputs.len());
+    for v in &vectors.inputs {
+        outs.push(exe.run_int_in(v, &mut scratch)?);
+    }
+    Ok(record(model, &outs, &exe.calibration().ref_top1))
+}
+
+/// [`measure`] through the batched im2col/GEMM interpreter with the eval
+/// vectors spread across `threads` workers. Calibration (float reference)
+/// parallelizes across vectors, and the integer pass runs SoA
+/// vector-batches through one GEMM per layer. The record — accuracy,
+/// matches, and output fingerprint — is bit-identical to the scalar path
+/// for every thread count.
+pub fn measure_batched(
+    graph: Arc<Graph>,
+    vectors: &EvalVectors,
+    threads: usize,
+) -> Result<MeasuredAccuracy> {
+    let model = graph.name.clone();
+    let exe = Executable::lower_with(graph, vectors, threads)?;
+    let outs = exe.run_int_batched_outputs(&vectors.inputs, threads)?;
+    Ok(record(model, &outs, &exe.calibration().ref_top1))
 }
 
 impl crate::util::ToJson for MeasuredAccuracy {
@@ -196,5 +241,18 @@ mod tests {
         let b = measure(lenet_decorated(4), &v).unwrap();
         assert_eq!(a.output_fingerprint, b.output_fingerprint);
         assert_eq!(a.matches, b.matches);
+    }
+
+    #[test]
+    fn scalar_and_batched_records_bit_identical() {
+        let v = EvalVectors::synthetic(5, vec![3, 32, 32], 6);
+        let g = lenet_decorated(8);
+        let s = measure_scalar(g.clone(), &v).unwrap();
+        for threads in [1usize, 3] {
+            let b = measure_batched(g.clone(), &v, threads).unwrap();
+            assert_eq!(s.output_fingerprint, b.output_fingerprint, "threads={threads}");
+            assert_eq!(s.matches, b.matches);
+            assert_eq!(s.n, b.n);
+        }
     }
 }

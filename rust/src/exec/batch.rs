@@ -1,0 +1,574 @@
+//! Data-oriented batched execution of the integer plan (ROADMAP item 4).
+//!
+//! The scalar interpreter in [`super::interp`] runs one eval vector at a
+//! time through 6-deep nested loops. For measured-accuracy DSE that is the
+//! wall-clock bottleneck: every quant config costs one full network run
+//! per eval vector. This module restructures execution around batches:
+//!
+//! - **SoA batches** — all eval vectors of a quant config travel together
+//!   in one contiguous vector-major buffer per edge ([`BatchI`]), so each
+//!   layer streams over dense memory instead of hopping between per-vector
+//!   allocations;
+//! - **im2col GEMM convolution** — convolution is lowered to a patch
+//!   gather into an L1-sized panel followed by a tiled integer GEMM: the
+//!   quantized weights (packed once per config at lowering) are reused
+//!   across every vector and output position resident in the panel;
+//! - **work-queue parallelism** — vector-batches are distributed over
+//!   `std::thread::scope` workers with an atomic cursor, the same pattern
+//!   as the DSE engine's candidate executor.
+//!
+//! Bit-identity with the scalar path is structural, not approximate:
+//! integer (`i64`) addition is associative, the panel rows replicate the
+//! scalar kernel's exact accumulation order (bias first, then `ic`→`ky`→
+//! `kx`), explicit zeros stand in for the scalar path's skipped padding
+//! taps (`w * 0 == 0` holds for the MAC and for the materialized
+//! [`crate::quant::MulLut`], whose table stores `clamp(w * a)` and
+//! `clamp(0) == 0`), and saturation is applied once at writeback in both
+//! paths. The property suite in `tests/exec_batch.rs` asserts equality on
+//! random graphs, shapes, and bit-widths.
+
+use crate::error::Result;
+use crate::graph::ir::{ConvAttrs, PoolAttrs};
+use crate::graph::tensor::ElemType;
+use crate::quant::MulLut;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::interp::{
+    chan_index, div_round_ties_away, shape_err, unsupported, Executable, LinearKind, Lowered,
+    RequantKind, RequantLowered,
+};
+use super::tensor::{Scratch, TensorI};
+
+/// Target footprint of one im2col panel: small enough that a panel plus a
+/// weight row stay L1-resident while every output channel of the group
+/// consumes it.
+const PANEL_BYTES: usize = 16 * 1024;
+
+/// Upper bound on vectors per worker batch — bounds the transient SoA
+/// memory (all edges of a batch are live at once) while keeping panels
+/// full.
+const MAX_BATCH: usize = 32;
+
+/// Rows (gathered patches) per im2col panel for a `k`-column patch.
+fn panel_rows(k: usize) -> usize {
+    (PANEL_BYTES / (k.max(1) * std::mem::size_of::<i64>())).clamp(4, 64)
+}
+
+/// A batch of integer tensors sharing one shape, stored vector-major: the
+/// `elems()` values of vector `b` are contiguous at `b * elems()`. This is
+/// the SoA layout the batched kernels stream over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchI {
+    /// Per-vector shape, row-major (`[C, H, W]` or `[F]`).
+    pub dims: Vec<usize>,
+    /// Number of vectors in the batch.
+    pub n: usize,
+    /// Flat storage, `n * elems()` values.
+    pub data: Vec<i64>,
+}
+
+impl BatchI {
+    /// Elements per vector.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Vector `b`'s elements.
+    pub fn vector(&self, b: usize) -> &[i64] {
+        let e = self.elems();
+        &self.data[b * e..(b + 1) * e]
+    }
+
+    /// Vector `b` as an owned [`TensorI`] with the batch's shape.
+    pub fn tensor(&self, b: usize) -> TensorI {
+        TensorI::new(self.dims.clone(), self.vector(b).to_vec())
+    }
+
+    /// Index of vector `b`'s first maximal element — the same tie rule as
+    /// [`TensorI::argmax`].
+    pub fn argmax(&self, b: usize) -> usize {
+        let v = self.vector(b);
+        let mut best = 0usize;
+        for (i, &x) in v.iter().enumerate() {
+            if x > v[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched integer kernels
+// ---------------------------------------------------------------------------
+
+/// Batched im2col convolution. Per group: gather up to `panel_rows` patch
+/// rows (one per `(vector, output position)` pair, `cpg * kh * kw` columns
+/// in the scalar kernel's `ic`→`ky`→`kx` order, explicit zeros at padding
+/// taps), then run every output channel of the group over the resident
+/// panel — one weight-row load amortized across the whole panel.
+fn conv_batch(
+    x: &BatchI,
+    attrs: &ConvAttrs,
+    w: &[i64],
+    bias: &[i64],
+    acc: ElemType,
+    lut: Option<&MulLut>,
+    scratch: &mut Scratch,
+) -> BatchI {
+    let (cin, h, wd) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, wd);
+    let cout = attrs.out_channels;
+    let cpg = cin / attrs.groups;
+    let out_per_group = (cout / attrs.groups).max(1);
+    let (kh, kw) = attrs.kernel;
+    let (sh, sw) = attrs.stride;
+    let (ph, pw) = attrs.padding;
+    let n = x.n;
+    let in_elems = cin * h * wd;
+    let ohw = oh * ow;
+    let out_elems = cout * ohw;
+    let k = cpg * kh * kw;
+    let rows = panel_rows(k);
+    let mut out = scratch.take_i(n * out_elems);
+    let mut panel = scratch.take_i(rows * k);
+    let total = n * ohw;
+    for g in 0..attrs.groups {
+        let ic0 = g * cpg;
+        let oc0 = g * out_per_group;
+        let mut pos = 0usize;
+        while pos < total {
+            let pn = rows.min(total - pos);
+            for r in 0..pn {
+                let p = pos + r;
+                let (b, rem) = (p / ohw, p % ohw);
+                let (oy, ox) = (rem / ow, rem % ow);
+                let row = &mut panel[r * k..(r + 1) * k];
+                let mut idx = 0usize;
+                for ic in 0..cpg {
+                    let cbase = b * in_elems + (ic0 + ic) * h * wd;
+                    for ky in 0..kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= h as isize {
+                            row[idx..idx + kw].fill(0);
+                            idx += kw;
+                            continue;
+                        }
+                        let rbase = cbase + iy as usize * wd;
+                        for kx in 0..kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            row[idx] = if ix < 0 || ix >= wd as isize {
+                                0
+                            } else {
+                                x.data[rbase + ix as usize]
+                            };
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+            for oc in oc0..oc0 + out_per_group {
+                let wrow = &w[oc * k..(oc + 1) * k];
+                let b0 = bias[oc];
+                for r in 0..pn {
+                    let prow = &panel[r * k..(r + 1) * k];
+                    let mut sum = b0;
+                    match lut {
+                        None => {
+                            for (&wv, &xv) in wrow.iter().zip(prow) {
+                                sum += wv * xv;
+                            }
+                        }
+                        Some(l) => {
+                            for (&wv, &xv) in wrow.iter().zip(prow) {
+                                sum += l.mul(wv, xv);
+                            }
+                        }
+                    }
+                    let p = pos + r;
+                    let (b, rem) = (p / ohw, p % ohw);
+                    out[b * out_elems + oc * ohw + rem] = acc.clamp(sum);
+                }
+            }
+            pos += pn;
+        }
+    }
+    scratch.recycle_i(panel);
+    BatchI {
+        dims: vec![cout, oh, ow],
+        n,
+        data: out,
+    }
+}
+
+/// Batched dense layer: one `[m, k]` weight GEMM over all `n` vectors.
+fn dense_batch(
+    x: &BatchI,
+    (m, k): (usize, usize),
+    w: &[i64],
+    bias: &[i64],
+    acc: ElemType,
+    lut: Option<&MulLut>,
+    scratch: &mut Scratch,
+) -> BatchI {
+    let n = x.n;
+    let mut out = scratch.take_i(n * m);
+    for b in 0..n {
+        let xr = x.vector(b);
+        let orow = &mut out[b * m..(b + 1) * m];
+        for (of, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[of * k..(of + 1) * k];
+            let mut sum = bias[of];
+            match lut {
+                None => {
+                    for (&wv, &xv) in wrow.iter().zip(xr) {
+                        sum += wv * xv;
+                    }
+                }
+                Some(l) => {
+                    for (&wv, &xv) in wrow.iter().zip(xr) {
+                        sum += l.mul(wv, xv);
+                    }
+                }
+            }
+            *o = acc.clamp(sum);
+        }
+    }
+    BatchI {
+        dims: vec![m],
+        n,
+        data: out,
+    }
+}
+
+fn max_pool_batch(x: &BatchI, attrs: &PoolAttrs, scratch: &mut Scratch) -> BatchI {
+    let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, w);
+    let out_elems = c * oh * ow;
+    let mut out = scratch.take_i(x.n * out_elems);
+    for b in 0..x.n {
+        let src = x.vector(b);
+        let dst = &mut out[b * out_elems..(b + 1) * out_elems];
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = i64::MIN;
+                    for ky in 0..attrs.kernel.0 {
+                        let iy = (oy * attrs.stride.0 + ky) as isize - attrs.padding.0 as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..attrs.kernel.1 {
+                            let ix = (ox * attrs.stride.1 + kx) as isize - attrs.padding.1 as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            best = best.max(src[ch * h * w + iy as usize * w + ix as usize]);
+                        }
+                    }
+                    dst[ch * oh * ow + oy * ow + ox] = if best == i64::MIN { 0 } else { best };
+                }
+            }
+        }
+    }
+    BatchI {
+        dims: vec![c, oh, ow],
+        n: x.n,
+        data: out,
+    }
+}
+
+fn avg_pool_batch(x: &BatchI, attrs: &PoolAttrs, elem: ElemType, scratch: &mut Scratch) -> BatchI {
+    let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (oh, ow) = attrs.out_hw(h, w);
+    let area = (attrs.kernel.0 * attrs.kernel.1) as i64;
+    let out_elems = c * oh * ow;
+    let mut out = scratch.take_i(x.n * out_elems);
+    for b in 0..x.n {
+        let src = x.vector(b);
+        let dst = &mut out[b * out_elems..(b + 1) * out_elems];
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut sum = 0i64;
+                    for ky in 0..attrs.kernel.0 {
+                        let iy = (oy * attrs.stride.0 + ky) as isize - attrs.padding.0 as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..attrs.kernel.1 {
+                            let ix = (ox * attrs.stride.1 + kx) as isize - attrs.padding.1 as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            sum += src[ch * h * w + iy as usize * w + ix as usize];
+                        }
+                    }
+                    // §VI-E shift-style division, ties away — same as scalar
+                    dst[ch * oh * ow + oy * ow + ox] = elem.clamp(div_round_ties_away(sum, area));
+                }
+            }
+        }
+    }
+    BatchI {
+        dims: vec![c, oh, ow],
+        n: x.n,
+        data: out,
+    }
+}
+
+fn requant_batch(x: &BatchI, rq: &RequantLowered, scratch: &mut Scratch) -> BatchI {
+    let spatial = match x.dims.len() {
+        3 => x.dims[1] * x.dims[2],
+        _ => 1,
+    };
+    let elems = x.elems();
+    let mut out = scratch.take_i(x.data.len());
+    match &rq.kind {
+        RequantKind::Dyadic(scales) => {
+            for (flat, (&v, o)) in x.data.iter().zip(out.iter_mut()).enumerate() {
+                let c = chan_index(flat % elems, spatial, scales.len());
+                *o = rq.out.clamp(scales[c].apply(v));
+            }
+        }
+        RequantKind::Tree(trees) => {
+            for (flat, (&v, o)) in x.data.iter().zip(out.iter_mut()).enumerate() {
+                let c = chan_index(flat % elems, spatial, trees.len());
+                *o = trees[c].apply(v);
+            }
+        }
+        RequantKind::Lut(lut) => {
+            for (&v, o) in x.data.iter().zip(out.iter_mut()) {
+                *o = lut.apply(v);
+            }
+        }
+    }
+    BatchI {
+        dims: x.dims.clone(),
+        n: x.n,
+        data: out,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched dispatch
+// ---------------------------------------------------------------------------
+
+impl Executable {
+    /// Run a batch of input vectors through the integer plan with the
+    /// data-oriented im2col/GEMM kernels, drawing all edge buffers from
+    /// `scratch`. Per vector, the result is bit-identical to
+    /// [`Executable::run_int`] (property-tested in `tests/exec_batch.rs`).
+    pub fn run_int_batch(&self, inputs: &[Vec<f64>], scratch: &mut Scratch) -> Result<BatchI> {
+        let g = &*self.net.graph;
+        let n = inputs.len();
+        if n == 0 {
+            return Err(unsupported("batched execution needs at least one vector"));
+        }
+        let in_spec = &g.edge(self.net.input_edge).spec;
+        let elems = in_spec.num_elems();
+        for v in inputs {
+            if v.len() != elems {
+                return Err(shape_err("exec input", elems.to_string(), v.len().to_string()));
+            }
+        }
+        let mut edges: Vec<Option<BatchI>> = vec![None; g.edges.len()];
+        let mut input_q = scratch.take_i(n * elems);
+        for (b, v) in inputs.iter().enumerate() {
+            for (o, &r) in input_q[b * elems..(b + 1) * elems].iter_mut().zip(v) {
+                *o = self.input_quant.quantize(r);
+            }
+        }
+        edges[self.net.input_edge.0] = Some(BatchI {
+            dims: in_spec.dims.clone(),
+            n,
+            data: input_q,
+        });
+        for &id in &self.net.order {
+            let node = g.node(id);
+            let Some(out_edge) = g.output_edge(id).map(|e| e.id) else {
+                continue;
+            };
+            let ins = self.net.data_inputs(id);
+            let first = *ins
+                .first()
+                .ok_or_else(|| unsupported(format!("node `{}` has no data input", node.name)))?;
+            let y = {
+                let x = edges[first.0]
+                    .as_ref()
+                    .ok_or_else(|| unsupported(format!("edge for `{}` not computed", node.name)))?;
+                match &self.lowered[id.0] {
+                    Lowered::Skip => continue,
+                    Lowered::Linear(l) => match &l.kind {
+                        LinearKind::Conv(attrs) => {
+                            if x.dims.len() != 3 {
+                                return Err(shape_err(
+                                    &node.name,
+                                    "[C,H,W]".into(),
+                                    format!("{:?}", x.dims),
+                                ));
+                            }
+                            conv_batch(x, attrs, &l.wq, &l.bias_q, l.acc, l.lut.as_ref(), scratch)
+                        }
+                        LinearKind::Dense { m, k } => {
+                            if x.elems() != *k {
+                                return Err(shape_err(
+                                    &node.name,
+                                    k.to_string(),
+                                    x.elems().to_string(),
+                                ));
+                            }
+                            let lut = l.lut.as_ref();
+                            dense_batch(x, (*m, *k), &l.wq, &l.bias_q, l.acc, lut, scratch)
+                        }
+                    },
+                    Lowered::Requant(rq) => requant_batch(x, rq, scratch),
+                    Lowered::Relu => {
+                        let mut out = scratch.take_i(x.data.len());
+                        for (o, &v) in out.iter_mut().zip(&x.data) {
+                            *o = v.max(0);
+                        }
+                        BatchI {
+                            dims: x.dims.clone(),
+                            n: x.n,
+                            data: out,
+                        }
+                    }
+                    Lowered::MaxPool(attrs) => max_pool_batch(x, attrs, scratch),
+                    Lowered::AvgPool(attrs, elem) => avg_pool_batch(x, attrs, *elem, scratch),
+                    Lowered::Flatten => {
+                        let mut out = scratch.take_i(x.data.len());
+                        out.copy_from_slice(&x.data);
+                        BatchI {
+                            dims: vec![x.elems()],
+                            n: x.n,
+                            data: out,
+                        }
+                    }
+                    Lowered::Add {
+                        a_rescale,
+                        b_rescale,
+                        out: to,
+                    } => {
+                        let b_edge = *ins.get(1).ok_or_else(|| {
+                            unsupported(format!("Add `{}` needs two inputs", node.name))
+                        })?;
+                        let b = edges[b_edge.0].as_ref().ok_or_else(|| {
+                            unsupported(format!("Add `{}` input not computed", node.name))
+                        })?;
+                        if b.data.len() != x.data.len() {
+                            return Err(shape_err(
+                                &node.name,
+                                x.data.len().to_string(),
+                                b.data.len().to_string(),
+                            ));
+                        }
+                        let mut out = scratch.take_i(x.data.len());
+                        for ((o, &a), &bb) in out.iter_mut().zip(&x.data).zip(&b.data) {
+                            *o = to.clamp(a_rescale.apply(a) + b_rescale.apply(bb));
+                        }
+                        BatchI {
+                            dims: x.dims.clone(),
+                            n: x.n,
+                            data: out,
+                        }
+                    }
+                }
+            };
+            edges[out_edge.0] = Some(y);
+        }
+        let out = edges[self.net.output_edge.0]
+            .take()
+            .ok_or_else(|| unsupported("integer plan produced no output"))?;
+        for e in edges.into_iter().flatten() {
+            scratch.recycle_i(e.data);
+        }
+        Ok(out)
+    }
+
+    /// Run every input vector through the batched integer plan across
+    /// `threads` workers and return the per-vector network outputs in
+    /// input order. Vectors are grouped into SoA batches pulled from an
+    /// atomic work queue (the same `std::thread::scope` pattern as the DSE
+    /// engine's candidate executor); each worker reuses one [`Scratch`]
+    /// arena across its batches.
+    pub fn run_int_batched_outputs(
+        &self,
+        inputs: &[Vec<f64>],
+        threads: usize,
+    ) -> Result<Vec<TensorI>> {
+        let n = inputs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let threads = threads.clamp(1, n);
+        let batch = n.div_ceil(threads).min(MAX_BATCH).max(1);
+        let n_batches = n.div_ceil(batch);
+        let next = AtomicUsize::new(0);
+        let results: Vec<Vec<(usize, Result<BatchI>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads.min(n_batches))
+                .map(|_| {
+                    let next = &next;
+                    scope.spawn(move || {
+                        let mut scratch = Scratch::new();
+                        let mut mine = Vec::new();
+                        loop {
+                            let slot = next.fetch_add(1, Ordering::Relaxed);
+                            if slot >= n_batches {
+                                break;
+                            }
+                            let lo = slot * batch;
+                            let hi = (lo + batch).min(n);
+                            let r = self.run_int_batch(&inputs[lo..hi], &mut scratch);
+                            mine.push((slot, r));
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("batch worker panicked"))
+                .collect()
+        });
+        let mut slots: Vec<Option<BatchI>> = (0..n_batches).map(|_| None).collect();
+        for (slot, r) in results.into_iter().flatten() {
+            slots[slot] = Some(r?);
+        }
+        let mut outs = Vec::with_capacity(n);
+        for s in slots {
+            let b = s.expect("every batch slot filled");
+            for i in 0..b.n {
+                outs.push(b.tensor(i));
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_rows_bounds() {
+        assert_eq!(panel_rows(1), 64); // capped
+        assert_eq!(panel_rows(32), 64);
+        assert_eq!(panel_rows(64), 32);
+        assert_eq!(panel_rows(1 << 20), 4); // floored
+    }
+
+    #[test]
+    fn batch_accessors() {
+        let b = BatchI {
+            dims: vec![2, 1, 1],
+            n: 2,
+            data: vec![1, 7, 9, 3],
+        };
+        assert_eq!(b.elems(), 2);
+        assert_eq!(b.vector(1), &[9, 3]);
+        assert_eq!(b.argmax(0), 1);
+        assert_eq!(b.argmax(1), 0);
+        assert_eq!(b.tensor(0), TensorI::new(vec![2, 1, 1], vec![1, 7]));
+    }
+}

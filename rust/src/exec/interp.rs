@@ -36,7 +36,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::params::{synthesize, NodeParams};
-use super::tensor::{TensorF, TensorI};
+use super::tensor::{Scratch, TensorF, TensorI};
 
 /// Maximum dyadic shift used when fitting requant factors (the platform's
 /// widest precision minus one, paper §VI-C).
@@ -71,7 +71,7 @@ impl Scale {
 
 /// Normalized geometry of a linear node.
 #[derive(Debug, Clone)]
-enum LinearKind {
+pub(super) enum LinearKind {
     /// Convolution geometry (direct Conv nodes and the im2col/LUT MatMul
     /// rewrites, whose `from_conv` retains the original attributes).
     Conv(ConvAttrs),
@@ -81,21 +81,21 @@ enum LinearKind {
 
 /// Integer lowering of one linear node.
 #[derive(Debug, Clone)]
-struct LinearLowered {
-    kind: LinearKind,
+pub(super) struct LinearLowered {
+    pub(super) kind: LinearKind,
     /// Quantized weights in the parameter edge's layout.
-    wq: Vec<i64>,
+    pub(super) wq: Vec<i64>,
     /// Bias at accumulator scale: `round(bias / (S_in * S_w,c))`.
-    bias_q: Vec<i64>,
+    pub(super) bias_q: Vec<i64>,
     /// Accumulator element type (saturating writeback target).
-    acc: ElemType,
+    pub(super) acc: ElemType,
     /// Materialized multiplication table when the impl label is `lut`.
-    lut: Option<MulLut>,
+    pub(super) lut: Option<MulLut>,
 }
 
 /// Integer lowering of one requantization node.
 #[derive(Debug, Clone)]
-enum RequantKind {
+pub(super) enum RequantKind {
     /// Per-channel dyadic multiply+shift (len 1 for per-tensor).
     Dyadic(Vec<DyadicScale>),
     /// Per-channel comparison trees.
@@ -105,14 +105,14 @@ enum RequantKind {
 }
 
 #[derive(Debug, Clone)]
-struct RequantLowered {
-    kind: RequantKind,
-    out: ElemType,
+pub(super) struct RequantLowered {
+    pub(super) kind: RequantKind,
+    pub(super) out: ElemType,
 }
 
 /// Per-node integer execution plan.
 #[derive(Debug, Clone)]
-enum Lowered {
+pub(super) enum Lowered {
     Skip,
     Linear(Box<LinearLowered>),
     Requant(RequantLowered),
@@ -129,13 +129,13 @@ enum Lowered {
 
 /// The float-reference network: graph + deterministic teacher parameters.
 #[derive(Debug)]
-struct FloatNet {
-    graph: Arc<Graph>,
-    order: Vec<NodeId>,
-    input_edge: EdgeId,
-    output_edge: EdgeId,
-    kinds: Vec<Option<LinearKind>>,
-    params: HashMap<usize, NodeParams>,
+pub(super) struct FloatNet {
+    pub(super) graph: Arc<Graph>,
+    pub(super) order: Vec<NodeId>,
+    pub(super) input_edge: EdgeId,
+    pub(super) output_edge: EdgeId,
+    pub(super) kinds: Vec<Option<LinearKind>>,
+    pub(super) params: HashMap<usize, NodeParams>,
 }
 
 /// Calibration record produced while lowering: per-edge activation ranges
@@ -151,17 +151,17 @@ pub struct Calibration {
 /// A lowered, executable QNN: integer plan + float reference.
 #[derive(Debug)]
 pub struct Executable {
-    net: FloatNet,
-    lowered: Vec<Lowered>,
-    input_quant: UniformQuantizer,
-    calibration: Calibration,
+    pub(super) net: FloatNet,
+    pub(super) lowered: Vec<Lowered>,
+    pub(super) input_quant: UniformQuantizer,
+    pub(super) calibration: Calibration,
 }
 
-fn unsupported(msg: impl Into<String>) -> AladinError {
+pub(super) fn unsupported(msg: impl Into<String>) -> AladinError {
     AladinError::Unsupported(msg.into())
 }
 
-fn shape_err(at: &str, expected: String, got: String) -> AladinError {
+pub(super) fn shape_err(at: &str, expected: String, got: String) -> AladinError {
     AladinError::ShapeMismatch {
         at: at.into(),
         expected,
@@ -172,7 +172,7 @@ fn shape_err(at: &str, expected: String, got: String) -> AladinError {
 /// Rounded division with ties away from zero — for power-of-two divisors
 /// this is exactly the §VI-E shift approximation with a sign-mirrored bias,
 /// matching [`DyadicScale::apply`]'s `Rounding::Nearest`.
-fn div_round_ties_away(v: i64, d: i64) -> i64 {
+pub(super) fn div_round_ties_away(v: i64, d: i64) -> i64 {
     debug_assert!(d > 0);
     if v >= 0 {
         (v + d / 2) / d
@@ -199,6 +199,7 @@ fn conv_int(
     bias: &[i64],
     acc: ElemType,
     lut: Option<&MulLut>,
+    scratch: &mut Scratch,
 ) -> TensorI {
     let (cin, h, wd) = (x.dims[0], x.dims[1], x.dims[2]);
     let (oh, ow) = attrs.out_hw(h, wd);
@@ -208,7 +209,7 @@ fn conv_int(
     let (kh, kw) = attrs.kernel;
     let (sh, sw) = attrs.stride;
     let (ph, pw) = attrs.padding;
-    let mut out = vec![0i64; cout * oh * ow];
+    let mut out = scratch.take_i(cout * oh * ow);
     for oc in 0..cout {
         let ic0 = (oc / out_per_group) * cpg;
         let w0 = oc * cpg * kh * kw;
@@ -241,14 +242,14 @@ fn conv_int(
 
 fn dense_int(
     x: &TensorI,
-    m: usize,
-    k: usize,
+    (m, k): (usize, usize),
     w: &[i64],
     bias: &[i64],
     acc: ElemType,
     lut: Option<&MulLut>,
+    scratch: &mut Scratch,
 ) -> TensorI {
-    let mut out = vec![0i64; m];
+    let mut out = scratch.take_i(m);
     for (of, o) in out.iter_mut().enumerate() {
         let mut sum = bias[of];
         let row = of * k;
@@ -260,10 +261,10 @@ fn dense_int(
     TensorI::new(vec![m], out)
 }
 
-fn max_pool_int(x: &TensorI, attrs: &PoolAttrs) -> TensorI {
+fn max_pool_int(x: &TensorI, attrs: &PoolAttrs, scratch: &mut Scratch) -> TensorI {
     let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
     let (oh, ow) = attrs.out_hw(h, w);
-    let mut out = vec![0i64; c * oh * ow];
+    let mut out = scratch.take_i(c * oh * ow);
     for ch in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -288,11 +289,11 @@ fn max_pool_int(x: &TensorI, attrs: &PoolAttrs) -> TensorI {
     TensorI::new(vec![c, oh, ow], out)
 }
 
-fn avg_pool_int(x: &TensorI, attrs: &PoolAttrs, elem: ElemType) -> TensorI {
+fn avg_pool_int(x: &TensorI, attrs: &PoolAttrs, elem: ElemType, scratch: &mut Scratch) -> TensorI {
     let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
     let (oh, ow) = attrs.out_hw(h, w);
     let area = (attrs.kernel.0 * attrs.kernel.1) as i64;
-    let mut out = vec![0i64; c * oh * ow];
+    let mut out = scratch.take_i(c * oh * ow);
     for ch in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -321,7 +322,7 @@ fn avg_pool_int(x: &TensorI, attrs: &PoolAttrs, elem: ElemType) -> TensorI {
 
 /// Index into a per-channel parameter list: element `flat / stride`,
 /// degenerate to 0 for per-tensor (n == 1) lists.
-fn chan_index(flat: usize, stride: usize, n: usize) -> usize {
+pub(super) fn chan_index(flat: usize, stride: usize, n: usize) -> usize {
     if n == 1 {
         0
     } else {
@@ -329,32 +330,31 @@ fn chan_index(flat: usize, stride: usize, n: usize) -> usize {
     }
 }
 
-fn requant_int(x: &TensorI, rq: &RequantLowered) -> TensorI {
+fn requant_int(x: &TensorI, rq: &RequantLowered, scratch: &mut Scratch) -> TensorI {
     let spatial = match x.dims.len() {
         3 => x.dims[1] * x.dims[2],
         _ => 1,
     };
-    let data: Vec<i64> = match &rq.kind {
-        RequantKind::Dyadic(scales) => x
-            .data
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
+    let mut data = scratch.take_i(x.len());
+    match &rq.kind {
+        RequantKind::Dyadic(scales) => {
+            for (i, (&v, o)) in x.data.iter().zip(data.iter_mut()).enumerate() {
                 let c = chan_index(i, spatial, scales.len());
-                rq.out.clamp(scales[c].apply(v))
-            })
-            .collect(),
-        RequantKind::Tree(trees) => x
-            .data
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
+                *o = rq.out.clamp(scales[c].apply(v));
+            }
+        }
+        RequantKind::Tree(trees) => {
+            for (i, (&v, o)) in x.data.iter().zip(data.iter_mut()).enumerate() {
                 let c = chan_index(i, spatial, trees.len());
-                trees[c].apply(v)
-            })
-            .collect(),
-        RequantKind::Lut(lut) => x.data.iter().map(|&v| lut.apply(v)).collect(),
-    };
+                *o = trees[c].apply(v);
+            }
+        }
+        RequantKind::Lut(lut) => {
+            for (&v, o) in x.data.iter().zip(data.iter_mut()) {
+                *o = lut.apply(v);
+            }
+        }
+    }
     TensorI::new(x.dims.clone(), data)
 }
 
@@ -362,7 +362,13 @@ fn requant_int(x: &TensorI, rq: &RequantLowered) -> TensorI {
 // float kernels (the golden reference)
 // ---------------------------------------------------------------------------
 
-fn conv_f(x: &TensorF, attrs: &ConvAttrs, w: &[f64], bias: &[f64]) -> TensorF {
+fn conv_f(
+    x: &TensorF,
+    attrs: &ConvAttrs,
+    w: &[f64],
+    bias: &[f64],
+    scratch: &mut Scratch,
+) -> TensorF {
     let (cin, h, wd) = (x.dims[0], x.dims[1], x.dims[2]);
     let (oh, ow) = attrs.out_hw(h, wd);
     let cout = attrs.out_channels;
@@ -371,7 +377,7 @@ fn conv_f(x: &TensorF, attrs: &ConvAttrs, w: &[f64], bias: &[f64]) -> TensorF {
     let (kh, kw) = attrs.kernel;
     let (sh, sw) = attrs.stride;
     let (ph, pw) = attrs.padding;
-    let mut out = vec![0f64; cout * oh * ow];
+    let mut out = scratch.take_f(cout * oh * ow);
     for oc in 0..cout {
         let ic0 = (oc / out_per_group) * cpg;
         let w0 = oc * cpg * kh * kw;
@@ -402,8 +408,15 @@ fn conv_f(x: &TensorF, attrs: &ConvAttrs, w: &[f64], bias: &[f64]) -> TensorF {
     TensorF::new(vec![cout, oh, ow], out)
 }
 
-fn dense_f(x: &TensorF, m: usize, k: usize, w: &[f64], bias: &[f64]) -> TensorF {
-    let mut out = vec![0f64; m];
+fn dense_f(
+    x: &TensorF,
+    m: usize,
+    k: usize,
+    w: &[f64],
+    bias: &[f64],
+    scratch: &mut Scratch,
+) -> TensorF {
+    let mut out = scratch.take_f(m);
     for (of, o) in out.iter_mut().enumerate() {
         let mut sum = bias[of];
         let row = of * k;
@@ -415,10 +428,10 @@ fn dense_f(x: &TensorF, m: usize, k: usize, w: &[f64], bias: &[f64]) -> TensorF 
     TensorF::new(vec![m], out)
 }
 
-fn max_pool_f(x: &TensorF, attrs: &PoolAttrs) -> TensorF {
+fn max_pool_f(x: &TensorF, attrs: &PoolAttrs, scratch: &mut Scratch) -> TensorF {
     let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
     let (oh, ow) = attrs.out_hw(h, w);
-    let mut out = vec![0f64; c * oh * ow];
+    let mut out = scratch.take_f(c * oh * ow);
     for ch in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -443,11 +456,11 @@ fn max_pool_f(x: &TensorF, attrs: &PoolAttrs) -> TensorF {
     TensorF::new(vec![c, oh, ow], out)
 }
 
-fn avg_pool_f(x: &TensorF, attrs: &PoolAttrs) -> TensorF {
+fn avg_pool_f(x: &TensorF, attrs: &PoolAttrs, scratch: &mut Scratch) -> TensorF {
     let (c, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
     let (oh, ow) = attrs.out_hw(h, w);
     let area = (attrs.kernel.0 * attrs.kernel.1) as f64;
-    let mut out = vec![0f64; c * oh * ow];
+    let mut out = scratch.take_f(c * oh * ow);
     for ch in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -552,7 +565,7 @@ impl FloatNet {
         })
     }
 
-    fn data_inputs(&self, id: NodeId) -> Vec<EdgeId> {
+    pub(super) fn data_inputs(&self, id: NodeId) -> Vec<EdgeId> {
         let g = &*self.graph;
         g.node(id)
             .inputs
@@ -564,6 +577,13 @@ impl FloatNet {
 
     /// Run the float reference, returning every activation-edge tensor.
     fn run_edges(&self, input: &[f64]) -> Result<Vec<Option<TensorF>>> {
+        self.run_edges_in(input, &mut Scratch::new())
+    }
+
+    /// [`FloatNet::run_edges`] drawing every layer buffer from a
+    /// caller-provided arena, so calibration loops reuse allocations
+    /// across vectors.
+    fn run_edges_in(&self, input: &[f64], scratch: &mut Scratch) -> Result<Vec<Option<TensorF>>> {
         let g = &*self.graph;
         let in_spec = &g.edge(self.input_edge).spec;
         if input.len() != in_spec.num_elems() {
@@ -592,7 +612,9 @@ impl FloatNet {
                     Op::Conv(_) | Op::MatMul(_) | Op::Gemm(_) => {
                         let p = &self.params[&id.0];
                         match self.kinds[id.0].as_ref().expect("linear kind resolved") {
-                            LinearKind::Conv(attrs) => conv_f(x, attrs, &p.weight, &p.bias),
+                            LinearKind::Conv(attrs) => {
+                                conv_f(x, attrs, &p.weight, &p.bias, scratch)
+                            }
                             LinearKind::Dense { m, k } => {
                                 if x.len() != *k {
                                     return Err(shape_err(
@@ -601,19 +623,30 @@ impl FloatNet {
                                         x.len().to_string(),
                                     ));
                                 }
-                                dense_f(x, *m, *k, &p.weight, &p.bias)
+                                dense_f(x, *m, *k, &p.weight, &p.bias, scratch)
                             }
                         }
                     }
                     // the reference is ideal real arithmetic: requant = identity
-                    Op::Quant(_) => x.clone(),
-                    Op::Relu => TensorF::new(
-                        x.dims.clone(),
-                        x.data.iter().map(|&v| v.max(0.0)).collect(),
-                    ),
-                    Op::MaxPool(attrs) => max_pool_f(x, attrs),
-                    Op::AvgPool(attrs) => avg_pool_f(x, attrs),
-                    Op::Flatten => TensorF::new(vec![x.len()], x.data.clone()),
+                    Op::Quant(_) => {
+                        let mut out = scratch.take_f(x.len());
+                        out.copy_from_slice(&x.data);
+                        TensorF::new(x.dims.clone(), out)
+                    }
+                    Op::Relu => {
+                        let mut out = scratch.take_f(x.len());
+                        for (o, &v) in out.iter_mut().zip(&x.data) {
+                            *o = v.max(0.0);
+                        }
+                        TensorF::new(x.dims.clone(), out)
+                    }
+                    Op::MaxPool(attrs) => max_pool_f(x, attrs, scratch),
+                    Op::AvgPool(attrs) => avg_pool_f(x, attrs, scratch),
+                    Op::Flatten => {
+                        let mut out = scratch.take_f(x.len());
+                        out.copy_from_slice(&x.data);
+                        TensorF::new(vec![x.len()], out)
+                    }
                     Op::Add => {
                         let b_edge = *ins.get(1).ok_or_else(|| {
                             unsupported(format!("Add `{}` needs two inputs", node.name))
@@ -628,10 +661,11 @@ impl FloatNet {
                                 b.len().to_string(),
                             ));
                         }
-                        TensorF::new(
-                            x.dims.clone(),
-                            x.data.iter().zip(&b.data).map(|(a, b)| a + b).collect(),
-                        )
+                        let mut out = scratch.take_f(x.len());
+                        for ((o, &a), &bb) in out.iter_mut().zip(&x.data).zip(&b.data) {
+                            *o = a + bb;
+                        }
+                        TensorF::new(x.dims.clone(), out)
                     }
                     Op::Input | Op::Output => continue,
                 }
@@ -679,10 +713,87 @@ fn weight_scales(weight: &[f64], m: usize, per_channel: bool, w_elem: ElemType) 
     }
 }
 
+/// Float-reference calibration over one slice of eval vectors: per-edge
+/// max-abs activation statistics plus the golden top-1 labels, with every
+/// layer buffer drawn from `scratch`.
+fn calibrate_chunk(
+    net: &FloatNet,
+    chunk: &[Vec<f64>],
+    scratch: &mut Scratch,
+) -> Result<(Vec<f64>, Vec<usize>)> {
+    let n_edges = net.graph.edges.len();
+    let mut edge_max_abs = vec![0.0f64; n_edges];
+    let mut ref_top1 = Vec::with_capacity(chunk.len());
+    for v in chunk {
+        let edges = net.run_edges_in(v, scratch)?;
+        for (i, t) in edges.iter().enumerate() {
+            if let Some(t) = t {
+                edge_max_abs[i] = edge_max_abs[i].max(t.max_abs());
+            }
+        }
+        let out = edges[net.output_edge.0]
+            .as_ref()
+            .ok_or_else(|| unsupported("float reference produced no output"))?;
+        ref_top1.push(out.argmax());
+        for t in edges.into_iter().flatten() {
+            scratch.recycle_f(t.data);
+        }
+    }
+    Ok((edge_max_abs, ref_top1))
+}
+
+/// Calibrate across `threads` workers. Bit-identical to the sequential
+/// pass: each vector's float run is independent, and merging per-edge
+/// maxima is an exact, order-free `f64::max` reduction.
+fn calibrate(
+    net: &FloatNet,
+    vectors: &super::accuracy::EvalVectors,
+    threads: usize,
+) -> Result<(Vec<f64>, Vec<usize>)> {
+    let inputs = &vectors.inputs;
+    let threads = threads.clamp(1, inputs.len().max(1));
+    if threads <= 1 {
+        return calibrate_chunk(net, inputs, &mut Scratch::new());
+    }
+    let chunk_len = inputs.len().div_ceil(threads);
+    let parts: Vec<Result<(Vec<f64>, Vec<usize>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = inputs
+            .chunks(chunk_len)
+            .map(|part| scope.spawn(move || calibrate_chunk(net, part, &mut Scratch::new())))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("calibration worker panicked"))
+            .collect()
+    });
+    let mut edge_max_abs = vec![0.0f64; net.graph.edges.len()];
+    let mut ref_top1 = Vec::with_capacity(inputs.len());
+    for part in parts {
+        let (m, t) = part?;
+        for (acc, v) in edge_max_abs.iter_mut().zip(&m) {
+            *acc = acc.max(*v);
+        }
+        ref_top1.extend(t);
+    }
+    Ok((edge_max_abs, ref_top1))
+}
+
 impl Executable {
     /// Lower a decorated graph into the executable integer plan, calibrating
     /// activation ranges on `vectors` through the float reference.
     pub fn lower(graph: Arc<Graph>, vectors: &super::accuracy::EvalVectors) -> Result<Executable> {
+        Self::lower_with(graph, vectors, 1)
+    }
+
+    /// [`Executable::lower`] with the calibration pass parallelized across
+    /// `threads` workers — bit-identical to the sequential lowering: each
+    /// vector's float run is independent and the per-edge range maxima
+    /// merge through exact, order-free `f64::max` reductions.
+    pub fn lower_with(
+        graph: Arc<Graph>,
+        vectors: &super::accuracy::EvalVectors,
+        threads: usize,
+    ) -> Result<Executable> {
         if vectors.inputs.is_empty() {
             return Err(unsupported("measured accuracy needs at least one eval vector"));
         }
@@ -690,20 +801,7 @@ impl Executable {
 
         // -- calibration: float reference over the eval vectors
         let n_edges = net.graph.edges.len();
-        let mut edge_max_abs = vec![0.0f64; n_edges];
-        let mut ref_top1 = Vec::with_capacity(vectors.inputs.len());
-        for v in &vectors.inputs {
-            let edges = net.run_edges(v)?;
-            for (i, t) in edges.iter().enumerate() {
-                if let Some(t) = t {
-                    edge_max_abs[i] = edge_max_abs[i].max(t.max_abs());
-                }
-            }
-            let out = edges[net.output_edge.0]
-                .as_ref()
-                .ok_or_else(|| unsupported("float reference produced no output"))?;
-            ref_top1.push(out.argmax());
-        }
+        let (edge_max_abs, ref_top1) = calibrate(&net, vectors, threads)?;
 
         // -- input quantizer (symmetric over the calibrated input range)
         let g = net.graph.clone();
@@ -905,6 +1003,18 @@ impl Executable {
     /// (per-layer outputs — the hardware-invariance property tests assert
     /// over these).
     pub fn run_int_edges(&self, input: &[f64]) -> Result<Vec<Option<TensorI>>> {
+        self.run_int_edges_in(input, &mut Scratch::new())
+    }
+
+    /// [`Executable::run_int_edges`] drawing every layer buffer from a
+    /// caller-provided [`Scratch`] arena: recycle the returned tensors'
+    /// storage back into the arena to execute many vectors without
+    /// per-layer reallocation. Bit-identical to the plain entry point.
+    pub fn run_int_edges_in(
+        &self,
+        input: &[f64],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Option<TensorI>>> {
         let g = &*self.net.graph;
         let in_spec = &g.edge(self.net.input_edge).spec;
         if input.len() != in_spec.num_elems() {
@@ -915,10 +1025,11 @@ impl Executable {
             ));
         }
         let mut edges: Vec<Option<TensorI>> = vec![None; g.edges.len()];
-        edges[self.net.input_edge.0] = Some(TensorI::new(
-            in_spec.dims.clone(),
-            input.iter().map(|&r| self.input_quant.quantize(r)).collect(),
-        ));
+        let mut input_q = scratch.take_i(input.len());
+        for (o, &r) in input_q.iter_mut().zip(input) {
+            *o = self.input_quant.quantize(r);
+        }
+        edges[self.net.input_edge.0] = Some(TensorI::new(in_spec.dims.clone(), input_q));
         for &id in &self.net.order {
             let node = g.node(id);
             let Some(out_edge) = g.output_edge(id).map(|e| e.id) else {
@@ -943,7 +1054,7 @@ impl Executable {
                                     format!("{:?}", x.dims),
                                 ));
                             }
-                            conv_int(x, attrs, &l.wq, &l.bias_q, l.acc, l.lut.as_ref())
+                            conv_int(x, attrs, &l.wq, &l.bias_q, l.acc, l.lut.as_ref(), scratch)
                         }
                         LinearKind::Dense { m, k } => {
                             if x.len() != *k {
@@ -953,21 +1064,28 @@ impl Executable {
                                     x.len().to_string(),
                                 ));
                             }
-                            dense_int(x, *m, *k, &l.wq, &l.bias_q, l.acc, l.lut.as_ref())
+                            dense_int(x, (*m, *k), &l.wq, &l.bias_q, l.acc, l.lut.as_ref(), scratch)
                         }
                     },
-                    Lowered::Requant(rq) => requant_int(x, rq),
-                    Lowered::Relu => TensorI::new(
-                        x.dims.clone(),
-                        x.data.iter().map(|&v| v.max(0)).collect(),
-                    ),
-                    Lowered::MaxPool(attrs) => max_pool_int(x, attrs),
-                    Lowered::AvgPool(attrs, elem) => avg_pool_int(x, attrs, *elem),
-                    Lowered::Flatten => TensorI::new(vec![x.len()], x.data.clone()),
+                    Lowered::Requant(rq) => requant_int(x, rq, scratch),
+                    Lowered::Relu => {
+                        let mut out = scratch.take_i(x.len());
+                        for (o, &v) in out.iter_mut().zip(&x.data) {
+                            *o = v.max(0);
+                        }
+                        TensorI::new(x.dims.clone(), out)
+                    }
+                    Lowered::MaxPool(attrs) => max_pool_int(x, attrs, scratch),
+                    Lowered::AvgPool(attrs, elem) => avg_pool_int(x, attrs, *elem, scratch),
+                    Lowered::Flatten => {
+                        let mut out = scratch.take_i(x.len());
+                        out.copy_from_slice(&x.data);
+                        TensorI::new(vec![x.len()], out)
+                    }
                     Lowered::Add {
                         a_rescale,
                         b_rescale,
-                        out,
+                        out: to,
                     } => {
                         let b_edge = *ins.get(1).ok_or_else(|| {
                             unsupported(format!("Add `{}` needs two inputs", node.name))
@@ -982,16 +1100,11 @@ impl Executable {
                                 b.len().to_string(),
                             ));
                         }
-                        TensorI::new(
-                            x.dims.clone(),
-                            x.data
-                                .iter()
-                                .zip(&b.data)
-                                .map(|(&a, &bb)| {
-                                    out.clamp(a_rescale.apply(a) + b_rescale.apply(bb))
-                                })
-                                .collect(),
-                        )
+                        let mut out = scratch.take_i(x.len());
+                        for ((o, &a), &bb) in out.iter_mut().zip(&x.data).zip(&b.data) {
+                            *o = to.clamp(a_rescale.apply(a) + b_rescale.apply(bb));
+                        }
+                        TensorI::new(x.dims.clone(), out)
                     }
                 }
             };
@@ -1002,10 +1115,23 @@ impl Executable {
 
     /// Run the integer plan and return the network output tensor.
     pub fn run_int(&self, input: &[f64]) -> Result<TensorI> {
-        let mut edges = self.run_int_edges(input)?;
-        edges[self.net.output_edge.0]
+        self.run_int_in(input, &mut Scratch::new())
+    }
+
+    /// [`Executable::run_int`] drawing every layer buffer from a
+    /// caller-provided [`Scratch`] arena. Intermediate edge storage is
+    /// recycled back into the arena before returning, so a loop over many
+    /// vectors reuses the same allocations. Bit-identical to
+    /// [`Executable::run_int`].
+    pub fn run_int_in(&self, input: &[f64], scratch: &mut Scratch) -> Result<TensorI> {
+        let mut edges = self.run_int_edges_in(input, scratch)?;
+        let out = edges[self.net.output_edge.0]
             .take()
-            .ok_or_else(|| unsupported("integer plan produced no output"))
+            .ok_or_else(|| unsupported("integer plan produced no output"))?;
+        for t in edges.into_iter().flatten() {
+            scratch.recycle_i(t.data);
+        }
+        Ok(out)
     }
 
     /// Run the float reference and return the network output tensor.
@@ -1039,7 +1165,7 @@ mod tests {
         // 1x1 conv, weight 2, bias 1: y = 2x + 1
         let x = TensorI::new(vec![1, 2, 2], vec![1, -3, 5, 0]);
         let attrs = ConvAttrs::standard(1, 1, 1, 0);
-        let y = conv_int(&x, &attrs, &[2], &[1], ElemType::int(32), None);
+        let y = conv_int(&x, &attrs, &[2], &[1], ElemType::int(32), None, &mut Scratch::new());
         assert_eq!(y.dims, vec![1, 2, 2]);
         assert_eq!(y.data, vec![3, -5, 11, 1]);
     }
@@ -1051,9 +1177,9 @@ mod tests {
         let w: Vec<i64> = (0..36).map(|i| (i % 5) - 2).collect();
         let bias = vec![1, -1];
         let acc = ElemType::int(16);
-        let plain = conv_int(&x, &attrs, &w, &bias, acc, None);
+        let plain = conv_int(&x, &attrs, &w, &bias, acc, None, &mut Scratch::new());
         let lut = MulLut::build(ElemType::int(4), ElemType::int(4), acc);
-        let via_lut = conv_int(&x, &attrs, &w, &bias, acc, Some(&lut));
+        let via_lut = conv_int(&x, &attrs, &w, &bias, acc, Some(&lut), &mut Scratch::new());
         assert_eq!(plain, via_lut);
     }
 
@@ -1062,7 +1188,15 @@ mod tests {
         // 2 channels, 1x1 depthwise, weights [10, 100]
         let x = TensorI::new(vec![2, 1, 1], vec![3, 5]);
         let attrs = ConvAttrs::depthwise(2, 1, 1, 0);
-        let y = conv_int(&x, &attrs, &[10, 100], &[0, 0], ElemType::int(32), None);
+        let y = conv_int(
+            &x,
+            &attrs,
+            &[10, 100],
+            &[0, 0],
+            ElemType::int(32),
+            None,
+            &mut Scratch::new(),
+        );
         assert_eq!(y.data, vec![30, 500]);
     }
 
@@ -1070,14 +1204,30 @@ mod tests {
     fn dense_int_known_values() {
         let x = TensorI::new(vec![3], vec![1, 2, 3]);
         // w = [[1,0,-1],[2,2,2]]
-        let y = dense_int(&x, 2, 3, &[1, 0, -1, 2, 2, 2], &[5, 0], ElemType::int(32), None);
+        let y = dense_int(
+            &x,
+            (2, 3),
+            &[1, 0, -1, 2, 2, 2],
+            &[5, 0],
+            ElemType::int(32),
+            None,
+            &mut Scratch::new(),
+        );
         assert_eq!(y.data, vec![1 - 3 + 5, 2 + 4 + 6]);
     }
 
     #[test]
     fn accumulator_saturates() {
         let x = TensorI::new(vec![2], vec![100, 100]);
-        let y = dense_int(&x, 1, 2, &[100, 100], &[0], ElemType::int(16), None);
+        let y = dense_int(
+            &x,
+            (1, 2),
+            &[100, 100],
+            &[0],
+            ElemType::int(16),
+            None,
+            &mut Scratch::new(),
+        );
         assert_eq!(y.data, vec![ElemType::int(16).max_value()]);
     }
 
@@ -1085,12 +1235,15 @@ mod tests {
     fn pools_known_values() {
         let x = TensorI::new(vec![1, 2, 2], vec![1, 4, -2, 3]);
         let attrs = PoolAttrs::square(2, 2);
-        assert_eq!(max_pool_int(&x, &attrs).data, vec![4]);
+        assert_eq!(max_pool_int(&x, &attrs, &mut Scratch::new()).data, vec![4]);
         // avg: (1+4-2+3)/4 = 1.5 -> ties away -> 2
-        assert_eq!(avg_pool_int(&x, &attrs, ElemType::int(8)).data, vec![2]);
+        assert_eq!(avg_pool_int(&x, &attrs, ElemType::int(8), &mut Scratch::new()).data, vec![2]);
         let neg = TensorI::new(vec![1, 2, 2], vec![-1, -4, 2, -3]);
         // (-1-4+2-3)/4 = -1.5 -> -2
-        assert_eq!(avg_pool_int(&neg, &attrs, ElemType::int(8)).data, vec![-2]);
+        assert_eq!(
+            avg_pool_int(&neg, &attrs, ElemType::int(8), &mut Scratch::new()).data,
+            vec![-2]
+        );
     }
 
     #[test]
@@ -1105,6 +1258,7 @@ mod tests {
                 kind: RequantKind::Dyadic(vec![DyadicScale::fit(f, 31)]),
                 out,
             },
+            &mut Scratch::new(),
         );
         let tr = requant_int(
             &x,
@@ -1116,6 +1270,7 @@ mod tests {
                 )]),
                 out,
             },
+            &mut Scratch::new(),
         );
         assert_eq!(dy, tr);
         assert_eq!(dy.data, vec![-2, -2, 2, 6]);
@@ -1131,6 +1286,6 @@ mod tests {
             ]),
             out: ElemType::int(8),
         };
-        assert_eq!(requant_int(&x, &rq).data, vec![50, 25]);
+        assert_eq!(requant_int(&x, &rq, &mut Scratch::new()).data, vec![50, 25]);
     }
 }

@@ -18,13 +18,23 @@
 //! evolutionary search exploits the vector-set half of the key for its
 //! successive-halving budget ([`EvalVectors::truncated`]): screen-tier and
 //! full-tier measurements coexist in one cache.
+//!
+//! Two execution paths produce bit-identical results: the scalar
+//! reference interpreter ([`interp`], one vector at a time — the golden
+//! path) and the data-oriented batched executor ([`batch`], im2col GEMM
+//! kernels over SoA vector batches with `std::thread::scope` workers —
+//! the fast path [`measure`]/[`measure_batched`] and the DSE accuracy
+//! stage run on). Both draw their layer buffers from a caller-provided
+//! [`Scratch`] arena instead of reallocating per layer per vector.
 
 pub mod accuracy;
+pub mod batch;
 pub mod interp;
 pub mod params;
 pub mod tensor;
 
-pub use accuracy::{measure, EvalVectors, MeasuredAccuracy};
+pub use accuracy::{measure, measure_batched, measure_scalar, EvalVectors, MeasuredAccuracy};
+pub use batch::BatchI;
 pub use interp::{Calibration, Executable, Scale};
 pub use params::{synthesize, NodeParams};
-pub use tensor::{TensorF, TensorI};
+pub use tensor::{Scratch, TensorF, TensorI};

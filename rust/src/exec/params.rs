@@ -9,6 +9,11 @@
 //! candidate of the same topology (int8 vs int4 vs int2, im2col vs LUT)
 //! is measured against the *same* teacher — accuracy differences across
 //! DSE candidates then reflect the deployed arithmetic, nothing else.
+//!
+//! The teacher is also shared across every eval vector of a batch: the
+//! batched executor ([`super::batch`]) quantizes and packs each linear
+//! node's weights once at lowering and reuses the packed rows for all
+//! vectors of the configuration.
 
 use crate::graph::ir::{Graph, Op};
 use crate::util::{Prng, StableHasher};

@@ -85,6 +85,62 @@ impl TensorF {
     }
 }
 
+/// Caller-provided buffer arena for the interpreter: layer outputs are
+/// drawn from (and recycled back into) pooled allocations, so a
+/// measurement loop over many eval vectors reuses the same backing memory
+/// instead of reallocating every layer of every vector. Buffers handed out
+/// by `take_*` are zero-filled, making the arena behaviorally identical to
+/// fresh `vec![0; len]` allocations (asserted by the exec test suite).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    ints: Vec<Vec<i64>>,
+    floats: Vec<Vec<f64>>,
+}
+
+impl Scratch {
+    /// An empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled `i64` buffer of `len` elements, reusing a recycled
+    /// allocation when one is pooled.
+    pub fn take_i(&mut self, len: usize) -> Vec<i64> {
+        let mut buf = self.ints.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0);
+        buf
+    }
+
+    /// A zero-filled `f64` buffer of `len` elements, reusing a recycled
+    /// allocation when one is pooled.
+    pub fn take_f(&mut self, len: usize) -> Vec<f64> {
+        let mut buf = self.floats.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return an integer buffer's allocation to the pool.
+    pub fn recycle_i(&mut self, buf: Vec<i64>) {
+        if buf.capacity() > 0 {
+            self.ints.push(buf);
+        }
+    }
+
+    /// Return a float buffer's allocation to the pool.
+    pub fn recycle_f(&mut self, buf: Vec<f64>) {
+        if buf.capacity() > 0 {
+            self.floats.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled (diagnostic/test aid).
+    pub fn pooled(&self) -> usize {
+        self.ints.len() + self.floats.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +165,26 @@ mod tests {
         let t = TensorI::new(vec![2, 3], vec![0; 6]);
         assert_eq!(t.len(), 6);
         assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn scratch_reuses_allocations_and_zero_fills() {
+        let mut s = Scratch::new();
+        let mut a = s.take_i(8);
+        a.copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        s.recycle_i(a);
+        assert_eq!(s.pooled(), 1);
+        // a larger request still reuses the allocation and is zeroed
+        let b = s.take_i(4);
+        assert_eq!(b, vec![0; 4]);
+        assert_eq!(b.as_ptr(), ptr);
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(s.pooled(), 0);
+        let f = s.take_f(3);
+        assert_eq!(f, vec![0.0; 3]);
+        s.recycle_f(f);
+        assert_eq!(s.pooled(), 1);
     }
 }

@@ -48,6 +48,7 @@ USAGE:
                   [--out model.qonnx.json]
   aladin eval     [--model case1|case2|case3|lenet|<file.qonnx.json>]
                   [--impl-config <file.yaml>] [--vectors <n>]
+                  [--threads <n>] [--scalar]
                   [--width-mult <f64>] [--json] [--out <file.json>]
   aladin accuracy [--artifacts <dir>] [--json]
   aladin screen   --deadline-ms <f64> [--width-mult <f64>]
@@ -667,14 +668,27 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .ok_or_else(|| io_err("model has no input edge".into()))?;
     let n = args.get_parsed::<usize>("vectors").map_err(io_err)?.unwrap_or(64);
     let vectors = aladin::exec::EvalVectors::synthetic(models::EVAL_VECTOR_SEED, dims, n);
+    let threads = args
+        .get_parsed::<usize>("threads")
+        .map_err(io_err)?
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    let scalar = args.flag("scalar");
 
     let t0 = std::time::Instant::now();
-    let report = aladin::exec::measure(decorated, &vectors)?;
+    let report = if scalar {
+        aladin::exec::measure_scalar(decorated, &vectors)?
+    } else {
+        aladin::exec::measure_batched(decorated, &vectors, threads)?
+    };
     let secs = t0.elapsed().as_secs_f64();
     let doc = report
         .to_json()
         .with("eval_seconds", secs)
-        .with("vectors_per_sec", report.n as f64 / secs.max(1e-12));
+        .with("vectors_per_sec", report.n as f64 / secs.max(1e-12))
+        .with("path", if scalar { "scalar" } else { "batched" })
+        .with("threads", if scalar { 1 } else { threads });
 
     if let Some(path) = args.get("out") {
         std::fs::write(path, doc.to_string_pretty())?;
@@ -689,10 +703,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
         report.matches, report.n, report.accuracy
     );
     println!(
-        "output fingerprint {:016x}  ({:.1} vectors/sec, {:.3} s total)",
+        "output fingerprint {:016x}  ({:.1} vectors/sec, {:.3} s total, {})",
         report.output_fingerprint,
         report.n as f64 / secs.max(1e-12),
-        secs
+        secs,
+        if scalar {
+            "scalar path".to_string()
+        } else {
+            format!("batched path, {threads} threads")
+        }
     );
     if let Some(path) = args.get("out") {
         println!("wrote {path}");

@@ -1,0 +1,307 @@
+//! Property and edge-case tests for the batched im2col/GEMM executor:
+//! bit-identity of the batched path against the scalar reference on random
+//! graphs, shapes, bit-widths and thread counts; pinned kernels for grouped
+//! convolution, asymmetric padding, stride > 1 and avg-pool shift rounding;
+//! scratch-arena reuse; and thread-count invariance of the DSE accuracy
+//! stage.
+
+use aladin::dse::{DesignVector, EvalEngine};
+use aladin::exec::{
+    measure, measure_batched, measure_scalar, EvalVectors, Executable, Scratch, TensorI,
+};
+use aladin::graph::builder::GraphBuilder;
+use aladin::graph::ir::{ConvAttrs, Graph, PoolAttrs};
+use aladin::graph::tensor::{ElemType, TensorSpec};
+use aladin::impl_aware::{decorate, ImplConfig};
+use aladin::models::{self, BlockConfig, BlockImpl};
+use aladin::platform::presets;
+use aladin::util::prng::check_property;
+use std::sync::Arc;
+
+fn dec(g: Graph) -> Arc<Graph> {
+    Arc::new(decorate(g, &ImplConfig::default()).unwrap())
+}
+
+fn scalar_outputs(exe: &Executable, vectors: &EvalVectors) -> Vec<TensorI> {
+    let mut scratch = Scratch::new();
+    vectors
+        .inputs
+        .iter()
+        .map(|v| exe.run_int_in(v, &mut scratch).unwrap())
+        .collect()
+}
+
+/// Assert the batched path reproduces the scalar reference bit-for-bit at
+/// every requested thread count — per-vector output tensors (shape and
+/// data) and the full measured-accuracy record (fingerprint, matches).
+/// Returns the scalar record's accuracy (integer-vs-float top-1 agreement)
+/// so callers can additionally assert a fidelity floor.
+fn assert_paths_agree(g: &Arc<Graph>, vectors: &EvalVectors, threads: &[usize]) -> f64 {
+    let exe = Executable::lower(g.clone(), vectors).unwrap();
+    let scalar = scalar_outputs(&exe, vectors);
+    let rs = measure_scalar(g.clone(), vectors).unwrap();
+    for &t in threads {
+        let batched = exe.run_int_batched_outputs(&vectors.inputs, t).unwrap();
+        assert_eq!(scalar, batched, "per-vector outputs diverged at {t} threads");
+        let rb = measure_batched(g.clone(), vectors, t).unwrap();
+        assert_eq!(
+            rs.output_fingerprint, rb.output_fingerprint,
+            "record fingerprint diverged at {t} threads"
+        );
+        assert_eq!(rs.matches, rb.matches, "top-1 matches diverged at {t} threads");
+        assert_eq!(rs.n, rb.n);
+    }
+    rs.accuracy
+}
+
+/// A small conv net around one convolution of interest: conv -> relu ->
+/// per-tensor int8 requant -> optional pool -> flatten -> 5-way classifier.
+fn conv_edge_net(conv: ConvAttrs, pool: Option<(PoolAttrs, bool)>) -> Arc<Graph> {
+    let w = ElemType::int(8);
+    let mut b = GraphBuilder::new(
+        "edge_net",
+        TensorSpec::chw(4, 8, 8, ElemType::int(8)),
+        ElemType::int(32),
+    );
+    b.conv("c0", conv, w).relu("r0").quant("q0", ElemType::int(8), false);
+    if let Some((attrs, avg)) = pool {
+        if avg {
+            b.avg_pool("ap", attrs);
+        } else {
+            b.max_pool("mp", attrs);
+        }
+    }
+    b.flatten("fl").gemm("fc", 5, w).quant("q_out", ElemType::int(8), false);
+    dec(b.finish())
+}
+
+/// Property: on random sequential conv nets (random input shape, kernel /
+/// stride / padding geometry, optional grouped second conv, optional pool,
+/// 4- or 8-bit weights, per-tensor or per-channel requant) the batched
+/// executor is bit-identical to the scalar reference at a random thread
+/// count, and the measured-accuracy records carry the same fingerprint.
+#[test]
+fn prop_batched_bit_identical_on_random_nets() {
+    check_property("batched_vs_scalar", 6, |rng| {
+        let bits = *rng.choice(&[4u8, 8]);
+        let wt = ElemType::int(bits);
+        let cin = rng.range(2, 4);
+        let h = rng.range(7, 12);
+        let w = rng.range(7, 12);
+        let mut b = GraphBuilder::new(
+            "prop_net",
+            TensorSpec::chw(cin, h, w, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        let c0 = ConvAttrs {
+            out_channels: 4,
+            kernel: (rng.range(1, 3), rng.range(1, 3)),
+            stride: (rng.range(1, 2), rng.range(1, 2)),
+            padding: (rng.range(0, 1), rng.range(0, 1)),
+            groups: 1,
+        };
+        b.conv("c0", c0, wt).relu("r0").quant("q0", wt, rng.chance(0.5));
+        if rng.chance(0.6) {
+            let c1 = ConvAttrs {
+                out_channels: 4,
+                kernel: (rng.range(1, 2), rng.range(1, 2)),
+                stride: (1, 1),
+                padding: (rng.range(0, 1), rng.range(0, 1)),
+                groups: *rng.choice(&[1usize, 2, 4]),
+            };
+            b.conv("c1", c1, wt).relu("r1").quant("q1", wt, rng.chance(0.5));
+        }
+        // flatten needs a per-tensor scale, so requant to plain int8 first
+        b.quant("q_flat", ElemType::int(8), false);
+        let dims = b.cur_spec().dims.clone();
+        if dims[1] >= 2 && dims[2] >= 2 && rng.chance(0.5) {
+            if rng.chance(0.5) {
+                b.max_pool("mp", PoolAttrs::square(2, 2));
+            } else {
+                b.avg_pool("ap", PoolAttrs::square(2, 2));
+            }
+        }
+        b.flatten("fl").gemm("fc", rng.range(3, 7), wt).quant("q_out", ElemType::int(8), false);
+        let g = dec(b.finish());
+        let vectors = EvalVectors::synthetic(rng.next_u64(), vec![cin, h, w], rng.range(2, 6));
+        let threads = rng.range(1, 4);
+        assert_paths_agree(&g, &vectors, &[threads]);
+    });
+}
+
+#[test]
+fn grouped_and_depthwise_conv_bit_identical_and_faithful() {
+    let vectors = EvalVectors::synthetic(21, vec![4, 8, 8], 8);
+    let grouped = ConvAttrs {
+        out_channels: 6,
+        kernel: (3, 3),
+        stride: (1, 1),
+        padding: (1, 1),
+        groups: 2,
+    };
+    let acc = assert_paths_agree(&conv_edge_net(grouped, None), &vectors, &[1, 3]);
+    assert!(acc >= 0.5, "grouped-conv int8 fidelity {acc} below floor");
+    let dw = ConvAttrs::depthwise(4, 3, 1, 1);
+    let acc = assert_paths_agree(&conv_edge_net(dw, None), &vectors, &[1, 3]);
+    assert!(acc >= 0.5, "depthwise-conv int8 fidelity {acc} below floor");
+}
+
+#[test]
+fn asymmetric_padding_bit_identical_and_faithful() {
+    let vectors = EvalVectors::synthetic(22, vec![4, 8, 8], 8);
+    for padding in [(2, 0), (0, 1)] {
+        let conv = ConvAttrs {
+            out_channels: 5,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding,
+            groups: 1,
+        };
+        let acc = assert_paths_agree(&conv_edge_net(conv, None), &vectors, &[1, 3]);
+        assert!(acc >= 0.5, "padding {padding:?} int8 fidelity {acc} below floor");
+    }
+}
+
+#[test]
+fn strided_conv_bit_identical_and_faithful() {
+    let vectors = EvalVectors::synthetic(23, vec![4, 8, 8], 8);
+    for stride in [(2, 2), (2, 1)] {
+        let conv = ConvAttrs {
+            out_channels: 4,
+            kernel: (3, 3),
+            stride,
+            padding: (1, 1),
+            groups: 1,
+        };
+        let acc = assert_paths_agree(&conv_edge_net(conv, None), &vectors, &[1, 3]);
+        assert!(acc >= 0.5, "stride {stride:?} int8 fidelity {acc} below floor");
+    }
+}
+
+#[test]
+fn padded_pools_bit_identical_and_faithful() {
+    let vectors = EvalVectors::synthetic(24, vec![4, 8, 8], 8);
+    let conv = ConvAttrs::standard(4, 3, 1, 1);
+    let attrs = PoolAttrs {
+        kernel: (3, 3),
+        stride: (2, 2),
+        padding: (1, 0),
+    };
+    for avg in [true, false] {
+        let g = conv_edge_net(conv.clone(), Some((attrs.clone(), avg)));
+        let acc = assert_paths_agree(&g, &vectors, &[1, 3]);
+        assert!(acc >= 0.5, "padded pool (avg={avg}) int8 fidelity {acc} below floor");
+    }
+}
+
+/// Pinned avg-pool rounding: the shift-style division rounds ties away
+/// from zero in both directions, identically on both paths. The input is
+/// constructed so the 4-tap window sums to 130 -> 130/4 = 32.5 -> 33 (and
+/// the negated vector to -33).
+#[test]
+fn avg_pool_shift_rounding_ties_away_pinned() {
+    let mut b = GraphBuilder::new(
+        "avg_tie",
+        TensorSpec::chw(1, 2, 2, ElemType::int(8)),
+        ElemType::int(32),
+    );
+    b.avg_pool("ap", PoolAttrs::square(2, 2));
+    let g = dec(b.finish());
+    let v0 = vec![1.0, 4.0 / 127.0, -2.0 / 127.0, 1.0 / 127.0];
+    let v1: Vec<f64> = v0.iter().map(|x| -x).collect();
+    let vectors = EvalVectors {
+        dims: vec![1, 2, 2],
+        inputs: vec![v0, v1],
+        seed: 0,
+    };
+    let exe = Executable::lower(g, &vectors).unwrap();
+    let q: Vec<i64> =
+        vectors.inputs[0].iter().map(|&r| exe.input_quant().quantize(r)).collect();
+    assert_eq!(q, vec![127, 4, -2, 1], "input quantization drifted; tie setup invalid");
+    let out0 = exe.run_int(&vectors.inputs[0]).unwrap();
+    assert_eq!(out0.dims, vec![1, 1, 1]);
+    assert_eq!(out0.data, vec![33], "tie 32.5 must round away from zero");
+    let out1 = exe.run_int(&vectors.inputs[1]).unwrap();
+    assert_eq!(out1.data, vec![-33], "tie -32.5 must round away from zero");
+    let batched = exe.run_int_batched_outputs(&vectors.inputs, 2).unwrap();
+    assert_eq!(batched, vec![out0, out1]);
+}
+
+/// The caller-provided scratch arena changes allocation behavior only:
+/// outputs through a reused arena are bit-identical to fresh-allocation
+/// runs, and the arena actually pools buffers between vectors.
+#[test]
+fn scratch_arena_reuse_is_bit_identical() {
+    let (g, cfg) = models::lenet(8, (3, 32, 32), 10);
+    let g = Arc::new(decorate(g, &cfg).unwrap());
+    let vectors = models::lenet_vectors(4);
+    let exe = Executable::lower(g, &vectors).unwrap();
+    let mut scratch = Scratch::new();
+    for v in &vectors.inputs {
+        let fresh = exe.run_int(v).unwrap();
+        let pooled = exe.run_int_in(v, &mut scratch).unwrap();
+        assert_eq!(fresh, pooled, "arena reuse changed the output");
+    }
+    assert!(scratch.pooled() > 0, "arena never recycled a buffer");
+}
+
+#[test]
+fn measure_parity_across_bit_widths_and_threads() {
+    let vectors = models::lenet_vectors(6);
+    for bits in [8u8, 4, 2] {
+        let (g, cfg) = models::lenet(bits, (3, 32, 32), 10);
+        let g = Arc::new(decorate(g, &cfg).unwrap());
+        let rs = measure_scalar(g.clone(), &vectors).unwrap();
+        for t in [1usize, 4] {
+            let rb = measure_batched(g.clone(), &vectors, t).unwrap();
+            assert_eq!(
+                rs.output_fingerprint, rb.output_fingerprint,
+                "bits={bits} threads={t}"
+            );
+            assert_eq!(rs.matches, rb.matches, "bits={bits} threads={t}");
+        }
+        // the default entry point is the single-threaded batched path
+        let rm = measure(g, &vectors).unwrap();
+        assert_eq!(rs.output_fingerprint, rm.output_fingerprint, "bits={bits}");
+    }
+}
+
+/// The LUT implementation (materialized multiplication tables, LUT
+/// requant) goes through the same batched kernels: a MobileNet with every
+/// block on the LUT path agrees with the scalar reference.
+#[test]
+fn mobilenet_lut_blocks_bit_identical() {
+    let mut case = models::case2();
+    case.width_mult = 0.25;
+    case.pilot = BlockConfig::new(4, BlockImpl::Lut);
+    case.classifier = BlockConfig::new(4, BlockImpl::Lut);
+    for b in case.blocks.iter_mut() {
+        *b = BlockConfig::new(4, BlockImpl::Lut);
+    }
+    let (g, cfg) = case.build();
+    let g = Arc::new(decorate(g, &cfg).unwrap());
+    let vectors = models::cifar_vectors(2);
+    let rs = measure_scalar(g.clone(), &vectors).unwrap();
+    let rb = measure_batched(g, &vectors, 4).unwrap();
+    assert_eq!(rs.output_fingerprint, rb.output_fingerprint);
+    assert_eq!(rs.matches, rb.matches);
+}
+
+/// The DSE accuracy stage runs on the batched path; its record must not
+/// depend on the engine's worker-thread count (the cache key is
+/// (quant axis, vector set) — thread count never enters it).
+#[test]
+fn engine_accuracy_invariant_across_thread_counts() {
+    let mut case = models::case2();
+    case.width_mult = 0.25;
+    let vectors = Arc::new(models::cifar_vectors(2));
+    let mut records = Vec::new();
+    for threads in [1usize, 3] {
+        let engine = EvalEngine::for_mobilenet(case.clone(), presets::gap8())
+            .with_measured_accuracy(vectors.clone())
+            .with_threads(threads);
+        let r = engine.evaluate(&DesignVector::of_hw(4, 320)).unwrap();
+        records.push((r.accuracy.unwrap().to_bits(), r.accuracy_fingerprint.unwrap()));
+    }
+    assert_eq!(records[0], records[1], "accuracy record depends on engine thread count");
+}
