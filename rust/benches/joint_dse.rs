@@ -22,6 +22,7 @@ use aladin::impl_aware::decorate;
 use aladin::models;
 use aladin::models::BlockImpl;
 use aladin::platform::presets;
+use aladin::sim::BackendKind;
 use aladin::util::bench::{bench, BenchStats};
 use aladin::util::json::Value;
 use aladin::util::prng::Prng;
@@ -138,6 +139,7 @@ fn main() {
         n_blocks: 10,
         cores: space.cores.clone(),
         l2_kb: space.l2_kb.clone(),
+        backends: vec![],
     };
     let evo_cfg_small = EvoConfig {
         population: 24,
@@ -156,8 +158,8 @@ fn main() {
     let evo_small_rate = evo_small.evaluations as f64 / evo_small_bench.median.as_secs_f64();
 
     // shared normalization so the two hypervolumes are comparable
-    let exh_pts: Vec<[f64; 3]> = joint.records.iter().map(objectives).collect();
-    let evo_pts: Vec<[f64; 3]> = evo_small.records.iter().map(objectives).collect();
+    let exh_pts: Vec<[f64; 4]> = joint.records.iter().map(objectives).collect();
+    let evo_pts: Vec<[f64; 4]> = evo_small.records.iter().map(objectives).collect();
     let mut union = exh_pts.clone();
     union.extend(evo_pts);
     let exh_hv = normalized_front_hypervolume(&union, &joint.front);
@@ -177,6 +179,7 @@ fn main() {
         n_blocks: 10,
         cores: vec![2, 4, 8],
         l2_kb: vec![256, 320, 512],
+        backends: vec![],
     };
     // big_space has 54 uniform seed genomes (3 bits x 2 impls x 9 hw), so
     // the budget must exceed 54 or generation 0 exhausts it before any
@@ -193,7 +196,7 @@ fn main() {
     let evo_big = evolve(&engine, &big_space, &evo_cfg_big).unwrap();
     let big_secs = t0.elapsed().as_secs_f64();
     let evo_big_rate = evo_big.evaluations as f64 / big_secs.max(1e-12);
-    let big_pts: Vec<[f64; 3]> = evo_big.records.iter().map(objectives).collect();
+    let big_pts: Vec<[f64; 4]> = evo_big.records.iter().map(objectives).collect();
     let big_hv = normalized_front_hypervolume(&big_pts, &evo_big.front);
     println!(
         "evo on {:.3e}-point space: {} evals in {big_secs:.2}s ({evo_big_rate:.2} cand/s), \
@@ -215,6 +218,7 @@ fn main() {
         n_blocks: 10,
         cores: vec![2, 4, 8],
         l2_kb: vec![256, 320, 512],
+        backends: vec![],
     };
     let chain_len = if tiny { 8 } else { 16 };
     let mut rng = Prng::new(41);
@@ -223,7 +227,7 @@ fn main() {
         8,
         BlockImpl::Im2col,
         10,
-        Some(HwAxis { cores: 8, l2_kb: 512 }),
+        Some(HwAxis { cores: 8, l2_kb: 512, backend: None }),
     ));
     while chain.len() <= chain_len {
         let mut next = chain.last().unwrap().clone();
@@ -310,6 +314,58 @@ fn main() {
             );
         std::fs::write(&path, doc.to_string_pretty()).expect("write search bench json");
         println!("wrote search bench timings to {path}");
+    }
+
+    // (f) backend matrix: the Fig. 7 grid under each hardware backend, one
+    // shared decorated graph and a per-backend platform clone — the same
+    // split `aladin dse --backend all` performs. Headline per backend: the
+    // best-latency grid point and its modeled energy.
+    if let Ok(path) = std::env::var("BENCH_BACKENDS_JSON_OUT") {
+        println!("\n=== backend matrix: Fig. 7 grid per hardware backend ===");
+        let decorated = decorate(g.clone(), &cfg).unwrap();
+        let mut rows = Vec::new();
+        for kind in BackendKind::all() {
+            let mut platform = presets::gap8();
+            platform.backend = kind;
+            let engine = EvalEngine::for_decorated(decorated.clone(), platform.clone());
+            let t0 = std::time::Instant::now();
+            let points = GridSearch::fig7(platform).run_on(&engine).unwrap();
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = engine.stats();
+            let best = points
+                .iter()
+                .min_by_key(|p| p.total_cycles)
+                .expect("fig7 grid is non-empty");
+            println!(
+                "{:<11} {} points in {secs:.2}s — best {}c/{}kB: {} cycles, {:.3} ms, {:.1} uJ",
+                kind.label(),
+                points.len(),
+                best.cores,
+                best.l2_kb,
+                best.total_cycles,
+                best.latency_s * 1e3,
+                best.energy_nj / 1e3
+            );
+            rows.push(
+                Value::obj()
+                    .with("backend", kind.label())
+                    .with("grid_points", points.len())
+                    .with("grid_secs", secs)
+                    .with("best_cores", best.cores)
+                    .with("best_l2_kb", best.l2_kb)
+                    .with("best_total_cycles", best.total_cycles)
+                    .with("best_latency_s", best.latency_s)
+                    .with("best_energy_nj", best.energy_nj)
+                    .with("cache_stats", stats.to_json()),
+            );
+        }
+        let doc = Value::obj()
+            .with("bench", "backend_matrix")
+            .with("tiny", tiny)
+            .with("width_mult", case.width_mult)
+            .with("backends", Value::Arr(rows));
+        std::fs::write(&path, doc.to_string_pretty()).expect("write backend bench json");
+        println!("wrote backend matrix to {path}");
     }
 
     if let Ok(path) = std::env::var("BENCH_JSON_OUT") {

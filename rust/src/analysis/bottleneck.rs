@@ -89,6 +89,10 @@ pub fn classify(sim: &SimResult) -> Vec<LayerBottleneck> {
 #[derive(Debug, Clone)]
 pub struct BottleneckReport {
     pub layers: Vec<LayerBottleneck>,
+    /// Label of the hardware backend that produced the simulation — the
+    /// exposed-cycle identity holds across all of them, so reports from
+    /// different backends are directly comparable.
+    pub backend: String,
     pub total_cycles: u64,
     pub total_compute_cycles: u64,
     pub total_exposed_dma_l1_cycles: u64,
@@ -99,6 +103,7 @@ impl BottleneckReport {
     pub fn from_sim(sim: &SimResult) -> Self {
         let layers = classify(sim);
         BottleneckReport {
+            backend: sim.backend.clone(),
             total_cycles: sim.total_cycles(),
             total_compute_cycles: layers.iter().map(|l| l.compute_cycles).sum(),
             total_exposed_dma_l1_cycles: layers.iter().map(|l| l.exposed_dma_l1_cycles).sum(),
@@ -145,6 +150,7 @@ impl crate::util::ToJson for LayerBottleneck {
 impl crate::util::ToJson for BottleneckReport {
     fn to_json(&self) -> crate::util::Value {
         crate::util::Value::obj()
+            .with("backend", self.backend.clone())
             .with("total_cycles", self.total_cycles)
             .with("total_compute_cycles", self.total_compute_cycles)
             .with("total_exposed_dma_l1_cycles", self.total_exposed_dma_l1_cycles)
@@ -253,6 +259,7 @@ mod tests {
         let report = BottleneckReport::from_sim(&sim(64, 8, 512));
         let v = report.to_json();
         assert!(v.get("dominant").is_some());
+        assert_eq!(v.str_field("backend"), Some("scratchpad"));
         assert_eq!(
             v.get("layers").unwrap().as_arr().unwrap().len(),
             report.layers.len()

@@ -27,7 +27,7 @@ use crate::impl_aware::{
 };
 use crate::platform::PlatformSpec;
 use crate::platform_aware::{build_schedule, fuse, FusedLayer, NetworkSchedule};
-use crate::sim::{simulate, simulate_traced, SimResult, Timeline};
+use crate::sim::{model_energy_nj, simulate, simulate_traced, SimResult, Timeline};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -71,6 +71,10 @@ pub struct PlatformEval {
     pub peak_l2: u64,
     /// Total L3 DMA traffic (bytes).
     pub l3_traffic: u64,
+    /// Modeled inference energy in nanojoules (bits-scaled MAC + DMA byte
+    /// costs, [`crate::sim::model_energy_nj`]) under the platform's
+    /// backend.
+    pub energy_nj: f64,
     /// (layer, tiles_c, tiles_h, double_buffered) per layer — the Fig. 7
     /// bottom-row "tiling configurations".
     pub tilings: Vec<(String, usize, usize, bool)>,
@@ -151,7 +155,7 @@ pub fn stage_impl_decorated(decorated: Arc<Graph>) -> Result<ImplModel> {
 pub fn stage_platform(fused: &[FusedLayer], platform: &PlatformSpec) -> Result<PlatformEval> {
     let schedule = build_schedule(fused, &Arc::new(platform.clone()))?;
     let sim = simulate(&schedule);
-    Ok(assemble_eval(&schedule, sim, platform))
+    Ok(assemble_eval(&schedule, sim, platform, fused))
 }
 
 /// [`stage_platform`] with span recording: also returns the per-resource
@@ -163,13 +167,14 @@ pub fn stage_platform_traced(
 ) -> Result<(PlatformEval, Timeline)> {
     let schedule = build_schedule(fused, &Arc::new(platform.clone()))?;
     let (sim, timeline) = simulate_traced(&schedule);
-    Ok((assemble_eval(&schedule, sim, platform), timeline))
+    Ok((assemble_eval(&schedule, sim, platform, fused), timeline))
 }
 
 fn assemble_eval(
     schedule: &NetworkSchedule,
     sim: SimResult,
     platform: &PlatformSpec,
+    fused: &[FusedLayer],
 ) -> PlatformEval {
     let latency = LatencyBound::from_sim(&sim, platform);
     let tilings = schedule
@@ -189,6 +194,7 @@ fn assemble_eval(
         peak_l1: schedule.peak_l1(),
         peak_l2: schedule.peak_l2(),
         l3_traffic: schedule.l3_traffic(),
+        energy_nj: model_energy_nj(fused, platform),
         sim,
         latency,
         tilings,
@@ -215,6 +221,8 @@ pub struct Analysis {
     pub peak_l2: u64,
     /// Total L3 DMA traffic (bytes).
     pub l3_traffic: u64,
+    /// Modeled inference energy (nJ) under the platform's backend.
+    pub energy_nj: f64,
 }
 
 impl Analysis {
@@ -229,6 +237,7 @@ impl Analysis {
             peak_l1: eval.peak_l1,
             peak_l2: eval.peak_l2,
             l3_traffic: eval.l3_traffic,
+            energy_nj: eval.energy_nj,
         }
     }
 
@@ -288,6 +297,7 @@ impl crate::util::ToJson for Analysis {
             .with("peak_l1", self.peak_l1)
             .with("peak_l2", self.peak_l2)
             .with("l3_traffic", self.l3_traffic)
+            .with("energy_nj", self.energy_nj)
     }
 }
 
@@ -360,6 +370,8 @@ mod tests {
         assert_eq!(eval.peak_l1, monolithic.peak_l1);
         assert_eq!(eval.peak_l2, monolithic.peak_l2);
         assert_eq!(eval.l3_traffic, monolithic.l3_traffic);
+        assert_eq!(eval.energy_nj.to_bits(), monolithic.energy_nj.to_bits());
+        assert!(eval.energy_nj > 0.0);
         assert_eq!(eval.tilings.len(), eval.sim.layers.len());
     }
 

@@ -6,7 +6,7 @@
 //!
 //! - [`DesignVector`] — one candidate: an optional quantization axis
 //!   (per-block bits + implementation, [`QuantAxis`]) × an optional
-//!   hardware axis (cluster cores, L2 kB, [`HwAxis`]);
+//!   hardware axis (cluster cores, L2 kB, backend, [`HwAxis`]);
 //! - [`EvalEngine`] — evaluates design vectors through the staged pipeline
 //!   ([`crate::coordinator::stage_impl`] /
 //!   [`crate::coordinator::stage_platform`]) behind a **memoized
@@ -23,9 +23,9 @@
 //!   units, not a full re-simulation. Batches run on a work-queue executor
 //!   over `std::thread::scope`, bounded by available parallelism;
 //! - [`JointSpace`] / [`explore_joint`] — the joint quantization×hardware
-//!   product explorer (CLI `aladin dse --joint`), streaming a 3-axis
-//!   Pareto front over (sensitivity, latency, param+activation memory)
-//!   via [`crate::dse::pareto`].
+//!   product explorer (CLI `aladin dse --joint`), streaming a 4-axis
+//!   Pareto front over (sensitivity, latency, param+activation memory,
+//!   energy) via [`crate::dse::pareto`].
 //!
 //! [`GridSearch`](crate::dse::GridSearch) (Fig. 7) and the quant searchers
 //! ([`crate::dse::quant_search`]) are thin frontends over this engine.
@@ -46,7 +46,7 @@ use crate::impl_aware::LayerSummary;
 use crate::models::{BlockConfig, BlockImpl, MobileNetConfig};
 use crate::platform::PlatformSpec;
 use crate::platform_aware::{schedule_layer, FusedLayer, LayerSchedule};
-use crate::sim::{couple_layer, simulate_layer_pipeline, LayerPipeline, SimResult};
+use crate::sim::{couple_layer, model_energy_nj, simulate_layer_pipeline, LayerPipeline, SimResult};
 use crate::util::StableHasher;
 
 // ---------------------------------------------------------------------------
@@ -144,13 +144,17 @@ impl QuantAxis {
     }
 }
 
-/// The hardware axis of a design vector: the Fig. 7 reconfiguration knobs.
+/// The hardware axis of a design vector: the Fig. 7 reconfiguration knobs
+/// plus the hardware backend gene.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HwAxis {
     /// Cluster core count.
     pub cores: usize,
     /// L2 SRAM capacity in kB.
     pub l2_kb: u64,
+    /// Hardware backend ([`crate::sim::BackendKind`]); `None` keeps the
+    /// engine's base platform backend.
+    pub backend: Option<crate::sim::BackendKind>,
 }
 
 /// One candidate in the joint design space. `None` on an axis means "keep
@@ -169,7 +173,15 @@ impl DesignVector {
     pub fn of_hw(cores: usize, l2_kb: u64) -> Self {
         Self {
             quant: None,
-            hw: Some(HwAxis { cores, l2_kb }),
+            hw: Some(HwAxis { cores, l2_kb, backend: None }),
+        }
+    }
+
+    /// [`DesignVector::of_hw`] with the backend gene pinned.
+    pub fn of_hw_on(cores: usize, l2_kb: u64, backend: crate::sim::BackendKind) -> Self {
+        Self {
+            quant: None,
+            hw: Some(HwAxis { cores, l2_kb, backend: Some(backend) }),
         }
     }
 
@@ -226,6 +238,12 @@ pub struct EvalRecord {
     pub peak_l2_kb: f64,
     /// Total L3 DMA traffic (kB).
     pub l3_traffic_kb: f64,
+    /// Modeled inference energy in nanojoules (bits-scaled MAC energy +
+    /// DMA byte movement, [`crate::sim::model_energy_nj`]) — the fourth
+    /// objective of the joint Pareto front. Backend-dependent; exact (no
+    /// tile-plan term), so [`ScreenMetrics::energy_nj`] matches it
+    /// bitwise.
+    pub energy_nj: f64,
     /// The full per-layer simulation result.
     pub sim: SimResult,
     /// (layer, tiles_c, tiles_h, double_buffered) per scheduled layer.
@@ -292,6 +310,7 @@ impl EvalRecord {
             peak_l1_kb: eval.peak_l1 as f64 / 1024.0,
             peak_l2_kb: eval.peak_l2 as f64 / 1024.0,
             l3_traffic_kb: eval.l3_traffic as f64 / 1024.0,
+            energy_nj: eval.energy_nj,
             sim: eval.sim.clone(),
             tilings: eval.tilings.clone(),
             vector,
@@ -328,7 +347,9 @@ impl crate::util::ToJson for EvalRecord {
             .with("mem_kb", self.mem_kb)
             .with("peak_l1_kb", self.peak_l1_kb)
             .with("peak_l2_kb", self.peak_l2_kb)
-            .with("l3_traffic_kb", self.l3_traffic_kb);
+            .with("l3_traffic_kb", self.l3_traffic_kb)
+            .with("energy_nj", self.energy_nj)
+            .with("backend", self.sim.backend.clone());
         if let Some(a) = self.accuracy {
             doc.set("accuracy", a);
         }
@@ -336,9 +357,12 @@ impl crate::util::ToJson for EvalRecord {
     }
 }
 
-/// Hardware-invariant metrics of a candidate's quantization axis computed
-/// from the stage-1 snapshot alone ([`EvalEngine::screen_metrics`]) — the
-/// cheap half of the search's prune-before-simulate screen.
+/// Cheap screening metrics of a candidate computed from the stage-1
+/// snapshot alone ([`EvalEngine::screen_metrics`]) — the cheap half of the
+/// search's prune-before-simulate screen. Memory and sensitivity are
+/// hardware-invariant; energy additionally depends on the resolved
+/// platform's backend and core count (but never on a tile plan or
+/// timeline, so it stays exact).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ScreenMetrics {
     /// Parameter memory (kB), incl. LUT / threshold-tree overheads —
@@ -349,6 +373,9 @@ pub struct ScreenMetrics {
     pub mem_kb: f64,
     /// Sensitivity proxy — bit-identical to [`EvalRecord::sensitivity`].
     pub sensitivity: f64,
+    /// Modeled energy (nJ) — bit-identical to [`EvalRecord::energy_nj`],
+    /// which makes 4-axis dominance pruning against it sound.
+    pub energy_nj: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -811,6 +838,7 @@ impl EvalEngine {
         }
         let sim = SimResult {
             platform: platform.name.clone(),
+            backend: platform.backend.label().to_string(),
             cores: platform.cores,
             l2_kb: platform.l2_bytes / 1024,
             layers,
@@ -823,13 +851,15 @@ impl EvalEngine {
             peak_l1,
             peak_l2,
             l3_traffic,
+            energy_nj: model_energy_nj(fused, platform),
             tilings,
         })
     }
 
     /// The analytic latency lower bound assembled from layer-grained
-    /// units: per layer `max(compute busy, L2<->L1 busy)` plus the L3
-    /// transfer when not prefetchable — bit-identical to
+    /// units: per layer the backend's analytic pipeline bound
+    /// ([`crate::sim::LayerPipeline::lb_cycles`]) plus the L3 transfer
+    /// when not prefetchable — bit-identical to
     /// [`crate::sim::lower_bound_cycles`] over the built schedule, but
     /// served from (and warming) the layer cache.
     fn lower_bound_spliced(
@@ -844,7 +874,7 @@ impl EvalEngine {
             let l2 = &unit.sched.l2;
             let prefetchable = l2.prefetch_ok(prev_l2_used, platform.l2_bytes);
             let exposed_l3_min = if prefetchable { 0 } else { unit.pipe.dma_l3_cycles };
-            total += unit.pipe.compute_cycles.max(unit.pipe.dma_l1_cycles) + exposed_l3_min;
+            total += unit.pipe.lb_cycles + exposed_l3_min;
             prev_l2_used = Some(l2.l2_used_bytes);
         }
         Ok(total)
@@ -888,7 +918,13 @@ impl EvalEngine {
     /// deep-cloned, when the vector keeps the base platform.
     fn resolve_platform(&self, vector: &DesignVector) -> Arc<PlatformSpec> {
         match vector.hw {
-            Some(hw) => Arc::new(self.base.reconfigure(hw.cores, hw.l2_kb * 1024)),
+            Some(hw) => {
+                let mut p = self.base.reconfigure(hw.cores, hw.l2_kb * 1024);
+                if let Some(backend) = hw.backend {
+                    p.backend = backend;
+                }
+                Arc::new(p)
+            }
             None => Arc::clone(&self.base),
         }
     }
@@ -983,20 +1019,22 @@ impl EvalEngine {
         Ok(*bound)
     }
 
-    /// Hardware-invariant screening metrics of a vector's quantization
-    /// axis, from the (cached) stage-1 model alone: exact memory footprint
-    /// and sensitivity proxy, with no scheduling or simulation. The values
-    /// are bit-identical to the corresponding [`EvalRecord`] fields (they
+    /// Cheap screening metrics of a vector, from the (cached) stage-1 model
+    /// alone: exact memory footprint, sensitivity proxy, and modeled
+    /// energy, with no scheduling or simulation. The values are
+    /// bit-identical to the corresponding [`EvalRecord`] fields (they
     /// share one computation path), which is what makes dominance pruning
     /// against them sound.
     pub fn screen_metrics(&self, vector: &DesignVector) -> Result<ScreenMetrics> {
         let impl_model = self.impl_model(vector.quant.as_ref())?;
         let (param_kb, mem_kb) = impl_memory_kb(&impl_model);
         let sensitivity = sensitivity_proxy(&impl_model.impl_summary, &self.effective_bits(vector));
+        let platform = self.resolve_platform(vector);
         Ok(ScreenMetrics {
             param_kb,
             mem_kb,
             sensitivity,
+            energy_nj: model_energy_nj(&impl_model.fused, &platform),
         })
     }
 
@@ -1157,6 +1195,9 @@ pub struct JointSpace {
     pub cores: Vec<usize>,
     /// L2 capacities (kB) to explore.
     pub l2_kb: Vec<u64>,
+    /// Hardware backends to explore (empty = the base platform's backend
+    /// only, the pre-backend-refactor behaviour).
+    pub backends: Vec<crate::sim::BackendKind>,
 }
 
 impl JointSpace {
@@ -1169,6 +1210,7 @@ impl JointSpace {
             tail_k: 0,
             cores: vec![2, 4, 8],
             l2_kb: vec![256, 320, 512],
+            backends: vec![],
         }
     }
 
@@ -1194,14 +1236,21 @@ impl JointSpace {
 
     /// Enumerate the full quant × hardware product as design vectors.
     pub fn vectors(&self, n_blocks: usize) -> Vec<DesignVector> {
+        let backends: Vec<Option<crate::sim::BackendKind>> = if self.backends.is_empty() {
+            vec![None]
+        } else {
+            self.backends.iter().map(|&b| Some(b)).collect()
+        };
         let mut out = Vec::new();
         for quant in self.quant_axes(n_blocks) {
             for &cores in &self.cores {
                 for &l2_kb in &self.l2_kb {
-                    out.push(DesignVector {
-                        quant: Some(quant.clone()),
-                        hw: Some(HwAxis { cores, l2_kb }),
-                    });
+                    for &backend in &backends {
+                        out.push(DesignVector {
+                            quant: Some(quant.clone()),
+                            hw: Some(HwAxis { cores, l2_kb, backend }),
+                        });
+                    }
                 }
             }
         }
@@ -1214,10 +1263,11 @@ impl JointSpace {
 pub struct JointResult {
     /// Every successfully evaluated candidate, in enumeration order.
     pub records: Vec<EvalRecord>,
-    /// Indices into `records` of the 3-axis Pareto front, all minimized:
-    /// (sensitivity proxy, latency, param+activation memory) — or, when
-    /// `measured` is set, (1 − measured accuracy, latency, memory) with
-    /// the accuracy axis coming from the integer interpreter.
+    /// Indices into `records` of the 4-axis Pareto front, all minimized:
+    /// (sensitivity proxy, latency, param+activation memory, energy) —
+    /// or, when `measured` is set, (1 − measured accuracy, latency,
+    /// memory, energy) with the accuracy axis coming from the integer
+    /// interpreter.
     pub front: Vec<usize>,
     /// True when the accuracy axis is the interpreter-measured one.
     pub measured: bool,
@@ -1237,7 +1287,7 @@ impl JointResult {
 }
 
 /// Evaluate the full joint product space through a fresh engine and screen
-/// the 3-axis Pareto front. Unevaluable candidates are screened into
+/// the 4-axis Pareto front. Unevaluable candidates are screened into
 /// `skipped` rather than aborting the run. `threads` overrides the worker
 /// count (handy for determinism tests).
 pub fn explore_joint(
@@ -1281,7 +1331,7 @@ pub fn explore_joint_measured(
             Err(e) => skipped.push((vector.clone(), e)),
         }
     }
-    let points: Vec<[f64; 3]> = records.iter().map(super::search::objectives).collect();
+    let points: Vec<[f64; 4]> = records.iter().map(super::search::objectives).collect();
     let front = super::pareto::pareto_min_indices(&points);
     Ok(JointResult {
         records,
@@ -1379,6 +1429,7 @@ mod tests {
             tail_k: 2,
             cores: vec![8],
             l2_kb: vec![512],
+            backends: vec![],
         };
         assert_eq!(tail.quant_axes(10).len(), 16); // 4^2 alphabet^k
         assert_eq!(tail.vectors(10).len(), 16);
@@ -1398,6 +1449,7 @@ mod tests {
             tail_k: 0,
             cores: vec![2, 8],
             l2_kb: vec![256, 512],
+            backends: vec![],
         };
         let r = explore_joint(small_case2(), presets::gap8(), &space, Some(2)).unwrap();
         assert_eq!(r.records.len(), 8);
@@ -1416,9 +1468,11 @@ mod tests {
                 let dominates = a.sensitivity <= b.sensitivity
                     && a.latency_s <= b.latency_s
                     && a.mem_kb <= b.mem_kb
+                    && a.energy_nj <= b.energy_nj
                     && (a.sensitivity < b.sensitivity
                         || a.latency_s < b.latency_s
-                        || a.mem_kb < b.mem_kb);
+                        || a.mem_kb < b.mem_kb
+                        || a.energy_nj < b.energy_nj);
                 assert!(!dominates, "front member {i} dominates {j}");
             }
         }
@@ -1434,6 +1488,7 @@ mod tests {
             tail_k: 0,
             cores: vec![8],
             l2_kb: vec![32, 512],
+            backends: vec![],
         };
         let r = explore_joint(small_case2(), presets::gap8(), &space, Some(1)).unwrap();
         assert_eq!(r.records.len(), 1);
@@ -1481,6 +1536,7 @@ mod tests {
             tail_k: 0,
             cores: vec![2, 8],
             l2_kb: vec![256, 512],
+            backends: vec![],
         };
         let r = explore_joint_measured(
             small_case2(),
@@ -1529,13 +1585,14 @@ mod tests {
         let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
         let v = DesignVector {
             quant: Some(QuantAxis::uniform(4, BlockImpl::Im2col, 10)),
-            hw: Some(HwAxis { cores: 4, l2_kb: 320 }),
+            hw: Some(HwAxis { cores: 4, l2_kb: 320, backend: None }),
         };
         let cheap = engine.screen_metrics(&v).unwrap();
         let full = engine.evaluate(&v).unwrap();
         assert_eq!(cheap.param_kb.to_bits(), full.param_kb.to_bits());
         assert_eq!(cheap.mem_kb.to_bits(), full.mem_kb.to_bits());
         assert_eq!(cheap.sensitivity.to_bits(), full.sensitivity.to_bits());
+        assert_eq!(cheap.energy_nj.to_bits(), full.energy_nj.to_bits());
         // screening shares the stage-1 cache with the full evaluation
         assert_eq!(engine.stats().impl_computed, 1);
     }
@@ -1544,7 +1601,7 @@ mod tests {
     fn evaluate_delta_matches_evaluate_and_counts_reuse() {
         let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
         let base_q = QuantAxis::uniform(8, BlockImpl::Im2col, 10);
-        let hw = HwAxis { cores: 4, l2_kb: 320 };
+        let hw = HwAxis { cores: 4, l2_kb: 320, backend: None };
         let base = DesignVector {
             quant: Some(base_q.clone()),
             hw: Some(hw),
@@ -1572,6 +1629,33 @@ mod tests {
         assert!(s.nodes_reused > 0, "distant nodes must be copied, not redone");
         assert!(s.layer_hits > 0, "unchanged layer units must be spliced");
         assert!(s.spliced > 0);
+    }
+
+    #[test]
+    fn backend_axis_threads_through_platform_and_caches() {
+        use crate::sim::BackendKind;
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let base = engine.evaluate(&DesignVector::of_hw(8, 512)).unwrap();
+        assert_eq!(base.sim.backend, "scratchpad");
+        assert!(base.energy_nj > 0.0);
+        let sys = engine
+            .evaluate(&DesignVector::of_hw_on(8, 512, BackendKind::SystolicArray))
+            .unwrap();
+        assert_eq!(sys.sim.backend, "systolic");
+        assert!(sys.total_cycles > 0);
+        let s = engine.stats();
+        assert_eq!(s.impl_computed, 1, "backend swap must not re-decorate");
+        assert_eq!(s.sim_computed, 2, "backend swap is a platform-half miss");
+        // pinning the base backend explicitly resolves to the same
+        // platform content hash — a cache hit, not a third simulation
+        let pinned = engine
+            .evaluate(&DesignVector::of_hw_on(8, 512, BackendKind::ScratchpadCluster))
+            .unwrap();
+        assert_eq!(pinned.total_cycles, base.total_cycles);
+        assert_eq!(pinned.energy_nj.to_bits(), base.energy_nj.to_bits());
+        let s2 = engine.stats();
+        assert_eq!(s2.sim_computed, 2);
+        assert!(s2.sim_hits > s.sim_hits);
     }
 
     #[test]

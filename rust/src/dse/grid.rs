@@ -34,6 +34,8 @@ pub struct DesignPoint {
     pub peak_l2_kb: f64,
     /// Total L3 DMA traffic (kB).
     pub l3_traffic_kb: f64,
+    /// Modeled inference energy (nJ) under the platform's backend.
+    pub energy_nj: f64,
     /// The full per-layer simulation result.
     pub sim: SimResult,
     /// (layer, tiles_c, tiles_h, double_buffered) per layer — the Fig. 7
@@ -51,6 +53,7 @@ impl From<EvalRecord> for DesignPoint {
             peak_l1_kb: r.peak_l1_kb,
             peak_l2_kb: r.peak_l2_kb,
             l3_traffic_kb: r.l3_traffic_kb,
+            energy_nj: r.energy_nj,
             sim: r.sim,
             tilings: r.tilings,
         }
@@ -147,6 +150,7 @@ impl crate::util::ToJson for DesignPoint {
             .with("peak_l1_kb", self.peak_l1_kb)
             .with("peak_l2_kb", self.peak_l2_kb)
             .with("l3_traffic_kb", self.l3_traffic_kb)
+            .with("energy_nj", self.energy_nj)
             .with("sim", crate::util::ToJson::to_json(&self.sim))
             .with("tilings", crate::util::Value::Arr(tilings))
     }
@@ -238,6 +242,22 @@ mod tests {
         let s = speedups(&pts);
         assert!(s.iter().any(|&(_, _, x)| (x - 1.0).abs() < 1e-9)); // the worst point
         assert!(s.iter().all(|&(_, _, x)| x >= 1.0));
+    }
+
+    #[test]
+    fn grid_runs_on_alternate_backends() {
+        let mut c = models::case2();
+        c.width_mult = 0.25;
+        let (g, cfg) = c.build();
+        let d = crate::impl_aware::decorate(g, &cfg).unwrap();
+        for kind in crate::sim::BackendKind::all() {
+            let mut p = presets::gap8();
+            p.backend = kind;
+            let pts = GridSearch::fig7(p).run(&d).unwrap();
+            assert_eq!(pts.len(), 9, "{}", kind.label());
+            assert!(pts.iter().all(|x| x.total_cycles > 0 && x.energy_nj > 0.0));
+            assert!(pts.iter().all(|x| x.sim.backend == kind.label()));
+        }
     }
 
     #[test]

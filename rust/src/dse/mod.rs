@@ -58,7 +58,7 @@ pub use grid::{speedups, DesignPoint, GridSearch};
 pub use pareto::{best_feasible, pareto_front, pareto_min_2d, pareto_min_indices, Candidate};
 pub use quant_search::{exhaustive_pareto, greedy_memory, greedy_memory_on, QuantCandidate};
 pub use search::{
-    crowding_distance, evolve, evolve_with, hypervolume, non_dominated_sort,
+    crowding_distance, evolve, evolve_with, hypervolume, hypervolume4, non_dominated_sort,
     normalized_front_hypervolume, objectives, EvoConfig, EvoResult, GenerationStat, Genome,
     PruneReason, SearchSpace,
 };

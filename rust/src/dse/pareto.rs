@@ -41,31 +41,34 @@ pub fn pareto_front(candidates: &[Candidate]) -> Vec<Candidate> {
 }
 
 /// Indices of the Pareto-optimal points when every axis is minimized —
-/// the generic front used by the joint DSE engine over
-/// (sensitivity, latency, memory). Ties (bit-identical points) are all
-/// kept, and input order is preserved, so the front is deterministic for a
-/// fixed candidate enumeration regardless of evaluation parallelism.
+/// the generic front used by the joint DSE engine, for any objective
+/// count `N` (3-D sensitivity/latency/memory historically; 4-D with the
+/// energy objective). Ties (bit-identical points) are all kept, and input
+/// order is preserved, so the front is deterministic for a fixed candidate
+/// enumeration regardless of evaluation parallelism.
 ///
-/// When one axis is constant (bit-identical, non-NaN) across every point —
+/// Axes that are constant (bit-identical, non-NaN) across every point —
 /// common for the evolutionary search's per-generation fronts when the
-/// measured-accuracy axis saturates — the problem collapses to two
-/// objectives and the O(n log n) [`pareto_min_2d`] sweep is used instead
-/// of the O(n²) scan.
-pub fn pareto_min_indices(points: &[[f64; 3]]) -> Vec<usize> {
+/// measured-accuracy axis saturates — never decide dominance, so when at
+/// most two axes remain active the O(n log n) [`pareto_min_2d`] sweep is
+/// used instead of the O(n²) scan.
+pub fn pareto_min_indices<const N: usize>(points: &[[f64; N]]) -> Vec<usize> {
     // constant-axis fast path: domination on a constant axis is always
-    // `<=` and never `<`, so it reduces exactly to the other two axes
-    if points.len() >= 2 {
-        for axis in 0..3 {
-            let v0 = points[0][axis];
-            if !v0.is_nan() && points.iter().all(|p| p[axis].to_bits() == v0.to_bits()) {
-                let (a, b) = match axis {
-                    0 => (1, 2),
-                    1 => (0, 2),
-                    _ => (0, 1),
-                };
-                let pts2: Vec<[f64; 2]> = points.iter().map(|p| [p[a], p[b]]).collect();
-                return pareto_min_2d(&pts2);
-            }
+    // `<=` and never `<`, so it reduces exactly to the non-constant axes
+    if points.len() >= 2 && N > 0 {
+        let active: Vec<usize> = (0..N)
+            .filter(|&axis| {
+                let v0 = points[0][axis];
+                v0.is_nan() || points.iter().any(|p| p[axis].to_bits() != v0.to_bits())
+            })
+            .collect();
+        if active.len() <= 2 {
+            // <=1 active axis: duplicating (or defaulting) a coordinate
+            // leaves the dominance relation unchanged
+            let a = *active.first().unwrap_or(&0);
+            let b = *active.get(1).unwrap_or(&a);
+            let pts2: Vec<[f64; 2]> = points.iter().map(|p| [p[a], p[b]]).collect();
+            return pareto_min_2d(&pts2);
         }
     }
     (0..points.len())
@@ -84,7 +87,7 @@ pub fn pareto_min_indices(points: &[[f64; 3]]) -> Vec<usize> {
 /// dominance predicate shared by [`pareto_min_indices`] and the
 /// evolutionary search ([`crate::dse::search`]) — the fast paths and the
 /// pruning soundness argument are all stated against it.
-pub fn dominates_min(a: &[f64; 3], b: &[f64; 3]) -> bool {
+pub fn dominates_min<const N: usize>(a: &[f64; N], b: &[f64; N]) -> bool {
     a.iter().zip(b.iter()).all(|(x, y)| x <= y) && a.iter().zip(b.iter()).any(|(x, y)| x < y)
 }
 
@@ -228,8 +231,23 @@ mod tests {
             [1.0, 1.0, 1.0], // duplicate of 0: kept (ties not dominated)
         ];
         assert_eq!(pareto_min_indices(&pts), vec![0, 2, 3]);
-        assert!(pareto_min_indices(&[]).is_empty());
+        assert!(pareto_min_indices::<3>(&[]).is_empty());
         assert_eq!(pareto_min_indices(&[[1.0, 2.0, 3.0]]), vec![0]);
+    }
+
+    #[test]
+    fn min_indices_front_4d() {
+        let pts = [
+            [1.0, 1.0, 1.0, 1.0], // kept
+            [2.0, 2.0, 2.0, 2.0], // dominated by 0
+            [0.5, 3.0, 1.0, 1.0], // kept (better on axis 0)
+            [1.0, 1.0, 1.0, 0.5], // kept (better on the energy axis)
+            [1.0, 1.0, 1.0, 1.0], // duplicate of 0: kept
+        ];
+        assert_eq!(pareto_min_indices(&pts), vec![0, 2, 3, 4]);
+        // the 4th axis alone must be able to break dominance
+        assert!(dominates_min(&[1.0, 1.0, 1.0, 0.5], &[1.0, 1.0, 1.0, 1.0]));
+        assert!(!dominates_min(&[1.0, 1.0, 1.0, 2.0], &[1.0, 1.0, 1.0, 1.0]));
     }
 
     /// Reference O(n²) scan with the exact semantics of the generic path.

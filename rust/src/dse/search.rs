@@ -12,10 +12,11 @@
 //! memoized [`EvalEngine`] — and adds:
 //!
 //! - [`Genome`] / [`SearchSpace`] — the per-layer bits/impl genome joined
-//!   with the hardware axis, plus deterministic random/mutate/crossover
-//!   operators driven by [`crate::util::Prng`];
-//! - NSGA-II machinery — [`non_dominated_sort`], [`crowding_distance`],
-//!   and exact 3-objective [`hypervolume`];
+//!   with the hardware axis (cores × L2 × backend), plus deterministic
+//!   random/mutate/crossover operators driven by [`crate::util::Prng`];
+//! - NSGA-II machinery — [`non_dominated_sort`], [`crowding_distance`]
+//!   (generic over the objective count), and exact [`hypervolume`] /
+//!   [`hypervolume4`];
 //! - cheap-first pruning — the analytic latency lower bound
 //!   ([`EvalEngine::latency_lower_bound`], backed by
 //!   [`crate::sim::lower_bound_cycles`]) and the exact hardware-invariant
@@ -36,9 +37,11 @@
 //! A candidate is bound-pruned only when an already-evaluated record
 //! dominates its *optimistic* objective vector: exact sensitivity (or a
 //! perfect accuracy of 1.0 in measured mode), the latency **lower bound**,
-//! and the exact memory footprint. Since the true latency can only be
-//! larger than the bound and the other axes are exact (resp. optimistic),
-//! domination of the optimistic vector implies domination of the true one
+//! the exact memory footprint, and the exact energy (tile-plan
+//! independent, so the screen computes it exactly). Since the true latency
+//! can only be larger than the bound and the other axes are exact (resp.
+//! optimistic), domination of the optimistic vector implies domination of
+//! the true one
 //! — a pruned candidate could never have entered the final front. The
 //! `search_evo` integration tests re-evaluate pruned candidates in full to
 //! assert exactly this.
@@ -52,7 +55,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use super::engine::{CacheStats, DesignVector, EvalEngine, EvalRecord, HwAxis, QuantAxis};
-use super::pareto::{dominates_min, pareto_min_2d, pareto_min_indices};
+use super::pareto::{dominates_min, pareto_min_indices};
 use crate::error::{AladinError, Result};
 use crate::exec::EvalVectors;
 use crate::models::BlockImpl;
@@ -110,6 +113,8 @@ impl Genome {
                 h.write_u8(1);
                 h.write_usize(hw.cores);
                 h.write_u64(hw.l2_kb);
+                // 0 = inherit the engine's base backend, else tag + 1
+                h.write_u64(hw.backend.map(|b| b.tag() + 1).unwrap_or(0));
             }
         }
         h.finish()
@@ -128,7 +133,13 @@ impl Genome {
     /// Human-readable label: quant label plus the hardware gene.
     pub fn label(&self) -> String {
         match self.hw {
-            Some(hw) => format!("{} @{}c/{}kB", self.quant.label(), hw.cores, hw.l2_kb),
+            Some(hw) => {
+                let backend = hw
+                    .backend
+                    .map(|b| format!("/{}", b.label()))
+                    .unwrap_or_default();
+                format!("{} @{}c/{}kB{}", self.quant.label(), hw.cores, hw.l2_kb, backend)
+            }
             None => self.quant.label(),
         }
     }
@@ -151,6 +162,10 @@ pub struct SearchSpace {
     pub cores: Vec<usize>,
     /// L2 capacities (kB) the hardware gene may take.
     pub l2_kb: Vec<u64>,
+    /// Hardware backends the backend gene may take. Empty = the gene is
+    /// pinned to the engine's base platform backend (pre-backend-refactor
+    /// behaviour).
+    pub backends: Vec<crate::sim::BackendKind>,
 }
 
 impl SearchSpace {
@@ -158,7 +173,8 @@ impl SearchSpace {
     /// evolutionary search is that this routinely exceeds `u64`).
     pub fn size(&self) -> f64 {
         ((self.bits.len() * self.impls.len()) as f64).powi(self.n_blocks as i32)
-            * (self.cores.len().max(1) * self.l2_kb.len().max(1)) as f64
+            * (self.cores.len().max(1) * self.l2_kb.len().max(1) * self.backends.len().max(1))
+                as f64
     }
 
     fn validate(&self) -> Result<()> {
@@ -177,10 +193,19 @@ impl SearchSpace {
         Ok(())
     }
 
+    fn random_backend(&self, rng: &mut Prng) -> Option<crate::sim::BackendKind> {
+        if self.backends.is_empty() {
+            None
+        } else {
+            Some(*rng.choice(&self.backends))
+        }
+    }
+
     fn random_hw(&self, rng: &mut Prng) -> HwAxis {
         HwAxis {
             cores: *rng.choice(&self.cores),
             l2_kb: *rng.choice(&self.l2_kb),
+            backend: self.random_backend(rng),
         }
     }
 
@@ -200,17 +225,28 @@ impl SearchSpace {
     /// sub-grid (the small space where the exhaustive front is ground
     /// truth).
     pub fn uniform_seeds(&self) -> Vec<Genome> {
+        let backend_options: Vec<Option<crate::sim::BackendKind>> = if self.backends.is_empty() {
+            vec![None]
+        } else {
+            self.backends.iter().copied().map(Some).collect()
+        };
         let mut out = Vec::new();
         for &b in &self.bits {
             for &i in &self.impls {
                 for &cores in &self.cores {
                     for &l2_kb in &self.l2_kb {
-                        out.push(Genome::uniform(
-                            b,
-                            i,
-                            self.n_blocks,
-                            Some(HwAxis { cores, l2_kb }),
-                        ));
+                        for &backend in &backend_options {
+                            out.push(Genome::uniform(
+                                b,
+                                i,
+                                self.n_blocks,
+                                Some(HwAxis {
+                                    cores,
+                                    l2_kb,
+                                    backend,
+                                }),
+                            ));
+                        }
                     }
                 }
             }
@@ -238,6 +274,9 @@ impl SearchSpace {
         if rng.chance(p) {
             hw.l2_kb = *rng.choice(&self.l2_kb);
         }
+        if !self.backends.is_empty() && rng.chance(p) {
+            hw.backend = Some(*rng.choice(&self.backends));
+        }
         genome.hw = Some(hw);
     }
 
@@ -259,6 +298,7 @@ impl SearchSpace {
         let hw = HwAxis {
             cores: if rng.chance(0.5) { ha.cores } else { hb.cores },
             l2_kb: if rng.chance(0.5) { ha.l2_kb } else { hb.l2_kb },
+            backend: if rng.chance(0.5) { ha.backend } else { hb.backend },
         };
         Genome {
             quant: QuantAxis { bits, impls },
@@ -375,7 +415,7 @@ pub struct GenerationStat {
     /// Size of the archive-wide Pareto front after this generation.
     pub front_size: usize,
     /// Hypervolume of that front, objectives normalized to the archive's
-    /// bounds with reference point (1.1, 1.1, 1.1).
+    /// bounds with reference point (1.1, 1.1, 1.1, 1.1).
     pub hypervolume: f64,
 }
 
@@ -387,7 +427,7 @@ pub struct EvoResult {
     /// full-vector re-measured accuracy.
     pub records: Vec<EvalRecord>,
     /// Indices into `records` of the final Pareto front (all axes
-    /// minimized: accuracy loss / sensitivity, latency, memory).
+    /// minimized: accuracy loss / sensitivity, latency, memory, energy).
     pub front: Vec<usize>,
     /// One entry per generation, in order.
     pub generations: Vec<GenerationStat>,
@@ -412,14 +452,14 @@ impl EvoResult {
 
 /// The minimized objective vector of a record: (accuracy loss when
 /// measured, else the sensitivity proxy; latency in seconds; memory in
-/// kB). Shared by the searcher, its tests, and the benches so front
-/// comparisons always agree on the axes.
-pub fn objectives(r: &EvalRecord) -> [f64; 3] {
+/// kB; energy in nJ). Shared by the searcher, its tests, and the benches
+/// so front comparisons always agree on the axes.
+pub fn objectives(r: &EvalRecord) -> [f64; 4] {
     let axis0 = match r.accuracy {
         Some(a) => 1.0 - a,
         None => r.sensitivity,
     };
-    [axis0, r.latency_s, r.mem_kb]
+    [axis0, r.latency_s, r.mem_kb, r.energy_nj]
 }
 
 // ---------------------------------------------------------------------------
@@ -429,8 +469,8 @@ pub fn objectives(r: &EvalRecord) -> [f64; 3] {
 /// Fast non-dominated sorting: partition point indices into fronts
 /// (front 0 = non-dominated, front 1 = non-dominated once front 0 is
 /// removed, …). Deterministic: within a front, indices stay in input
-/// order.
-pub fn non_dominated_sort(points: &[[f64; 3]]) -> Vec<Vec<usize>> {
+/// order. Generic over the objective count `N`.
+pub fn non_dominated_sort<const N: usize>(points: &[[f64; N]]) -> Vec<Vec<usize>> {
     let n = points.len();
     let mut dominated_by: Vec<usize> = vec![0; n];
     let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -462,14 +502,14 @@ pub fn non_dominated_sort(points: &[[f64; 3]]) -> Vec<Vec<usize>> {
 
 /// NSGA-II crowding distance of each member of `front` (indices into
 /// `points`); boundary points get `f64::INFINITY`. Returned aligned with
-/// `front`.
-pub fn crowding_distance(points: &[[f64; 3]], front: &[usize]) -> Vec<f64> {
+/// `front`. Generic over the objective count `N`.
+pub fn crowding_distance<const N: usize>(points: &[[f64; N]], front: &[usize]) -> Vec<f64> {
     let m = front.len();
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
     let mut dist = vec![0.0f64; m];
-    for axis in 0..3 {
+    for axis in 0..N {
         let mut order: Vec<usize> = (0..m).collect();
         order.sort_by(|&a, &b| {
             points[front[a]][axis]
@@ -549,34 +589,73 @@ pub fn hypervolume(points: &[[f64; 3]], reference: [f64; 3]) -> f64 {
     hv
 }
 
+/// Exact 4-objective hypervolume (all axes minimized) w.r.t. `reference`:
+/// a sweep over slabs of the fourth axis, each slab contributing its
+/// thickness times the 3-D [`hypervolume`] of the points already passed.
+/// Same contribution rules as the 3-D variant: points not strictly better
+/// than the reference on every axis, or with non-finite coordinates,
+/// contribute nothing.
+pub fn hypervolume4(points: &[[f64; 4]], reference: [f64; 4]) -> f64 {
+    let pts: Vec<[f64; 4]> = points
+        .iter()
+        .copied()
+        .filter(|p| {
+            p.iter().all(|v| v.is_finite()) && p.iter().zip(&reference).all(|(v, r)| v < r)
+        })
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..pts.len()).collect();
+    order.sort_by(|&a, &b| pts[a][3].total_cmp(&pts[b][3]));
+    let r3 = [reference[0], reference[1], reference[2]];
+    let mut hv = 0.0;
+    for k in 0..order.len() {
+        let w = pts[order[k]][3];
+        let w_next = if k + 1 < order.len() {
+            pts[order[k + 1]][3]
+        } else {
+            reference[3]
+        };
+        if w_next > w {
+            let slab: Vec<[f64; 3]> = order[..=k]
+                .iter()
+                .map(|&i| [pts[i][0], pts[i][1], pts[i][2]])
+                .collect();
+            hv += (w_next - w) * hypervolume(&slab, r3);
+        }
+    }
+    hv
+}
+
 /// Hypervolume of `front` (indices into `all`) with every objective
 /// normalized to `all`'s min–max bounds and reference point
-/// (1.1, 1.1, 1.1) — the per-generation progress metric streamed by the
-/// evolutionary search. Degenerate axes (min == max) normalize to 0.
-pub fn normalized_front_hypervolume(all: &[[f64; 3]], front: &[usize]) -> f64 {
+/// (1.1, 1.1, 1.1, 1.1) — the per-generation progress metric streamed by
+/// the evolutionary search. Degenerate axes (min == max) normalize to 0.
+pub fn normalized_front_hypervolume(all: &[[f64; 4]], front: &[usize]) -> f64 {
     if all.is_empty() || front.is_empty() {
         return 0.0;
     }
-    let mut lo = [f64::INFINITY; 3];
-    let mut hi = [f64::NEG_INFINITY; 3];
+    let mut lo = [f64::INFINITY; 4];
+    let mut hi = [f64::NEG_INFINITY; 4];
     for p in all {
-        for a in 0..3 {
+        for a in 0..4 {
             if p[a].is_finite() {
                 lo[a] = lo[a].min(p[a]);
                 hi[a] = hi[a].max(p[a]);
             }
         }
     }
-    let norm = |p: &[f64; 3]| -> [f64; 3] {
-        let mut q = [0.0; 3];
-        for a in 0..3 {
+    let norm = |p: &[f64; 4]| -> [f64; 4] {
+        let mut q = [0.0; 4];
+        for a in 0..4 {
             let span = hi[a] - lo[a];
             q[a] = if span > 0.0 { (p[a] - lo[a]) / span } else { 0.0 };
         }
         q
     };
-    let pts: Vec<[f64; 3]> = front.iter().map(|&i| norm(&all[i])).collect();
-    hypervolume(&pts, [1.1, 1.1, 1.1])
+    let pts: Vec<[f64; 4]> = front.iter().map(|&i| norm(&all[i])).collect();
+    hypervolume4(&pts, [1.1, 1.1, 1.1, 1.1])
 }
 
 // ---------------------------------------------------------------------------
@@ -659,7 +738,7 @@ pub fn evolve_with(
 
     let mut records: Vec<EvalRecord> = Vec::new();
     let mut genomes: Vec<Genome> = Vec::new(); // aligned with records
-    let mut objs: Vec<[f64; 3]> = Vec::new(); // aligned with records
+    let mut objs: Vec<[f64; 4]> = Vec::new(); // aligned with records
     let mut seen: HashSet<u64> = HashSet::new();
     let mut pruned: Vec<(Genome, PruneReason)> = Vec::new();
     let mut generations: Vec<GenerationStat> = Vec::new();
@@ -695,7 +774,7 @@ pub fn evolve_with(
                 break; // nothing evaluable survived — space exhausted
             }
             // rank + crowding of the current population for selection
-            let pop_pts: Vec<[f64; 3]> = population.iter().map(|&i| objs[i]).collect();
+            let pop_pts: Vec<[f64; 4]> = population.iter().map(|&i| objs[i]).collect();
             let fronts = non_dominated_sort(&pop_pts);
             let mut rank = vec![0usize; population.len()];
             let mut crowd = vec![0.0f64; population.len()];
@@ -778,10 +857,11 @@ pub fn evolve_with(
             }
             // dominance pruning against the archive front: the optimistic
             // vector uses the exact sensitivity (or perfect accuracy in
-            // measured mode), the latency lower bound, and exact memory
+            // measured mode), the latency lower bound, and the exact
+            // memory and energy (both tile-plan independent)
             let opt_acc_loss = if measured { 0.0 } else { metrics.sensitivity };
             let lb_s = lb_cycles as f64 / clock_hz;
-            let optimistic = [opt_acc_loss, lb_s, metrics.mem_kb];
+            let optimistic = [opt_acc_loss, lb_s, metrics.mem_kb, metrics.energy_nj];
             let dominated = prune_front.iter().any(|&i| dominates_min(&objs[i], &optimistic));
             if dominated {
                 pruned_bound += 1;
@@ -831,7 +911,7 @@ pub fn evolve_with(
         // ---- environmental selection ------------------------------------
         let mut pool: Vec<usize> = population.clone();
         pool.extend(&new_idx);
-        let pool_pts: Vec<[f64; 3]> = pool.iter().map(|&i| objs[i]).collect();
+        let pool_pts: Vec<[f64; 4]> = pool.iter().map(|&i| objs[i]).collect();
         let fronts = non_dominated_sort(&pool_pts);
         let mut next_pop: Vec<usize> = Vec::new();
         for front in &fronts {
@@ -890,7 +970,7 @@ pub fn evolve_with(
                 records[i] = full;
             }
         }
-        let survivor_pts: Vec<[f64; 3]> = front.iter().map(|&i| objs[i]).collect();
+        let survivor_pts: Vec<[f64; 4]> = front.iter().map(|&i| objs[i]).collect();
         let refined = pareto_min_indices(&survivor_pts);
         front = refined.into_iter().map(|l| front[l]).collect();
     }
@@ -908,10 +988,10 @@ pub fn evolve_with(
 
 /// The archive front used for dominance pruning. In measured mode only
 /// perfect-accuracy records can dominate an optimistic candidate (whose
-/// accuracy axis is 0), so the front collapses to the 2-D
-/// (latency, memory) fast path ([`pareto_min_2d`]); proxy mode keeps the
-/// full 3-axis front.
-fn archive_front(records: &[EvalRecord], objs: &[[f64; 3]], measured: bool) -> Vec<usize> {
+/// accuracy axis is 0), so the front collapses to the 3-D
+/// (latency, memory, energy) sub-front; proxy mode keeps the full 4-axis
+/// front.
+fn archive_front(records: &[EvalRecord], objs: &[[f64; 4]], measured: bool) -> Vec<usize> {
     if !measured {
         return pareto_min_indices(objs);
     }
@@ -921,8 +1001,14 @@ fn archive_front(records: &[EvalRecord], objs: &[[f64; 3]], measured: bool) -> V
         .filter(|(_, r)| r.accuracy.map(|a| a >= 1.0).unwrap_or(false))
         .map(|(i, _)| i)
         .collect();
-    let pts: Vec<[f64; 2]> = perfect.iter().map(|&i| [objs[i][1], objs[i][2]]).collect();
-    pareto_min_2d(&pts).into_iter().map(|l| perfect[l]).collect()
+    let pts: Vec<[f64; 3]> = perfect
+        .iter()
+        .map(|&i| [objs[i][1], objs[i][2], objs[i][3]])
+        .collect();
+    pareto_min_indices(&pts)
+        .into_iter()
+        .map(|l| perfect[l])
+        .collect()
 }
 
 #[cfg(test)]
@@ -976,16 +1062,39 @@ mod tests {
     }
 
     #[test]
+    fn hypervolume4_known_values() {
+        let r = [1.0, 1.0, 1.0, 1.0];
+        // the origin dominates the whole unit tesseract
+        assert!((hypervolume4(&[[0.0; 4]], r) - 1.0).abs() < 1e-12);
+        // centre point: (1/2)^4
+        assert!((hypervolume4(&[[0.5; 4]], r) - 0.0625).abs() < 1e-12);
+        // a dominated point adds nothing
+        let with_dom = [[0.5, 0.5, 0.5, 0.5], [0.6, 0.6, 0.6, 0.6]];
+        assert!((hypervolume4(&with_dom, r) - 0.0625).abs() < 1e-12);
+        // two points differing only on the 4th axis: the union is the
+        // better point's volume
+        let stacked = [[0.5, 0.5, 0.5, 0.5], [0.5, 0.5, 0.5, 0.25]];
+        assert!((hypervolume4(&stacked, r) - 0.125 * 0.75).abs() < 1e-12);
+        // points at or beyond the reference contribute nothing
+        assert_eq!(hypervolume4(&[[1.0, 0.0, 0.0, 0.0]], r), 0.0);
+        assert_eq!(hypervolume4(&[], r), 0.0);
+        // a w-constant set reduces to 3-D hypervolume times the w slab
+        let flat = [[0.0, 0.5, 0.0, 0.5], [0.5, 0.0, 0.0, 0.5]];
+        let hv3 = hypervolume(&[[0.0, 0.5, 0.0], [0.5, 0.0, 0.0]], [1.0, 1.0, 1.0]);
+        assert!((hypervolume4(&flat, r) - 0.5 * hv3).abs() < 1e-12);
+    }
+
+    #[test]
     fn normalized_hypervolume_bounded() {
         let all = [
-            [0.0, 10.0, 5.0],
-            [1.0, 5.0, 7.0],
-            [2.0, 1.0, 9.0],
-            [2.0, 10.0, 9.0],
+            [0.0, 10.0, 5.0, 30.0],
+            [1.0, 5.0, 7.0, 20.0],
+            [2.0, 1.0, 9.0, 10.0],
+            [2.0, 10.0, 9.0, 30.0],
         ];
         let front = vec![0usize, 1, 2];
         let hv = normalized_front_hypervolume(&all, &front);
-        assert!(hv > 0.0 && hv <= 1.1f64.powi(3), "hv={hv}");
+        assert!(hv > 0.0 && hv <= 1.1f64.powi(4), "hv={hv}");
     }
 
     #[test]
@@ -996,6 +1105,7 @@ mod tests {
             n_blocks: 10,
             cores: vec![2, 4, 8],
             l2_kb: vec![256, 512],
+            backends: vec![],
         };
         assert!(space.size() >= 1e6);
         let mut rng = Prng::new(9);
@@ -1024,11 +1134,39 @@ mod tests {
             n_blocks: 10,
             cores: vec![2, 8],
             l2_kb: vec![256],
+            backends: vec![],
         };
         let seeds = space.uniform_seeds();
         assert_eq!(seeds.len(), 2 * 2);
         let keys: HashSet<u64> = seeds.iter().map(|g| g.key()).collect();
         assert_eq!(keys.len(), seeds.len(), "seeds must be distinct");
+    }
+
+    #[test]
+    fn backend_gene_expands_the_space() {
+        use crate::sim::BackendKind;
+        let space = SearchSpace {
+            bits: vec![8],
+            impls: vec![BlockImpl::Im2col],
+            n_blocks: 4,
+            cores: vec![2, 8],
+            l2_kb: vec![256],
+            backends: BackendKind::all().to_vec(),
+        };
+        let seeds = space.uniform_seeds();
+        assert_eq!(seeds.len(), 2 * 3, "2 core options x 3 backends");
+        let keys: HashSet<u64> = seeds.iter().map(|g| g.key()).collect();
+        assert_eq!(keys.len(), seeds.len(), "backend gene must enter the key");
+        assert!((space.size() - 6.0).abs() < 1e-9);
+        // mutation and crossover stay inside the backend alphabet
+        let mut rng = Prng::new(3);
+        let a = space.random(&mut rng);
+        let b = space.random(&mut rng);
+        let mut child = space.crossover(&a, &b, &mut rng);
+        space.mutate(&mut child, &mut rng, 1.0);
+        let hw = child.hw.unwrap();
+        assert!(space.backends.contains(&hw.backend.unwrap()));
+        assert!(child.label().contains(hw.backend.unwrap().label()), "{}", child.label());
     }
 
     #[test]

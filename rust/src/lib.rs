@@ -50,7 +50,6 @@ pub mod graph;
 pub mod impl_aware;
 #[allow(missing_docs)]
 pub mod models;
-#[allow(missing_docs)]
 pub mod platform;
 #[allow(missing_docs)]
 pub mod platform_aware;

@@ -15,7 +15,7 @@ use aladin::models;
 use aladin::models::BlockImpl;
 use aladin::platform::{presets, PlatformSpec};
 use aladin::runtime;
-use aladin::sim::report;
+use aladin::sim::{report, BackendKind};
 use aladin::util::cli::Args;
 use aladin::util::json::Value;
 use aladin::util::ToJson;
@@ -26,19 +26,22 @@ aladin — Accuracy-Latency-Aware Design-space Inference Analysis
 USAGE:
   aladin analyze  [--model case1|case2|case3|lenet|<file.qonnx.json>]
                   [--impl-config <file.yaml>] [--platform gap8|stm32n6|<file.json>]
+                  [--backend scratchpad|sharded|systolic]
                   [--deadline-ms <f64>] [--width-mult <f64>] [--json]
                   [--bottlenecks [--trace-out <file.json>]]
   aladin dse      [--model <m>] [--cores 2,4,8] [--l2-kb 256,320,512]
+                  [--backend scratchpad|sharded|systolic|all]
                   [--platform gap8|stm32n6|<file.json>] [--width-mult <f64>] [--json]
                   [--cache-stats]
   aladin dse --joint
                   [--model case1|case2|case3] [--bits 4,8] [--impls im2col,lut]
                   [--tail-k <k>] [--cores 2,4,8] [--l2-kb 256,320,512]
-                  [--threads <n>] [--platform <p>] [--width-mult <f64>] [--json]
+                  [--backend <b|all>] [--threads <n>] [--platform <p>]
+                  [--width-mult <f64>] [--json]
                   [--measured-accuracy [--vectors <n>]] [--cache-stats]
   aladin dse --search evo
                   [--model case1|case2|case3] [--bits 2,4,8] [--impls im2col,lut]
-                  [--cores 2,4,8] [--l2-kb 256,320,512]
+                  [--cores 2,4,8] [--l2-kb 256,320,512] [--backend <b|all>]
                   [--population <K>] [--generations <N>] [--seed <S>]
                   [--max-evals <E>] [--mem-budget-kb <M>] [--deadline-ms <D>]
                   [--no-prune] [--no-delta] [--threads <n>] [--platform <p>]
@@ -56,6 +59,25 @@ USAGE:
   aladin table1
   aladin help
 ";
+
+/// The hardware backends `--backend <name|all>` selects; empty when the
+/// flag is absent (keep the platform's own backend).
+fn parse_backends(args: &Args) -> Result<Vec<BackendKind>> {
+    match args.get("backend") {
+        None => Ok(vec![]),
+        Some("all") => Ok(BackendKind::all().to_vec()),
+        Some(list) => list
+            .split(',')
+            .map(|p| {
+                BackendKind::parse(p.trim()).ok_or_else(|| {
+                    io_err(format!(
+                        "unknown --backend `{p}` (expected scratchpad|sharded|systolic|all)"
+                    ))
+                })
+            })
+            .collect(),
+    }
+}
 
 fn load_platform(name: &str) -> Result<PlatformSpec> {
     match name {
@@ -95,7 +117,14 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     if let Some(path) = args.get("impl-config") {
         cfg = ImplConfig::from_file(path)?;
     }
-    let platform = load_platform(&args.get_or("platform", "gap8"))?;
+    let mut platform = load_platform(&args.get_or("platform", "gap8"))?;
+    if let Some(name) = args.get("backend") {
+        platform.backend = BackendKind::parse(name).ok_or_else(|| {
+            io_err(format!(
+                "unknown --backend `{name}` (expected scratchpad|sharded|systolic)"
+            ))
+        })?;
+    }
     let pipe = Pipeline::new(platform.clone(), cfg);
     // --bottlenecks records the per-resource span timeline alongside the
     // (bit-identical) analysis so the classification can be exported as a
@@ -151,8 +180,8 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     }
 
     println!(
-        "\n== platform-aware simulation (Fig. 6) — {} ==",
-        analysis.platform
+        "\n== platform-aware simulation (Fig. 6) — {} [{} backend] ==",
+        analysis.platform, analysis.sim.backend
     );
     println!(
         "{:<8} {:>12} {:>9} {:>9} {:>7} {:>5}",
@@ -166,13 +195,14 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     }
 
     println!(
-        "\ntotal: {} cycles = {:.3} ms @ {:.0} MHz  (peak L1 {:.1} kB, peak L2 {:.1} kB, L3 traffic {:.1} kB)",
+        "\ntotal: {} cycles = {:.3} ms @ {:.0} MHz  (peak L1 {:.1} kB, peak L2 {:.1} kB, L3 traffic {:.1} kB, energy {:.1} uJ)",
         analysis.latency.total_cycles,
         analysis.latency.latency_s * 1e3,
         platform.clock_hz / 1e6,
         analysis.peak_l1 as f64 / 1024.0,
         analysis.peak_l2 as f64 / 1024.0,
         analysis.l3_traffic as f64 / 1024.0,
+        analysis.energy_nj / 1e3,
     );
 
     if let Some(ms) = args.get_parsed::<f64>("deadline-ms").map_err(io_err)? {
@@ -243,6 +273,7 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
             .get_list::<u64>("l2-kb")
             .map_err(io_err)?
             .unwrap_or_else(|| vec![256, 320, 512]),
+        backends: parse_backends(args)?,
     };
     let platform = load_platform(&args.get_or("platform", "gap8"))?;
     let threads = args.get_parsed::<usize>("threads").map_err(io_err)?;
@@ -303,8 +334,18 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
     );
     let acc_col = if result.measured { "accuracy" } else { "sens" };
     println!(
-        "{:<24} {:>5} {:>7} {:>14} {:>11} {:>9} {:>10} {:>9} {:>7}",
-        "quant", "cores", "L2 kB", "cycles", "latency ms", acc_col, "param kB", "mem kB", "pareto"
+        "{:<24} {:>5} {:>7} {:>10} {:>14} {:>11} {:>9} {:>10} {:>9} {:>9} {:>7}",
+        "quant",
+        "cores",
+        "L2 kB",
+        "backend",
+        "cycles",
+        "latency ms",
+        acc_col,
+        "param kB",
+        "mem kB",
+        "E uJ",
+        "pareto"
     );
     for (i, r) in result.records.iter().enumerate() {
         let acc_val = match r.accuracy {
@@ -312,15 +353,17 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
             _ => r.sensitivity,
         };
         println!(
-            "{:<24} {:>5} {:>7} {:>14} {:>11.3} {:>9.3} {:>10.1} {:>9.1} {:>7}",
+            "{:<24} {:>5} {:>7} {:>10} {:>14} {:>11.3} {:>9.3} {:>10.1} {:>9.1} {:>9.1} {:>7}",
             r.quant_label(),
             r.cores,
             r.l2_kb,
+            r.sim.backend,
             r.total_cycles,
             r.latency_s * 1e3,
             acc_val,
             r.param_kb,
             r.mem_kb,
+            r.energy_nj / 1e3,
             if result.front.contains(&i) { "*" } else { "" }
         );
     }
@@ -341,7 +384,7 @@ fn cmd_dse_joint(args: &Args) -> Result<()> {
         "sensitivity"
     };
     println!(
-        "\nPareto front ({axis0} × latency × memory): {} of {} candidates",
+        "\nPareto front ({axis0} × latency × memory × energy): {} of {} candidates",
         result.front.len(),
         result.records.len()
     );
@@ -419,6 +462,7 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
             .get_list::<u64>("l2-kb")
             .map_err(io_err)?
             .unwrap_or_else(|| vec![256, 320, 512]),
+        backends: parse_backends(args)?,
     };
 
     let n_vectors = args.get_parsed::<usize>("vectors").map_err(io_err)?.unwrap_or(16);
@@ -521,8 +565,18 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
 
     let acc_col = if result.measured { "accuracy" } else { "sens" };
     println!(
-        "\n{:<24} {:>5} {:>7} {:>14} {:>11} {:>9} {:>10} {:>9} {:>7}",
-        "quant", "cores", "L2 kB", "cycles", "latency ms", acc_col, "param kB", "mem kB", "pareto"
+        "\n{:<24} {:>5} {:>7} {:>10} {:>14} {:>11} {:>9} {:>10} {:>9} {:>9} {:>7}",
+        "quant",
+        "cores",
+        "L2 kB",
+        "backend",
+        "cycles",
+        "latency ms",
+        acc_col,
+        "param kB",
+        "mem kB",
+        "E uJ",
+        "pareto"
     );
     let mut order: Vec<usize> = result.front.clone();
     order.sort_by_key(|&i| result.records[i].total_cycles);
@@ -533,15 +587,17 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
             _ => r.sensitivity,
         };
         println!(
-            "{:<24} {:>5} {:>7} {:>14} {:>11.3} {:>9.3} {:>10.1} {:>9.1} {:>7}",
+            "{:<24} {:>5} {:>7} {:>10} {:>14} {:>11.3} {:>9.3} {:>10.1} {:>9.1} {:>9.1} {:>7}",
             r.quant_label(),
             r.cores,
             r.l2_kb,
+            r.sim.backend,
             r.total_cycles,
             r.latency_s * 1e3,
             acc_val,
             r.param_kb,
             r.mem_kb,
+            r.energy_nj / 1e3,
             "*"
         );
     }
@@ -554,6 +610,19 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
         result.pruned.len(),
         space.size()
     );
+    if !space.backends.is_empty() {
+        for b in &space.backends {
+            let label = b.label();
+            let evaluated =
+                result.records.iter().filter(|r| r.sim.backend == label).count();
+            let on_front = result
+                .front
+                .iter()
+                .filter(|&&i| result.records[i].sim.backend == label)
+                .count();
+            println!("  backend {label}: {evaluated} evaluated, {on_front} on front");
+        }
+    }
     println!(
         "cache: stage-1 {} computed / {} cached, stage-2 {} computed / {} cached, \
          bound {} computed / {} cached",
@@ -598,53 +667,91 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let model = args.get_or("model", "case2");
     let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
     let (g, cfg) = load_model(&model, width_mult)?;
-    let grid = GridSearch {
-        base: load_platform(&args.get_or("platform", "gap8"))?,
-        cores: args
-            .get_list::<usize>("cores")
-            .map_err(io_err)?
-            .unwrap_or_else(|| vec![2, 4, 8]),
-        l2_kb: args
-            .get_list::<u64>("l2-kb")
-            .map_err(io_err)?
-            .unwrap_or_else(|| vec![256, 320, 512]),
+    let base = load_platform(&args.get_or("platform", "gap8"))?;
+    let backends = parse_backends(args)?;
+    let grouped = args.get("backend").is_some();
+    let backend_list: Vec<Option<BackendKind>> = if backends.is_empty() {
+        vec![None]
+    } else {
+        backends.into_iter().map(Some).collect()
     };
-    // drive the grid through an explicit engine (identical results to
+    let cores = args
+        .get_list::<usize>("cores")
+        .map_err(io_err)?
+        .unwrap_or_else(|| vec![2, 4, 8]);
+    let l2_kb = args
+        .get_list::<u64>("l2-kb")
+        .map_err(io_err)?
+        .unwrap_or_else(|| vec![256, 320, 512]);
+    // drive each grid through an explicit engine (identical results to
     // GridSearch::run_canonical) so --cache-stats can report the layer
-    // tier's hit/miss/splice counters for the run
+    // tier's hit/miss/splice counters; the decorated graph is shared
+    // across backends (the implementation-aware stage is hardware-free)
     let decorated = aladin::impl_aware::decorate(g, &cfg)?;
-    let engine = EvalEngine::for_decorated(decorated, grid.base.clone());
-    let points = grid.run_on(&engine)?;
+    let mut runs = Vec::new();
+    for backend in backend_list {
+        let mut platform = base.clone();
+        if let Some(b) = backend {
+            platform.backend = b;
+        }
+        let grid = GridSearch {
+            base: platform.clone(),
+            cores: cores.clone(),
+            l2_kb: l2_kb.clone(),
+        };
+        let engine = EvalEngine::for_decorated(decorated.clone(), platform.clone());
+        let points = grid.run_on(&engine)?;
+        runs.push((platform.backend.label(), points, engine.stats()));
+    }
     if args.flag("json") {
-        if args.flag("cache-stats") {
+        if grouped {
+            let docs: Vec<Value> = runs
+                .iter()
+                .map(|(label, points, stats)| {
+                    Value::obj()
+                        .with("backend", *label)
+                        .with("points", points.to_json())
+                        .with("cache_stats", stats.to_json())
+                })
+                .collect();
+            let doc = Value::obj().with("backends", Value::Arr(docs));
+            println!("{}", doc.to_string_pretty());
+        } else if args.flag("cache-stats") {
+            let (_, points, stats) = &runs[0];
             let doc = Value::obj()
                 .with("points", points.to_json())
-                .with("cache_stats", engine.stats().to_json());
+                .with("cache_stats", stats.to_json());
             println!("{}", doc.to_string_pretty());
         } else {
-            println!("{}", points.to_json().to_string_pretty());
+            println!("{}", runs[0].1.to_json().to_string_pretty());
         }
         return Ok(());
     }
-    println!("== HW design-space exploration (Fig. 7) — {model} ==");
-    println!(
-        "{:>5} {:>7} {:>14} {:>11} {:>10} {:>10} {:>12}",
-        "cores", "L2 kB", "cycles", "latency ms", "L1 kB", "L2 kB", "L3 traf kB"
-    );
-    for p in &points {
+    for (i, (label, points, stats)) in runs.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        println!("== HW design-space exploration (Fig. 7) — {model} [{label} backend] ==");
         println!(
-            "{:>5} {:>7} {:>14} {:>11.3} {:>10.1} {:>10.1} {:>12.1}",
-            p.cores,
-            p.l2_kb,
-            p.total_cycles,
-            p.latency_s * 1e3,
-            p.peak_l1_kb,
-            p.peak_l2_kb,
-            p.l3_traffic_kb
+            "{:>5} {:>7} {:>14} {:>11} {:>9} {:>10} {:>10} {:>12}",
+            "cores", "L2 kB", "cycles", "latency ms", "E uJ", "L1 kB", "L2 kB", "L3 traf kB"
         );
-    }
-    if args.flag("cache-stats") {
-        println!("\ncache stats:\n{}", engine.stats().to_json().to_string_pretty());
+        for p in points {
+            println!(
+                "{:>5} {:>7} {:>14} {:>11.3} {:>9.1} {:>10.1} {:>10.1} {:>12.1}",
+                p.cores,
+                p.l2_kb,
+                p.total_cycles,
+                p.latency_s * 1e3,
+                p.energy_nj / 1e3,
+                p.peak_l1_kb,
+                p.peak_l2_kb,
+                p.l3_traffic_kb
+            );
+        }
+        if args.flag("cache-stats") {
+            println!("\ncache stats:\n{}", stats.to_json().to_string_pretty());
+        }
     }
     Ok(())
 }

@@ -1,6 +1,12 @@
 //! The abstract platform model (paper §IV) and concrete presets.
+//!
+//! A [`PlatformSpec`] fixes the memory hierarchy, DMA timings, and
+//! per-op cycle costs; its `backend` field
+//! ([`crate::sim::BackendKind`], re-exported here) selects which
+//! hardware backend interprets them in the simulator.
 
 pub mod model;
 pub mod presets;
 
+pub use crate::sim::backend::BackendKind;
 pub use model::{CycleCosts, DmaSpec, PlatformSpec};

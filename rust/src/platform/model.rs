@@ -7,6 +7,7 @@
 //! sizes are expressed in *chunks* of a fixed byte count.
 
 use crate::error::{AladinError, Result};
+use crate::sim::backend::BackendKind;
 
 /// A DMA engine's timing model.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -73,6 +74,7 @@ impl Default for CycleCosts {
 /// The full platform specification (paper §IV-A).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformSpec {
+    /// Human-readable platform name (appears in reports and cache stats).
     pub name: String,
     /// Cluster cores `M`.
     pub cores: usize,
@@ -88,10 +90,16 @@ pub struct PlatformSpec {
     pub dma_l2_l1: DmaSpec,
     /// DMA between L3 and L2 (micro-DMA).
     pub dma_l3_l2: DmaSpec,
+    /// Per-operation cycle costs of one cluster core.
     pub costs: CycleCosts,
     /// Cluster clock in Hz — converts cycles to wall-clock latency for
     /// deadline checks.
     pub clock_hz: f64,
+    /// Hardware backend driving the within-layer simulation core and the
+    /// energy model ([`crate::sim::backend`]). Folded into
+    /// [`Self::content_hash`], so backend swaps invalidate exactly the
+    /// platform half of the DSE layer-unit caches.
+    pub backend: BackendKind,
 }
 
 impl PlatformSpec {
@@ -143,6 +151,13 @@ impl PlatformSpec {
         if self.costs.macs_per_cycle_int8 <= 0.0 {
             return fail("MAC throughput must be positive".into());
         }
+        if self.backend == BackendKind::ShardedMultiCluster && self.cores < 2 {
+            return fail(format!(
+                "backend '{}' needs at least 2 cores to shard across, got {}",
+                self.backend.label(),
+                self.cores
+            ));
+        }
         Ok(())
     }
 
@@ -181,16 +196,85 @@ impl PlatformSpec {
         h.write_f64(self.costs.im2col_cycles_per_elem);
         h.write_u64(self.costs.tile_overhead_cycles);
         h.write_f64(self.clock_hz);
+        h.write_u64(self.backend.tag());
         h.finish()
     }
 }
 
 
+/// Reject unknown keys in a platform-JSON object so typos (`l2_kb` vs
+/// `l2_bytes`, `setup` vs `setup_cycles`) fail loudly instead of being
+/// silently absorbed by the preset fallbacks.
+fn check_known_keys(v: &crate::util::Value, what: &str, allowed: &[&str]) -> Result<()> {
+    if let Some(fields) = v.as_obj() {
+        for (key, _) in fields {
+            if !allowed.contains(&key.as_str()) {
+                return Err(AladinError::Platform(format!(
+                    "unknown key '{key}' in {what}; expected one of: {}",
+                    allowed.join(", ")
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
 impl PlatformSpec {
     /// Parse from the in-tree JSON document model (platform JSON files
-    /// passed to the CLI). Missing fields fall back to the GAP8 preset.
+    /// passed to the CLI). Missing fields fall back to the GAP8 preset;
+    /// unknown keys at any level are rejected with a named-key error.
     pub fn from_json(v: &crate::util::Value) -> Result<Self> {
+        check_known_keys(
+            v,
+            "platform spec",
+            &[
+                "name",
+                "cores",
+                "l1_banks",
+                "l1_bytes",
+                "l2_bytes",
+                "chunk_bytes",
+                "dma_l2_l1",
+                "dma_l3_l2",
+                "costs",
+                "clock_hz",
+                "backend",
+            ],
+        )?;
+        for key in ["dma_l2_l1", "dma_l3_l2"] {
+            if let Some(o) = v.get(key) {
+                check_known_keys(
+                    o,
+                    &format!("'{key}'"),
+                    &["setup_cycles", "bytes_per_cycle"],
+                )?;
+            }
+        }
+        if let Some(o) = v.get("costs") {
+            check_known_keys(
+                o,
+                "'costs'",
+                &[
+                    "macs_per_cycle_int8",
+                    "unpack_cycles_per_elem",
+                    "lut_access_cycles",
+                    "compare_cycles",
+                    "requant_cycles",
+                    "l1_access_cycles",
+                    "im2col_cycles_per_elem",
+                    "tile_overhead_cycles",
+                ],
+            )?;
+        }
         let base = crate::platform::presets::gap8();
+        let backend = match v.str_field("backend") {
+            None => base.backend,
+            Some(s) => BackendKind::parse(s).ok_or_else(|| {
+                AladinError::Platform(format!(
+                    "unknown backend '{s}'; expected one of: scratchpad, sharded, systolic"
+                ))
+            })?,
+        };
         let dma = |key: &str, d: DmaSpec| -> DmaSpec {
             v.get(key)
                 .map(|o| DmaSpec {
@@ -235,6 +319,7 @@ impl PlatformSpec {
             dma_l3_l2: dma("dma_l3_l2", base.dma_l3_l2),
             costs,
             clock_hz: v.f64_field("clock_hz").unwrap_or(base.clock_hz),
+            backend,
         };
         spec.validate()?;
         Ok(spec)
@@ -270,6 +355,7 @@ impl crate::util::ToJson for PlatformSpec {
                     .with("tile_overhead_cycles", self.costs.tile_overhead_cycles),
             )
             .with("clock_hz", self.clock_hz)
+            .with("backend", self.backend.label())
     }
 }
 
@@ -354,5 +440,68 @@ mod tests {
         let mut q = p.clone();
         q.dma_l3_l2.setup_cycles += 1;
         assert_ne!(p.content_hash(), q.content_hash());
+    }
+
+    #[test]
+    fn content_hash_tracks_backend() {
+        let p = presets::gap8();
+        for kind in BackendKind::all() {
+            let mut q = p.clone();
+            q.backend = kind;
+            if kind == p.backend {
+                assert_eq!(p.content_hash(), q.content_hash());
+            } else {
+                assert_ne!(p.content_hash(), q.content_hash(), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_sharded_on_single_core() {
+        let mut p = presets::stm32n6();
+        p.backend = BackendKind::ShardedMultiCluster;
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("sharded"), "{err}");
+    }
+
+    fn parse(text: &str) -> Result<PlatformSpec> {
+        PlatformSpec::from_json(&crate::util::Value::parse(text).unwrap())
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_top_level_key() {
+        // the classic typo: l2_kb instead of l2_bytes
+        let err = parse(r#"{"name":"x","l2_kb":256}"#).unwrap_err().to_string();
+        assert!(err.contains("l2_kb"), "{err}");
+        assert!(err.contains("l2_bytes"), "suggestions missing: {err}");
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_dma_and_cost_keys() {
+        let err = parse(r#"{"dma_l2_l1":{"setup":30}}"#).unwrap_err().to_string();
+        assert!(err.contains("setup"), "{err}");
+        assert!(err.contains("setup_cycles"), "{err}");
+        let err = parse(r#"{"costs":{"mac_per_cycle":4.0}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mac_per_cycle"), "{err}");
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_backend_name() {
+        let err = parse(r#"{"backend":"tpu"}"#).unwrap_err().to_string();
+        assert!(err.contains("tpu"), "{err}");
+        assert!(err.contains("systolic"), "{err}");
+    }
+
+    #[test]
+    fn from_json_parses_backend_and_roundtrips() {
+        use crate::util::ToJson;
+        let p = parse(r#"{"backend":"systolic"}"#).unwrap();
+        assert_eq!(p.backend, BackendKind::SystolicArray);
+        let q = PlatformSpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+        // default stays the extracted pre-refactor model
+        assert_eq!(parse("{}").unwrap().backend, BackendKind::ScratchpadCluster);
     }
 }

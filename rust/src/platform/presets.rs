@@ -3,6 +3,7 @@
 //! (Cortex-M55 + accelerator).
 
 use super::model::{CycleCosts, DmaSpec, PlatformSpec};
+use crate::sim::backend::BackendKind;
 
 /// GAP8-like preset — the evaluation platform of paper §VIII:
 /// 8 cluster cores, 64 kB L1 scratchpad in 16 banks, 512 kB L2, off-chip
@@ -27,6 +28,7 @@ pub fn gap8() -> PlatformSpec {
         },
         costs: CycleCosts::default(),
         clock_hz: 175e6,
+        backend: BackendKind::ScratchpadCluster,
     }
 }
 
@@ -61,6 +63,7 @@ pub fn stm32n6() -> PlatformSpec {
             ..CycleCosts::default()
         },
         clock_hz: 800e6,
+        backend: BackendKind::ScratchpadCluster,
     }
 }
 

@@ -213,26 +213,18 @@ pub fn tile_compute_cycles(
 ///
 /// The bound is *sound* (never exceeds [`crate::sim::simulate`]'s cycles
 /// for the same layer — asserted by the `prop_lower_bound_never_exceeds_sim`
-/// property over the random-layer corpus) and cheap: O(1) per layer after
-/// tiling, versus O(tiles) for the full timeline. The DSE search uses it
-/// to reject dominated candidates before simulating them
+/// property over the random-layer corpus, per backend) and cheap: O(1) per
+/// layer after tiling, versus O(tiles) for the full timeline. The DSE
+/// search uses it to reject dominated candidates before simulating them
 /// ([`crate::dse::search`]).
+///
+/// Since the backend refactor the pipeline half of the bound is dispatched
+/// to the platform's [`crate::sim::BackendKind`] — the formula above is the
+/// [`crate::sim::backend::ScratchpadCluster`] instance; the sharded and
+/// systolic backends supply matching analytic bounds for their own overlap
+/// semantics.
 pub fn layer_lower_bound_cycles(ls: &LayerSchedule, platform: &PlatformSpec) -> u64 {
-    let plan = &ls.tile;
-    let n_tiles = plan.n_tiles() as u64;
-    let compute_busy = tile_compute_cycles(&ls.layer, plan, platform).total() * n_tiles;
-
-    let dma = &platform.dma_l2_l1;
-    let dma_busy = dma.cycles(plan.temp_bytes)
-        + (dma.cycles(plan.tile_in_dma_bytes()) + dma.cycles(plan.tile_output_bytes)) * n_tiles;
-
-    let exposed_l3_min = if ls.l2.prefetchable {
-        0 // best case: fully hidden under the previous layer
-    } else {
-        platform.dma_l3_l2.cycles(ls.l2.l3_bytes())
-    };
-
-    compute_busy.max(dma_busy) + exposed_l3_min
+    platform.backend.dispatch().layer_lower_bound(ls, platform)
 }
 
 /// Whole-network analytic latency lower bound: the sum of

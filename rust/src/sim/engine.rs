@@ -39,6 +39,12 @@
 //! exactly that composition, so the DSE engine's spliced per-layer cache
 //! ([`crate::dse::engine`]) is bit-identical to a monolithic run by
 //! construction.
+//!
+//! The per-layer core itself is **backend-dispatched**
+//! ([`crate::sim::backend`]): the platform's configured
+//! [`crate::sim::BackendKind`] owns the within-layer tile/DMA semantics
+//! (scratchpad cluster, sharded multi-cluster, systolic array), while the
+//! cross-layer coupling and the exposed-cycle identity above stay shared.
 
 use super::compute::tile_compute_cycles;
 use crate::platform_aware::schedule::{LayerSchedule, NetworkSchedule};
@@ -48,18 +54,30 @@ use crate::platform_aware::schedule::{LayerSchedule, NetworkSchedule};
 pub enum ResourceKind {
     /// The cluster compute array.
     Compute,
+    /// The compute array of one cluster shard (sharded backend lanes).
+    ComputeLane(usize),
     /// The L2<->L1 cluster DMA channel.
     DmaL1,
+    /// The cluster-DMA channel of one cluster shard (sharded backend).
+    DmaL1Lane(usize),
     /// The L3<->L2 micro-DMA channel.
     DmaL3,
 }
 
+/// Per-shard compute track labels (sharded backend, <= 4 shards).
+const COMPUTE_LANE_TRACKS: [&str; 4] = ["cluster0", "cluster1", "cluster2", "cluster3"];
+/// Per-shard DMA track labels (sharded backend, <= 4 shards).
+const DMA_LANE_TRACKS: [&str; 4] = ["dma-l1.0", "dma-l1.1", "dma-l1.2", "dma-l1.3"];
+
 impl ResourceKind {
-    /// Stable track label ("cluster" / "dma-l1" / "dma-l3").
+    /// Stable track label ("cluster" / "dma-l1" / "dma-l3"; per-shard
+    /// lanes report "cluster0".."cluster3" / "dma-l1.0".."dma-l1.3").
     pub fn track(self) -> &'static str {
         match self {
             ResourceKind::Compute => "cluster",
+            ResourceKind::ComputeLane(j) => COMPUTE_LANE_TRACKS[j.min(3)],
             ResourceKind::DmaL1 => "dma-l1",
+            ResourceKind::DmaL1Lane(j) => DMA_LANE_TRACKS[j.min(3)],
             ResourceKind::DmaL3 => "dma-l3",
         }
     }
@@ -76,6 +94,10 @@ pub enum SpanKind {
     Compute(usize),
     /// L1->L2 write-back of one tile.
     DmaOut(usize),
+    /// Weight fill of the systolic array for one tile (systolic backend).
+    WeightFill(usize),
+    /// Serialized output merge / halo exchange (sharded backend).
+    Merge,
     /// Exposed (non-hidden) L3 traffic at the head of the layer.
     L3Exposed,
     /// Hidden L3 weight prefetch that ran during the previous layer.
@@ -177,6 +199,9 @@ pub struct LayerSimResult {
 pub struct SimResult {
     /// Platform name the schedule was simulated on.
     pub platform: String,
+    /// Hardware backend label the schedule was simulated with
+    /// ([`crate::sim::BackendKind::label`]).
+    pub backend: String,
     /// Cluster core count of that platform.
     pub cores: usize,
     /// L2 capacity (kB) of that platform.
@@ -231,6 +256,10 @@ pub struct LayerPipeline {
     /// L2<->L1 channel cycles not covered by compute
     /// (`pipeline_cycles - compute_cycles`).
     pub exposed_dma_l1_cycles: u64,
+    /// The backend's analytic lower bound on `pipeline_cycles` (no L3
+    /// term) — always `<= pipeline_cycles`, the backend-sound core of the
+    /// DSE engine's pruning bound.
+    pub lb_cycles: u64,
     /// Total busy cycles of the L2<->L1 channel (temp load + per-tile
     /// DMA-in/out), hidden or not.
     pub dma_l1_cycles: u64,
@@ -247,47 +276,41 @@ pub struct LayerPipeline {
     pub double_buffered: bool,
 }
 
-/// The bounded-buffer tile pipeline of one layer, starting at absolute
+/// The uniform per-tile cost set of one bounded-buffer pipeline lane —
+/// what [`run_lane_pipeline`] needs to run, independent of which resource
+/// tracks the spans land on (the whole cluster for the scratchpad backend,
+/// one shard for the sharded backend).
+pub(crate) struct LanePipelineSpec {
+    pub n_tiles: usize,
+    pub double_buffered: bool,
+    pub temp_load: u64,
+    pub dma_in_one: u64,
+    pub dma_out_one: u64,
+    pub compute_one: u64,
+}
+
+/// The bounded-buffer tile pipeline of one lane, starting at absolute
 /// cycle `t0`. Translation-invariant: every event is `t0` plus a duration,
 /// so `(pipeline_end - t0, compute_busy)` is independent of `t0` — which is
 /// what lets [`simulate_layer_pipeline`] run it at `t0 = 0` and cache the
 /// result per layer while [`simulate_traced`] replays it at the layer's
 /// real offset for span recording. Returns `(pipeline_end, compute_busy)`.
-fn run_tile_pipeline(
-    ls: &LayerSchedule,
-    platform: &crate::platform::PlatformSpec,
+pub(crate) fn run_lane_pipeline(
+    spec: &LanePipelineSpec,
     t0: u64,
-    record: bool,
-    spans: &mut Vec<TimelineSpan>,
+    compute_res: ResourceKind,
+    dma_res: ResourceKind,
+    span: &mut dyn FnMut(ResourceKind, SpanKind, u64, u64),
 ) -> (u64, u64) {
-    let plan = &ls.tile;
-    let n_tiles = plan.n_tiles();
-    let dma = &platform.dma_l2_l1;
-
-    // per-tile cycle costs (full tiles; the ragged last tile is charged the
-    // same, an upper bound consistent with ALADIN's "bounding" goal)
-    let compute_one = tile_compute_cycles(&ls.layer, plan, platform).total();
-    let dma_in_one = dma.cycles(plan.tile_in_dma_bytes());
-    let dma_out_one = dma.cycles(plan.tile_output_bytes);
-
-    // temp structures (LUT / threshold trees) loaded into L1 once per layer
-    let temp_load = dma.cycles(plan.temp_bytes);
-
-    let mut span = |resource: ResourceKind, kind: SpanKind, start: u64, end: u64| {
-        if record && end > start {
-            spans.push(TimelineSpan {
-                layer: ls.layer.name.clone(),
-                resource,
-                kind,
-                start,
-                end,
-            });
-        }
-    };
+    let n_tiles = spec.n_tiles;
+    let compute_one = spec.compute_one;
+    let dma_in_one = spec.dma_in_one;
+    let dma_out_one = spec.dma_out_one;
+    let temp_load = spec.temp_load;
 
     // --- event-driven tile pipeline over compute + L2<->L1 DMA -----------
     let mut dma_free: u64 = t0;
-    span(ResourceKind::DmaL1, SpanKind::TempLoad, t0, t0 + temp_load);
+    span(dma_res, SpanKind::TempLoad, t0, t0 + temp_load);
     dma_free += temp_load;
 
     let mut compute_free: u64 = t0;
@@ -296,7 +319,7 @@ fn run_tile_pipeline(
     let mut compute_done = vec![t0; n_tiles];
     let mut out_done = vec![t0; n_tiles];
 
-    if plan.double_buffered {
+    if spec.double_buffered {
         // Double buffering: exactly two input and two output slots. The
         // channel services transfers in the Dory loop order in[0], in[1],
         // out[0], in[2], out[1], in[3], … — tile i's compute releasing its
@@ -306,7 +329,7 @@ fn run_tile_pipeline(
             // prologue: both input slots fill before any compute finishes
             let in_start = dma_free;
             in_ready[i] = in_start + dma_in_one;
-            span(ResourceKind::DmaL1, SpanKind::DmaIn(i), in_start, in_ready[i]);
+            span(dma_res, SpanKind::DmaIn(i), in_start, in_ready[i]);
             dma_free = in_ready[i];
         }
         for i in 0..n_tiles {
@@ -315,21 +338,21 @@ fn run_tile_pipeline(
             let out_slot_free = if i >= 2 { out_done[i - 2] } else { t0 };
             let cstart = in_ready[i].max(compute_free).max(out_slot_free);
             compute_done[i] = cstart + compute_one;
-            span(ResourceKind::Compute, SpanKind::Compute(i), cstart, compute_done[i]);
+            span(compute_res, SpanKind::Compute(i), cstart, compute_done[i]);
             compute_free = compute_done[i];
             compute_busy += compute_one;
 
             // the channel then drains tile i's output …
             let wstart = compute_done[i].max(dma_free);
             out_done[i] = wstart + dma_out_one;
-            span(ResourceKind::DmaL1, SpanKind::DmaOut(i), wstart, out_done[i]);
+            span(dma_res, SpanKind::DmaOut(i), wstart, out_done[i]);
             dma_free = out_done[i];
 
             // … and refills the input slot tile i's compute just released
             if i + 2 < n_tiles {
                 let in_start = dma_free.max(compute_done[i]);
                 in_ready[i + 2] = in_start + dma_in_one;
-                span(ResourceKind::DmaL1, SpanKind::DmaIn(i + 2), in_start, in_ready[i + 2]);
+                span(dma_res, SpanKind::DmaIn(i + 2), in_start, in_ready[i + 2]);
                 dma_free = in_ready[i + 2];
             }
         }
@@ -341,18 +364,18 @@ fn run_tile_pipeline(
             let prev_done = if i == 0 { t0 } else { out_done[i - 1] };
             let in_start = dma_free.max(prev_done);
             in_ready[i] = in_start + dma_in_one;
-            span(ResourceKind::DmaL1, SpanKind::DmaIn(i), in_start, in_ready[i]);
+            span(dma_res, SpanKind::DmaIn(i), in_start, in_ready[i]);
             dma_free = in_ready[i];
 
             let cstart = in_ready[i].max(compute_free);
             compute_done[i] = cstart + compute_one;
-            span(ResourceKind::Compute, SpanKind::Compute(i), cstart, compute_done[i]);
+            span(compute_res, SpanKind::Compute(i), cstart, compute_done[i]);
             compute_free = compute_done[i];
             compute_busy += compute_one;
 
             let wstart = compute_done[i].max(dma_free);
             out_done[i] = wstart + dma_out_one;
-            span(ResourceKind::DmaL1, SpanKind::DmaOut(i), wstart, out_done[i]);
+            span(dma_res, SpanKind::DmaOut(i), wstart, out_done[i]);
             dma_free = out_done[i];
         }
     }
@@ -361,38 +384,56 @@ fn run_tile_pipeline(
     (pipeline_end, compute_busy)
 }
 
-/// Per-layer core of the simulator: run one scheduled layer's bounded
-/// buffer pipeline in isolation. The result depends only on (layer
-/// content, platform) — `ls.l2.prefetchable` is deliberately **not** read,
-/// so the same `LayerPipeline` serves every network position and every
+/// The scratchpad cluster's whole-layer tile pipeline: one
+/// [`run_lane_pipeline`] over the full tile stream, with per-tile costs
+/// derived from the layer's tile plan (full tiles; the ragged last tile is
+/// charged the same, an upper bound consistent with ALADIN's "bounding"
+/// goal). Kept here so the [`crate::sim::backend::ScratchpadCluster`]
+/// backend runs the exact pre-refactor arithmetic.
+pub(crate) fn run_tile_pipeline(
+    ls: &LayerSchedule,
+    platform: &crate::platform::PlatformSpec,
+    t0: u64,
+    record: bool,
+    spans: &mut Vec<TimelineSpan>,
+) -> (u64, u64) {
+    let plan = &ls.tile;
+    let dma = &platform.dma_l2_l1;
+    let spec = LanePipelineSpec {
+        n_tiles: plan.n_tiles(),
+        double_buffered: plan.double_buffered,
+        // temp structures (LUT / threshold trees) loaded into L1 once
+        temp_load: dma.cycles(plan.temp_bytes),
+        dma_in_one: dma.cycles(plan.tile_in_dma_bytes()),
+        dma_out_one: dma.cycles(plan.tile_output_bytes),
+        compute_one: tile_compute_cycles(&ls.layer, plan, platform).total(),
+    };
+    let mut span = |resource: ResourceKind, kind: SpanKind, start: u64, end: u64| {
+        if record && end > start {
+            spans.push(TimelineSpan {
+                layer: ls.layer.name.clone(),
+                resource,
+                kind,
+                start,
+                end,
+            });
+        }
+    };
+    run_lane_pipeline(&spec, t0, ResourceKind::Compute, ResourceKind::DmaL1, &mut span)
+}
+
+/// Per-layer core of the simulator: run one scheduled layer's within-layer
+/// pipeline in isolation, dispatched to the platform's configured
+/// [`crate::sim::Backend`]. The result depends only on (layer content,
+/// platform) — `ls.l2.prefetchable` is deliberately **not** read, so the
+/// same `LayerPipeline` serves every network position and every
 /// predecessor; the position-dependent L3 hidden/exposed split is applied
 /// afterwards by [`couple_layer`].
 pub fn simulate_layer_pipeline(
     ls: &LayerSchedule,
     platform: &crate::platform::PlatformSpec,
 ) -> LayerPipeline {
-    let plan = &ls.tile;
-    let n_tiles = plan.n_tiles();
-    let dma = &platform.dma_l2_l1;
-    let dma_in_one = dma.cycles(plan.tile_in_dma_bytes());
-    let dma_out_one = dma.cycles(plan.tile_output_bytes);
-    let temp_load = dma.cycles(plan.temp_bytes);
-
-    let mut spans = Vec::new();
-    let (pipeline_end, compute_busy) = run_tile_pipeline(ls, platform, 0, false, &mut spans);
-
-    LayerPipeline {
-        name: ls.layer.name.clone(),
-        pipeline_cycles: pipeline_end,
-        compute_cycles: compute_busy,
-        exposed_dma_l1_cycles: pipeline_end - compute_busy,
-        dma_l1_cycles: temp_load + (dma_in_one + dma_out_one) * n_tiles as u64,
-        dma_l3_cycles: platform.dma_l3_l2.cycles(ls.l2.l3_bytes()),
-        l1_used_bytes: plan.l1_used_bytes,
-        l2_used_bytes: ls.l2.l2_used_bytes,
-        n_tiles,
-        double_buffered: plan.double_buffered,
-    }
+    platform.backend.dispatch().layer_pipeline(ls, platform)
 }
 
 /// The explicit cross-layer composition step: splice one per-layer
@@ -466,7 +507,7 @@ fn simulate_layer(
             });
         }
         let (pipeline_end, compute_busy) =
-            run_tile_pipeline(ls, platform, t0, true, &mut spans);
+            platform.backend.dispatch().run_layer(ls, platform, t0, true, &mut spans);
         // translation invariance: the replay reproduces the cached numbers
         debug_assert_eq!(pipeline_end - t0, pipe.pipeline_cycles);
         debug_assert_eq!(compute_busy, pipe.compute_cycles);
@@ -507,6 +548,7 @@ fn simulate_inner(schedule: &NetworkSchedule, record: bool) -> (SimResult, Timel
     (
         SimResult {
             platform: schedule.platform.name.clone(),
+            backend: schedule.platform.backend.label().to_string(),
             cores: schedule.platform.cores,
             l2_kb: schedule.platform.l2_bytes / 1024,
             layers,
@@ -554,6 +596,7 @@ impl crate::util::ToJson for SimResult {
     fn to_json(&self) -> crate::util::Value {
         crate::util::Value::obj()
             .with("platform", self.platform.clone())
+            .with("backend", self.backend.clone())
             .with("cores", self.cores)
             .with("l2_kb", self.l2_kb)
             .with("total_cycles", self.total_cycles())

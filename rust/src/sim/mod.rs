@@ -18,12 +18,20 @@
 //! companion: a sound latency lower bound computable from the schedule
 //! alone, used by [`crate::dse::search`] to prune candidates before
 //! simulating them.
+//!
+//! The within-layer simulation core is pluggable ([`backend`]): the
+//! platform's [`BackendKind`] selects among a scratchpad cluster, a
+//! sharded multi-cluster, and a weight-stationary systolic array, each
+//! with a matching analytic lower bound and a bits-aware energy model
+//! ([`layer_energy_nj`]).
 
+pub mod backend;
 pub mod compute;
 pub mod engine;
 pub mod report;
 pub mod trace;
 
+pub use backend::{layer_energy_nj, model_energy_nj, Backend, BackendKind};
 pub use compute::{
     cores_used, layer_lower_bound_cycles, lower_bound_cycles, lut_contention_factor,
     tile_compute_cycles, TileComputeCycles,

@@ -13,7 +13,8 @@ use std::path::Path;
 /// One span on the virtual timeline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Span {
-    /// Track name ("cluster", "dma-l1", "dma-l3").
+    /// Track name ("cluster", "dma-l1", "dma-l3"; per-shard lanes of the
+    /// sharded backend use "cluster0".."cluster3" / "dma-l1.0".."dma-l1.3").
     pub track: &'static str,
     /// Human-readable span label (layer name + phase).
     pub name: String,
@@ -83,6 +84,8 @@ impl Trace {
                     SpanKind::DmaIn(i) => format!("{} in[{i}]", s.layer),
                     SpanKind::Compute(i) => format!("{} compute[{i}]", s.layer),
                     SpanKind::DmaOut(i) => format!("{} out[{i}]", s.layer),
+                    SpanKind::WeightFill(i) => format!("{} fill[{i}]", s.layer),
+                    SpanKind::Merge => format!("{} merge", s.layer),
                     SpanKind::L3Exposed => format!("{} weights (exposed)", s.layer),
                     SpanKind::L3Prefetch => format!("{} weights (prefetch)", s.layer),
                 },
@@ -101,9 +104,19 @@ impl Trace {
     /// Export as Chrome-trace JSON ("traceEvents" array; 1 cycle = 1 µs on
     /// the viewer timescale).
     pub fn to_chrome_trace(&self) -> Value {
+        // per-shard lanes (sharded backend) get their own viewer rows,
+        // grouped after the three shared tracks
         let tid = |track: &str| match track {
             "cluster" => 1u64,
             "dma-l1" => 2,
+            "cluster0" => 10,
+            "cluster1" => 11,
+            "cluster2" => 12,
+            "cluster3" => 13,
+            "dma-l1.0" => 20,
+            "dma-l1.1" => 21,
+            "dma-l1.2" => 22,
+            "dma-l1.3" => 23,
             _ => 3,
         };
         let events: Vec<Value> = self
@@ -240,6 +253,38 @@ mod tests {
             parsed.get("traceEvents").unwrap().as_arr().unwrap().len(),
             tr.spans.len()
         );
+    }
+
+    #[test]
+    fn sharded_timeline_trace_uses_lane_tracks() {
+        let mut b = GraphBuilder::new(
+            "t",
+            TensorSpec::chw(8, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(32, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let mut p = presets::gap8();
+        p.backend = crate::sim::BackendKind::ShardedMultiCluster;
+        let s = build_schedule(&fuse(&g).unwrap(), &Arc::new(p)).unwrap();
+        let (r, timeline) = crate::sim::simulate_traced(&s);
+        let tr = Trace::from_timeline(&timeline);
+        assert_eq!(tr.end(), r.total_cycles());
+        // the shards' pipelines land on their own lane tracks
+        assert!(tr.spans.iter().any(|x| x.track == "cluster0"));
+        assert!(tr.spans.iter().any(|x| x.track == "dma-l1.0"));
+        // lane tracks export under distinct viewer rows
+        let v = tr.to_chrome_trace();
+        let parsed = Value::parse(&v.to_string_pretty()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), tr.spans.len());
+        let tids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter_map(|e| e.u64_field("tid"))
+            .collect();
+        assert!(tids.len() > 3, "lane rows must not collapse onto one tid");
     }
 
     #[test]

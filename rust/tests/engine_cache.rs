@@ -25,6 +25,7 @@ fn assert_records_bit_identical(a: &aladin::dse::EvalRecord, b: &aladin::dse::Ev
     assert_eq!(a.peak_l1_kb.to_bits(), b.peak_l1_kb.to_bits());
     assert_eq!(a.peak_l2_kb.to_bits(), b.peak_l2_kb.to_bits());
     assert_eq!(a.l3_traffic_kb.to_bits(), b.l3_traffic_kb.to_bits());
+    assert_eq!(a.energy_nj.to_bits(), b.energy_nj.to_bits());
     assert_eq!(a.tilings, b.tilings);
     assert_sims_bit_identical(&a.sim, &b.sim);
 }
@@ -36,6 +37,7 @@ fn small(mut case: MobileNetConfig) -> MobileNetConfig {
 
 fn assert_sims_bit_identical(a: &SimResult, b: &SimResult) {
     assert_eq!(a.platform, b.platform);
+    assert_eq!(a.backend, b.backend);
     assert_eq!(a.cores, b.cores);
     assert_eq!(a.l2_kb, b.l2_kb);
     assert_eq!(a.layers.len(), b.layers.len());
@@ -68,7 +70,7 @@ fn assert_sims_bit_identical(a: &SimResult, b: &SimResult) {
 fn cached_and_cold_evaluations_bit_identical() {
     let vector = DesignVector {
         quant: Some(QuantAxis::uniform(4, BlockImpl::Im2col, 10)),
-        hw: Some(HwAxis { cores: 4, l2_kb: 320 }),
+        hw: Some(HwAxis { cores: 4, l2_kb: 320, backend: None }),
     };
 
     // cold: a fresh engine, first evaluation
@@ -126,6 +128,7 @@ fn joint_product_space_shares_stage1_across_hardware_points() {
         tail_k: 0,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let result = explore_joint(small(models::case2()), presets::gap8(), &space, None).unwrap();
     assert_eq!(result.records.len(), 8); // 2 quant x 4 hw
@@ -144,6 +147,7 @@ fn joint_pareto_front_deterministic_across_thread_counts() {
         tail_k: 0,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let run = |threads: usize| -> JointResult {
         explore_joint(small(models::case1()), presets::gap8(), &space, Some(threads)).unwrap()
@@ -212,6 +216,7 @@ fn joint_measured_accuracy_is_deterministic_across_thread_counts() {
         tail_k: 0,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let run = |threads: usize| {
         explore_joint_measured(
@@ -264,7 +269,7 @@ fn k_gene_mutation_recomputes_exactly_the_changed_layer_units() {
     // mutation recomputes exactly the k changed blocks' layer units (plus
     // the precision-coupled neighbor), never the whole network
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
-    let hw = HwAxis { cores: 4, l2_kb: 320 };
+    let hw = HwAxis { cores: 4, l2_kb: 320, backend: None };
     let base_q = QuantAxis::uniform(8, BlockImpl::Im2col, 10);
     let base = DesignVector {
         quant: Some(base_q.clone()),
@@ -324,7 +329,7 @@ fn k_gene_mutation_recomputes_exactly_the_changed_layer_units() {
 #[test]
 fn evaluate_delta_chain_is_bit_identical_to_from_scratch() {
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
-    let hw = HwAxis { cores: 8, l2_kb: 512 };
+    let hw = HwAxis { cores: 8, l2_kb: 512, backend: None };
     let base_q = QuantAxis::uniform(8, BlockImpl::Im2col, 10);
     let mut prev = DesignVector {
         quant: Some(base_q.clone()),
@@ -344,7 +349,7 @@ fn evaluate_delta_chain_is_bit_identical_to_from_scratch() {
             DesignVector { quant: Some(q_b), hw: Some(hw) },
             DesignVector {
                 quant: Some(q_c),
-                hw: Some(HwAxis { cores: 2, l2_kb: 256 }),
+                hw: Some(HwAxis { cores: 2, l2_kb: 256, backend: None }),
             },
         ]
     };
@@ -380,6 +385,55 @@ fn engine_lower_bound_matches_schedule_level_bound() {
             "c{cores}/l2 {l2_kb}"
         );
     }
+}
+
+#[test]
+fn backend_swap_invalidates_exactly_the_platform_half_of_the_cache() {
+    // satellite criterion for the Backend tentpole: the backend sits in
+    // the platform content hash, so swapping it re-runs every layer unit
+    // (platform-half keyed) but never the quant-axis stages — and swapping
+    // back is served entirely from cache
+    use aladin::sim::BackendKind;
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let base = DesignVector {
+        quant: Some(QuantAxis::uniform(8, BlockImpl::Im2col, 10)),
+        hw: Some(HwAxis { cores: 4, l2_kb: 320, backend: None }),
+    };
+    let r0 = engine.evaluate(&base).unwrap();
+    assert_eq!(r0.sim.backend, "scratchpad");
+    let total_layers = r0.sim.layers.len();
+    let s0 = engine.stats();
+    assert_eq!(s0.layer_computed, total_layers, "cold run computes every unit");
+    assert_eq!(s0.impl_computed, 1);
+
+    let swapped = DesignVector {
+        quant: Some(QuantAxis::uniform(8, BlockImpl::Im2col, 10)),
+        hw: Some(HwAxis {
+            cores: 4,
+            l2_kb: 320,
+            backend: Some(BackendKind::SystolicArray),
+        }),
+    };
+    let r1 = engine.evaluate(&swapped).unwrap();
+    assert_eq!(r1.sim.backend, "systolic");
+    let s1 = engine.stats();
+    assert_eq!(s1.impl_computed, 1, "backend swap must not re-decorate");
+    assert_eq!(s1.impl_hits, s0.impl_hits + 1, "quant-axis stage stays a hit");
+    assert_eq!(s1.sim_computed, s0.sim_computed + 1);
+    assert_eq!(
+        s1.layer_computed,
+        s0.layer_computed + total_layers,
+        "a backend swap re-keys exactly the platform half of every unit"
+    );
+
+    // swap back: bit-identical to the first run, all units cached
+    let r2 = engine.evaluate(&base).unwrap();
+    let s2 = engine.stats();
+    assert_eq!(r2.total_cycles, r0.total_cycles);
+    assert_eq!(r2.energy_nj.to_bits(), r0.energy_nj.to_bits());
+    assert_eq!(s2.layer_computed, s1.layer_computed, "swap back must hit every unit");
+    assert_eq!(s2.sim_computed, s1.sim_computed);
+    assert!(s2.sim_hits > s1.sim_hits);
 }
 
 #[test]

@@ -308,6 +308,79 @@ fn prop_lower_bound_never_exceeds_sim() {
 }
 
 #[test]
+fn prop_lower_bound_sound_per_backend() {
+    // the pruning bound must stay sound no matter which backend owns the
+    // within-layer pipeline; cores >= 2 so the sharded backend validates
+    check_property("lower_bound_sound_backends", 60, |rng| {
+        let g = random_decorated(rng);
+        let layers = fuse(&g).unwrap();
+        let cores = [2usize, 4, 8][rng.range(0, 2)];
+        let l2_kb = [128u64, 256, 512][rng.range(0, 2)];
+        for kind in aladin::sim::BackendKind::all() {
+            let mut p = presets::gap8_with(cores, l2_kb);
+            p.backend = kind;
+            let s = match build_schedule(&layers, &std::sync::Arc::new(p)) {
+                Ok(s) => s,
+                Err(aladin::AladinError::Infeasible { .. }) => continue,
+                Err(e) => panic!("unexpected error: {e}"),
+            };
+            let bound = aladin::sim::lower_bound_cycles(&s);
+            let sim = simulate(&s).total_cycles();
+            assert!(
+                bound <= sim,
+                "{}: bound {bound} > simulated {sim} (cores {cores}, L2 {l2_kb} kB)",
+                kind.label()
+            );
+            assert!(bound > 0, "{}", kind.label());
+        }
+    });
+}
+
+#[test]
+fn prop_energy_monotone_nonincreasing_in_bits_per_backend() {
+    // the QAPPA-style energy model: every term shrinks (or stays constant)
+    // as operand bit widths shrink, under every backend's cost set
+    check_property("energy_monotone_bits", 100, |rng| {
+        let cin = rng.range(1, 8);
+        let cout = rng.range(1, 32);
+        let hw = [4usize, 8, 16][rng.range(0, 2)];
+        let build = |bits: u8| {
+            let mut b = GraphBuilder::new(
+                "e",
+                TensorSpec::chw(cin, hw, hw, ElemType::int(8)),
+                ElemType::int(32),
+            );
+            b.conv("c", ConvAttrs::standard(cout, 3, 1, 1), ElemType::int(bits))
+                .relu("r")
+                .quant("q", ElemType::int(bits), false);
+            let mut cfg = ImplConfig::default();
+            cfg.set_node(
+                "c",
+                NodeImplSpec {
+                    implementation: Some("im2col".into()),
+                    ..Default::default()
+                },
+            );
+            fuse(&decorate(b.finish(), &cfg).unwrap()).unwrap()
+        };
+        let (l2, l4, l8) = (build(2), build(4), build(8));
+        for kind in aladin::sim::BackendKind::all() {
+            let mut p = presets::gap8();
+            p.backend = kind;
+            let e2 = aladin::sim::model_energy_nj(&l2, &p);
+            let e4 = aladin::sim::model_energy_nj(&l4, &p);
+            let e8 = aladin::sim::model_energy_nj(&l8, &p);
+            assert!(
+                e2 <= e4 && e4 <= e8,
+                "{}: {e2} {e4} {e8}",
+                kind.label()
+            );
+            assert!(e2 > 0.0 && e8.is_finite(), "{}", kind.label());
+        }
+    });
+}
+
+#[test]
 fn prop_pareto_2d_fast_path_agrees() {
     // satellite regression: the O(n log n) 2-objective sweep must agree
     // with the O(n^2) scan on random inputs (ties and clusters included)
@@ -529,6 +602,7 @@ fn prop_mutation_chain_delta_bit_identical_to_scratch() {
         assert_eq!(a.peak_l1_kb.to_bits(), b.peak_l1_kb.to_bits());
         assert_eq!(a.peak_l2_kb.to_bits(), b.peak_l2_kb.to_bits());
         assert_eq!(a.l3_traffic_kb.to_bits(), b.l3_traffic_kb.to_bits());
+        assert_eq!(a.energy_nj.to_bits(), b.energy_nj.to_bits());
         assert_eq!(a.tilings, b.tilings);
         assert_eq!(a.sim.layers.len(), b.sim.layers.len());
         for (x, y) in a.sim.layers.iter().zip(&b.sim.layers) {
@@ -556,6 +630,7 @@ fn prop_mutation_chain_delta_bit_identical_to_scratch() {
             n_blocks: 10,
             cores: vec![2, 4, 8],
             l2_kb: vec![256, 320, 512],
+            backends: vec![],
         };
         let mut cur = space.random(rng);
         // seed the base snapshot; an infeasible start is fine (the delta

@@ -17,11 +17,11 @@ fn small(mut case: MobileNetConfig) -> MobileNetConfig {
     case
 }
 
-fn dominates_or_equals(a: &[f64; 3], b: &[f64; 3]) -> bool {
+fn dominates_or_equals(a: &[f64; 4], b: &[f64; 4]) -> bool {
     a.iter().zip(b).all(|(x, y)| x <= y)
 }
 
-fn strictly_dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+fn strictly_dominates(a: &[f64; 4], b: &[f64; 4]) -> bool {
     a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
 }
 
@@ -49,6 +49,7 @@ fn evo_front_dominates_or_equals_exhaustive_on_fig7_grid() {
         n_blocks: 10,
         cores: vec![2, 4, 8],
         l2_kb: vec![256, 320, 512],
+        backends: vec![],
     };
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
     let cfg = EvoConfig {
@@ -67,6 +68,7 @@ fn evo_front_dominates_or_equals_exhaustive_on_fig7_grid() {
         tail_k: 0,
         cores: vec![2, 4, 8],
         l2_kb: vec![256, 320, 512],
+        backends: vec![],
     };
     let exh = explore_joint(small(models::case2()), presets::gap8(), &jspace, Some(2)).unwrap();
     assert!(!exh.front.is_empty());
@@ -93,6 +95,7 @@ fn evo_front_covers_exhaustive_uniform_quant_grid() {
         n_blocks: 10,
         cores: vec![2, 4, 8],
         l2_kb: vec![256, 320, 512],
+        backends: vec![],
     };
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
     let cfg = EvoConfig {
@@ -129,6 +132,7 @@ fn seeded_search_is_bit_identical_across_thread_counts() {
         n_blocks: 10,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let run = |threads: usize| -> EvoResult {
         let engine = EvalEngine::for_mobilenet(small(models::case1()), presets::gap8())
@@ -144,7 +148,7 @@ fn seeded_search_is_bit_identical_across_thread_counts() {
     };
     let a = run(1);
     let b = run(8);
-    let signature = |r: &EvoResult| -> Vec<(String, u64, u64, u64)> {
+    let signature = |r: &EvoResult| -> Vec<(String, u64, u64, u64, u64)> {
         r.records
             .iter()
             .map(|x| {
@@ -153,6 +157,7 @@ fn seeded_search_is_bit_identical_across_thread_counts() {
                     x.total_cycles,
                     x.sensitivity.to_bits(),
                     x.mem_kb.to_bits(),
+                    x.energy_nj.to_bits(),
                 )
             })
             .collect()
@@ -186,6 +191,7 @@ fn evo_scales_to_a_million_point_space_under_budget() {
         n_blocks: 10,
         cores: vec![2, 4, 8],
         l2_kb: vec![256, 320, 512],
+        backends: vec![],
     };
     assert!(space.size() >= 1e6, "space too small: {}", space.size());
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
@@ -230,6 +236,7 @@ fn bound_pruned_candidates_could_not_enter_the_front() {
         n_blocks: 10,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
     let cfg = EvoConfig {
@@ -240,7 +247,7 @@ fn bound_pruned_candidates_could_not_enter_the_front() {
         ..EvoConfig::default()
     };
     let r = evolve(&engine, &space, &cfg).unwrap();
-    let front_objs: Vec<[f64; 3]> = r.front.iter().map(|&i| objectives(&r.records[i])).collect();
+    let front_objs: Vec<[f64; 4]> = r.front.iter().map(|&i| objectives(&r.records[i])).collect();
     let bound_pruned = r
         .pruned
         .iter()
@@ -277,6 +284,7 @@ fn measured_search_with_successive_halving_refines_survivors() {
         n_blocks: 10,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
         .with_measured_accuracy(Arc::new(models::cifar_vectors(8)));
@@ -314,6 +322,7 @@ fn seeded_front_identical_with_delta_path_on_and_off_across_threads() {
         n_blocks: 10,
         cores: vec![2, 8],
         l2_kb: vec![256, 512],
+        backends: vec![],
     };
     let run = |threads: usize, delta: bool| -> EvoResult {
         let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
@@ -328,7 +337,7 @@ fn seeded_front_identical_with_delta_path_on_and_off_across_threads() {
         };
         evolve(&engine, &space, &cfg).unwrap()
     };
-    let signature = |r: &EvoResult| -> Vec<(String, usize, u64, u64, u64, u64)> {
+    let signature = |r: &EvoResult| -> Vec<(String, usize, u64, u64, u64, u64, u64)> {
         r.records
             .iter()
             .map(|x| {
@@ -339,6 +348,7 @@ fn seeded_front_identical_with_delta_path_on_and_off_across_threads() {
                     x.total_cycles,
                     x.sensitivity.to_bits(),
                     x.mem_kb.to_bits(),
+                    x.energy_nj.to_bits(),
                 )
             })
             .collect()
@@ -356,5 +366,80 @@ fn seeded_front_identical_with_delta_path_on_and_off_across_threads() {
             reference.front, other.front,
             "front differs (threads {threads}, delta {delta})"
         );
+    }
+}
+
+#[test]
+fn backend_gene_4d_front_deterministic_across_threads_and_delta() {
+    // satellite criterion for the Backend tentpole: with the backend gene
+    // active, the 4-objective (sensitivity, latency, memory, energy)
+    // search stays bit-identical across 1/8 engine threads and with the
+    // delta path on and off — and the archive spans all three backends
+    // (generation-0 seeds enumerate the gene)
+    use aladin::sim::BackendKind;
+    let space = SearchSpace {
+        bits: vec![4, 8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![2, 8],
+        l2_kb: vec![256, 512],
+        backends: BackendKind::all().to_vec(),
+    };
+    let run = |threads: usize, delta: bool| -> EvoResult {
+        let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+            .with_threads(threads);
+        let cfg = EvoConfig {
+            population: 18,
+            generations: 3,
+            max_evals: 90,
+            seed: 17,
+            delta,
+            ..EvoConfig::default()
+        };
+        evolve(&engine, &space, &cfg).unwrap()
+    };
+    let reference = run(1, true);
+    assert!(!reference.front.is_empty());
+    assert_front_mutually_nondominated(&reference);
+    let labels: std::collections::BTreeSet<&str> =
+        reference.records.iter().map(|r| r.sim.backend.as_str()).collect();
+    assert_eq!(labels.len(), 3, "archive must span all three backends: {labels:?}");
+    // energy is a real fourth axis, not a relabeling of latency
+    let energies: std::collections::BTreeSet<u64> =
+        reference.records.iter().map(|r| r.energy_nj.to_bits()).collect();
+    assert!(energies.len() > 1, "energy axis is constant across the archive");
+
+    let signature = |r: &EvoResult| -> Vec<(String, usize, u64, String, u64, u64)> {
+        r.records
+            .iter()
+            .map(|x| {
+                (
+                    x.quant_label(),
+                    x.cores,
+                    x.l2_kb,
+                    x.sim.backend.clone(),
+                    x.total_cycles,
+                    x.energy_nj.to_bits(),
+                )
+            })
+            .collect()
+    };
+    for (threads, delta) in [(1usize, false), (8, true), (8, false)] {
+        let other = run(threads, delta);
+        assert_eq!(
+            signature(&reference),
+            signature(&other),
+            "archive differs (threads {threads}, delta {delta})"
+        );
+        assert_eq!(
+            reference.front, other.front,
+            "front differs (threads {threads}, delta {delta})"
+        );
+        for (&i, &j) in reference.front.iter().zip(&other.front) {
+            assert_eq!(
+                objectives(&reference.records[i]).map(f64::to_bits),
+                objectives(&other.records[j]).map(f64::to_bits)
+            );
+        }
     }
 }
