@@ -13,12 +13,14 @@
 //! timings + cache counters as a JSON artifact (`BENCH_joint_dse.json`) so
 //! the per-PR perf trajectory accumulates.
 
+use aladin::analysis::{lint_model, LintConfig};
 use aladin::coordinator::Pipeline;
 use aladin::dse::{
     evolve, explore_joint, normalized_front_hypervolume, objectives, EvalEngine, EvoConfig,
     Genome, GridSearch, HwAxis, JointSpace, SearchSpace,
 };
 use aladin::impl_aware::decorate;
+use aladin::platform_aware::fuse;
 use aladin::models;
 use aladin::models::BlockImpl;
 use aladin::platform::presets;
@@ -366,6 +368,85 @@ fn main() {
             .with("backends", Value::Arr(rows));
         std::fs::write(&path, doc.to_string_pretty()).expect("write backend bench json");
         println!("wrote backend matrix to {path}");
+    }
+
+    // (g) the static lint screen: raw lint throughput (models/sec) on the
+    // Fig. 7 grid crossed with every backend, and the screen's prune rate
+    // on an evolutionary run whose seeds include statically infeasible
+    // hardware corners (sharded backend at 1 core -> blocking AL103)
+    let lint_decorated = decorate(g.clone(), &cfg).unwrap();
+    let lint_fused = fuse(&lint_decorated).unwrap();
+    let lint_platforms: Vec<_> = BackendKind::all()
+        .iter()
+        .flat_map(|&kind| {
+            grid_points.iter().map(move |&(c, l2)| {
+                let mut p = presets::gap8_with(c, l2);
+                p.backend = kind;
+                p
+            })
+        })
+        .collect();
+    let lint_bench = bench("joint_dse/lint/fig7_x_backends", 1, 5, || {
+        let mut findings = 0usize;
+        for p in &lint_platforms {
+            findings += lint_model(&lint_decorated, &lint_fused, Some(p), &LintConfig::default())
+                .diagnostics
+                .len();
+        }
+        findings
+    });
+    let lint_rate = lint_platforms.len() as f64 / lint_bench.median.as_secs_f64();
+
+    let screen_space = SearchSpace {
+        bits: vec![8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![1, 8],
+        l2_kb: vec![256],
+        backends: BackendKind::all().to_vec(),
+    };
+    let screen_cfg = EvoConfig {
+        population: 12,
+        generations: 3,
+        seed: 29,
+        max_evals: 60,
+        ..EvoConfig::default()
+    };
+    let screen_engine = EvalEngine::for_mobilenet(case.clone(), presets::gap8());
+    let t0 = std::time::Instant::now();
+    let screened = evolve(&screen_engine, &screen_space, &screen_cfg).unwrap();
+    let screen_secs = t0.elapsed().as_secs_f64();
+    let ss = screened.stats;
+    let screen_candidates = screened.evaluations + screened.pruned.len();
+    let screen_prune_rate = ss.lint_rejected as f64 / screen_candidates.max(1) as f64;
+    println!(
+        "static lint: {lint_rate:.1} models/sec over {} (hardware, backend) pairs; \
+         evo screen rejected {}/{} candidates ({:.1}%) in {screen_secs:.2}s \
+         ({} lint computed / {} cached)",
+        lint_platforms.len(),
+        ss.lint_rejected,
+        screen_candidates,
+        screen_prune_rate * 100.0,
+        ss.lint_computed,
+        ss.lint_hits
+    );
+
+    if let Ok(path) = std::env::var("BENCH_LINT_JSON_OUT") {
+        let doc = Value::obj()
+            .with("bench", "lint_screen")
+            .with("tiny", tiny)
+            .with("width_mult", case.width_mult)
+            .with("lint_models_per_sec", lint_rate)
+            .with("lint_platforms", lint_platforms.len())
+            .with("screen_candidates", screen_candidates)
+            .with("screen_lint_rejected", ss.lint_rejected)
+            .with("screen_prune_rate", screen_prune_rate)
+            .with("screen_lint_computed", ss.lint_computed)
+            .with("screen_lint_hits", ss.lint_hits)
+            .with("evo_evaluations", screened.evaluations)
+            .with("runs", Value::Arr(vec![stats_json(&lint_bench)]));
+        std::fs::write(&path, doc.to_string_pretty()).expect("write lint bench json");
+        println!("wrote lint screen bench to {path}");
     }
 
     if let Ok(path) = std::env::var("BENCH_JSON_OUT") {

@@ -39,14 +39,19 @@ impl Bottleneck {
 /// One layer's bottleneck verdict with its exposed-vs-hidden accounting.
 #[derive(Debug, Clone)]
 pub struct LayerBottleneck {
+    /// Fused-layer name, as reported by the simulator.
     pub name: String,
+    /// The layer's total wall-clock cycles.
     pub cycles: u64,
     /// The dominant resource (ties resolve compute > dma-l1 > dma-l3).
     pub bound: Bottleneck,
     /// Fraction of the layer's cycles attributed to the bounding resource.
     pub bound_share: f64,
+    /// Cycles the cluster compute array was the critical resource.
     pub compute_cycles: u64,
+    /// L2<->L1 cluster-DMA cycles not overlapped with compute.
     pub exposed_dma_l1_cycles: u64,
+    /// L3<->L2 micro-DMA cycles not hidden in the prefetch window.
     pub exposed_dma_l3_cycles: u64,
     /// L2<->L1 channel busy time overlapped with compute (hidden by
     /// double buffering).
@@ -88,18 +93,25 @@ pub fn classify(sim: &SimResult) -> Vec<LayerBottleneck> {
 /// Network-level bottleneck summary.
 #[derive(Debug, Clone)]
 pub struct BottleneckReport {
+    /// Per-layer verdicts, in simulation order.
     pub layers: Vec<LayerBottleneck>,
     /// Label of the hardware backend that produced the simulation — the
     /// exposed-cycle identity holds across all of them, so reports from
     /// different backends are directly comparable.
     pub backend: String,
+    /// Network total cycles (equals the sum of the three totals below).
     pub total_cycles: u64,
+    /// Network-wide compute cycles.
     pub total_compute_cycles: u64,
+    /// Network-wide exposed L2<->L1 cluster-DMA cycles.
     pub total_exposed_dma_l1_cycles: u64,
+    /// Network-wide exposed L3<->L2 micro-DMA cycles.
     pub total_exposed_dma_l3_cycles: u64,
 }
 
 impl BottleneckReport {
+    /// Classify every layer of a finished simulation and total the
+    /// per-resource exposed cycles.
     pub fn from_sim(sim: &SimResult) -> Self {
         let layers = classify(sim);
         BottleneckReport {

@@ -9,13 +9,17 @@ use crate::sim::SimResult;
 /// Latency bound of one inference pass.
 #[derive(Debug, Clone)]
 pub struct LatencyBound {
+    /// Simulated total cycles across all layers.
     pub total_cycles: u64,
+    /// The cycles converted at the platform clock, seconds.
     pub latency_s: f64,
     /// Per-layer contributions (name, cycles, share of total).
     pub breakdown: Vec<(String, u64, f64)>,
 }
 
 impl LatencyBound {
+    /// Build the bound from a finished simulation, converting cycles to
+    /// seconds at `platform`'s clock frequency.
     pub fn from_sim(sim: &SimResult, platform: &PlatformSpec) -> Self {
         let total = sim.total_cycles();
         let breakdown = sim

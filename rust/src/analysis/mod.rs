@@ -1,17 +1,20 @@
-//! Latency analysis, per-resource bottleneck attribution, and deadline
-//! screening of candidate configurations.
+//! Latency analysis, per-resource bottleneck attribution, deadline
+//! screening, and static verification of candidate configurations.
 //!
-//! Everything here consumes a finished [`crate::sim::SimResult`], so it
-//! inherits the simulation stage's cache axis — (quantization axis ×
-//! hardware axis); see the staged-memoization contract in [`crate::dse`].
-//! For screening *before* simulating, the DSE search uses the analytic
-//! bound in [`crate::sim::lower_bound_cycles`] instead of these exact
-//! attributions.
+//! The latency/bottleneck/schedulability analyses consume a finished
+//! [`crate::sim::SimResult`], so they inherit the simulation stage's
+//! cache axis — (quantization axis × hardware axis); see the
+//! staged-memoization contract in [`crate::dse`]. For screening *before*
+//! simulating, the DSE search uses the analytic bound in
+//! [`crate::sim::lower_bound_cycles`] plus the static lint screen in
+//! [`verify`], which needs no simulation at all.
 
 pub mod bottleneck;
 pub mod latency;
 pub mod schedulability;
+pub mod verify;
 
 pub use bottleneck::{classify, classify_layer, Bottleneck, BottleneckReport, LayerBottleneck};
 pub use latency::{check_deadline, Feasibility, LatencyBound};
 pub use schedulability::{rta_nonpreemptive, schedulable, total_utilization, InferenceTask, TaskVerdict};
+pub use verify::{lint_graph, lint_model, lint_units, Diagnostic, LintConfig, LintReport, Severity};

@@ -11,14 +11,18 @@
 /// `period_s`, must finish within `deadline_s` (≤ period).
 #[derive(Debug, Clone)]
 pub struct InferenceTask {
+    /// Task label, echoed in the verdict.
     pub name: String,
     /// Worst-case execution time (the ALADIN latency bound), seconds.
     pub wcet_s: f64,
+    /// Release period, seconds.
     pub period_s: f64,
+    /// Relative deadline, seconds (constrained: ≤ period).
     pub deadline_s: f64,
 }
 
 impl InferenceTask {
+    /// The task's processor utilization, `wcet / period`.
     pub fn utilization(&self) -> f64 {
         self.wcet_s / self.period_s
     }
@@ -27,9 +31,13 @@ impl InferenceTask {
 /// Verdict for one task under the response-time analysis.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskVerdict {
+    /// The task this verdict is for.
     pub name: String,
+    /// Worst-case response time from the fixed-point iteration, seconds.
     pub response_time_s: f64,
+    /// The task's relative deadline, echoed for reporting.
     pub deadline_s: f64,
+    /// True iff the response time is within the deadline.
     pub schedulable: bool,
 }
 

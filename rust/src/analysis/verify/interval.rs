@@ -1,0 +1,570 @@
+//! Bit-range abstract interpretation of the decorated graph: a forward
+//! dataflow pass propagating integer value intervals per activation edge.
+//!
+//! The transfer functions mirror the deployed arithmetic of
+//! [`crate::exec::interp`] exactly — per-output-pixel `i64` accumulation
+//! that is *unclamped inside the MAC loop* and clamped to the accumulator
+//! type only at writeback, dyadic / threshold-tree / LUT requantization
+//! selected by the node's `impl_label`, comparator ReLU, shift-average
+//! pooling — so every interval is a sound over-approximation of the values
+//! the interpreter can produce, and the numeric rules (`AL001`–`AL008`)
+//! prove properties of the deployment without running it.
+//!
+//! Weights are bounded exactly: the interpreter fits symmetric
+//! [`crate::quant::UniformQuantizer`]s, so a `B`-bit weight tensor lies in
+//! `[-q_max, q_max]` with `q_max = 2^(B-1) - 1` (never the asymmetric
+//! `-2^(B-1)` endpoint). Activations start from their edge bit-width
+//! bounds and tighten through the layer chain.
+
+use super::report::{Diagnostic, Severity};
+use crate::graph::ir::{Graph, Node, Op};
+use crate::graph::tensor::ElemType;
+use crate::graph::topo;
+use crate::quant::lut::lut_quant_size_bits;
+
+/// Maximum dyadic right-shift the interpreter fits scales with — keep in
+/// sync with `MAX_DYADIC_SHIFT` in `exec::interp`.
+const MAX_DYADIC_SHIFT: u8 = 31;
+
+/// Thresholds of the numeric rule set. Defaults are calibrated so the
+/// standard int8-weights / int32-accumulator pipeline lints clean.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LintConfig {
+    /// `AL002` fires when the worst-case MAC magnitude needs more than
+    /// `acc.bits + sat_tolerance_bits` bits (writeback saturation).
+    pub sat_tolerance_bits: u8,
+    /// `AL006` fires when the accumulator provably has more than this many
+    /// spare bits over the worst-case MAC magnitude (dead precision).
+    pub dead_precision_bits: u8,
+    /// `AL004` fires when a threshold tree is deeper than this many levels
+    /// (its `2^depth - 1` thresholds live in L1 for the whole layer).
+    pub tree_depth_warn_bits: u8,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        Self {
+            sat_tolerance_bits: 0,
+            dead_precision_bits: 8,
+            tree_depth_warn_bits: 8,
+        }
+    }
+}
+
+/// A closed integer interval `[lo, hi]` in `i128` (wide enough to bound
+/// any `i64` MAC accumulation without wrapping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Inclusive lower bound.
+    pub lo: i128,
+    /// Inclusive upper bound.
+    pub hi: i128,
+}
+
+impl Interval {
+    /// The full representable range of an element type.
+    pub fn of_elem(e: ElemType) -> Self {
+        Self {
+            lo: e.min_value() as i128,
+            hi: e.max_value() as i128,
+        }
+    }
+
+    /// Symmetric interval `[-m, m]`.
+    pub fn symmetric(m: i128) -> Self {
+        Self { lo: -m, hi: m }
+    }
+
+    /// Largest absolute value in the interval.
+    pub fn max_abs(&self) -> i128 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Intersect with an element type's range (the writeback clamp).
+    pub fn clamp_to(&self, e: ElemType) -> Self {
+        let r = Self::of_elem(e);
+        Self {
+            lo: self.lo.clamp(r.lo, r.hi),
+            hi: self.hi.clamp(r.lo, r.hi),
+        }
+    }
+
+    /// Comparator ReLU: `[max(0, lo), max(0, hi)]`.
+    pub fn relu(&self) -> Self {
+        Self {
+            lo: self.lo.max(0),
+            hi: self.hi.max(0),
+        }
+    }
+
+    /// Convex hull with zero (shift-average pooling over zero padding).
+    pub fn hull_zero(&self) -> Self {
+        Self {
+            lo: self.lo.min(0),
+            hi: self.hi.max(0),
+        }
+    }
+
+    /// True when every value of the interval is representable in `e`.
+    pub fn fits(&self, e: ElemType) -> bool {
+        self.lo >= e.min_value() as i128 && self.hi <= e.max_value() as i128
+    }
+}
+
+/// Bits needed to represent magnitude `m` as a signed two's-complement
+/// integer (`2^(bits-1) - 1 >= m`).
+pub fn signed_bits_for(m: i128) -> u32 {
+    if m <= 0 {
+        1
+    } else {
+        (128 - m.leading_zeros()) + 1
+    }
+}
+
+/// Result of the numeric dataflow pass over one decorated graph.
+#[derive(Debug, Clone)]
+pub struct IntervalAnalysis {
+    /// Per-edge value interval, indexed by `EdgeId` (parameter edges and
+    /// unreached edges are `None`).
+    pub edge_intervals: Vec<Option<Interval>>,
+    /// Numeric findings, in graph-node topological order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// Geometry of one linear (MAC) node as the interpreter executes it.
+struct LinearShape {
+    /// Shared dimension `K` (MAC terms per output element).
+    k: u64,
+    w_elem: ElemType,
+    acc: ElemType,
+}
+
+fn linear_shape(g: &Graph, node: &Node) -> Option<LinearShape> {
+    let x = g.data_input(node.id)?;
+    let k = match &node.op {
+        Op::Conv(a) => {
+            let cin = *x.spec.dims.first()?;
+            (cin / a.groups.max(1)) * a.kernel.0 * a.kernel.1
+        }
+        Op::MatMul(a) => a.k,
+        Op::Gemm(_) => *x.spec.dims.first()?,
+        _ => return None,
+    };
+    let w_elem = g
+        .param_inputs(node.id)
+        .first()
+        .map(|e| e.spec.elem)
+        .unwrap_or(ElemType::int(8));
+    let acc = g
+        .output_edge(node.id)
+        .map(|e| e.spec.elem)
+        .unwrap_or(ElemType::int(32));
+    Some(LinearShape {
+        k: k as u64,
+        w_elem,
+        acc,
+    })
+}
+
+/// Run the forward interval dataflow over a decorated graph, collecting
+/// the numeric (`AL0xx`) findings.
+///
+/// The pass is total: rule violations are reported and the offending
+/// interval clamped so downstream nodes still get sound bounds.
+pub fn analyze(g: &Graph, cfg: &LintConfig) -> IntervalAnalysis {
+    let mut edge_intervals: Vec<Option<Interval>> = vec![None; g.edges.len()];
+    let mut diagnostics = Vec::new();
+    let order = match topo::compute_order(g) {
+        Ok(o) => o,
+        Err(e) => {
+            diagnostics.push(Diagnostic::new(
+                "AL008",
+                Severity::Error,
+                g.name.clone(),
+                format!("interval analysis aborted: {e}"),
+            ));
+            return IntervalAnalysis {
+                edge_intervals,
+                diagnostics,
+            };
+        }
+    };
+
+    for id in order {
+        let node = g.node(id);
+        let input_iv = g
+            .data_input(id)
+            .and_then(|e| edge_intervals[e.id.0])
+            .or_else(|| g.data_input(id).map(|e| Interval::of_elem(e.spec.elem)));
+        let out_iv = match &node.op {
+            Op::Input => g.output_edge(id).map(|e| Interval::of_elem(e.spec.elem)),
+            Op::Output => None,
+            Op::Conv(_) | Op::MatMul(_) | Op::Gemm(_) => {
+                linear_transfer(g, node, input_iv, cfg, &mut diagnostics)
+            }
+            Op::Quant(a) => {
+                let acc_elem = g
+                    .data_input(id)
+                    .map(|e| e.spec.elem)
+                    .unwrap_or(ElemType::int(32));
+                quant_transfer(
+                    node,
+                    a.to,
+                    a.channelwise,
+                    acc_elem,
+                    input_iv,
+                    cfg,
+                    &mut diagnostics,
+                );
+                Some(Interval::of_elem(a.to))
+            }
+            Op::Relu => input_iv.map(|iv| iv.relu()),
+            Op::MaxPool(_) | Op::Flatten => input_iv,
+            Op::AvgPool(_) => input_iv.map(|iv| iv.hull_zero()),
+            // the interpreter rescales both addends dyadically and clamps
+            // the sum to the output edge type; the output range is the
+            // only sound static bound without calibration scales
+            Op::Add => g.output_edge(id).map(|e| Interval::of_elem(e.spec.elem)),
+        };
+
+        if let (Some(iv), Some(out)) = (out_iv, g.output_edge(id)) {
+            let stored = if iv.fits(out.spec.elem) {
+                iv
+            } else {
+                diagnostics.push(Diagnostic::new(
+                    "AL008",
+                    Severity::Error,
+                    node.name.clone(),
+                    format!(
+                        "propagated interval [{}, {}] exceeds edge type {} on `{}`",
+                        iv.lo, iv.hi, out.spec.elem, out.name
+                    ),
+                ));
+                iv.clamp_to(out.spec.elem)
+            };
+            for e in &node.outputs {
+                edge_intervals[e.0] = Some(stored);
+            }
+        }
+    }
+
+    IntervalAnalysis {
+        edge_intervals,
+        diagnostics,
+    }
+}
+
+/// Transfer function of a Conv/MatMul/Gemm node: per output element the
+/// interpreter computes `bias + Σ_K w·x` in unclamped `i64`, then clamps
+/// to the accumulator type at writeback.
+fn linear_transfer(
+    g: &Graph,
+    node: &Node,
+    input_iv: Option<Interval>,
+    cfg: &LintConfig,
+    diagnostics: &mut Vec<Diagnostic>,
+) -> Option<Interval> {
+    let shape = linear_shape(g, node)?;
+    let x_iv = input_iv.unwrap_or(Interval::of_elem(ElemType::int(8)));
+    // symmetric weight fit: exact bound from the UniformQuantizer range
+    let w_max = shape.w_elem.max_value() as i128;
+    let mac_bound = shape.k as i128 * w_max * x_iv.max_abs();
+    // the quantized bias is clamped into the accumulator type at lowering
+    let bias_bound = Interval::of_elem(shape.acc).max_abs();
+    let full_bound = mac_bound + bias_bound;
+
+    if full_bound > i64::MAX as i128 {
+        diagnostics.push(Diagnostic::new(
+            "AL001",
+            Severity::Error,
+            node.name.clone(),
+            format!(
+                "worst-case accumulation {full_bound} overflows the i64 MAC loop \
+                 (K={}, |w|<={w_max}, |x|<={})",
+                shape.k,
+                x_iv.max_abs()
+            ),
+        ));
+    }
+
+    let mac_bits = signed_bits_for(mac_bound);
+    let acc_bits = shape.acc.bits as u32;
+    if mac_bits > acc_bits + cfg.sat_tolerance_bits as u32 {
+        diagnostics.push(Diagnostic::new(
+            "AL002",
+            Severity::Warn,
+            node.name.clone(),
+            format!(
+                "worst-case MAC magnitude {mac_bound} needs {mac_bits} bits but the \
+                 accumulator is {}: writeback saturation possible",
+                shape.acc
+            ),
+        ));
+    } else if acc_bits > mac_bits + 1 + cfg.dead_precision_bits as u32 {
+        diagnostics.push(Diagnostic::new(
+            "AL006",
+            Severity::Info,
+            node.name.clone(),
+            format!(
+                "accumulator {} has {} provably unused bits (worst-case MAC \
+                 magnitude {mac_bound} fits in {} bits plus bias headroom)",
+                shape.acc,
+                acc_bits - mac_bits - 1,
+                mac_bits
+            ),
+        ));
+    }
+
+    // LUT-based matmul: operands index a (w_type, x_type) product table;
+    // the lookup encodes both operands into their declared ranges
+    if node.ann.as_ref().map(|a| a.impl_label.as_str()) == Some("lut") {
+        if let Some(x) = g.data_input(node.id) {
+            if !x_iv.fits(x.spec.elem) {
+                diagnostics.push(Diagnostic::new(
+                    "AL008",
+                    Severity::Error,
+                    node.name.clone(),
+                    format!(
+                        "LUT matmul operand interval [{}, {}] exceeds its encoded \
+                         domain {}",
+                        x_iv.lo, x_iv.hi, x.spec.elem
+                    ),
+                ));
+            }
+        }
+    }
+
+    Some(Interval::symmetric(full_bound).clamp_to(shape.acc))
+}
+
+/// Numeric rules of a requantization node. Kind resolution mirrors the
+/// interpreter's lowering: `impl_label == "threshold-tree"` builds a tree,
+/// `"lut"` with per-tensor factors builds an accumulator->output LUT
+/// (falling back to dyadic when the table is unmaterializable), everything
+/// else scales dyadically.
+fn quant_transfer(
+    node: &Node,
+    to: ElemType,
+    channelwise: bool,
+    acc_elem: ElemType,
+    input_iv: Option<Interval>,
+    cfg: &LintConfig,
+    diagnostics: &mut Vec<Diagnostic>,
+) {
+    let label = node
+        .ann
+        .as_ref()
+        .map(|a| a.impl_label.as_str())
+        .unwrap_or("dyadic");
+    match label {
+        "threshold-tree" => {
+            // a tree built from a uniform scale has depth == output bits
+            // and (2^bits - 1) thresholds resident in L1 at accumulator
+            // precision
+            if to.bits as u32 > cfg.tree_depth_warn_bits as u32 {
+                let thresholds = to.levels() - 1;
+                diagnostics.push(Diagnostic::new(
+                    "AL004",
+                    Severity::Warn,
+                    node.name.clone(),
+                    format!(
+                        "threshold tree of depth {} ({thresholds} thresholds at \
+                         {acc_elem} precision) exceeds the {}-level warning floor",
+                        to.bits, cfg.tree_depth_warn_bits
+                    ),
+                ));
+            }
+        }
+        "lut" if !channelwise => {
+            match lut_quant_size_bits(acc_elem.bits, to.bits) {
+                None => {
+                    diagnostics.push(Diagnostic::new(
+                        "AL007",
+                        Severity::Info,
+                        node.name.clone(),
+                        format!(
+                            "accumulator {acc_elem} is too wide for a direct \
+                             requantization LUT; the interpreter falls back to \
+                             dyadic scaling"
+                        ),
+                    ));
+                }
+                Some(_) => {
+                    // the LUT domain is exactly the accumulator type; a
+                    // wider incoming interval would index out of the table
+                    if let Some(iv) = input_iv {
+                        if !iv.fits(acc_elem) {
+                            diagnostics.push(Diagnostic::new(
+                                "AL003",
+                                Severity::Error,
+                                node.name.clone(),
+                                format!(
+                                    "requantization input interval [{}, {}] is not \
+                                     contained in the LUT domain {acc_elem}",
+                                    iv.lo, iv.hi
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        _ => {
+            // dyadic scaling: the fitted shift never exceeds
+            // MAX_DYADIC_SHIFT; a requantization asking for more dynamic
+            // -range compression than 2^31 cannot be represented
+            if acc_elem.bits.saturating_sub(to.bits) > MAX_DYADIC_SHIFT {
+                diagnostics.push(Diagnostic::new(
+                    "AL005",
+                    Severity::Error,
+                    node.name.clone(),
+                    format!(
+                        "dyadic requantization {acc_elem} -> {to} needs more than \
+                         {MAX_DYADIC_SHIFT} right shifts"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::TensorSpec;
+    use crate::impl_aware::{decorate, ImplConfig, NodeImplSpec};
+
+    fn decorated(acc_bits: u8, quant_impl: &str) -> Graph {
+        let mut cfg = ImplConfig::default();
+        cfg.set_node(
+            "q0",
+            NodeImplSpec {
+                implementation: Some(quant_impl.into()),
+                ..Default::default()
+            },
+        );
+        let mut b = GraphBuilder::new(
+            "iv",
+            TensorSpec::chw(64, 8, 8, ElemType::int(8)),
+            ElemType::int(acc_bits),
+        );
+        b.conv("c0", ConvAttrs::standard(16, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false);
+        decorate(b.finish(), &cfg).unwrap()
+    }
+
+    #[test]
+    fn signed_bits_cover_type_boundaries() {
+        assert_eq!(signed_bits_for(0), 1);
+        assert_eq!(signed_bits_for(127), 8);
+        assert_eq!(signed_bits_for(128), 9);
+        assert_eq!(signed_bits_for(i32::MAX as i128), 32);
+        assert_eq!(signed_bits_for(i32::MAX as i128 + 1), 33);
+    }
+
+    #[test]
+    fn int8_int32_pipeline_is_clean() {
+        let a = analyze(&decorated(32, "dyadic"), &LintConfig::default());
+        assert!(
+            a.diagnostics.is_empty(),
+            "unexpected findings: {:?}",
+            a.diagnostics
+        );
+    }
+
+    #[test]
+    fn narrow_accumulator_warns_saturation() {
+        // K = 64*9 = 576, |w| <= 127, |x| <= 128 -> ~9.4M, far beyond int16
+        let a = analyze(&decorated(16, "dyadic"), &LintConfig::default());
+        assert!(
+            a.diagnostics.iter().any(|d| d.code == "AL002"),
+            "{:?}",
+            a.diagnostics
+        );
+    }
+
+    #[test]
+    fn low_precision_block_reports_dead_precision() {
+        // int2 weights, int2 input: mac bound 8*9*1*2 = 144 -> 9 bits,
+        // 22 spare bits in an int32 accumulator
+        let mut b = GraphBuilder::new(
+            "dp",
+            TensorSpec::chw(8, 8, 8, ElemType::int(2)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(16, 3, 1, 1), ElemType::int(2))
+            .relu("r0")
+            .quant("q0", ElemType::int(2), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let a = analyze(&g, &LintConfig::default());
+        assert!(
+            a.diagnostics
+                .iter()
+                .any(|d| d.code == "AL006" && d.severity == Severity::Info),
+            "{:?}",
+            a.diagnostics
+        );
+    }
+
+    #[test]
+    fn wide_accumulator_lut_requant_falls_back() {
+        let a = analyze(&decorated(32, "lut"), &LintConfig::default());
+        assert!(
+            a.diagnostics
+                .iter()
+                .any(|d| d.code == "AL007" && d.severity == Severity::Info),
+            "{:?}",
+            a.diagnostics
+        );
+    }
+
+    #[test]
+    fn deep_threshold_tree_warns() {
+        let mut cfg = ImplConfig::default();
+        cfg.set_node(
+            "q0",
+            NodeImplSpec {
+                implementation: Some("thresholds".into()),
+                ..Default::default()
+            },
+        );
+        let mut b = GraphBuilder::new(
+            "tt",
+            TensorSpec::chw(4, 8, 8, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(8, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(12), false);
+        let g = decorate(b.finish(), &cfg).unwrap();
+        let a = analyze(&g, &LintConfig::default());
+        assert!(
+            a.diagnostics.iter().any(|d| d.code == "AL004"),
+            "{:?}",
+            a.diagnostics
+        );
+    }
+
+    #[test]
+    fn intervals_tighten_through_relu() {
+        let g = decorated(32, "dyadic");
+        let a = analyze(&g, &LintConfig::default());
+        let relu = g.nodes.iter().find(|n| n.name == "r0").unwrap();
+        let out = g.output_edge(relu.id).unwrap();
+        let iv = a.edge_intervals[out.id.0].unwrap();
+        assert_eq!(iv.lo, 0, "ReLU output must be non-negative");
+        assert!(iv.hi > 0);
+    }
+
+    #[test]
+    fn analysis_is_deterministic() {
+        let g = decorated(16, "lut");
+        let a = analyze(&g, &LintConfig::default());
+        let b = analyze(&g, &LintConfig::default());
+        assert_eq!(a.diagnostics, b.diagnostics);
+        assert_eq!(a.edge_intervals.len(), b.edge_intervals.len());
+    }
+}

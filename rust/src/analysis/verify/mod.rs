@@ -1,0 +1,125 @@
+//! Static QNN/platform verification (`aladin lint`): bit-range abstract
+//! interpretation plus platform rule checks, reported as stable
+//! diagnostics and reusable as a zero-cost DSE screen.
+//!
+//! Two rule families share one [`Diagnostic`] vocabulary:
+//!
+//! - **Numeric rules** (`AL001`–`AL008`, [`interval`]): a forward dataflow
+//!   pass propagates integer value intervals per tensor edge through the
+//!   decorated graph — weights bounded exactly from the symmetric
+//!   [`crate::quant::UniformQuantizer`] ranges, activations from bit-width
+//!   bounds tightened through MAC accumulation, pooling, ReLU and every
+//!   requantization flavor — proving or refuting accumulator overflow,
+//!   writeback saturation, LUT domain coverage and dead precision.
+//! - **Platform rules** (`AL101`–`AL106`, [`platform`]): each
+//!   `(FusedLayer, PlatformSpec, Backend)` unit is checked against the
+//!   real planners — L1 tiling existence, double-buffer slot capacity,
+//!   shard divisibility, systolic fill sanity, L2 spill.
+//!
+//! The full code table (code, severity, meaning, fix hint) lives in
+//! `docs/GUIDE.md` § Static verification.
+//!
+//! **Screen soundness.** Only *blocking* diagnostics (`AL101`, `AL103`)
+//! may reject a candidate in the DSE static screen
+//! ([`crate::dse::engine::EvalEngine::lint_screen`]); they are produced by
+//! the same planner/validator calls the evaluation path performs, so
+//! screening can only remove candidates that would fail evaluation anyway
+//! and the screened Pareto front is bit-identical to the unscreened one.
+//! Everything else — including non-blocking `Error`s like a proven i64
+//! overflow, which executes but computes garbage — is reported, gates
+//! `aladin lint --deny`, and never prunes.
+
+pub mod interval;
+pub mod platform;
+pub mod report;
+
+pub use interval::{analyze, signed_bits_for, Interval, IntervalAnalysis, LintConfig};
+pub use platform::lint_units;
+pub use report::{Diagnostic, LintReport, Severity};
+
+use crate::graph::ir::Graph;
+use crate::platform::PlatformSpec;
+use crate::platform_aware::FusedLayer;
+
+/// Numeric rules only: run the interval dataflow over a decorated graph
+/// and return its findings in graph-node topological order.
+pub fn lint_graph(g: &Graph, cfg: &LintConfig) -> Vec<Diagnostic> {
+    interval::analyze(g, cfg).diagnostics
+}
+
+/// The full lint pass: numeric rules over the decorated graph, then —
+/// when a platform is given — platform rules over every fused layer.
+/// Diagnostic order (graph-node order, then fused-layer order) is
+/// deterministic, so the same model + configuration always renders
+/// byte-identical reports.
+pub fn lint_model(
+    decorated: &Graph,
+    fused: &[FusedLayer],
+    platform: Option<&PlatformSpec>,
+    cfg: &LintConfig,
+) -> LintReport {
+    let mut diagnostics = lint_graph(decorated, cfg);
+    if let Some(p) = platform {
+        diagnostics.extend(lint_units(fused, p));
+    }
+    LintReport {
+        model: decorated.name.clone(),
+        platform: platform.map(|p| p.name.clone()),
+        diagnostics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::fuse;
+    use crate::util::ToJson;
+
+    fn model() -> (Graph, Vec<FusedLayer>) {
+        let mut b = GraphBuilder::new(
+            "lm",
+            TensorSpec::chw(16, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(16, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        let fused = fuse(&g).unwrap();
+        (g, fused)
+    }
+
+    #[test]
+    fn combined_report_names_model_and_platform() {
+        let (g, fused) = model();
+        let p = presets::gap8();
+        let r = lint_model(&g, &fused, Some(&p), &LintConfig::default());
+        assert_eq!(r.model, "lm");
+        assert_eq!(r.platform.as_deref(), Some("gap8"));
+        assert!(r.screen_reject().is_none());
+    }
+
+    #[test]
+    fn graph_only_lint_skips_platform_rules() {
+        let (g, fused) = model();
+        let r = lint_model(&g, &fused, None, &LintConfig::default());
+        assert!(r.platform.is_none());
+        assert!(r.diagnostics.iter().all(|d| d.code.starts_with("AL0")));
+    }
+
+    #[test]
+    fn report_json_is_byte_identical_across_runs() {
+        let (g, fused) = model();
+        let mut p = presets::gap8();
+        p.backend = crate::sim::BackendKind::SystolicArray;
+        let cfg = LintConfig::default();
+        let a = lint_model(&g, &fused, Some(&p), &cfg).to_json().to_string_pretty();
+        let b = lint_model(&g, &fused, Some(&p), &cfg).to_json().to_string_pretty();
+        assert_eq!(a, b);
+    }
+}

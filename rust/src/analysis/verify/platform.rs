@@ -1,0 +1,230 @@
+//! Platform-aware lint rules: static checks of each
+//! `(FusedLayer, PlatformSpec, Backend)` unit against the scheduler it
+//! will be handed to.
+//!
+//! The rules reuse the real planners — [`crate::platform_aware::plan_layer`]
+//! for L1 tiling, [`crate::platform_aware::schedule_layer`] for L2
+//! residency, [`crate::platform::PlatformSpec::validate`] for backend
+//! structural constraints — so a *blocking* finding (`AL101`, `AL103`) is
+//! by construction exactly a failure the DSE evaluation path would hit,
+//! and the static screen can reject on it without perturbing the Pareto
+//! front. The advisory rules (`AL102`, `AL104`–`AL106`) flag throughput
+//! hazards the schedulers tolerate silently.
+
+use super::report::{Diagnostic, Severity};
+use crate::platform::PlatformSpec;
+use crate::platform_aware::{schedule_layer, FusedLayer, LayerKind};
+use crate::sim::backend::{sharded_clusters, BackendKind};
+
+/// Run the platform rule set over every fused layer of a model, in layer
+/// order. `AL103` (platform structurally invalid) is emitted once, first,
+/// anchored at the platform name.
+pub fn lint_units(fused: &[FusedLayer], platform: &PlatformSpec) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    if let Err(e) = platform.validate() {
+        out.push(Diagnostic::blocking(
+            "AL103",
+            platform.name.clone(),
+            format!("platform fails structural validation: {e}"),
+        ));
+    }
+
+    for layer in fused {
+        lint_unit(layer, platform, &mut out);
+    }
+    out
+}
+
+/// Platform rules of one fused layer.
+fn lint_unit(layer: &FusedLayer, platform: &PlatformSpec, out: &mut Vec<Diagnostic>) {
+    // schedule_layer = plan_layer (fallible L1 tiling) + L2 residency
+    // (total): one planner call covers AL101, AL102, AL105 and AL106
+    let sched = match schedule_layer(layer, platform) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push(Diagnostic::blocking(
+                "AL101",
+                layer.name.clone(),
+                format!("no L1 tiling exists: {e}"),
+            ));
+            return;
+        }
+    };
+    let plan = &sched.tile;
+
+    if !plan.double_buffered {
+        out.push(Diagnostic::new(
+            "AL102",
+            Severity::Warn,
+            layer.name.clone(),
+            format!(
+                "tile working set ({} B of {} B L1) leaves no room for a \
+                 second buffer slot: DMA cannot overlap compute",
+                plan.l1_used_bytes, platform.l1_bytes
+            ),
+        ));
+    }
+
+    match platform.backend {
+        BackendKind::ShardedMultiCluster => {
+            let clusters = sharded_clusters(platform);
+            if clusters >= 2 {
+                if let LayerKind::Linear { m, .. } = &layer.kind {
+                    if m % clusters != 0 {
+                        out.push(Diagnostic::new(
+                            "AL104",
+                            Severity::Warn,
+                            layer.name.clone(),
+                            format!(
+                                "filter dimension {m} does not divide across \
+                                 {clusters} shards: the widest shard carries \
+                                 {} of {m} filters",
+                                m.div_ceil(clusters)
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        BackendKind::SystolicArray => {
+            if plan.tile_weight_bytes > plan.tile_input_bytes + plan.tile_output_bytes {
+                out.push(Diagnostic::new(
+                    "AL105",
+                    Severity::Warn,
+                    layer.name.clone(),
+                    format!(
+                        "weight-stationary fill ({} B/tile) outweighs the \
+                         streamed input+output ({} B/tile): the array refills \
+                         more than it streams",
+                        plan.tile_weight_bytes,
+                        plan.tile_input_bytes + plan.tile_output_bytes
+                    ),
+                ));
+            }
+        }
+        BackendKind::ScratchpadCluster => {}
+    }
+
+    if !sched.l2.fits_l2 {
+        out.push(Diagnostic::new(
+            "AL106",
+            Severity::Info,
+            layer.name.clone(),
+            format!(
+                "layer working set ({} B) exceeds L2 ({} B): weights \
+                 refetched {}x, {} B of activations spilled to L3",
+                sched.l2.weight_bytes + sched.l2.input_bytes + sched.l2.output_bytes,
+                platform.l2_bytes,
+                sched.l2.weight_refetches,
+                sched.l2.spill_bytes
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::ir::ConvAttrs;
+    use crate::graph::tensor::{ElemType, TensorSpec};
+    use crate::impl_aware::{decorate, ImplConfig};
+    use crate::platform::presets;
+    use crate::platform_aware::fuse;
+
+    fn fused_model() -> Vec<FusedLayer> {
+        let mut b = GraphBuilder::new(
+            "pm",
+            TensorSpec::chw(16, 16, 16, ElemType::int(8)),
+            ElemType::int(32),
+        );
+        b.conv("c0", ConvAttrs::standard(10, 3, 1, 1), ElemType::int(8))
+            .relu("r0")
+            .quant("q0", ElemType::int(8), false)
+            .flatten("f0")
+            .gemm("fc", 10, ElemType::int(8))
+            .quant("q1", ElemType::int(8), false);
+        let g = decorate(b.finish(), &ImplConfig::default()).unwrap();
+        fuse(&g).unwrap()
+    }
+
+    #[test]
+    fn feasible_unit_is_clean_of_blocking_findings() {
+        let diags = lint_units(&fused_model(), &presets::gap8());
+        assert!(
+            diags.iter().all(|d| !d.blocking),
+            "unexpected blocking findings: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn tiny_l1_fires_blocking_tiling_error() {
+        let mut p = presets::gap8();
+        p.l1_bytes = 64;
+        let diags = lint_units(&fused_model(), &p);
+        assert!(
+            diags.iter().any(|d| d.code == "AL101" && d.blocking),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn invalid_sharded_platform_fires_al103() {
+        let mut p = presets::gap8();
+        p.backend = BackendKind::ShardedMultiCluster;
+        p.cores = 1;
+        let diags = lint_units(&fused_model(), &p);
+        let d = diags.iter().find(|d| d.code == "AL103").expect("AL103");
+        assert!(d.blocking);
+        assert_eq!(d.at, "gap8");
+    }
+
+    #[test]
+    fn shard_imbalance_warns_al104() {
+        let mut p = presets::gap8();
+        p.backend = BackendKind::ShardedMultiCluster;
+        // 8 cores -> 4 shards; m = 10 filters do not divide by 4
+        let diags = lint_units(&fused_model(), &p);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.code == "AL104" && d.severity == Severity::Warn),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn fill_dominated_systolic_fc_warns_al105() {
+        let mut p = presets::gap8();
+        p.backend = BackendKind::SystolicArray;
+        // the FC layer moves k*m weights against k inputs + m outputs
+        let diags = lint_units(&fused_model(), &p);
+        assert!(
+            diags.iter().any(|d| d.code == "AL105" && d.at == "FC_1"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn l2_spill_reports_info() {
+        let mut p = presets::gap8();
+        p.l2_bytes = 2 * 1024;
+        let diags = lint_units(&fused_model(), &p);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.code == "AL106" && d.severity == Severity::Info),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn findings_are_in_layer_order_and_deterministic() {
+        let mut p = presets::gap8();
+        p.backend = BackendKind::SystolicArray;
+        let a = lint_units(&fused_model(), &p);
+        let b = lint_units(&fused_model(), &p);
+        assert_eq!(a, b);
+    }
+}

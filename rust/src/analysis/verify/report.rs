@@ -1,0 +1,248 @@
+//! Stable lint diagnostics: codes, severities, anchors, and the
+//! machine-readable report consumed by `aladin lint --json` and the DSE
+//! static screen.
+//!
+//! Diagnostic codes are part of the tool's public contract (CI pipelines
+//! grep them, `--deny` gates on severity), so they are never renumbered:
+//! new rules append new codes. The full code table lives in
+//! `docs/GUIDE.md` § Static verification.
+
+use crate::util::{ToJson, Value};
+use std::fmt;
+
+/// Severity of a diagnostic, ordered `Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Informational: a provable fact worth surfacing (dead precision,
+    /// an implementation fallback), never a deployment risk.
+    Info,
+    /// Suspicious but not provably wrong: the deployment executes, with
+    /// possible accuracy or throughput degradation.
+    Warn,
+    /// Statically proven defect: executing or scheduling this model on
+    /// this platform fails or produces undefined arithmetic.
+    Error,
+}
+
+impl Severity {
+    /// Stable lower-case label used in JSON and CLI output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One static-verification finding, anchored to a graph node or fused
+/// layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable `AL###` code (numeric rules are `AL0xx`, platform rules
+    /// `AL1xx`).
+    pub code: &'static str,
+    /// Finding severity.
+    pub severity: Severity,
+    /// Anchor: the graph node name (numeric rules) or fused layer name
+    /// (platform rules) the finding is attached to.
+    pub at: String,
+    /// Human-readable explanation with the concrete numbers that fired
+    /// the rule.
+    pub message: String,
+    /// True when the finding proves the candidate cannot evaluate at all
+    /// (the same failures `dse` rejects during evaluation) — only these
+    /// may reject genomes in the DSE static screen, which keeps the
+    /// screened Pareto front bit-identical to the unscreened one.
+    pub blocking: bool,
+}
+
+impl Diagnostic {
+    /// Non-blocking finding (reported, never screens a candidate).
+    pub fn new(
+        code: &'static str,
+        severity: Severity,
+        at: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Self {
+            code,
+            severity,
+            at: at.into(),
+            message: message.into(),
+            blocking: false,
+        }
+    }
+
+    /// Blocking finding: statically proven evaluation failure.
+    pub fn blocking(
+        code: &'static str,
+        at: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Self {
+            code,
+            severity: Severity::Error,
+            at: at.into(),
+            message: message.into(),
+            blocking: true,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [{}] `{}`: {}",
+            self.code, self.severity, self.at, self.message
+        )
+    }
+}
+
+impl ToJson for Diagnostic {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("code", self.code)
+            .with("severity", self.severity.label())
+            .with("at", self.at.clone())
+            .with("message", self.message.clone())
+            .with("blocking", self.blocking)
+    }
+}
+
+/// The complete lint result for one (model, optional platform) pair.
+///
+/// Diagnostics are emitted in graph-node order (numeric rules) followed by
+/// fused-layer order (platform rules), so the same model + configuration
+/// always produces byte-identical `--json` output, independent of thread
+/// count or run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LintReport {
+    /// Name of the linted model (graph name).
+    pub model: String,
+    /// Name of the platform the platform-aware rules ran against, if any.
+    pub platform: Option<String>,
+    /// All findings, in deterministic emission order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    /// Number of findings at exactly `severity`.
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    /// True when any `Error`-severity finding is present.
+    pub fn has_errors(&self) -> bool {
+        self.count(Severity::Error) > 0
+    }
+
+    /// The first blocking finding, rendered as a prune reason for the DSE
+    /// static screen — `None` means the candidate is statically evaluable
+    /// and must proceed to the normal screening chain.
+    pub fn screen_reject(&self) -> Option<String> {
+        self.diagnostics
+            .iter()
+            .find(|d| d.blocking)
+            .map(|d| format!("{}: {}", d.code, d.message))
+    }
+
+    /// CI exit code under an optional `--deny` floor: 1 when any finding
+    /// at or above `deny` (default `Error`) is present, else 0.
+    pub fn exit_code(&self, deny: Severity) -> i32 {
+        if self.diagnostics.iter().any(|d| d.severity >= deny) {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+impl ToJson for LintReport {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj().with("model", self.model.clone());
+        if let Some(p) = &self.platform {
+            v.set("platform", p.clone());
+        }
+        v.set(
+            "counts",
+            Value::obj()
+                .with("error", self.count(Severity::Error))
+                .with("warn", self.count(Severity::Warn))
+                .with("info", self.count(Severity::Info)),
+        );
+        v.set(
+            "diagnostics",
+            Value::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+        );
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> LintReport {
+        LintReport {
+            model: "m".into(),
+            platform: Some("gap8".into()),
+            diagnostics: vec![
+                Diagnostic::new("AL006", Severity::Info, "c0", "dead precision"),
+                Diagnostic::new("AL002", Severity::Warn, "c1", "saturation"),
+                Diagnostic::blocking("AL101", "RC_1", "tile exceeds L1"),
+            ],
+        }
+    }
+
+    #[test]
+    fn severity_orders_info_warn_error() {
+        assert!(Severity::Info < Severity::Warn);
+        assert!(Severity::Warn < Severity::Error);
+    }
+
+    #[test]
+    fn counts_and_verdicts() {
+        let r = report();
+        assert_eq!(r.count(Severity::Error), 1);
+        assert_eq!(r.count(Severity::Warn), 1);
+        assert_eq!(r.count(Severity::Info), 1);
+        assert!(r.has_errors());
+        assert_eq!(r.exit_code(Severity::Error), 1);
+        assert_eq!(r.exit_code(Severity::Warn), 1);
+        let clean = LintReport::default();
+        assert_eq!(clean.exit_code(Severity::Warn), 0);
+        assert!(!clean.has_errors());
+    }
+
+    #[test]
+    fn only_blocking_findings_screen() {
+        let r = report();
+        let why = r.screen_reject().unwrap();
+        assert!(why.starts_with("AL101"), "{why}");
+        let mut soft = report();
+        soft.diagnostics.retain(|d| !d.blocking);
+        assert!(soft.screen_reject().is_none());
+        // a non-blocking error still exits nonzero but never screens
+        soft.diagnostics
+            .push(Diagnostic::new("AL001", Severity::Error, "c2", "overflow"));
+        assert!(soft.has_errors());
+        assert!(soft.screen_reject().is_none());
+    }
+
+    #[test]
+    fn json_is_deterministic() {
+        let a = report().to_json().to_string_pretty();
+        let b = report().to_json().to_string_pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("\"AL101\""));
+        assert!(a.contains("\"blocking\": true"));
+    }
+}

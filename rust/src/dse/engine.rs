@@ -35,7 +35,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::analysis::LatencyBound;
+use crate::analysis::{lint_model, LatencyBound, LintConfig, LintReport};
 use crate::coordinator::{
     stage_impl, stage_impl_decorated, stage_impl_incremental, ImplModel, PlatformEval,
 };
@@ -483,6 +483,14 @@ pub struct CacheStats {
     /// Decorated nodes copied from base snapshots across all incremental
     /// stage-1 computations.
     pub nodes_reused: usize,
+    /// Static lint passes ([`EvalEngine::lint`]) actually executed.
+    pub lint_computed: usize,
+    /// Lint-stage lookups served from the cache.
+    pub lint_hits: usize,
+    /// Candidates the static lint screen rejected before any scheduling or
+    /// simulation ([`EvalEngine::lint_screen`] returned a blocking
+    /// diagnostic).
+    pub lint_rejected: usize,
 }
 
 impl CacheStats {
@@ -515,6 +523,9 @@ impl crate::util::ToJson for CacheStats {
             .with("spliced", self.spliced)
             .with("impl_delta", self.impl_delta)
             .with("nodes_reused", self.nodes_reused)
+            .with("lint_computed", self.lint_computed)
+            .with("lint_hits", self.lint_hits)
+            .with("lint_rejected", self.lint_rejected)
             .with("recomputations", self.recomputations())
             .with("naive_recomputations", self.naive_recomputations())
     }
@@ -606,9 +617,14 @@ pub struct EvalEngine {
     /// (tile plan + coupling-free simulation) per unique
     /// (fused layer, platform) pair.
     layer_stage: Memo<LayerUnit>,
+    /// The static-verification stage ([`EvalEngine::lint`]): one
+    /// [`LintReport`] per (quant axis, platform) pair — cheaper than the
+    /// bound stage (no simulation at all) and keyed the same way.
+    lint_stage: Memo<LintReport>,
     spliced: AtomicUsize,
     impl_delta: AtomicUsize,
     nodes_reused: AtomicUsize,
+    lint_rejected: AtomicUsize,
 }
 
 impl EvalEngine {
@@ -630,9 +646,11 @@ impl EvalEngine {
             acc_stage: Memo::new(),
             bound_stage: Memo::new(),
             layer_stage: Memo::new(),
+            lint_stage: Memo::new(),
             spliced: AtomicUsize::new(0),
             impl_delta: AtomicUsize::new(0),
             nodes_reused: AtomicUsize::new(0),
+            lint_rejected: AtomicUsize::new(0),
         }
     }
 
@@ -689,6 +707,9 @@ impl EvalEngine {
             spliced: self.spliced.load(Ordering::Relaxed),
             impl_delta: self.impl_delta.load(Ordering::Relaxed),
             nodes_reused: self.nodes_reused.load(Ordering::Relaxed),
+            lint_computed: self.lint_stage.computed.load(Ordering::Relaxed),
+            lint_hits: self.lint_stage.hits.load(Ordering::Relaxed),
+            lint_rejected: self.lint_rejected.load(Ordering::Relaxed),
         }
     }
 
@@ -1036,6 +1057,44 @@ impl EvalEngine {
             sensitivity,
             energy_nj: model_energy_nj(&impl_model.fused, &platform),
         })
+    }
+
+    /// The static verification pass for a vector
+    /// ([`crate::analysis::lint_model`]): numeric interval rules over the
+    /// (cached) decorated graph plus platform rules over its fused layers
+    /// and the resolved platform. Memoized per (quant, platform) pair like
+    /// the bound stage, but needs no tile plan, timeline, or interpreter —
+    /// the cheapest per-candidate analysis the engine offers.
+    pub fn lint(&self, vector: &DesignVector) -> Result<Arc<LintReport>> {
+        let impl_key = self.impl_key(vector.quant.as_ref());
+        let impl_model = self.impl_model(vector.quant.as_ref())?;
+        let platform = self.resolve_platform(vector);
+        let key = crate::util::hash::combine(impl_key, platform.content_hash());
+        self.lint_stage.get_or_compute(key, || {
+            Ok(lint_model(
+                &impl_model.decorated,
+                &impl_model.fused,
+                Some(platform.as_ref()),
+                &LintConfig::default(),
+            ))
+        })
+    }
+
+    /// The zero-cost static screen of [`crate::dse::search`]: `Some(why)`
+    /// when the lint report carries a *blocking* diagnostic — a statically
+    /// proven evaluation failure (`AL101` untileable layer, `AL103`
+    /// structurally invalid platform), exactly the failures
+    /// [`EvalEngine::evaluate`] and [`EvalEngine::latency_lower_bound`]
+    /// would reject — and `None` otherwise. Rejections are counted in
+    /// [`CacheStats::lint_rejected`]. Because only blocking diagnostics
+    /// screen, the search's Pareto front is bit-identical with the screen
+    /// on or off; the screen just removes the doomed candidates earlier.
+    pub fn lint_screen(&self, vector: &DesignVector) -> Result<Option<String>> {
+        let reject = self.lint(vector)?.screen_reject();
+        if reject.is_some() {
+            self.lint_rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(reject)
     }
 
     /// Evaluate a batch, aborting on the first (lowest-index) failure.
@@ -1656,6 +1715,40 @@ mod tests {
         let s2 = engine.stats();
         assert_eq!(s2.sim_computed, 2);
         assert!(s2.sim_hits > s.sim_hits);
+    }
+
+    #[test]
+    fn lint_stage_is_memoized_and_counts_rejections() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        let ok = DesignVector::of_hw(8, 512);
+        assert!(engine.lint_screen(&ok).unwrap().is_none());
+        let report = engine.lint(&ok).unwrap();
+        assert!(report.screen_reject().is_none());
+        let s = engine.stats();
+        assert_eq!(s.lint_computed, 1, "second lookup must hit the cache");
+        assert_eq!(s.lint_hits, 1);
+        assert_eq!(s.lint_rejected, 0);
+        assert_eq!(s.sim_computed, 0, "lint must not schedule or simulate");
+
+        // sharded backend on one core is structurally invalid: a blocking
+        // AL103 that evaluate() would also reject
+        let bad = DesignVector::of_hw_on(1, 512, crate::sim::BackendKind::ShardedMultiCluster);
+        let why = engine.lint_screen(&bad).unwrap().expect("blocking finding");
+        assert!(why.starts_with("AL103"), "{why}");
+        assert_eq!(engine.stats().lint_rejected, 1);
+        assert!(engine.evaluate(&bad).is_err(), "screen must agree with evaluation");
+    }
+
+    #[test]
+    fn lint_screen_agrees_with_evaluation_on_untileable_corners() {
+        let engine = EvalEngine::for_mobilenet(small_case2(), presets::gap8());
+        // L2 smaller than L1 fails platform validation; lint reports it as
+        // a blocking diagnostic instead of erroring
+        let bad = DesignVector::of_hw(8, 32);
+        let why = engine.lint_screen(&bad).unwrap().expect("blocking finding");
+        assert!(why.starts_with("AL10"), "{why}");
+        assert!(engine.evaluate(&bad).is_err());
+        assert!(engine.latency_lower_bound(&bad).is_err());
     }
 
     #[test]

@@ -17,12 +17,13 @@
 //! - NSGA-II machinery — [`non_dominated_sort`], [`crowding_distance`]
 //!   (generic over the objective count), and exact [`hypervolume`] /
 //!   [`hypervolume4`];
-//! - cheap-first pruning — the analytic latency lower bound
-//!   ([`EvalEngine::latency_lower_bound`], backed by
-//!   [`crate::sim::lower_bound_cycles`]) and the exact hardware-invariant
-//!   memory/sensitivity screen ([`EvalEngine::screen_metrics`]) reject
-//!   candidates that provably cannot enter the front *before* the
-//!   simulate/interpret stages run;
+//! - cheap-first pruning — the memoized static lint screen
+//!   ([`EvalEngine::lint_screen`], blocking diagnostics only), the
+//!   analytic latency lower bound ([`EvalEngine::latency_lower_bound`],
+//!   backed by [`crate::sim::lower_bound_cycles`]) and the exact
+//!   hardware-invariant memory/sensitivity screen
+//!   ([`EvalEngine::screen_metrics`]) reject candidates that provably
+//!   cannot enter the front *before* the simulate/interpret stages run;
 //! - a successive-halving accuracy budget — with measured accuracy
 //!   enabled, candidates are screened on a small eval-vector subset and
 //!   only front survivors are re-measured on the full set.
@@ -332,6 +333,13 @@ pub struct EvoConfig {
     /// Enable the cheap-first screens (lower-bound dominance pruning +
     /// memory/deadline feasibility).
     pub prune: bool,
+    /// Run the static lint screen ([`EvalEngine::lint_screen`]) on every
+    /// screened candidate: blocking diagnostics (`AL101`/`AL103`) reject
+    /// the genome before any planning or simulation. Sound by
+    /// construction — blocking findings are exactly evaluation-path
+    /// failures, so the final front is bit-identical with the screen on
+    /// or off (CLI `--no-lint` disables it for A/B comparison).
+    pub lint: bool,
     /// Successive-halving screen tier: number of eval vectors used during
     /// evolution when measured accuracy is enabled (`0` = always use the
     /// engine's full set). Front survivors are re-measured on the full
@@ -363,6 +371,7 @@ impl Default for EvoConfig {
             crossover_p: 0.9,
             mutation_p: 0.0,
             prune: true,
+            lint: true,
             screen_vectors: 0,
             mem_budget_kb: None,
             max_latency_s: None,
@@ -393,6 +402,11 @@ pub enum PruneReason {
     /// The candidate could not be screened at all (e.g. L1-infeasible
     /// tiling or an invalid platform corner).
     Infeasible(String),
+    /// The static lint screen found a blocking diagnostic — the payload is
+    /// `"<code>: <message>"` of the first one (e.g. `AL103` invalid
+    /// platform, `AL101` untileable layer). Sound: blocking findings are
+    /// exactly evaluation-path failures.
+    Lint(String),
 }
 
 /// Per-generation progress record, streamed to the caller while the
@@ -825,6 +839,24 @@ pub fn evolve_with(
                 continue;
             }
             let vector = genome.vector();
+            if cfg.lint {
+                // static lint screen: blocking diagnostics only, memoized
+                // per (quant impl, platform) so repeat hardware corners
+                // cost a hash lookup
+                match engine.lint_screen(&vector) {
+                    Ok(Some(why)) => {
+                        infeasible += 1;
+                        pruned.push((genome, PruneReason::Lint(why)));
+                        continue;
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        infeasible += 1;
+                        pruned.push((genome, PruneReason::Infeasible(e.to_string())));
+                        continue;
+                    }
+                }
+            }
             let metrics = match engine.screen_metrics(&vector) {
                 Ok(m) => m,
                 Err(e) => {

@@ -39,6 +39,7 @@ impl fmt::Display for EdgeId {
 /// 2D convolution attributes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConvAttrs {
+    /// Number of output channels (filters).
     pub out_channels: usize,
     /// Kernel (height, width).
     pub kernel: (usize, usize),
@@ -81,6 +82,7 @@ impl ConvAttrs {
         (oh, ow)
     }
 
+    /// True for depthwise convolutions (`groups == out_channels > 1`).
     pub fn is_depthwise(&self) -> bool {
         self.groups > 1 && self.groups == self.out_channels
     }
@@ -89,18 +91,23 @@ impl ConvAttrs {
 /// Fully-connected (Gemm) attributes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GemmAttrs {
+    /// Number of output features (rows of the weight matrix).
     pub out_features: usize,
 }
 
 /// Pooling attributes (shared by max/avg pooling).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolAttrs {
+    /// Pooling window (height, width).
     pub kernel: (usize, usize),
+    /// Stride (height, width).
     pub stride: (usize, usize),
+    /// Symmetric zero padding (height, width).
     pub padding: (usize, usize),
 }
 
 impl PoolAttrs {
+    /// Square unpadded pooling window.
     pub fn square(k: usize, stride: usize) -> Self {
         Self {
             kernel: (k, k),
@@ -109,6 +116,7 @@ impl PoolAttrs {
         }
     }
 
+    /// Output spatial dims for an input of `(h, w)`.
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
         let oh = (h + 2 * self.padding.0 - self.kernel.0) / self.stride.0 + 1;
         let ow = (w + 2 * self.padding.1 - self.kernel.1) / self.stride.1 + 1;
@@ -227,6 +235,7 @@ pub struct NodeAnn {
 /// source and consumed by the destination, in bits (paper §VI; Eqs. 2, 4).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EdgeAnn {
+    /// Tensor size in bits at the edge's element precision.
     pub mem_bits: u64,
 }
 
@@ -234,15 +243,20 @@ pub struct EdgeAnn {
 /// (constant initializers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EdgeKind {
+    /// Runtime data produced by a node (or the graph input).
     Activation,
+    /// Constant initializer (weights, biases, thresholds, LUTs).
     Parameter,
 }
 
 /// A DAG node.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Position of this node in [`Graph::nodes`].
     pub id: NodeId,
+    /// Unique human-readable name (diagnostics anchor on it).
     pub name: String,
+    /// The operation this node performs.
     pub op: Op,
     /// Incoming edges in positional order (data input first, then params).
     pub inputs: Vec<EdgeId>,
@@ -255,19 +269,24 @@ pub struct Node {
 /// A DAG edge.
 #[derive(Debug, Clone)]
 pub struct Edge {
+    /// Position of this edge in [`Graph::edges`].
     pub id: EdgeId,
+    /// Unique human-readable name.
     pub name: String,
     /// Producing node; `None` for graph inputs and parameters.
     pub from: Option<NodeId>,
     /// Consuming nodes (an edge may fan out).
     pub to: Vec<NodeId>,
+    /// Shape and element type of the carried tensor.
     pub spec: TensorSpec,
+    /// Activation vs parameter.
     pub kind: EdgeKind,
     /// Implementation-aware annotation (None on the canonical model).
     pub ann: Option<EdgeAnn>,
 }
 
 impl Edge {
+    /// True iff the edge carries a constant parameter tensor.
     pub fn is_param(&self) -> bool {
         matches!(self.kind, EdgeKind::Parameter)
     }
@@ -276,12 +295,16 @@ impl Edge {
 /// The QONNX-style DAG.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Model name, echoed in reports and exports.
     pub name: String,
+    /// All nodes, indexable by [`NodeId`].
     pub nodes: Vec<Node>,
+    /// All edges, indexable by [`EdgeId`].
     pub edges: Vec<Edge>,
 }
 
 impl Graph {
+    /// An empty graph with the given name.
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -290,22 +313,28 @@ impl Graph {
         }
     }
 
+    /// The node with the given id.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0]
     }
 
+    /// Mutable access to the node with the given id.
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
         &mut self.nodes[id.0]
     }
 
+    /// The edge with the given id.
     pub fn edge(&self, id: EdgeId) -> &Edge {
         &self.edges[id.0]
     }
 
+    /// Mutable access to the edge with the given id.
     pub fn edge_mut(&mut self, id: EdgeId) -> &mut Edge {
         &mut self.edges[id.0]
     }
 
+    /// Append an unwired node; connect it with [`Graph::connect_input`] /
+    /// [`Graph::connect_output`].
     pub fn add_node(&mut self, name: impl Into<String>, op: Op) -> NodeId {
         let id = NodeId(self.nodes.len());
         self.nodes.push(Node {
@@ -319,6 +348,7 @@ impl Graph {
         id
     }
 
+    /// Append an unwired edge carrying a tensor of the given spec.
     pub fn add_edge(
         &mut self,
         name: impl Into<String>,

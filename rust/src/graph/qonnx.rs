@@ -18,6 +18,7 @@ use std::path::Path;
 /// One node of the on-disk QONNX-dialect document.
 #[derive(Debug, Clone)]
 pub struct QonnxNode {
+    /// Unique node name.
     pub name: String,
     /// Operator type: "Quant" | "Conv" | "Gemm" | "Relu" | "MaxPool"
     /// | "AveragePool" | "Flatten" | "Add".
@@ -33,10 +34,13 @@ pub struct QonnxNode {
 /// Tensor type declaration.
 #[derive(Debug, Clone)]
 pub struct QonnxTensor {
+    /// Tensor name, referenced by node inputs/outputs.
     pub name: String,
+    /// Dimensions, outermost first.
     pub dims: Vec<usize>,
     /// Bit-width of each element.
     pub bits: u8,
+    /// Two's-complement signedness.
     pub signed: bool,
     /// True for constant initializers (weights, biases, thresholds).
     pub initializer: bool,
@@ -45,10 +49,15 @@ pub struct QonnxTensor {
 /// On-disk QONNX-dialect document.
 #[derive(Debug, Clone)]
 pub struct QonnxModel {
+    /// Model name.
     pub name: String,
+    /// Names of the graph's input tensors.
     pub graph_inputs: Vec<String>,
+    /// Names of the graph's output tensors.
     pub graph_outputs: Vec<String>,
+    /// All tensor declarations (activations and initializers).
     pub tensors: Vec<QonnxTensor>,
+    /// Operation nodes in document order.
     pub nodes: Vec<QonnxNode>,
 }
 
@@ -64,11 +73,13 @@ fn attr_pair(n: &QonnxNode, key: &str) -> Option<(usize, usize)> {
 }
 
 impl QonnxModel {
+    /// Read and parse a QONNX-dialect JSON file.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::from_json(&Value::parse(&text)?)
     }
 
+    /// Write the document as pretty-printed JSON.
     pub fn to_file(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())

@@ -83,6 +83,7 @@ pub struct TensorSpec {
 }
 
 impl TensorSpec {
+    /// A tensor of the given dimensions and element type.
     pub fn new(dims: Vec<usize>, elem: ElemType) -> Self {
         Self { dims, elem }
     }

@@ -79,10 +79,19 @@ fn validate_node(g: &Graph, n: &Node) -> Result<()> {
             })?;
             expect(x.spec.dims.len() == 3, at, "Conv input must be [C,H,W]")?;
             let cin = x.spec.dims[0];
+            expect(a.groups > 0, at, "Conv groups must be positive")?;
             expect(
                 cin % a.groups == 0,
                 at,
                 format!("in_channels {cin} not divisible by groups {}", a.groups),
+            )?;
+            expect(
+                a.out_channels % a.groups == 0,
+                at,
+                format!(
+                    "out_channels {} not divisible by groups {}",
+                    a.out_channels, a.groups
+                ),
             )?;
             let params = g.param_inputs(n.id);
             expect(!params.is_empty(), at, "Conv missing weight parameter")?;
@@ -143,11 +152,17 @@ fn validate_node(g: &Graph, n: &Node) -> Result<()> {
                     x.spec.elem, a.to
                 ),
             )?;
-            if let Some(o) = out {
+            // every fanned-out consumer reads the requantized precision, so
+            // each output edge must agree with the target attribute
+            for eid in &n.outputs {
+                let o = g.edge(*eid);
                 expect(
                     o.spec.elem == a.to,
                     at,
-                    format!("Quant output elem {} != target {}", o.spec.elem, a.to),
+                    format!(
+                        "Quant output edge `{}` elem {} != target {}",
+                        o.name, o.spec.elem, a.to
+                    ),
                 )?;
             }
             Ok(())
@@ -266,6 +281,46 @@ mod tests {
             EdgeKind::Activation,
         );
         assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_groups_not_dividing_out_channels() {
+        let mut g = valid_graph();
+        for n in &mut g.nodes {
+            if let Op::Conv(a) = &mut n.op {
+                // 3 input channels % 3 == 0 but 8 output channels % 3 != 0
+                a.groups = 3;
+            }
+        }
+        let err = validate(&g).unwrap_err().to_string();
+        assert!(err.contains("out_channels"), "{err}");
+    }
+
+    #[test]
+    fn rejects_zero_groups() {
+        let mut g = valid_graph();
+        for n in &mut g.nodes {
+            if let Op::Conv(a) = &mut n.op {
+                a.groups = 0;
+            }
+        }
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_quant_target_edge_disagreement() {
+        let mut g = valid_graph();
+        let qid = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Quant(_)))
+            .unwrap()
+            .id;
+        let out = g.nodes[qid.0].outputs[0];
+        // the attribute says int8 but the edge claims int4 storage
+        g.edges[out.0].spec.elem = ElemType::int(4);
+        let err = validate(&g).unwrap_err().to_string();
+        assert!(err.contains("!= target"), "{err}");
     }
 
     #[test]

@@ -36,7 +36,6 @@
 // dropped.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod analysis;
 #[allow(missing_docs)]
 pub mod coordinator;
@@ -44,7 +43,6 @@ pub mod dse;
 #[allow(missing_docs)]
 pub mod error;
 pub mod exec;
-#[allow(missing_docs)]
 pub mod graph;
 #[allow(missing_docs)]
 pub mod impl_aware;

@@ -2,7 +2,7 @@
 //! workflow (paper Fig. 3), the hardware DSE (Fig. 7), and the PJRT-based
 //! accuracy evaluation (Table I).
 
-use aladin::analysis::Feasibility;
+use aladin::analysis::{lint_model, Feasibility, LintConfig, Severity};
 use aladin::coordinator::Pipeline;
 use aladin::dse::{
     evolve_with, explore_joint_measured, EvalEngine, EvoConfig, GridSearch, JointSpace,
@@ -44,9 +44,13 @@ USAGE:
                   [--cores 2,4,8] [--l2-kb 256,320,512] [--backend <b|all>]
                   [--population <K>] [--generations <N>] [--seed <S>]
                   [--max-evals <E>] [--mem-budget-kb <M>] [--deadline-ms <D>]
-                  [--no-prune] [--no-delta] [--threads <n>] [--platform <p>]
+                  [--no-prune] [--no-lint] [--no-delta] [--threads <n>] [--platform <p>]
                   [--width-mult <f64>] [--json] [--cache-stats]
                   [--measured-accuracy [--vectors <n>] [--screen-vectors <k>]]
+  aladin lint     [--model case1|case2|case3|lenet|<file.qonnx.json>]
+                  [--impl-config <file.yaml>] [--platform gap8|stm32n6|<file.json>]
+                  [--backend scratchpad|sharded|systolic] [--deny info|warn|error]
+                  [--width-mult <f64>] [--json] [--out <file.json>]
   aladin export   [--model case1|case2|case3|lenet] [--width-mult <f64>]
                   [--out model.qonnx.json]
   aladin eval     [--model case1|case2|case3|lenet|<file.qonnx.json>]
@@ -491,6 +495,7 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
             .map_err(io_err)?
             .map(|ms| ms / 1e3),
         prune: !args.flag("no-prune"),
+        lint: !args.flag("no-lint"),
         delta: !args.flag("no-delta"),
         ..EvoConfig::default()
     };
@@ -628,6 +633,10 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
          bound {} computed / {} cached",
         s.impl_computed, s.impl_hits, s.sim_computed, s.sim_hits, s.bound_computed, s.bound_hits
     );
+    println!(
+        "       static lint screen: {} computed / {} cached, {} candidates rejected",
+        s.lint_computed, s.lint_hits, s.lint_rejected
+    );
     if result.measured {
         println!(
             "       accuracy stage (integer interpreter): {} computed / {} cached",
@@ -754,6 +763,67 @@ fn cmd_dse(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Static QNN/platform verification (`aladin lint`): the bit-range
+/// interval rules plus the platform rule set, with CI-friendly exit
+/// codes — 0 clean, 1 findings at or above the `--deny` floor (default
+/// `error`), 2 usage error.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "case2");
+    let width_mult = args.get_parsed::<f64>("width-mult").map_err(io_err)?;
+    let (g, mut cfg) = load_model(&model, width_mult)?;
+    if let Some(path) = args.get("impl-config") {
+        cfg = ImplConfig::from_file(path)?;
+    }
+    let mut platform = load_platform(&args.get_or("platform", "gap8"))?;
+    if let Some(name) = args.get("backend") {
+        platform.backend = BackendKind::parse(name).ok_or_else(|| {
+            io_err(format!(
+                "unknown --backend `{name}` (expected scratchpad|sharded|systolic)"
+            ))
+        })?;
+    }
+    let deny = match args.get("deny") {
+        None | Some("error") => Severity::Error,
+        Some("warn") => Severity::Warn,
+        Some("info") => Severity::Info,
+        Some(other) => {
+            return Err(io_err(format!(
+                "unknown --deny level `{other}` (expected info|warn|error)"
+            )))
+        }
+    };
+    let decorated = aladin::impl_aware::decorate(g, &cfg)?;
+    let fused = aladin::platform_aware::fuse(&decorated)?;
+    let report = lint_model(&decorated, &fused, Some(&platform), &LintConfig::default());
+
+    let doc = report.to_json();
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, doc.to_string_pretty())?;
+    }
+    if args.flag("json") {
+        println!("{}", doc.to_string_pretty());
+    } else {
+        println!(
+            "== static verification — {model} on {} [{} backend] ==",
+            platform.name,
+            platform.backend.label()
+        );
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        if report.diagnostics.is_empty() {
+            println!("clean: no findings");
+        }
+        println!(
+            "{} error(s), {} warning(s), {} note(s)",
+            report.count(Severity::Error),
+            report.count(Severity::Warn),
+            report.count(Severity::Info)
+        );
+    }
+    std::process::exit(report.exit_code(deny));
 }
 
 /// Measured accuracy via the bit-exact integer interpreter: decorate the
@@ -973,6 +1043,7 @@ fn main() {
         "bottlenecks",
         "measured-accuracy",
         "no-prune",
+        "no-lint",
         "no-delta",
         "cache-stats",
     ]) {
@@ -985,6 +1056,7 @@ fn main() {
     let result: Result<()> = match args.subcommand.as_deref() {
         Some("analyze") => cmd_analyze(&args),
         Some("dse") => cmd_dse(&args),
+        Some("lint") => cmd_lint(&args),
         Some("eval") => cmd_eval(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("screen") => cmd_screen(&args),

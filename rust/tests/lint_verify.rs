@@ -1,0 +1,212 @@
+//! Soundness tests for the static lint pass (`analysis::verify`) and its
+//! DSE screen wiring: the interval analysis must over-approximate the
+//! bit-exact interpreter, screen-rejected genomes must be genuinely
+//! unevaluable, and a screened evolutionary run must produce a front
+//! bit-identical to an unscreened one (the screen only removes candidates
+//! that would fail evaluation anyway — the pattern of the bound-pruning
+//! soundness test in `search_evo`).
+
+use aladin::analysis::verify::analyze;
+use aladin::analysis::{lint_graph, LintConfig, Severity};
+use aladin::dse::{evolve, EvalEngine, EvoConfig, EvoResult, Genome, PruneReason, SearchSpace};
+use aladin::exec::{measure_batched, measure_scalar, Executable};
+use aladin::impl_aware::decorate;
+use aladin::models::{self, BlockImpl, MobileNetConfig};
+use aladin::platform::presets;
+use aladin::sim::BackendKind;
+use aladin::util::ToJson;
+use std::sync::Arc;
+
+fn small(mut case: MobileNetConfig) -> MobileNetConfig {
+    case.width_mult = 0.25; // keep integration runs fast
+    case
+}
+
+#[test]
+fn lint_clean_model_executes_within_predicted_intervals() {
+    // acceptance criterion (numeric soundness): a model that lints free of
+    // saturation findings runs through the integer interpreter with every
+    // activation value inside the statically predicted interval — i.e. the
+    // abstract interpretation over-approximates the concrete execution, so
+    // "no AL002" really means no unexpected writeback saturation.
+    let (g, cfg) = models::lenet(8, (3, 32, 32), 10);
+    let decorated = Arc::new(decorate(g, &cfg).unwrap());
+    let lint_cfg = LintConfig::default();
+    let diags = lint_graph(&decorated, &lint_cfg);
+    assert!(
+        diags.iter().all(|d| d.severity < Severity::Warn),
+        "lenet-int8 must lint clean of warnings/errors: {diags:?}"
+    );
+
+    let analysis = analyze(&decorated, &lint_cfg);
+    let vectors = models::lenet_vectors(6);
+    let exe = Executable::lower(decorated.clone(), &vectors).unwrap();
+    let mut checked_edges = 0usize;
+    for input in &vectors.inputs {
+        let edges = exe.run_int_edges(input).unwrap();
+        for (eid, tensor) in edges.iter().enumerate() {
+            let (Some(t), Some(iv)) = (tensor, &analysis.edge_intervals[eid]) else {
+                continue;
+            };
+            checked_edges += 1;
+            for &v in &t.data {
+                assert!(
+                    i128::from(v) >= iv.lo && i128::from(v) <= iv.hi,
+                    "edge `{}`: concrete value {v} escapes the predicted interval \
+                     [{}, {}]",
+                    decorated.edges[eid].name,
+                    iv.lo,
+                    iv.hi
+                );
+            }
+        }
+    }
+    assert!(checked_edges > 0, "no edge was covered by both paths");
+
+    // the batched executor computes the same deployment bit-for-bit, so
+    // the interval soundness extends to exec::batch via the fingerprint
+    let scalar = measure_scalar(decorated.clone(), &vectors).unwrap();
+    let batched = measure_batched(decorated, &vectors, 4).unwrap();
+    assert_eq!(scalar.output_fingerprint, batched.output_fingerprint);
+}
+
+/// A search space whose uniform seeds include statically infeasible
+/// corners: the sharded backend with a single core fails
+/// `PlatformSpec::validate` (lint `AL103`), so the screen has real work.
+fn infeasible_seeded_space() -> SearchSpace {
+    SearchSpace {
+        bits: vec![8],
+        impls: vec![BlockImpl::Im2col],
+        n_blocks: 10,
+        cores: vec![1, 8],
+        l2_kb: vec![256],
+        backends: BackendKind::all().to_vec(),
+    }
+}
+
+#[test]
+fn screen_rejected_genomes_are_genuinely_unevaluable() {
+    // acceptance criterion (screen soundness): every genome the lint
+    // screen rejected is re-driven through the full evaluation path and
+    // must fail there too — the screen never removes an evaluable
+    // candidate.
+    let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8());
+    let cfg = EvoConfig {
+        population: 12,
+        generations: 3,
+        max_evals: 60,
+        seed: 11,
+        ..EvoConfig::default()
+    };
+    let r = evolve(&engine, &infeasible_seeded_space(), &cfg).unwrap();
+    assert!(
+        r.stats.lint_rejected > 0,
+        "the infeasible-seeded corpus must trip the lint screen: {:?}",
+        r.stats
+    );
+    let mut checked = 0usize;
+    for (genome, reason) in &r.pruned {
+        let PruneReason::Lint(why) = reason else {
+            continue;
+        };
+        assert!(why.starts_with("AL1"), "screen rejects on platform rules: {why}");
+        assert!(
+            engine.evaluate(&genome.vector()).is_err(),
+            "lint-rejected genome {} evaluated successfully",
+            genome.label()
+        );
+        assert!(
+            engine.latency_lower_bound(&genome.vector()).is_err(),
+            "lint-rejected genome {} has a computable bound",
+            genome.label()
+        );
+        checked += 1;
+    }
+    assert_eq!(
+        checked,
+        r.stats.lint_rejected,
+        "every screen rejection must be re-checked"
+    );
+}
+
+#[test]
+fn front_is_bit_identical_with_screen_on_and_off() {
+    // acceptance criterion: `--search evo` over an infeasible-seeded
+    // corpus reports nonzero lint_rejected with the screen on, and the
+    // final front is bit-identical to a screen-off run of the same seed —
+    // across engine thread counts.
+    let space = infeasible_seeded_space();
+    let run = |threads: usize, lint: bool| -> EvoResult {
+        let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+            .with_threads(threads);
+        let cfg = EvoConfig {
+            population: 12,
+            generations: 3,
+            max_evals: 60,
+            seed: 21,
+            lint,
+            ..EvoConfig::default()
+        };
+        evolve(&engine, &space, &cfg).unwrap()
+    };
+    let signature = |r: &EvoResult| -> Vec<(String, usize, u64, String, u64, u64)> {
+        r.records
+            .iter()
+            .map(|x| {
+                (
+                    x.quant_label(),
+                    x.cores,
+                    x.l2_kb,
+                    x.sim.backend.clone(),
+                    x.total_cycles,
+                    x.energy_nj.to_bits(),
+                )
+            })
+            .collect()
+    };
+    let screened = run(1, true);
+    assert!(screened.stats.lint_rejected > 0, "{:?}", screened.stats);
+    assert!(
+        screened
+            .pruned
+            .iter()
+            .any(|(_, why)| matches!(why, PruneReason::Lint(_))),
+        "screen rejections must surface as PruneReason::Lint"
+    );
+    for (threads, lint) in [(1usize, false), (8, true), (8, false)] {
+        let other = run(threads, lint);
+        assert_eq!(
+            signature(&screened),
+            signature(&other),
+            "archive differs (threads {threads}, lint {lint})"
+        );
+        assert_eq!(
+            screened.front, other.front,
+            "front differs (threads {threads}, lint {lint})"
+        );
+    }
+    // the screen traded evaluation-path failures for static rejections,
+    // never changing what got evaluated
+    let unscreened = run(1, false);
+    assert_eq!(unscreened.stats.lint_rejected, 0);
+    assert_eq!(screened.evaluations, unscreened.evaluations);
+}
+
+#[test]
+fn lint_report_json_is_byte_identical_across_runs_and_threads() {
+    // acceptance criterion (determinism): the same model + configuration
+    // renders byte-identical machine-readable reports across fresh
+    // engines and across engine thread counts.
+    let vector = Genome::uniform(8, BlockImpl::Im2col, 10, None).vector();
+    let render = |threads: usize| -> String {
+        let engine = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+            .with_threads(threads);
+        engine.lint(&vector).unwrap().to_json().to_string_pretty()
+    };
+    let a = render(1);
+    let b = render(1);
+    let c = render(8);
+    assert_eq!(a, b, "report differs across runs");
+    assert_eq!(a, c, "report differs across thread counts");
+    assert!(a.contains("\"model\""), "{a}");
+}
