@@ -92,6 +92,27 @@ impl crate::util::ToJson for LatencyBound {
     }
 }
 
+impl crate::util::FromJson for LatencyBound {
+    fn from_json(
+        v: &crate::util::Value,
+    ) -> std::result::Result<Self, crate::util::json::JsonError> {
+        use crate::util::json::{field_err, req_f64, req_str, req_u64};
+        let entries = v
+            .get("breakdown")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| field_err("missing or non-array field `breakdown`"))?;
+        let mut breakdown = Vec::with_capacity(entries.len());
+        for e in entries {
+            breakdown.push((req_str(e, "layer")?, req_u64(e, "cycles")?, req_f64(e, "share")?));
+        }
+        Ok(LatencyBound {
+            total_cycles: req_u64(v, "total_cycles")?,
+            latency_s: req_f64(v, "latency_s")?,
+            breakdown,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

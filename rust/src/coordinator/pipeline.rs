@@ -80,6 +80,71 @@ pub struct PlatformEval {
     pub tilings: Vec<(String, usize, usize, bool)>,
 }
 
+impl crate::util::ToJson for PlatformEval {
+    fn to_json(&self) -> crate::util::Value {
+        let tilings: Vec<crate::util::Value> = self
+            .tilings
+            .iter()
+            .map(|(layer, tiles_c, tiles_h, double_buffered)| {
+                crate::util::Value::obj()
+                    .with("layer", layer.clone())
+                    .with("tiles_c", *tiles_c)
+                    .with("tiles_h", *tiles_h)
+                    .with("double_buffered", *double_buffered)
+            })
+            .collect();
+        crate::util::Value::obj()
+            .with("platform", self.platform.clone())
+            .with("sim", self.sim.to_json())
+            .with("latency", self.latency.to_json())
+            .with("peak_l1", self.peak_l1)
+            .with("peak_l2", self.peak_l2)
+            .with("l3_traffic", self.l3_traffic)
+            .with("energy_nj", self.energy_nj)
+            .with("tilings", crate::util::Value::Arr(tilings))
+    }
+}
+
+impl crate::util::FromJson for PlatformEval {
+    /// Decodes exactly what [`crate::util::ToJson`] emits — the disk tier
+    /// of the DSE evaluation cache persists `PlatformEval` records through
+    /// this pair, and warm-started fronts must be byte-identical to cold
+    /// ones (every numeric field survives the shortest-round-trip `f64`
+    /// writer exactly).
+    fn from_json(
+        v: &crate::util::Value,
+    ) -> std::result::Result<Self, crate::util::json::JsonError> {
+        use crate::util::json::{field_err, req_bool, req_f64, req_str, req_u64, req_usize};
+        let sim = v.get("sim").ok_or_else(|| field_err("missing field `sim`"))?;
+        let latency = v
+            .get("latency")
+            .ok_or_else(|| field_err("missing field `latency`"))?;
+        let entries = v
+            .get("tilings")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| field_err("missing or non-array field `tilings`"))?;
+        let mut tilings = Vec::with_capacity(entries.len());
+        for e in entries {
+            tilings.push((
+                req_str(e, "layer")?,
+                req_usize(e, "tiles_c")?,
+                req_usize(e, "tiles_h")?,
+                req_bool(e, "double_buffered")?,
+            ));
+        }
+        Ok(PlatformEval {
+            platform: req_str(v, "platform")?,
+            sim: crate::util::FromJson::from_json(sim)?,
+            latency: crate::util::FromJson::from_json(latency)?,
+            peak_l1: req_u64(v, "peak_l1")?,
+            peak_l2: req_u64(v, "peak_l2")?,
+            l3_traffic: req_u64(v, "l3_traffic")?,
+            energy_nj: req_f64(v, "energy_nj")?,
+            tilings,
+        })
+    }
+}
+
 /// Stage 1 (paper §V step 1, §VI): validate a canonical graph, decorate it
 /// under `cfg`, and fuse it into schedulable layers. The canonical graph
 /// and config are retained in the snapshot so later candidates can

@@ -1,0 +1,683 @@
+//! The shared evaluation-cache layer beneath [`crate::dse::engine`].
+//!
+//! PR 1/5 gave the engine staged memoization; this module generalizes it
+//! for DSE-as-a-service ([`crate::serve`]) where many in-flight jobs and
+//! clients share one cache:
+//!
+//! - [`ShardedMemo`] — the concurrent memo table: N `Mutex` shards keyed
+//!   by FNV hash, each slot an `Arc`'d `OnceLock`. A shard lock is held
+//!   **only while creating or finding a slot, never while computing** —
+//!   concurrent requests for the *same* key block on the slot's
+//!   `OnceLock`, distinct keys (even in the same shard) compute in
+//!   parallel, and each key is computed at most once (property-tested in
+//!   `tests/engine_cache.rs`);
+//! - [`SharedCache`] — the `Arc`'d bundle of the engine's six stage memos
+//!   plus the optional disk tier. Cloning is cheap; engines built
+//!   [`crate::dse::EvalEngine::with_cache`] on the same handle share every
+//!   stage, so a second identical job is served from the first one's work;
+//! - [`DiskCache`] — the opt-in on-disk tier (`aladin serve --cache-dir`):
+//!   content-hash-named record files with a versioned, checksummed header,
+//!   written behind a background writer thread on insert and loaded lazily
+//!   on memory-tier misses, so warm starts survive process restarts.
+//!   Records that fail any header, checksum, or payload check are skipped
+//!   and recomputed, never trusted.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+
+use crate::analysis::LintReport;
+use crate::coordinator::{ImplModel, PlatformEval};
+use crate::error::{AladinError, Result};
+use crate::exec::MeasuredAccuracy;
+use crate::util::json::Value;
+use crate::util::{FromJson, StableHasher, ToJson};
+
+use super::engine::LayerUnit;
+
+// ---------------------------------------------------------------------------
+// the sharded memo table
+// ---------------------------------------------------------------------------
+
+/// A lazily-initialized cache slot: computed at most once, shared by every
+/// waiter. Errors are stored shared and replayed structurally
+/// ([`AladinError::replay`]), so every consumer — computing thread,
+/// concurrent waiter, or later lookup — sees the same typed variant
+/// (`Infeasible` stays matchable through the cache).
+type Slot<T> = Arc<OnceLock<std::result::Result<Arc<T>, Arc<AladinError>>>>;
+
+/// Shard count. Power of two so the shard index is a mask; 16 shards keep
+/// slot-creation contention negligible at the engine's worker counts
+/// without bloating the per-stage footprint.
+const SHARDS: usize = 16;
+
+/// One memoization table, sharded for concurrent use: key → lazily
+/// computed shared value. Each shard's lock guards only slot creation;
+/// computation runs outside every lock (concurrent requests for the *same*
+/// key block on the slot's `OnceLock`, distinct keys compute in parallel),
+/// so each key is computed at most once and a slow computation never
+/// blocks lookups of other keys — not even keys in the same shard.
+pub struct ShardedMemo<T> {
+    shards: Vec<Mutex<HashMap<u64, Slot<T>>>>,
+    hits: AtomicUsize,
+    computed: AtomicUsize,
+}
+
+impl<T> Default for ShardedMemo<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ShardedMemo<T> {
+    /// An empty table.
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            computed: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lookups served from an existing slot so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Computations actually executed so far (disk-tier loads are neither
+    /// hits nor computations).
+    pub fn computed(&self) -> usize {
+        self.computed.load(Ordering::Relaxed)
+    }
+
+    /// Keys currently resident in the memory tier.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("memo shard lock poisoned").len())
+            .sum()
+    }
+
+    /// True when no key is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Find or create the slot for `key`, holding the shard lock only for
+    /// the map operation. Returns the slot and whether it was freshly
+    /// created.
+    fn slot(&self, key: u64) -> (Slot<T>, bool) {
+        // fold the high half in so shard choice uses the whole hash
+        let shard = &self.shards[((key ^ (key >> 32)) as usize) & (SHARDS - 1)];
+        let mut slots = shard.lock().expect("memo shard lock poisoned");
+        match slots.entry(key) {
+            Entry::Occupied(e) => (e.get().clone(), false),
+            Entry::Vacant(v) => {
+                let slot = Arc::new(OnceLock::new());
+                v.insert(slot.clone());
+                (slot, true)
+            }
+        }
+    }
+
+    /// Memoized lookup: compute `f` for `key` at most once, share the
+    /// result (or the replayed error) with every caller.
+    pub fn get_or_compute(&self, key: u64, f: impl FnOnce() -> Result<T>) -> Result<Arc<T>> {
+        self.get_or_compute_flagged(key, f).map(|(v, _)| v)
+    }
+
+    /// [`ShardedMemo::get_or_compute`] that also reports whether the
+    /// lookup was a cache hit (the slot already existed) — the engine's
+    /// layer-grained tier uses this to count spliced units.
+    pub fn get_or_compute_flagged(
+        &self,
+        key: u64,
+        f: impl FnOnce() -> Result<T>,
+    ) -> Result<(Arc<T>, bool)> {
+        let (slot, fresh) = self.slot(key);
+        if !fresh {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let outcome = slot.get_or_init(|| {
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            f().map(Arc::new).map_err(Arc::new)
+        });
+        match outcome {
+            Ok(v) => Ok((v.clone(), !fresh)),
+            Err(e) => Err(e.replay()),
+        }
+    }
+
+    /// [`ShardedMemo::get_or_compute`] with a disk tier behind the memory
+    /// tier: on a memory miss, `load` is consulted first (a successful
+    /// load counts as neither a hit nor a computation), and a fresh
+    /// computation's value is handed to `store` for write-behind
+    /// persistence. Like the plain path, `load`, `store`, and `f` all run
+    /// outside every shard lock, and errors are never persisted.
+    pub(crate) fn get_or_compute_tiered(
+        &self,
+        key: u64,
+        load: impl FnOnce() -> Option<T>,
+        store: impl FnOnce(&T),
+        f: impl FnOnce() -> Result<T>,
+    ) -> Result<Arc<T>> {
+        let (slot, fresh) = self.slot(key);
+        if !fresh {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let outcome = slot.get_or_init(|| {
+            if let Some(v) = load() {
+                return Ok(Arc::new(v));
+            }
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            match f() {
+                Ok(v) => {
+                    store(&v);
+                    Ok(Arc::new(v))
+                }
+                Err(e) => Err(Arc::new(e)),
+            }
+        });
+        match outcome {
+            Ok(v) => Ok(v.clone()),
+            Err(e) => Err(e.replay()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the on-disk tier
+// ---------------------------------------------------------------------------
+
+/// Record-file magic.
+const MAGIC: [u8; 4] = *b"ALAD";
+
+/// On-disk record format version; bumped on any layout or payload-schema
+/// change, making older records clean misses instead of decode errors.
+pub const DISK_FORMAT_VERSION: u32 = 1;
+
+/// Header layout: magic (4) + version (4) + stage tag (1) + key (8) +
+/// payload length (4) + payload checksum (8).
+const HEADER_LEN: usize = 4 + 4 + 1 + 8 + 4 + 8;
+
+/// Which engine stage a disk record belongs to. Only the stages whose
+/// values serialize losslessly are persisted: simulation
+/// ([`PlatformEval`]), measured accuracy ([`MeasuredAccuracy`]), and the
+/// latency lower bound. Stage-1 / layer-unit / lint values hold live graph
+/// and schedule structures; they stay memory-only and are recomputed
+/// deterministically, so warm-started fronts remain byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Whole-model platform evaluation (schedule + simulate).
+    Sim,
+    /// Interpreter-measured accuracy.
+    Accuracy,
+    /// Analytic latency lower bound.
+    Bound,
+}
+
+impl StageKind {
+    fn tag(self) -> u8 {
+        match self {
+            StageKind::Sim => 1,
+            StageKind::Accuracy => 2,
+            StageKind::Bound => 3,
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            StageKind::Sim => "sim",
+            StageKind::Accuracy => "acc",
+            StageKind::Bound => "bound",
+        }
+    }
+}
+
+/// FNV-1a checksum of a record payload.
+fn checksum(payload: &[u8]) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_bytes(payload);
+    h.finish()
+}
+
+/// Frame a payload with the versioned, checksummed record header.
+fn encode_record(kind: StageKind, key: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&DISK_FORMAT_VERSION.to_le_bytes());
+    out.push(kind.tag());
+    out.extend_from_slice(&key.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&checksum(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Validate a record file against the expected stage and key; `None` on
+/// any header, length, or checksum mismatch.
+fn decode_record(bytes: &[u8], kind: StageKind, key: u64) -> Option<&[u8]> {
+    if bytes.len() < HEADER_LEN || bytes[..4] != MAGIC {
+        return None;
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().ok()?);
+    if version != DISK_FORMAT_VERSION || bytes[8] != kind.tag() {
+        return None;
+    }
+    let rec_key = u64::from_le_bytes(bytes[9..17].try_into().ok()?);
+    if rec_key != key {
+        return None;
+    }
+    let len = u32::from_le_bytes(bytes[17..21].try_into().ok()?) as usize;
+    let sum = u64::from_le_bytes(bytes[21..29].try_into().ok()?);
+    let payload = bytes.get(HEADER_LEN..)?;
+    if payload.len() != len || checksum(payload) != sum {
+        return None;
+    }
+    Some(payload)
+}
+
+/// Counters of the on-disk tier; all zero while the tier is disabled.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskTierStats {
+    /// Records loaded and decoded successfully on memory-tier misses —
+    /// the warm-start hits.
+    pub loaded: usize,
+    /// Records handed to the write-behind writer.
+    pub stored: usize,
+    /// Records rejected: bad magic/version/stage/key, truncated payload,
+    /// checksum mismatch, or a payload that no longer decodes.
+    pub corrupt: usize,
+}
+
+/// Message to the write-behind writer thread.
+enum WriterMsg {
+    Write { path: PathBuf, bytes: Vec<u8> },
+    Flush(mpsc::Sender<()>),
+}
+
+/// The opt-in on-disk cache tier: one record file per (stage, key), named
+/// `<stage>-<key hex>.rec` under the cache directory. Inserts are queued
+/// to a background writer thread (write-behind: the computing thread never
+/// waits on the filesystem); each record is written to a temp file and
+/// renamed into place so readers never observe a half-written record.
+/// [`DiskCache::flush`] drains the queue — dropping the cache flushes and
+/// joins the writer.
+pub struct DiskCache {
+    dir: PathBuf,
+    tx: Mutex<Option<mpsc::Sender<WriterMsg>>>,
+    writer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    loaded: AtomicUsize,
+    stored: AtomicUsize,
+    corrupt: AtomicUsize,
+}
+
+fn writer_loop(rx: mpsc::Receiver<WriterMsg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WriterMsg::Write { path, bytes } => {
+                let tmp = path.with_extension("rec.tmp");
+                if std::fs::write(&tmp, &bytes).is_ok() {
+                    let _ = std::fs::rename(&tmp, &path);
+                }
+            }
+            WriterMsg::Flush(ack) => {
+                let _ = ack.send(());
+            }
+        }
+    }
+}
+
+impl DiskCache {
+    /// Open (creating if needed) a cache directory and start the
+    /// write-behind writer.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Arc<Self>> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let (tx, rx) = mpsc::channel();
+        let writer = std::thread::Builder::new()
+            .name("aladin-cache-writer".into())
+            .spawn(move || writer_loop(rx))?;
+        Ok(Arc::new(Self {
+            dir,
+            tx: Mutex::new(Some(tx)),
+            writer: Mutex::new(Some(writer)),
+            loaded: AtomicUsize::new(0),
+            stored: AtomicUsize::new(0),
+            corrupt: AtomicUsize::new(0),
+        }))
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The record file a (stage, key) pair persists to.
+    pub fn record_path(&self, kind: StageKind, key: u64) -> PathBuf {
+        self.dir.join(format!("{}-{key:016x}.rec", kind.label()))
+    }
+
+    /// Load a record's payload. A missing file is a plain miss; a present
+    /// record failing any header, checksum, or JSON check counts as
+    /// corrupt and is skipped (the caller recomputes and overwrites it).
+    /// Successful loads are **not** counted here — the caller confirms the
+    /// typed decode first and then calls [`DiskCache::note_loaded`], so
+    /// `loaded` only counts records actually used.
+    pub fn load(&self, kind: StageKind, key: u64) -> Option<Value> {
+        let bytes = std::fs::read(self.record_path(kind, key)).ok()?;
+        let parsed = decode_record(&bytes, kind, key)
+            .and_then(|payload| std::str::from_utf8(payload).ok())
+            .and_then(|text| Value::parse(text).ok());
+        if parsed.is_none() {
+            self.corrupt.fetch_add(1, Ordering::Relaxed);
+        }
+        parsed
+    }
+
+    /// Count one record as loaded-and-used (see [`DiskCache::load`]).
+    pub fn note_loaded(&self) {
+        self.loaded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one record whose framing was valid but whose payload no
+    /// longer decodes to the expected type.
+    pub fn note_corrupt(&self) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queue a record for write-behind persistence (non-blocking).
+    pub fn store(&self, kind: StageKind, key: u64, payload: &Value) {
+        let bytes = encode_record(kind, key, payload.to_string_compact().as_bytes());
+        let path = self.record_path(kind, key);
+        let tx = self.tx.lock().expect("disk cache sender poisoned");
+        if let Some(tx) = tx.as_ref() {
+            if tx.send(WriterMsg::Write { path, bytes }).is_ok() {
+                self.stored.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Block until every record queued so far is on disk. Sends are
+    /// serialized through one channel, so the flush acknowledgement
+    /// ordering is exact.
+    pub fn flush(&self) {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let sent = {
+            let tx = self.tx.lock().expect("disk cache sender poisoned");
+            tx.as_ref()
+                .map(|tx| tx.send(WriterMsg::Flush(ack_tx)).is_ok())
+                .unwrap_or(false)
+        };
+        if sent {
+            let _ = ack_rx.recv();
+        }
+    }
+
+    /// Snapshot of the tier's counters.
+    pub fn stats(&self) -> DiskTierStats {
+        DiskTierStats {
+            loaded: self.loaded.load(Ordering::Relaxed),
+            stored: self.stored.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for DiskCache {
+    fn drop(&mut self) {
+        if let Ok(mut tx) = self.tx.lock() {
+            // closing the channel lets the writer drain its queue and exit
+            drop(tx.take());
+        }
+        if let Ok(mut writer) = self.writer.lock() {
+            if let Some(handle) = writer.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the shared cache handle
+// ---------------------------------------------------------------------------
+
+/// The `Arc`'d bundle of every engine stage memo plus the optional disk
+/// tier. Cloning the handle is cheap and shares all state: every
+/// [`crate::dse::EvalEngine`] built [`crate::dse::EvalEngine::with_cache`]
+/// on clones of one handle serves its stage lookups from the same tables,
+/// which is how [`crate::serve`] makes a second client's identical job
+/// mostly cache hits.
+#[derive(Clone, Default)]
+pub struct SharedCache {
+    pub(crate) impl_stage: Arc<ShardedMemo<ImplModel>>,
+    pub(crate) sim_stage: Arc<ShardedMemo<PlatformEval>>,
+    pub(crate) acc_stage: Arc<ShardedMemo<MeasuredAccuracy>>,
+    pub(crate) bound_stage: Arc<ShardedMemo<u64>>,
+    pub(crate) layer_stage: Arc<ShardedMemo<LayerUnit>>,
+    pub(crate) lint_stage: Arc<ShardedMemo<LintReport>>,
+    pub(crate) disk: Option<Arc<DiskCache>>,
+}
+
+/// The generic tiered lookup: memory tier first, then the disk tier (when
+/// enabled) with explicit encode/decode closures, then compute. A record
+/// whose framing checks out but whose payload fails `decode` is counted
+/// corrupt and recomputed.
+fn tiered<T>(
+    memo: &ShardedMemo<T>,
+    disk: Option<&Arc<DiskCache>>,
+    kind: StageKind,
+    key: u64,
+    decode: impl Fn(&Value) -> Option<T>,
+    encode: impl Fn(&T) -> Value,
+    f: impl FnOnce() -> Result<T>,
+) -> Result<Arc<T>> {
+    let Some(disk) = disk else {
+        return memo.get_or_compute(key, f);
+    };
+    memo.get_or_compute_tiered(
+        key,
+        || {
+            let payload = disk.load(kind, key)?;
+            match decode(&payload) {
+                Some(v) => {
+                    disk.note_loaded();
+                    Some(v)
+                }
+                None => {
+                    disk.note_corrupt();
+                    None
+                }
+            }
+        },
+        |v| disk.store(kind, key, &encode(v)),
+        f,
+    )
+}
+
+impl SharedCache {
+    /// A fresh memory-only cache (what every engine builds by default).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh cache with the on-disk tier rooted at `dir` (created if
+    /// missing). Stage values already recorded under `dir` by earlier
+    /// processes are loaded lazily on miss — the warm-start path.
+    pub fn with_disk(dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Self {
+            disk: Some(DiskCache::open(dir)?),
+            ..Self::default()
+        })
+    }
+
+    /// The disk tier, when enabled.
+    pub fn disk(&self) -> Option<&Arc<DiskCache>> {
+        self.disk.as_ref()
+    }
+
+    /// Disk-tier counters ([`DiskTierStats::default`] when disabled).
+    pub fn disk_stats(&self) -> DiskTierStats {
+        self.disk.as_ref().map(|d| d.stats()).unwrap_or_default()
+    }
+
+    /// Block until every queued disk record is persisted (no-op without a
+    /// disk tier).
+    pub fn flush(&self) {
+        if let Some(disk) = &self.disk {
+            disk.flush();
+        }
+    }
+
+    /// Simulation-stage lookup through both tiers.
+    pub(crate) fn sim_get(
+        &self,
+        key: u64,
+        f: impl FnOnce() -> Result<PlatformEval>,
+    ) -> Result<Arc<PlatformEval>> {
+        tiered(
+            &self.sim_stage,
+            self.disk.as_ref(),
+            StageKind::Sim,
+            key,
+            |v| PlatformEval::from_json(v).ok(),
+            ToJson::to_json,
+            f,
+        )
+    }
+
+    /// Accuracy-stage lookup through both tiers.
+    pub(crate) fn acc_get(
+        &self,
+        key: u64,
+        f: impl FnOnce() -> Result<MeasuredAccuracy>,
+    ) -> Result<Arc<MeasuredAccuracy>> {
+        tiered(
+            &self.acc_stage,
+            self.disk.as_ref(),
+            StageKind::Accuracy,
+            key,
+            |v| MeasuredAccuracy::from_json(v).ok(),
+            ToJson::to_json,
+            f,
+        )
+    }
+
+    /// Bound-stage lookup through both tiers. The bound is a full-range
+    /// `u64`, so it travels as a hex string rather than a JSON number
+    /// (which holds only 53 bits of integer precision).
+    pub(crate) fn bound_get(&self, key: u64, f: impl FnOnce() -> Result<u64>) -> Result<Arc<u64>> {
+        tiered(
+            &self.bound_stage,
+            self.disk.as_ref(),
+            StageKind::Bound,
+            key,
+            |v| {
+                v.str_field("lb_hex")
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+            },
+            |b| Value::obj().with("lb_hex", format!("{b:016x}")),
+            f,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_memo_counts_like_the_single_lock_memo() {
+        let memo: ShardedMemo<u64> = ShardedMemo::new();
+        let a = memo.get_or_compute(7, || Ok(70)).unwrap();
+        let b = memo.get_or_compute(7, || Ok(999)).unwrap();
+        assert_eq!((*a, *b), (70, 70));
+        assert_eq!(memo.computed(), 1);
+        assert_eq!(memo.hits(), 1);
+        let (_, hit) = memo.get_or_compute_flagged(8, || Ok(80)).unwrap();
+        assert!(!hit);
+        let (v, hit) = memo.get_or_compute_flagged(8, || Ok(0)).unwrap();
+        assert!(hit);
+        assert_eq!(*v, 80);
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn sharded_memo_replays_errors_without_recompute() {
+        let memo: ShardedMemo<u64> = ShardedMemo::new();
+        let first = memo
+            .get_or_compute(1, || Err(AladinError::Platform("bad corner".into())))
+            .unwrap_err();
+        let replayed = memo.get_or_compute(1, || Ok(1)).unwrap_err();
+        assert!(matches!(first, AladinError::Platform(_)));
+        assert_eq!(first.to_string(), replayed.to_string());
+        assert_eq!(memo.computed(), 1, "failures are memoized too");
+        assert_eq!(memo.hits(), 1);
+    }
+
+    #[test]
+    fn record_framing_round_trips_and_rejects_tampering() {
+        let payload = br#"{"x":1}"#;
+        let rec = encode_record(StageKind::Sim, 0xDEAD_BEEF, payload);
+        assert_eq!(decode_record(&rec, StageKind::Sim, 0xDEAD_BEEF), Some(&payload[..]));
+        // wrong stage, wrong key, truncation, bit flips: all rejected
+        assert_eq!(decode_record(&rec, StageKind::Bound, 0xDEAD_BEEF), None);
+        assert_eq!(decode_record(&rec, StageKind::Sim, 0xDEAD_BEEE), None);
+        assert_eq!(decode_record(&rec[..rec.len() - 1], StageKind::Sim, 0xDEAD_BEEF), None);
+        let mut flipped = rec.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        assert_eq!(decode_record(&flipped, StageKind::Sim, 0xDEAD_BEEF), None);
+        let mut bad_sum = rec;
+        bad_sum[21] ^= 0x01; // checksum byte
+        assert_eq!(decode_record(&bad_sum, StageKind::Sim, 0xDEAD_BEEF), None);
+    }
+
+    #[test]
+    fn disk_cache_persists_flushes_and_skips_corrupt_records() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let payload = Value::obj().with("lb_hex", "00000000000000ff");
+        {
+            let disk = DiskCache::open(dir.path()).unwrap();
+            disk.store(StageKind::Bound, 42, &payload);
+            disk.flush();
+            let back = disk.load(StageKind::Bound, 42).expect("record readable");
+            assert_eq!(back.to_string_compact(), payload.to_string_compact());
+            assert_eq!(disk.stats().stored, 1);
+        }
+        // a second process (fresh DiskCache) sees the record
+        let disk = DiskCache::open(dir.path()).unwrap();
+        assert!(disk.load(StageKind::Bound, 42).is_some());
+        assert!(disk.load(StageKind::Bound, 43).is_none(), "missing ≠ corrupt");
+        assert_eq!(disk.stats().corrupt, 0);
+        // flip one checksum byte on disk: skipped and counted, not trusted
+        let path = disk.record_path(StageKind::Bound, 42);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[21] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(disk.load(StageKind::Bound, 42).is_none());
+        assert_eq!(disk.stats().corrupt, 1);
+    }
+
+    #[test]
+    fn shared_cache_bound_stage_round_trips_through_disk() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let big = u64::MAX - 3; // would not survive a JSON f64
+        {
+            let cache = SharedCache::with_disk(dir.path()).unwrap();
+            let v = cache.bound_get(9, || Ok(big)).unwrap();
+            assert_eq!(*v, big);
+            cache.flush();
+            assert_eq!(cache.disk_stats().stored, 1);
+        }
+        let warm = SharedCache::with_disk(dir.path()).unwrap();
+        let v = warm
+            .bound_get(9, || panic!("warm start must not recompute"))
+            .unwrap();
+        assert_eq!(*v, big);
+        assert_eq!(warm.disk_stats().loaded, 1);
+        assert_eq!(warm.bound_stage.computed(), 0);
+    }
+}

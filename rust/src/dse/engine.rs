@@ -30,10 +30,8 @@
 //! [`GridSearch`](crate::dse::GridSearch) (Fig. 7) and the quant searchers
 //! ([`crate::dse::quant_search`]) are thin frontends over this engine.
 
-use std::collections::hash_map::Entry;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::Arc;
 
 use crate::analysis::{lint_model, LatencyBound, LintConfig, LintReport};
 use crate::coordinator::{
@@ -48,6 +46,8 @@ use crate::platform::PlatformSpec;
 use crate::platform_aware::{schedule_layer, FusedLayer, LayerSchedule};
 use crate::sim::{couple_layer, model_energy_nj, simulate_layer_pipeline, LayerPipeline, SimResult};
 use crate::util::StableHasher;
+
+use super::cache::SharedCache;
 
 // ---------------------------------------------------------------------------
 // design vectors
@@ -379,73 +379,14 @@ pub struct ScreenMetrics {
 }
 
 // ---------------------------------------------------------------------------
-// memoized stage cache
+// cache statistics
 // ---------------------------------------------------------------------------
 
-/// A lazily-initialized cache slot: computed at most once, shared by every
-/// waiter. Errors are stored shared and replayed structurally
-/// ([`AladinError::replay`]), so every consumer — computing thread,
-/// concurrent waiter, or later lookup — sees the same typed variant
-/// (`Infeasible` stays matchable through the cache).
-type Slot<T> = Arc<OnceLock<std::result::Result<Arc<T>, Arc<AladinError>>>>;
-
-/// One memoization table: key → lazily-computed shared value. The map lock
-/// only guards slot creation; computation runs outside it (concurrent
-/// requests for the *same* key block on the slot's `OnceLock`, distinct
-/// keys compute in parallel), so each key is computed at most once.
-struct Memo<T> {
-    slots: Mutex<HashMap<u64, Slot<T>>>,
-    hits: AtomicUsize,
-    computed: AtomicUsize,
-}
-
-impl<T> Memo<T> {
-    fn new() -> Self {
-        Self {
-            slots: Mutex::new(HashMap::new()),
-            hits: AtomicUsize::new(0),
-            computed: AtomicUsize::new(0),
-        }
-    }
-
-    fn get_or_compute(&self, key: u64, f: impl FnOnce() -> Result<T>) -> Result<Arc<T>> {
-        self.get_or_compute_flagged(key, f).map(|(v, _)| v)
-    }
-
-    /// [`Memo::get_or_compute`] that also reports whether the lookup was a
-    /// cache hit (the slot already existed) — the layer-grained tier uses
-    /// this to count spliced units.
-    fn get_or_compute_flagged(
-        &self,
-        key: u64,
-        f: impl FnOnce() -> Result<T>,
-    ) -> Result<(Arc<T>, bool)> {
-        let (slot, fresh) = {
-            let mut slots = self.slots.lock().expect("memo lock poisoned");
-            match slots.entry(key) {
-                Entry::Occupied(e) => (e.get().clone(), false),
-                Entry::Vacant(v) => {
-                    let slot = Arc::new(OnceLock::new());
-                    v.insert(slot.clone());
-                    (slot, true)
-                }
-            }
-        };
-        if !fresh {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        }
-        let outcome = slot.get_or_init(|| {
-            self.computed.fetch_add(1, Ordering::Relaxed);
-            f().map(Arc::new).map_err(Arc::new)
-        });
-        match outcome {
-            Ok(v) => Ok((v.clone(), !fresh)),
-            Err(e) => Err(e.replay()),
-        }
-    }
-}
-
-/// Cache effectiveness counters, one pair per pipeline stage.
+/// Cache effectiveness counters, one pair per pipeline stage. The stage
+/// memos themselves live in [`SharedCache`] (`crate::dse::cache`), which
+/// may be shared by many engines; these counters are snapshots of that
+/// cache, so an engine built [`EvalEngine::with_cache`] reports the shared
+/// totals — per-job deltas come from [`CacheStats::delta_since`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Stage-1 (decorate + fuse) computations actually executed.
@@ -491,6 +432,14 @@ pub struct CacheStats {
     /// simulation ([`EvalEngine::lint_screen`] returned a blocking
     /// diagnostic).
     pub lint_rejected: usize,
+    /// Records served from the on-disk cache tier on memory-tier misses —
+    /// the warm-start hits (0 without `--cache-dir`).
+    pub disk_hits: usize,
+    /// Records queued to the on-disk tier's write-behind writer.
+    pub disk_stores: usize,
+    /// On-disk records rejected by the header/checksum/payload checks and
+    /// recomputed instead of trusted.
+    pub disk_corrupt: usize,
 }
 
 impl CacheStats {
@@ -504,6 +453,34 @@ impl CacheStats {
     /// same lookups: every lookup runs its stage.
     pub fn naive_recomputations(&self) -> usize {
         self.impl_computed + self.impl_hits + self.sim_computed + self.sim_hits
+    }
+
+    /// Field-wise `self - before` (saturating): the counters attributable
+    /// to the work between two snapshots of one shared cache. This is how
+    /// [`crate::serve`] reports per-job stats while every job shares the
+    /// server-wide [`SharedCache`].
+    pub fn delta_since(&self, before: &CacheStats) -> CacheStats {
+        CacheStats {
+            impl_computed: self.impl_computed.saturating_sub(before.impl_computed),
+            impl_hits: self.impl_hits.saturating_sub(before.impl_hits),
+            sim_computed: self.sim_computed.saturating_sub(before.sim_computed),
+            sim_hits: self.sim_hits.saturating_sub(before.sim_hits),
+            acc_computed: self.acc_computed.saturating_sub(before.acc_computed),
+            acc_hits: self.acc_hits.saturating_sub(before.acc_hits),
+            bound_computed: self.bound_computed.saturating_sub(before.bound_computed),
+            bound_hits: self.bound_hits.saturating_sub(before.bound_hits),
+            layer_computed: self.layer_computed.saturating_sub(before.layer_computed),
+            layer_hits: self.layer_hits.saturating_sub(before.layer_hits),
+            spliced: self.spliced.saturating_sub(before.spliced),
+            impl_delta: self.impl_delta.saturating_sub(before.impl_delta),
+            nodes_reused: self.nodes_reused.saturating_sub(before.nodes_reused),
+            lint_computed: self.lint_computed.saturating_sub(before.lint_computed),
+            lint_hits: self.lint_hits.saturating_sub(before.lint_hits),
+            lint_rejected: self.lint_rejected.saturating_sub(before.lint_rejected),
+            disk_hits: self.disk_hits.saturating_sub(before.disk_hits),
+            disk_stores: self.disk_stores.saturating_sub(before.disk_stores),
+            disk_corrupt: self.disk_corrupt.saturating_sub(before.disk_corrupt),
+        }
     }
 }
 
@@ -526,6 +503,9 @@ impl crate::util::ToJson for CacheStats {
             .with("lint_computed", self.lint_computed)
             .with("lint_hits", self.lint_hits)
             .with("lint_rejected", self.lint_rejected)
+            .with("disk_hits", self.disk_hits)
+            .with("disk_stores", self.disk_stores)
+            .with("disk_corrupt", self.disk_corrupt)
             .with("recomputations", self.recomputations())
             .with("naive_recomputations", self.naive_recomputations())
     }
@@ -593,9 +573,9 @@ fn graph_key(g: &Graph) -> u64 {
 /// (fused-layer content hash × platform content hash), so every candidate
 /// sharing the layer — across quantization genomes and search generations
 /// — splices the same unit.
-struct LayerUnit {
-    sched: LayerSchedule,
-    pipe: LayerPipeline,
+pub(crate) struct LayerUnit {
+    pub(crate) sched: LayerSchedule,
+    pub(crate) pipe: LayerPipeline,
 }
 
 /// The shared, thread-safe design-space evaluation engine.
@@ -609,18 +589,11 @@ pub struct EvalEngine {
     /// attach time — `evaluate` rebuilds cache keys per candidate and must
     /// not re-hash the (immutable) vector data every call.
     accuracy_vectors: Option<(Arc<EvalVectors>, u64)>,
-    impl_stage: Memo<ImplModel>,
-    sim_stage: Memo<PlatformEval>,
-    acc_stage: Memo<MeasuredAccuracy>,
-    bound_stage: Memo<u64>,
-    /// The layer-grained tier beneath the whole-model stage caches: one
-    /// (tile plan + coupling-free simulation) per unique
-    /// (fused layer, platform) pair.
-    layer_stage: Memo<LayerUnit>,
-    /// The static-verification stage ([`EvalEngine::lint`]): one
-    /// [`LintReport`] per (quant axis, platform) pair — cheaper than the
-    /// bound stage (no simulation at all) and keyed the same way.
-    lint_stage: Memo<LintReport>,
+    /// All six stage memos plus the optional on-disk tier. Engine-private
+    /// by default ([`SharedCache::new`]); [`EvalEngine::with_cache`] swaps
+    /// in a handle shared with other engines (and server jobs), whose
+    /// clones then serve each other's stage lookups.
+    cache: SharedCache,
     spliced: AtomicUsize,
     impl_delta: AtomicUsize,
     nodes_reused: AtomicUsize,
@@ -641,12 +614,7 @@ impl EvalEngine {
             base_key,
             threads,
             accuracy_vectors: None,
-            impl_stage: Memo::new(),
-            sim_stage: Memo::new(),
-            acc_stage: Memo::new(),
-            bound_stage: Memo::new(),
-            layer_stage: Memo::new(),
-            lint_stage: Memo::new(),
+            cache: SharedCache::new(),
             spliced: AtomicUsize::new(0),
             impl_delta: AtomicUsize::new(0),
             nodes_reused: AtomicUsize::new(0),
@@ -667,6 +635,16 @@ impl EvalEngine {
     /// Override the worker count (defaults to available parallelism).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Replace the engine's (private, memory-only) cache with a shared
+    /// handle — the `aladin serve` path: every job's engine is built on a
+    /// clone of the server-wide [`SharedCache`], so a second identical job
+    /// is served from the first one's stage results (and, with a disk
+    /// tier, from previous processes'). Call before any evaluation.
+    pub fn with_cache(mut self, cache: SharedCache) -> Self {
+        self.cache = cache;
         self
     }
 
@@ -691,25 +669,36 @@ impl EvalEngine {
         self.accuracy_vectors.as_ref().map(|(v, _)| v)
     }
 
-    /// Snapshot of the cache counters.
+    /// The engine's cache handle (clone it to share with other engines).
+    pub fn cache(&self) -> &SharedCache {
+        &self.cache
+    }
+
+    /// Snapshot of the cache counters. Stage counters come from the
+    /// engine's [`SharedCache`] — shared totals when the cache is shared;
+    /// the splice/delta counters are per-engine.
     pub fn stats(&self) -> CacheStats {
+        let disk = self.cache.disk_stats();
         CacheStats {
-            impl_computed: self.impl_stage.computed.load(Ordering::Relaxed),
-            impl_hits: self.impl_stage.hits.load(Ordering::Relaxed),
-            sim_computed: self.sim_stage.computed.load(Ordering::Relaxed),
-            sim_hits: self.sim_stage.hits.load(Ordering::Relaxed),
-            acc_computed: self.acc_stage.computed.load(Ordering::Relaxed),
-            acc_hits: self.acc_stage.hits.load(Ordering::Relaxed),
-            bound_computed: self.bound_stage.computed.load(Ordering::Relaxed),
-            bound_hits: self.bound_stage.hits.load(Ordering::Relaxed),
-            layer_computed: self.layer_stage.computed.load(Ordering::Relaxed),
-            layer_hits: self.layer_stage.hits.load(Ordering::Relaxed),
+            impl_computed: self.cache.impl_stage.computed(),
+            impl_hits: self.cache.impl_stage.hits(),
+            sim_computed: self.cache.sim_stage.computed(),
+            sim_hits: self.cache.sim_stage.hits(),
+            acc_computed: self.cache.acc_stage.computed(),
+            acc_hits: self.cache.acc_stage.hits(),
+            bound_computed: self.cache.bound_stage.computed(),
+            bound_hits: self.cache.bound_stage.hits(),
+            layer_computed: self.cache.layer_stage.computed(),
+            layer_hits: self.cache.layer_stage.hits(),
             spliced: self.spliced.load(Ordering::Relaxed),
             impl_delta: self.impl_delta.load(Ordering::Relaxed),
             nodes_reused: self.nodes_reused.load(Ordering::Relaxed),
-            lint_computed: self.lint_stage.computed.load(Ordering::Relaxed),
-            lint_hits: self.lint_stage.hits.load(Ordering::Relaxed),
+            lint_computed: self.cache.lint_stage.computed(),
+            lint_hits: self.cache.lint_stage.hits(),
             lint_rejected: self.lint_rejected.load(Ordering::Relaxed),
+            disk_hits: disk.loaded,
+            disk_stores: disk.stored,
+            disk_corrupt: disk.corrupt,
         }
     }
 
@@ -729,7 +718,8 @@ impl EvalEngine {
     /// Stage 1 through the cache: decorated + fused model for a quant axis.
     fn impl_model(&self, quant: Option<&QuantAxis>) -> Result<Arc<ImplModel>> {
         let key = self.impl_key(quant);
-        self.impl_stage
+        self.cache
+            .impl_stage
             .get_or_compute(key, || match (&self.source, quant) {
                 (ModelSource::Decorated(g), None) => stage_impl_decorated(g.clone()),
                 (ModelSource::Decorated(_), Some(_)) => Err(AladinError::Unsupported(
@@ -771,24 +761,26 @@ impl EvalEngine {
         let Some(base_model) = base_model else {
             return self.impl_model(quant);
         };
-        self.impl_stage.get_or_compute(key, || match &self.source {
-            ModelSource::MobileNet(src) => {
-                let mut case = src.clone();
-                if let Some(q) = quant {
-                    q.apply(&mut case);
+        self.cache
+            .impl_stage
+            .get_or_compute(key, || match &self.source {
+                ModelSource::MobileNet(src) => {
+                    let mut case = src.clone();
+                    if let Some(q) = quant {
+                        q.apply(&mut case);
+                    }
+                    let (g, cfg) = case.build();
+                    let (model, reused) = stage_impl_incremental(g, &cfg, &base_model)?;
+                    self.impl_delta.fetch_add(1, Ordering::Relaxed);
+                    self.nodes_reused.fetch_add(reused, Ordering::Relaxed);
+                    Ok(model)
                 }
-                let (g, cfg) = case.build();
-                let (model, reused) = stage_impl_incremental(g, &cfg, &base_model)?;
-                self.impl_delta.fetch_add(1, Ordering::Relaxed);
-                self.nodes_reused.fetch_add(reused, Ordering::Relaxed);
-                Ok(model)
-            }
-            ModelSource::Decorated(_) => Err(AladinError::Unsupported(
-                "quantization axis requires a configurable model source \
-                 (EvalEngine::for_mobilenet)"
-                    .into(),
-            )),
-        })
+                ModelSource::Decorated(_) => Err(AladinError::Unsupported(
+                    "quantization axis requires a configurable model source \
+                     (EvalEngine::for_mobilenet)"
+                        .into(),
+                )),
+            })
     }
 
     /// The layer-grained tier: one cached (tile plan + coupling-free
@@ -806,7 +798,7 @@ impl EvalEngine {
         let mut reused = 0usize;
         for layer in fused {
             let key = crate::util::hash::combine(layer.content_hash(), phash);
-            let (unit, hit) = self.layer_stage.get_or_compute_flagged(key, || {
+            let (unit, hit) = self.cache.layer_stage.get_or_compute_flagged(key, || {
                 let sched = schedule_layer(layer, platform)?;
                 let pipe = simulate_layer_pipeline(&sched, platform);
                 Ok(LayerUnit { sched, pipe })
@@ -929,10 +921,8 @@ impl EvalEngine {
         let decorated = impl_model.decorated.clone();
         let vectors = vectors.clone();
         let threads = self.threads;
-        self.acc_stage
-            .get_or_compute(acc_key, move || {
-                exec::measure_batched(decorated, &vectors, threads)
-            })
+        self.cache
+            .acc_get(acc_key, move || exec::measure_batched(decorated, &vectors, threads))
     }
 
     /// Resolve the platform a vector's hardware axis selects. Shared, not
@@ -965,10 +955,8 @@ impl EvalEngine {
         let platform = self.resolve_platform(vector);
         let sim_key = crate::util::hash::combine(impl_key, platform.content_hash());
         let eval = self
-            .sim_stage
-            .get_or_compute(sim_key, || {
-                self.stage_platform_spliced(&impl_model.fused, &platform)
-            })?;
+            .cache
+            .sim_get(sim_key, || self.stage_platform_spliced(&impl_model.fused, &platform))?;
         let mut record = EvalRecord::derive(
             vector.clone(),
             &self.effective_bits(vector),
@@ -1034,9 +1022,9 @@ impl EvalEngine {
         let impl_model = self.impl_model(vector.quant.as_ref())?;
         let platform = self.resolve_platform(vector);
         let key = crate::util::hash::combine(impl_key, platform.content_hash());
-        let bound = self.bound_stage.get_or_compute(key, || {
-            self.lower_bound_spliced(&impl_model.fused, &platform)
-        })?;
+        let bound = self
+            .cache
+            .bound_get(key, || self.lower_bound_spliced(&impl_model.fused, &platform))?;
         Ok(*bound)
     }
 
@@ -1070,7 +1058,7 @@ impl EvalEngine {
         let impl_model = self.impl_model(vector.quant.as_ref())?;
         let platform = self.resolve_platform(vector);
         let key = crate::util::hash::combine(impl_key, platform.content_hash());
-        self.lint_stage.get_or_compute(key, || {
+        self.cache.lint_stage.get_or_compute(key, || {
             Ok(lint_model(
                 &impl_model.decorated,
                 &impl_model.fused,
@@ -1372,8 +1360,6 @@ pub fn explore_joint_measured(
     threads: Option<usize>,
     accuracy_vectors: Option<Arc<EvalVectors>>,
 ) -> Result<JointResult> {
-    let n_blocks = base_model.blocks.len();
-    let measured = accuracy_vectors.is_some();
     let mut engine = EvalEngine::for_mobilenet(base_model, base_platform);
     if let Some(t) = threads {
         engine = engine.with_threads(t);
@@ -1381,6 +1367,23 @@ pub fn explore_joint_measured(
     if let Some(v) = accuracy_vectors {
         engine = engine.with_measured_accuracy(v);
     }
+    explore_joint_on(&engine, space)
+}
+
+/// [`explore_joint_measured`] over an **existing** engine — the
+/// `aladin serve` path, where the engine is built on the server-wide
+/// [`SharedCache`] so repeated jobs splice each other's stage results.
+/// The accuracy axis is measured exactly when the engine carries eval
+/// vectors ([`EvalEngine::with_measured_accuracy`]). Note the returned
+/// `stats` snapshot the engine's cache, which is shared-total when the
+/// cache is; callers wanting per-run numbers should diff snapshots with
+/// [`CacheStats::delta_since`].
+pub fn explore_joint_on(engine: &EvalEngine, space: &JointSpace) -> Result<JointResult> {
+    let n_blocks = match &engine.source {
+        ModelSource::MobileNet(c) => c.blocks.len(),
+        ModelSource::Decorated(_) => 0,
+    };
+    let measured = engine.accuracy_vectors.is_some();
     let vectors = space.vectors(n_blocks);
     let mut records = Vec::new();
     let mut skipped = Vec::new();

@@ -44,21 +44,23 @@
 //! evaluation would reuse anyway — never a whole-network simulation or an
 //! interpreter run.
 
+pub mod cache;
 pub mod engine;
 pub mod grid;
 pub mod pareto;
 pub mod quant_search;
 pub mod search;
 
+pub use cache::{DiskCache, DiskTierStats, SharedCache, ShardedMemo, StageKind};
 pub use engine::{
-    explore_joint, explore_joint_measured, CacheStats, DesignVector, EvalEngine, EvalRecord,
-    HwAxis, JointResult, JointSpace, ModelSource, QuantAxis, ScreenMetrics, MAX_TAIL_K,
+    explore_joint, explore_joint_measured, explore_joint_on, CacheStats, DesignVector, EvalEngine,
+    EvalRecord, HwAxis, JointResult, JointSpace, ModelSource, QuantAxis, ScreenMetrics, MAX_TAIL_K,
 };
 pub use grid::{speedups, DesignPoint, GridSearch};
 pub use pareto::{best_feasible, pareto_front, pareto_min_2d, pareto_min_indices, Candidate};
 pub use quant_search::{exhaustive_pareto, greedy_memory, greedy_memory_on, QuantCandidate};
 pub use search::{
-    crowding_distance, evolve, evolve_with, hypervolume, hypervolume4, non_dominated_sort,
-    normalized_front_hypervolume, objectives, EvoConfig, EvoResult, GenerationStat, Genome,
-    PruneReason, SearchSpace,
+    crowding_distance, evolve, evolve_with, evolve_with_cancel, hypervolume, hypervolume4,
+    non_dominated_sort, normalized_front_hypervolume, objectives, EvoConfig, EvoResult,
+    GenerationStat, Genome, PruneReason, SearchSpace,
 };

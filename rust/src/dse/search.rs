@@ -433,6 +433,20 @@ pub struct GenerationStat {
     pub hypervolume: f64,
 }
 
+impl crate::util::ToJson for GenerationStat {
+    fn to_json(&self) -> crate::util::Value {
+        crate::util::Value::obj()
+            .with("generation", self.generation)
+            .with("new_evals", self.new_evals)
+            .with("evaluated", self.evaluated)
+            .with("pruned_bound", self.pruned_bound)
+            .with("pruned_feasibility", self.pruned_feasibility)
+            .with("infeasible", self.infeasible)
+            .with("front_size", self.front_size)
+            .with("hypervolume", self.hypervolume)
+    }
+}
+
 /// Result of one evolutionary search run.
 #[derive(Debug)]
 pub struct EvoResult {
@@ -709,6 +723,24 @@ pub fn evolve_with(
     engine: &EvalEngine,
     space: &SearchSpace,
     cfg: &EvoConfig,
+    on_generation: impl FnMut(&GenerationStat),
+) -> Result<EvoResult> {
+    evolve_with_cancel(engine, space, cfg, None, on_generation)
+}
+
+/// [`evolve_with`] with cooperative cancellation: when `cancel` is set and
+/// becomes `true`, the search stops **between generations** — no new
+/// candidates are generated, and the result is finalized from the archive
+/// evaluated so far (final front, halving refinement, stats), exactly as
+/// if the generation budget had been exhausted at that point. This is how
+/// `aladin serve` aborts an in-flight job when its client disconnects or
+/// the server drains for shutdown, without poisoning the shared cache:
+/// every completed evaluation stays cached and correct.
+pub fn evolve_with_cancel(
+    engine: &EvalEngine,
+    space: &SearchSpace,
+    cfg: &EvoConfig,
+    cancel: Option<&std::sync::atomic::AtomicBool>,
     mut on_generation: impl FnMut(&GenerationStat),
 ) -> Result<EvoResult> {
     space.validate()?;
@@ -761,6 +793,9 @@ pub fn evolve_with(
     let mut prune_front: Vec<usize> = Vec::new();
 
     for generation in 0..=cfg.generations {
+        if cancel.is_some_and(|c| c.load(std::sync::atomic::Ordering::Relaxed)) {
+            break;
+        }
         // ---- candidate generation ---------------------------------------
         // each candidate carries an optional delta base: the design vector
         // of its (already-evaluated) first parent, which the engine's

@@ -187,6 +187,27 @@ impl crate::util::ToJson for MeasuredAccuracy {
     }
 }
 
+impl crate::util::FromJson for MeasuredAccuracy {
+    /// Decodes exactly what [`crate::util::ToJson`] emits. The fingerprint
+    /// travels as a hex string — a full-range `u64` does not survive the
+    /// JSON number type (an `f64` holds 53 bits of integer precision).
+    fn from_json(
+        v: &crate::util::Value,
+    ) -> std::result::Result<Self, crate::util::json::JsonError> {
+        use crate::util::json::{field_err, req_f64, req_str, req_usize};
+        let fingerprint = req_str(v, "output_fingerprint")?;
+        let output_fingerprint = u64::from_str_radix(&fingerprint, 16)
+            .map_err(|_| field_err("field `output_fingerprint` is not a hex u64"))?;
+        Ok(MeasuredAccuracy {
+            model: req_str(v, "model")?,
+            n: req_usize(v, "n_vectors")?,
+            matches: req_usize(v, "matches")?,
+            accuracy: req_f64(v, "accuracy")?,
+            output_fingerprint,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -25,7 +25,11 @@
 //!    accuracy axis, no deployment required;
 //! 7. [`models`] — the MobileNetV1 workload and the Table-I cases;
 //! 8. [`runtime`] — PJRT-based execution of the AOT-compiled quantized
-//!    inference graphs for the accuracy column of Table I.
+//!    inference graphs for the accuracy column of Table I;
+//! 9. [`serve`] — ALADIN as a long-lived service: a zero-dependency
+//!    HTTP/1.1 server accepting analyze/eval/DSE jobs as typed JSON,
+//!    streaming evolutionary fronts per generation, with all jobs sharing
+//!    one concurrent (and optionally disk-backed) stage cache.
 //!
 //! An end-to-end walkthrough (QONNX ingest → joint DSE → bottleneck
 //! report → trace export) lives in `docs/GUIDE.md`.
@@ -55,6 +59,7 @@ pub mod platform_aware;
 pub mod quant;
 #[allow(missing_docs)]
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 #[allow(missing_docs)]
 pub mod util;

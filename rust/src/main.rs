@@ -58,6 +58,14 @@ USAGE:
                   [--threads <n>] [--scalar]
                   [--width-mult <f64>] [--json] [--out <file.json>]
   aladin accuracy [--artifacts <dir>] [--json]
+  aladin serve    [--addr 127.0.0.1:8375] [--cache-dir <dir>] [--threads <n>]
+                  [--max-body-kb <n>] [--port-file <file>]
+  aladin submit   [--addr <host:port> | --port-file <file>] [--shutdown]
+                  [--repeat <n>] [--bench-out <file.json>] [--json]
+                  [evo-job flags: --model --width-mult --bits --impls --cores
+                   --l2-kb --backend --population --generations --seed
+                   --max-evals --measured-accuracy --vectors --screen-vectors
+                   --deadline-ms --mem-budget-kb --threads]
   aladin screen   --deadline-ms <f64> [--width-mult <f64>]
   aladin trace    [--model <m>] [--out trace.json] [--width-mult <f64>]
   aladin table1
@@ -538,21 +546,7 @@ fn cmd_dse_search(args: &Args) -> Result<()> {
     })?;
 
     if json {
-        let generations: Vec<Value> = result
-            .generations
-            .iter()
-            .map(|s| {
-                Value::obj()
-                    .with("generation", s.generation)
-                    .with("new_evals", s.new_evals)
-                    .with("evaluated", s.evaluated)
-                    .with("pruned_bound", s.pruned_bound)
-                    .with("pruned_feasibility", s.pruned_feasibility)
-                    .with("infeasible", s.infeasible)
-                    .with("front_size", s.front_size)
-                    .with("hypervolume", s.hypervolume)
-            })
-            .collect();
+        let generations: Vec<Value> = result.generations.iter().map(ToJson::to_json).collect();
         let front: Vec<Value> = result.front.iter().map(|&i| Value::from(i)).collect();
         let doc = Value::obj()
             .with("model", model)
@@ -1029,6 +1023,202 @@ fn cmd_table1() {
     }
 }
 
+/// Run ALADIN as a long-lived analysis service (`aladin serve`): bind the
+/// listener, optionally persist the bound address for scripted clients
+/// (`--port-file`), and block until a client POSTs `/shutdown`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut config = aladin::serve::ServeConfig::new(args.get_or("addr", "127.0.0.1:8375"));
+    config.cache_dir = args.get("cache-dir").map(std::path::PathBuf::from);
+    config.threads = args.get_parsed::<usize>("threads").map_err(io_err)?;
+    if let Some(kb) = args.get_parsed::<usize>("max-body-kb").map_err(io_err)? {
+        config.max_body_bytes = kb * 1024;
+    }
+    let disk = config.cache_dir.is_some();
+    let handle = aladin::serve::spawn(config)?;
+    println!(
+        "aladin serve: listening on {} (disk cache tier: {})",
+        handle.addr(),
+        if disk { "on" } else { "off" }
+    );
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, handle.addr().to_string())?;
+    }
+    handle.join();
+    println!("aladin serve: drained in-flight jobs and stopped");
+    Ok(())
+}
+
+/// Build the `/v1/dse/evo` request body from the submit CLI flags; absent
+/// flags are omitted so the server applies its (CLI-matching) defaults.
+fn submit_job_body(args: &Args) -> Result<Value> {
+    let mut job = Value::obj();
+    if let Some(m) = args.get("model") {
+        job.set("model", m);
+    }
+    if let Some(w) = args.get_parsed::<f64>("width-mult").map_err(io_err)? {
+        job.set("width_mult", w);
+    }
+    if let Some(bits) = args.get_list::<u8>("bits").map_err(io_err)? {
+        job.set("bits", Value::Arr(bits.into_iter().map(Value::from).collect()));
+    }
+    if let Some(list) = args.get("impls") {
+        let impls: Vec<Value> = list.split(',').map(|s| Value::from(s.trim())).collect();
+        job.set("impls", Value::Arr(impls));
+    }
+    if let Some(cores) = args.get_list::<usize>("cores").map_err(io_err)? {
+        job.set("cores", Value::Arr(cores.into_iter().map(Value::from).collect()));
+    }
+    if let Some(l2) = args.get_list::<u64>("l2-kb").map_err(io_err)? {
+        job.set("l2_kb", Value::Arr(l2.into_iter().map(Value::from).collect()));
+    }
+    let backends = parse_backends(args)?;
+    if !backends.is_empty() {
+        let names: Vec<Value> = backends.iter().map(|b| Value::from(b.label())).collect();
+        job.set("backends", Value::Arr(names));
+    }
+    if let Some(n) = args.get_parsed::<usize>("population").map_err(io_err)? {
+        job.set("population", n);
+    }
+    if let Some(n) = args.get_parsed::<usize>("generations").map_err(io_err)? {
+        job.set("generations", n);
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed").map_err(io_err)? {
+        job.set("seed", s);
+    }
+    if let Some(n) = args.get_parsed::<usize>("max-evals").map_err(io_err)? {
+        job.set("max_evals", n);
+    }
+    if args.flag("measured-accuracy") {
+        job.set("measured_accuracy", true);
+    }
+    if let Some(n) = args.get_parsed::<usize>("vectors").map_err(io_err)? {
+        job.set("vectors", n);
+    }
+    if let Some(n) = args.get_parsed::<usize>("screen-vectors").map_err(io_err)? {
+        job.set("screen_vectors", n);
+    }
+    if let Some(ms) = args.get_parsed::<f64>("deadline-ms").map_err(io_err)? {
+        job.set("deadline_ms", ms);
+    }
+    if let Some(kb) = args.get_parsed::<f64>("mem-budget-kb").map_err(io_err)? {
+        job.set("mem_budget_kb", kb);
+    }
+    if let Some(t) = args.get_parsed::<usize>("threads").map_err(io_err)? {
+        job.set("threads", t);
+    }
+    Ok(job)
+}
+
+/// Client mode (`aladin submit`): post one evolutionary job to a running
+/// `aladin serve` — `--repeat` re-submits the identical job (the CI warm-
+/// cache smoke), `--bench-out` captures cold/warm timings + the warm run's
+/// cache-stats delta, `--shutdown` stops the server instead.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => match args.get("port-file") {
+            Some(path) => std::fs::read_to_string(path)?.trim().to_string(),
+            None => "127.0.0.1:8375".to_string(),
+        },
+    };
+    if args.flag("shutdown") {
+        let (status, body) = aladin::serve::client::request(&addr, "POST", "/shutdown", "{}")?;
+        println!("shutdown {status}: {body}");
+        return if status == 200 {
+            Ok(())
+        } else {
+            Err(io_err(format!("shutdown failed with status {status}")))
+        };
+    }
+
+    let body = submit_job_body(args)?.to_string_compact();
+    let repeat = args.get_parsed::<usize>("repeat").map_err(io_err)?.unwrap_or(1).max(1);
+    let json = args.flag("json");
+    let mut durations_ms: Vec<f64> = Vec::new();
+    let mut finals: Vec<Value> = Vec::new();
+    for run in 0..repeat {
+        let t0 = std::time::Instant::now();
+        let mut last: Option<Value> = None;
+        let status = aladin::serve::client::request_stream(
+            &addr,
+            "POST",
+            "/v1/dse/evo",
+            &body,
+            |line| {
+                if let Ok(v) = Value::parse(line) {
+                    last = Some(v);
+                }
+            },
+        )?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if status != 200 {
+            return Err(io_err(format!("server answered status {status} on run {run}")));
+        }
+        let fin = last
+            .ok_or_else(|| io_err("server stream ended without a final result line".into()))?;
+        if fin.get("done").and_then(Value::as_bool) != Some(true) {
+            return Err(io_err(format!("job failed: {}", fin.to_string_compact())));
+        }
+        if json {
+            println!("{}", fin.to_string_compact());
+        } else {
+            let evals = fin.get("evaluations").and_then(Value::as_u64).unwrap_or(0);
+            let front = fin
+                .get("front")
+                .and_then(Value::as_arr)
+                .map(|a| a.len())
+                .unwrap_or(0);
+            println!("run {run}: {evals} evaluations, front of {front}, {ms:.0} ms");
+        }
+        durations_ms.push(ms);
+        finals.push(fin);
+    }
+
+    // byte-identity across runs: the streamed fronts must match exactly
+    // (the stats deltas legitimately differ between cold and warm runs)
+    let front_str = |v: &Value| {
+        v.get("front_records").map(|f| f.to_string_compact()).unwrap_or_default()
+    };
+    let identical = finals.windows(2).all(|w| front_str(&w[0]) == front_str(&w[1]));
+    if repeat > 1 && !json {
+        println!("fronts byte-identical across {repeat} runs: {identical}");
+    }
+
+    if let Some(path) = args.get("bench-out") {
+        // request-overhead probe: p50 of 20 /health round-trips
+        let mut health_ms: Vec<f64> = Vec::new();
+        for _ in 0..20 {
+            let t0 = std::time::Instant::now();
+            let (status, _) = aladin::serve::client::request(&addr, "GET", "/health", "")?;
+            if status == 200 {
+                health_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        health_ms.sort_by(f64::total_cmp);
+        let p50 = health_ms.get(health_ms.len() / 2).copied().unwrap_or(0.0);
+        let cold = durations_ms.first().copied().unwrap_or(0.0);
+        let warm = durations_ms.last().copied().unwrap_or(0.0);
+        let warm_stats = finals
+            .last()
+            .and_then(|f| f.get("stats"))
+            .cloned()
+            .unwrap_or_else(Value::obj);
+        let doc = Value::obj()
+            .with("job", "evo")
+            .with("runs", repeat)
+            .with("cold_ms", cold)
+            .with("warm_ms", warm)
+            .with("jobs_per_sec_cold", 1e3 / cold.max(1e-9))
+            .with("jobs_per_sec_warm", 1e3 / warm.max(1e-9))
+            .with("p50_health_ms", p50)
+            .with("front_bytes_identical", identical)
+            .with("warm_stats", warm_stats);
+        std::fs::write(path, doc.to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn io_err(msg: String) -> aladin::AladinError {
     aladin::AladinError::Parse {
         at: "cli".into(),
@@ -1046,6 +1236,7 @@ fn main() {
         "no-lint",
         "no-delta",
         "cache-stats",
+        "shutdown",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -1059,6 +1250,8 @@ fn main() {
         Some("lint") => cmd_lint(&args),
         Some("eval") => cmd_eval(&args),
         Some("accuracy") => cmd_accuracy(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
         Some("screen") => cmd_screen(&args),
         Some("export") => cmd_export(&args),
         Some("trace") => cmd_trace(&args),

@@ -1,0 +1,388 @@
+//! Typed JSON job requests and their execution — the bridge between the
+//! HTTP layer and the DSE engine. Every handler builds a fresh
+//! [`EvalEngine`] on a clone of the server-wide
+//! [`SharedCache`](crate::dse::SharedCache), snapshots the cache counters
+//! before and after, and reports the per-job [`CacheStats`] delta — so a
+//! second identical job visibly runs on the first one's cached stages.
+//!
+//! Hardening invariant: requests select **built-in** models and platform
+//! presets by name only (`case1|case2|case3`, `gap8|stm32n6`) — a request
+//! body can never make the server read a file path of the client's
+//! choosing.
+
+use std::sync::Arc;
+
+use crate::dse::cache::SharedCache;
+use crate::dse::{
+    evolve_with_cancel, explore_joint_on, CacheStats, DesignVector, EvalEngine, EvoConfig, HwAxis,
+    JointSpace, SearchSpace, MAX_TAIL_K,
+};
+use crate::error::Result;
+use crate::models::{self, BlockImpl, MobileNetConfig};
+use crate::platform::{presets, PlatformSpec};
+use crate::sim::BackendKind;
+use crate::util::json::{field_err, JsonError, Value};
+use crate::util::ToJson;
+
+// ---------------------------------------------------------------------------
+// request parsing
+// ---------------------------------------------------------------------------
+
+fn opt_usize(v: &Value, key: &str) -> std::result::Result<Option<usize>, JsonError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| field_err(format!("field `{key}` is not an integer"))),
+    }
+}
+
+fn opt_u64(v: &Value, key: &str) -> std::result::Result<Option<u64>, JsonError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| field_err(format!("field `{key}` is not an integer"))),
+    }
+}
+
+fn opt_f64(v: &Value, key: &str) -> std::result::Result<Option<f64>, JsonError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| field_err(format!("field `{key}` is not a number"))),
+    }
+}
+
+fn opt_bool(v: &Value, key: &str) -> std::result::Result<Option<bool>, JsonError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| field_err(format!("field `{key}` is not a boolean"))),
+    }
+}
+
+fn list_of<T>(
+    v: &Value,
+    key: &str,
+    item: impl Fn(&Value) -> Option<T>,
+    what: &str,
+) -> std::result::Result<Option<Vec<T>>, JsonError> {
+    let Some(arr) = v.get(key) else {
+        return Ok(None);
+    };
+    let arr = arr
+        .as_arr()
+        .ok_or_else(|| field_err(format!("field `{key}` is not an array")))?;
+    arr.iter()
+        .map(|x| item(x).ok_or_else(|| field_err(format!("field `{key}` holds a non-{what}"))))
+        .collect::<std::result::Result<Vec<T>, JsonError>>()
+        .map(Some)
+}
+
+fn parse_impl(s: &str) -> Option<BlockImpl> {
+    match s {
+        "im2col" => Some(BlockImpl::Im2col),
+        "lut" => Some(BlockImpl::Lut),
+        _ => None,
+    }
+}
+
+fn parse_case(v: &Value) -> std::result::Result<MobileNetConfig, JsonError> {
+    let name = v.str_field("model").unwrap_or("case2");
+    let mut case = match name {
+        "case1" => models::case1(),
+        "case2" => models::case2(),
+        "case3" => models::case3(),
+        other => {
+            return Err(field_err(format!(
+                "unknown model `{other}` (the server serves the built-in case1|case2|case3 only)"
+            )))
+        }
+    };
+    if let Some(w) = opt_f64(v, "width_mult")? {
+        case.width_mult = w;
+    }
+    Ok(case)
+}
+
+fn parse_platform(v: &Value) -> std::result::Result<PlatformSpec, JsonError> {
+    match v.str_field("platform").unwrap_or("gap8") {
+        "gap8" => Ok(presets::gap8()),
+        "stm32n6" => Ok(presets::stm32n6()),
+        other => Err(field_err(format!(
+            "unknown platform `{other}` (the server serves the built-in gap8|stm32n6 presets only)"
+        ))),
+    }
+}
+
+fn parse_backend_list(v: &Value) -> std::result::Result<Vec<BackendKind>, JsonError> {
+    match list_of(v, "backends", |x| x.as_str().map(str::to_string), "string")? {
+        None => Ok(vec![]),
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                BackendKind::parse(n).ok_or_else(|| {
+                    field_err(format!(
+                        "unknown backend `{n}` (expected scratchpad|sharded|systolic)"
+                    ))
+                })
+            })
+            .collect(),
+    }
+}
+
+/// The fields every job shares: which built-in model/platform to evaluate,
+/// an optional worker-count override, and the measured-accuracy knobs.
+pub(crate) struct JobSpec {
+    case: MobileNetConfig,
+    platform: PlatformSpec,
+    threads: Option<usize>,
+    /// `Some(n)` enables the measured-accuracy stage on `n` eval vectors.
+    vectors: Option<usize>,
+}
+
+fn parse_spec(v: &Value, measured_default: bool) -> std::result::Result<JobSpec, JsonError> {
+    let measured = opt_bool(v, "measured_accuracy")?.unwrap_or(measured_default);
+    let vectors = opt_usize(v, "vectors")?.unwrap_or(16);
+    Ok(JobSpec {
+        case: parse_case(v)?,
+        platform: parse_platform(v)?,
+        threads: opt_usize(v, "threads")?,
+        vectors: measured.then_some(vectors),
+    })
+}
+
+/// The optional single-point hardware axis of analyze/eval requests.
+fn parse_vector(v: &Value) -> std::result::Result<DesignVector, JsonError> {
+    let cores = opt_usize(v, "cores")?;
+    let l2_kb = opt_u64(v, "l2_kb")?;
+    let backend = match v.str_field("backend") {
+        None => None,
+        Some(name) => Some(BackendKind::parse(name).ok_or_else(|| {
+            field_err(format!("unknown backend `{name}` (expected scratchpad|sharded|systolic)"))
+        })?),
+    };
+    match (cores, l2_kb) {
+        (None, None) if backend.is_none() => Ok(DesignVector { quant: None, hw: None }),
+        (Some(cores), Some(l2_kb)) => Ok(DesignVector {
+            quant: None,
+            hw: Some(HwAxis { cores, l2_kb, backend }),
+        }),
+        _ => Err(field_err("fields `cores` and `l2_kb` must be provided together")),
+    }
+}
+
+/// A parsed `/v1/dse/evo` job: search space + evolutionary knobs.
+pub(crate) struct EvoJob {
+    pub(crate) spec: JobSpec,
+    pub(crate) space: SearchSpace,
+    pub(crate) cfg: EvoConfig,
+}
+
+/// Parse an evolutionary-search job. Defaults mirror the
+/// `aladin dse --search evo` CLI so a request body of `{}` runs the same
+/// search the bare CLI would.
+pub(crate) fn parse_evo(v: &Value) -> std::result::Result<EvoJob, JsonError> {
+    let spec = parse_spec(v, false)?;
+    let n_blocks = spec.case.blocks.len();
+    let space = SearchSpace {
+        bits: list_of(v, "bits", |x| x.as_u64().map(|b| b as u8), "integer")?
+            .unwrap_or_else(|| vec![2, 4, 8]),
+        impls: match list_of(v, "impls", |x| x.as_str().and_then(parse_impl), "implementation")? {
+            None => vec![BlockImpl::Im2col, BlockImpl::Lut],
+            Some(impls) => impls,
+        },
+        n_blocks,
+        cores: list_of(v, "cores", Value::as_usize, "integer")?
+            .unwrap_or_else(|| vec![2, 4, 8]),
+        l2_kb: list_of(v, "l2_kb", Value::as_u64, "integer")?
+            .unwrap_or_else(|| vec![256, 320, 512]),
+        backends: parse_backend_list(v)?,
+    };
+    let measured = spec.vectors.is_some();
+    let n_vectors = spec.vectors.unwrap_or(16);
+    let cfg = EvoConfig {
+        population: opt_usize(v, "population")?.unwrap_or(32),
+        generations: opt_usize(v, "generations")?.unwrap_or(12),
+        seed: opt_u64(v, "seed")?.unwrap_or(0xA1AD1),
+        max_evals: opt_usize(v, "max_evals")?.unwrap_or(2000),
+        screen_vectors: opt_usize(v, "screen_vectors")?
+            .unwrap_or(if measured { n_vectors / 4 } else { 0 }),
+        mem_budget_kb: opt_f64(v, "mem_budget_kb")?,
+        max_latency_s: opt_f64(v, "deadline_ms")?.map(|ms| ms / 1e3),
+        prune: opt_bool(v, "prune")?.unwrap_or(true),
+        lint: opt_bool(v, "lint")?.unwrap_or(true),
+        delta: opt_bool(v, "delta")?.unwrap_or(true),
+        ..EvoConfig::default()
+    };
+    Ok(EvoJob { spec, space, cfg })
+}
+
+// ---------------------------------------------------------------------------
+// job execution
+// ---------------------------------------------------------------------------
+
+/// Build the job's engine on a clone of the server-wide cache.
+pub(crate) fn build_engine(
+    spec: &JobSpec,
+    cache: &SharedCache,
+    default_threads: Option<usize>,
+) -> EvalEngine {
+    let mut engine = EvalEngine::for_mobilenet(spec.case.clone(), spec.platform.clone())
+        .with_cache(cache.clone());
+    if let Some(t) = spec.threads.or(default_threads) {
+        engine = engine.with_threads(t);
+    }
+    if let Some(n) = spec.vectors {
+        engine = engine.with_measured_accuracy(Arc::new(models::cifar_vectors(n)));
+    }
+    engine
+}
+
+/// Server-wide counter snapshot of the shared cache (the per-engine
+/// splice/delta counters are engine-scoped and read 0 here).
+pub(crate) fn cache_stats_snapshot(cache: &SharedCache) -> CacheStats {
+    let disk = cache.disk_stats();
+    CacheStats {
+        impl_computed: cache.impl_stage.computed(),
+        impl_hits: cache.impl_stage.hits(),
+        sim_computed: cache.sim_stage.computed(),
+        sim_hits: cache.sim_stage.hits(),
+        acc_computed: cache.acc_stage.computed(),
+        acc_hits: cache.acc_stage.hits(),
+        bound_computed: cache.bound_stage.computed(),
+        bound_hits: cache.bound_stage.hits(),
+        layer_computed: cache.layer_stage.computed(),
+        layer_hits: cache.layer_stage.hits(),
+        lint_computed: cache.lint_stage.computed(),
+        lint_hits: cache.lint_stage.hits(),
+        disk_hits: disk.loaded,
+        disk_stores: disk.stored,
+        disk_corrupt: disk.corrupt,
+        ..CacheStats::default()
+    }
+}
+
+/// `POST /v1/analyze` — evaluate one design point (no accuracy stage):
+/// latency/memory/energy record plus the job's cache-stats delta.
+pub(crate) fn run_analyze(
+    body: &Value,
+    cache: &SharedCache,
+    default_threads: Option<usize>,
+) -> std::result::Result<Result<Value>, JsonError> {
+    let mut spec = parse_spec(body, false)?;
+    spec.vectors = None;
+    let vector = parse_vector(body)?;
+    Ok(run_point(&spec, &vector, cache, default_threads))
+}
+
+/// `POST /v1/eval` — evaluate one design point **with** the
+/// interpreter-measured accuracy stage (default 16 eval vectors).
+pub(crate) fn run_eval(
+    body: &Value,
+    cache: &SharedCache,
+    default_threads: Option<usize>,
+) -> std::result::Result<Result<Value>, JsonError> {
+    let spec = parse_spec(body, true)?;
+    let vector = parse_vector(body)?;
+    Ok(run_point(&spec, &vector, cache, default_threads))
+}
+
+fn run_point(
+    spec: &JobSpec,
+    vector: &DesignVector,
+    cache: &SharedCache,
+    default_threads: Option<usize>,
+) -> Result<Value> {
+    let engine = build_engine(spec, cache, default_threads);
+    let before = engine.stats();
+    let record = engine.evaluate(vector)?;
+    let delta = engine.stats().delta_since(&before);
+    Ok(Value::obj()
+        .with("record", record.to_json())
+        .with("stats", delta.to_json()))
+}
+
+/// `POST /v1/dse/joint` — the joint quantization × hardware product
+/// explorer over the shared cache.
+pub(crate) fn run_joint(
+    body: &Value,
+    cache: &SharedCache,
+    default_threads: Option<usize>,
+) -> std::result::Result<Result<Value>, JsonError> {
+    let spec = parse_spec(body, false)?;
+    let space = JointSpace {
+        bits: list_of(body, "bits", |x| x.as_u64().map(|b| b as u8), "integer")?
+            .unwrap_or_else(|| vec![4, 8]),
+        impls: match list_of(body, "impls", |x| x.as_str().and_then(parse_impl), "implementation")?
+        {
+            None => vec![BlockImpl::Im2col],
+            Some(impls) => impls,
+        },
+        tail_k: match opt_usize(body, "tail_k")?.unwrap_or(0) {
+            k if k > MAX_TAIL_K => {
+                return Err(field_err(format!(
+                    "field `tail_k` is limited to {MAX_TAIL_K}, got {k}"
+                )))
+            }
+            k => k,
+        },
+        cores: list_of(body, "cores", Value::as_usize, "integer")?
+            .unwrap_or_else(|| vec![2, 4, 8]),
+        l2_kb: list_of(body, "l2_kb", Value::as_u64, "integer")?
+            .unwrap_or_else(|| vec![256, 320, 512]),
+        backends: parse_backend_list(body)?,
+    };
+    Ok((|| {
+        let engine = build_engine(&spec, cache, default_threads);
+        let before = engine.stats();
+        let result = explore_joint_on(&engine, &space)?;
+        let delta = engine.stats().delta_since(&before);
+        let front: Vec<Value> = result.front.iter().map(|&i| Value::from(i)).collect();
+        let front_records: Vec<Value> =
+            result.front_records().iter().map(|r| r.to_json()).collect();
+        Ok(Value::obj()
+            .with("measured", result.measured)
+            .with("evaluated", result.records.len())
+            .with("skipped", result.skipped.len())
+            .with("front", Value::Arr(front))
+            .with("front_records", Value::Arr(front_records))
+            .with("stats", delta.to_json()))
+    })())
+}
+
+/// `POST /v1/dse/evo` — run one evolutionary-search job, streaming each
+/// [`crate::dse::GenerationStat`] through `on_generation` as it happens
+/// and returning the final NDJSON line: front indices + records,
+/// evaluation counts, and the job's cache-stats delta.
+pub(crate) fn run_evo(
+    job: &EvoJob,
+    cache: &SharedCache,
+    default_threads: Option<usize>,
+    cancel: &std::sync::atomic::AtomicBool,
+    on_generation: impl FnMut(&crate::dse::GenerationStat),
+) -> Result<Value> {
+    let engine = build_engine(&job.spec, cache, default_threads);
+    let before = engine.stats();
+    let result = evolve_with_cancel(&engine, &job.space, &job.cfg, Some(cancel), on_generation)?;
+    let delta = engine.stats().delta_since(&before);
+    let front: Vec<Value> = result.front.iter().map(|&i| Value::from(i)).collect();
+    let front_records: Vec<Value> =
+        result.front.iter().map(|&i| result.records[i].to_json()).collect();
+    Ok(Value::obj()
+        .with("done", true)
+        .with("measured", result.measured)
+        .with("evaluations", result.evaluations)
+        .with("pruned", result.pruned.len())
+        .with("generations", result.generations.len())
+        .with("front", Value::Arr(front))
+        .with("front_records", Value::Arr(front_records))
+        .with("stats", delta.to_json()))
+}

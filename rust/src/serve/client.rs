@@ -1,0 +1,92 @@
+//! Tiny blocking HTTP/1.1 client over `std::net` for the `aladin submit`
+//! CLI and CI smoke jobs: one request per connection (the server always
+//! answers `Connection: close`), aggregate or line-streamed reads.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::error::{AladinError, Result};
+
+/// Per-request socket timeout (connect/read/write) — generous enough for
+/// a full DSE job between streamed chunks, small enough that a dead
+/// server fails the CLI instead of hanging it.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn connect(addr: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT))?;
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT))?;
+    Ok(stream)
+}
+
+fn send_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: aladin\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read the response status line + headers, returning the status code.
+fn read_head(reader: &mut BufReader<TcpStream>) -> Result<u16> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            AladinError::Dse(format!("malformed response status line: {}", line.trim_end()))
+        })?;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 || header.trim_end().is_empty() {
+            return Ok(status);
+        }
+    }
+}
+
+/// Perform one request and aggregate the whole response body (the
+/// responses are close-delimited, so EOF ends the body). Returns
+/// `(status, body)`.
+pub fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = connect(addr)?;
+    send_request(&mut stream, method, path, body)?;
+    let mut reader = BufReader::new(stream);
+    let status = read_head(&mut reader)?;
+    let mut out = String::new();
+    std::io::Read::read_to_string(&mut reader, &mut out)?;
+    Ok((status, out))
+}
+
+/// Perform one request against a streaming (NDJSON) endpoint, invoking
+/// `on_line` for every newline-terminated chunk as it arrives. Returns
+/// the status code; on a non-200 status the error body lines are still
+/// handed to `on_line`.
+pub fn request_stream(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    mut on_line: impl FnMut(&str),
+) -> Result<u16> {
+    let mut stream = connect(addr)?;
+    send_request(&mut stream, method, path, body)?;
+    let mut reader = BufReader::new(stream);
+    let status = read_head(&mut reader)?;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(status);
+        }
+        let line = line.trim_end_matches(['\r', '\n']);
+        if !line.is_empty() {
+            on_line(line);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal hand-rolled HTTP/1.1 framing over `std::net` (no external
+//! dependencies): just enough of the protocol for the typed-JSON job API
+//! of [`crate::serve`] — request-line + headers + `Content-Length` bodies
+//! in, fixed or close-delimited (streaming) responses out. Every response
+//! carries `Connection: close`; one connection serves one request.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on the request head (request line + headers) in bytes.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, …), uppercase as sent.
+    pub method: String,
+    /// Request target path (query strings are not split off).
+    pub path: String,
+    /// Raw request body (`Content-Length` bytes).
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read. Every variant maps to a 4xx response
+/// (or a silent close) — never a panic and, thanks to socket read
+/// timeouts, never a hang.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The client closed the connection before sending a request.
+    Closed,
+    /// Malformed request line, header, or body framing (→ 400).
+    Bad(String),
+    /// Declared body exceeds the server's configured cap (→ 413).
+    TooLarge,
+    /// Socket error or read timeout (connection is dropped).
+    Io(std::io::Error),
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> Self {
+        ReadError::Io(e)
+    }
+}
+
+/// Read and parse one HTTP/1.1 request, bounding both the head and the
+/// body (`max_body` bytes). Bodies are only consumed when a
+/// `Content-Length` header declares them.
+pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request, ReadError> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(ReadError::Closed);
+    }
+    if line.len() > MAX_HEAD_BYTES {
+        return Err(ReadError::Bad("request line too long".into()));
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+        _ => return Err(ReadError::Bad(format!("malformed request line: {}", line.trim_end()))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(format!("unsupported protocol version `{version}`")));
+    }
+
+    let mut content_length: Option<usize> = None;
+    let mut head_bytes = line.len();
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Err(ReadError::Bad("connection closed inside headers".into()));
+        }
+        head_bytes += header.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(ReadError::Bad("request head too large".into()));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(ReadError::Bad(format!("malformed header line: {header}")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            let n: usize = value
+                .trim()
+                .parse()
+                .map_err(|_| ReadError::Bad(format!("bad content-length `{}`", value.trim())))?;
+            content_length = Some(n);
+        }
+    }
+
+    let len = content_length.unwrap_or(0);
+    if len > max_body {
+        return Err(ReadError::TooLarge);
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (JSON unless stated otherwise)
+/// and flush. Always `Connection: close`.
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        status,
+        status_text(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Start a close-delimited NDJSON streaming response: status line and
+/// headers only — the caller then writes newline-terminated JSON chunks
+/// ([`write_chunk`]) and signals the end by closing the connection.
+/// No `Content-Length` and no chunked framing: the client reads lines
+/// until EOF.
+pub fn write_stream_head(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.flush()
+}
+
+/// Write one NDJSON chunk (a single line) of a streaming response and
+/// flush it immediately, so clients observe per-generation progress as it
+/// happens rather than on job completion.
+pub fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()
+}

@@ -1,0 +1,352 @@
+//! `aladin serve` — ALADIN as a long-lived analysis service.
+//!
+//! A hand-rolled HTTP/1.1 server over `std::net` (zero external
+//! dependencies, like everything else in this crate) that accepts
+//! analyze / eval / joint-DSE / evolutionary-search jobs as typed JSON,
+//! runs them on the existing engine executor, and — for the evolutionary
+//! endpoint — streams per-generation fronts back as newline-delimited
+//! JSON chunks while the search runs.
+//!
+//! What makes the server more than a CLI wrapper is the cache topology:
+//! every job's [`crate::dse::EvalEngine`] is built on a clone of one
+//! server-wide [`SharedCache`], so all in-flight jobs and sequential
+//! clients share every memoized stage — a second identical DSE job is
+//! mostly cache hits (its response carries the per-job
+//! [`crate::dse::CacheStats`] delta as proof), and with `--cache-dir` the
+//! sim/accuracy/bound stages also persist to a checksummed on-disk tier
+//! that survives restarts ([`crate::dse::cache::DiskCache`]).
+//!
+//! Protocol summary (see GUIDE.md "Running ALADIN as a service"):
+//!
+//! | endpoint | method | reply |
+//! |---|---|---|
+//! | `/health` | GET | liveness + version |
+//! | `/stats` | GET | server-wide cache counters + active job count |
+//! | `/v1/analyze` | POST | one design point, latency/memory/energy |
+//! | `/v1/eval` | POST | one design point + measured accuracy |
+//! | `/v1/dse/joint` | POST | joint quant×hw product front |
+//! | `/v1/dse/evo` | POST | NDJSON stream: per-generation stats, then the final front |
+//! | `/shutdown` | POST | acknowledge, stop accepting, drain in-flight jobs |
+//!
+//! Every response is `Connection: close`; the NDJSON stream is
+//! close-delimited (read lines until EOF). Malformed JSON gets a 400,
+//! an oversized body a 413, unknown paths 404, wrong methods 405 — never
+//! a panic or a hang (sockets carry read/write timeouts).
+
+pub mod api;
+pub mod client;
+pub mod http;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::dse::cache::SharedCache;
+use crate::error::Result;
+use crate::util::json::Value;
+use crate::util::ToJson;
+
+/// How long a connection may sit idle before a read gives up — bounds the
+/// damage of half-open or dribbling clients.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-write timeout; applies to each streamed chunk individually, so
+/// long-running jobs are fine as long as the client keeps reading.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Server configuration for [`spawn`].
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8375`; port `0` picks an ephemeral
+    /// port (read it back from [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Enable the on-disk cache tier rooted at this directory — warm
+    /// starts across server restarts.
+    pub cache_dir: Option<PathBuf>,
+    /// Default worker-thread count for job engines (requests may override
+    /// per job; `None` = available parallelism).
+    pub threads: Option<usize>,
+    /// Maximum accepted request-body size in bytes (larger bodies get a
+    /// 413 without being read).
+    pub max_body_bytes: usize,
+}
+
+impl ServeConfig {
+    /// Config with defaults: no disk tier, engine-default threads, 1 MiB
+    /// body cap.
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            cache_dir: None,
+            threads: None,
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Shared server state: the server-wide cache, the in-flight job
+/// registry, and the shutdown latch.
+struct ServerState {
+    cache: SharedCache,
+    threads: Option<usize>,
+    max_body: usize,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    next_job: AtomicU64,
+    /// In-flight jobs: id → cooperative cancel flag. A job's flag is set
+    /// when its client disconnects mid-stream; the search observes it
+    /// between generations and finalizes early.
+    jobs: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+}
+
+impl ServerState {
+    fn register_job(&self) -> (u64, Arc<AtomicBool>) {
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let flag = Arc::new(AtomicBool::new(false));
+        self.jobs.lock().expect("job registry poisoned").insert(id, flag.clone());
+        (id, flag)
+    }
+
+    fn unregister_job(&self, id: u64) {
+        self.jobs.lock().expect("job registry poisoned").remove(&id);
+    }
+
+    fn jobs_active(&self) -> usize {
+        self.jobs.lock().expect("job registry poisoned").len()
+    }
+}
+
+/// A running server. Dropping the handle does **not** stop the server;
+/// call [`ServerHandle::shutdown`] (or POST `/shutdown`) to stop it, or
+/// [`ServerHandle::join`] to block until it stops.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves port `0` requests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight connections, flush the disk tier,
+    /// and block until the server is fully down. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the server stops (via `/shutdown` or
+    /// [`ServerHandle::shutdown`] from another handle-owning thread).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind the listener and start the accept loop on a background thread.
+/// Returns once the port is bound — jobs may be submitted immediately.
+pub fn spawn(config: ServeConfig) -> Result<ServerHandle> {
+    let cache = match &config.cache_dir {
+        Some(dir) => SharedCache::with_disk(dir)?,
+        None => SharedCache::new(),
+    };
+    let listener = TcpListener::bind(&config.addr)?;
+    let addr = listener.local_addr()?;
+    let state = Arc::new(ServerState {
+        cache,
+        threads: config.threads,
+        max_body: config.max_body_bytes,
+        addr,
+        shutdown: AtomicBool::new(false),
+        next_job: AtomicU64::new(1),
+        jobs: Mutex::new(HashMap::new()),
+    });
+    let accept_state = state.clone();
+    let accept = std::thread::Builder::new()
+        .name("aladin-serve".into())
+        .spawn(move || accept_loop(listener, accept_state))?;
+    Ok(ServerHandle {
+        addr,
+        state,
+        accept: Some(accept),
+    })
+}
+
+/// Accept connections until the shutdown latch is set, then drain: join
+/// every live connection thread (in-flight jobs run to completion) and
+/// flush the disk tier so a restart warm-starts from everything computed.
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let conn_state = state.clone();
+            let spawned = std::thread::Builder::new()
+                .name("aladin-serve-conn".into())
+                .spawn(move || handle_connection(&conn_state, stream));
+            if let Ok(h) = spawned {
+                conns.push(h);
+            }
+        }
+        // reap connections that already finished
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    state.cache.flush();
+}
+
+fn error_body(msg: &str) -> String {
+    Value::obj().with("error", msg.to_string()).to_string_compact()
+}
+
+/// Serve exactly one request on `stream`: parse (bounded, with timeouts),
+/// route, respond. Panics inside a handler are caught and answered with
+/// a 500 — a bad request can never take the server down.
+fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let req = match http::read_request(&mut stream, state.max_body) {
+        Ok(req) => req,
+        Err(http::ReadError::Closed) | Err(http::ReadError::Io(_)) => return,
+        Err(http::ReadError::Bad(msg)) => {
+            let _ = http::write_response(&mut stream, 400, &error_body(&msg));
+            return;
+        }
+        Err(http::ReadError::TooLarge) => {
+            let body = error_body("request body exceeds the server's size limit");
+            let _ = http::write_response(&mut stream, 413, &body);
+            return;
+        }
+    };
+    let outcome = catch_unwind(AssertUnwindSafe(|| dispatch(state, &mut stream, &req)));
+    if outcome.is_err() {
+        let _ = http::write_response(&mut stream, 500, &error_body("internal error"));
+    }
+}
+
+/// Decode a request body as a JSON object (`{}` when empty).
+fn body_json(body: &[u8]) -> std::result::Result<Value, String> {
+    if body.is_empty() {
+        return Ok(Value::obj());
+    }
+    let text = std::str::from_utf8(body).map_err(|_| "request body is not UTF-8".to_string())?;
+    Value::parse(text).map_err(|e| e.to_string())
+}
+
+/// Flatten a typed handler outcome (parse error → eval error → value)
+/// into one HTTP response.
+fn respond_api(
+    stream: &mut TcpStream,
+    outcome: std::result::Result<Result<Value>, crate::util::json::JsonError>,
+) {
+    match outcome {
+        Err(parse) => {
+            let _ = http::write_response(stream, 400, &error_body(&parse.to_string()));
+        }
+        Ok(Err(eval)) => {
+            let _ = http::write_response(stream, 400, &error_body(&eval.to_string()));
+        }
+        Ok(Ok(v)) => {
+            let _ = http::write_response(stream, 200, &v.to_string_compact());
+        }
+    }
+}
+
+fn dispatch(state: &Arc<ServerState>, stream: &mut TcpStream, req: &http::Request) {
+    let body = if req.method == "GET" {
+        Value::obj()
+    } else {
+        match body_json(&req.body) {
+            Ok(v) => v,
+            Err(msg) => {
+                let _ = http::write_response(stream, 400, &error_body(&msg));
+                return;
+            }
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let v = Value::obj()
+                .with("ok", true)
+                .with("service", "aladin")
+                .with("version", env!("CARGO_PKG_VERSION"));
+            let _ = http::write_response(stream, 200, &v.to_string_compact());
+        }
+        ("GET", "/stats") => {
+            let v = Value::obj()
+                .with("stats", api::cache_stats_snapshot(&state.cache).to_json())
+                .with("jobs_active", state.jobs_active())
+                .with("disk_tier", state.cache.disk().is_some());
+            let _ = http::write_response(stream, 200, &v.to_string_compact());
+        }
+        ("POST", "/v1/analyze") => {
+            respond_api(stream, api::run_analyze(&body, &state.cache, state.threads));
+        }
+        ("POST", "/v1/eval") => {
+            respond_api(stream, api::run_eval(&body, &state.cache, state.threads));
+        }
+        ("POST", "/v1/dse/joint") => {
+            respond_api(stream, api::run_joint(&body, &state.cache, state.threads));
+        }
+        ("POST", "/v1/dse/evo") => run_evo_streaming(state, stream, &body),
+        ("POST", "/shutdown") => {
+            let v = Value::obj().with("ok", true).with("draining", state.jobs_active());
+            let _ = http::write_response(stream, 200, &v.to_string_compact());
+            state.shutdown.store(true, Ordering::SeqCst);
+            // unblock the accept loop so it observes the latch
+            let _ = TcpStream::connect(state.addr);
+        }
+        (_, "/health" | "/stats" | "/v1/analyze" | "/v1/eval" | "/v1/dse/joint"
+        | "/v1/dse/evo" | "/shutdown") => {
+            let _ = http::write_response(stream, 405, &error_body("method not allowed"));
+        }
+        (_, path) => {
+            let _ = http::write_response(stream, 404, &error_body(&format!("no route for {path}")));
+        }
+    }
+}
+
+/// The streaming evolutionary endpoint: registers the job, streams one
+/// NDJSON line per generation, and ends with the final-result line. A
+/// failed chunk write (client went away) flips the job's cancel flag, and
+/// the search finalizes at the next generation boundary — completed
+/// evaluations stay in the shared cache either way.
+fn run_evo_streaming(state: &Arc<ServerState>, stream: &mut TcpStream, body: &Value) {
+    let job = match api::parse_evo(body) {
+        Ok(job) => job,
+        Err(parse) => {
+            let _ = http::write_response(stream, 400, &error_body(&parse.to_string()));
+            return;
+        }
+    };
+    let (job_id, cancel) = state.register_job();
+    if http::write_stream_head(stream).is_ok() {
+        let result = api::run_evo(&job, &state.cache, state.threads, &cancel, |stat| {
+            let line = stat.to_json().to_string_compact();
+            if http::write_chunk(stream, &line).is_err() {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        });
+        let last = match result {
+            Ok(v) => v.to_string_compact(),
+            Err(e) => error_body(&e.to_string()),
+        };
+        let _ = http::write_chunk(stream, &last);
+    }
+    state.unregister_job(job_id);
+}

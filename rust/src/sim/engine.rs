@@ -605,6 +605,50 @@ impl crate::util::ToJson for SimResult {
     }
 }
 
+impl crate::util::FromJson for LayerSimResult {
+    fn from_json(
+        v: &crate::util::Value,
+    ) -> std::result::Result<Self, crate::util::json::JsonError> {
+        use crate::util::json::{req_bool, req_str, req_u64, req_usize};
+        Ok(LayerSimResult {
+            name: req_str(v, "name")?,
+            cycles: req_u64(v, "cycles")?,
+            compute_cycles: req_u64(v, "compute_cycles")?,
+            dma_l1_cycles: req_u64(v, "dma_l1_cycles")?,
+            dma_l3_cycles: req_u64(v, "dma_l3_cycles")?,
+            exposed_dma_l1_cycles: req_u64(v, "exposed_dma_l1_cycles")?,
+            exposed_dma_l3_cycles: req_u64(v, "exposed_dma_l3_cycles")?,
+            hidden_dma_l3_cycles: req_u64(v, "hidden_dma_l3_cycles")?,
+            stall_cycles: req_u64(v, "stall_cycles")?,
+            l1_used_bytes: req_u64(v, "l1_used_bytes")?,
+            l2_used_bytes: req_u64(v, "l2_used_bytes")?,
+            n_tiles: req_usize(v, "n_tiles")?,
+            double_buffered: req_bool(v, "double_buffered")?,
+        })
+    }
+}
+
+impl crate::util::FromJson for SimResult {
+    /// Decodes exactly what [`crate::util::ToJson`] emits; the derived
+    /// `total_cycles` / `compute_utilization` fields are recomputed from
+    /// the layers, not read back.
+    fn from_json(
+        v: &crate::util::Value,
+    ) -> std::result::Result<Self, crate::util::json::JsonError> {
+        use crate::util::json::{field_err, req_str, req_u64, req_usize};
+        let layers = v
+            .get("layers")
+            .ok_or_else(|| field_err("missing field `layers`"))?;
+        Ok(SimResult {
+            platform: req_str(v, "platform")?,
+            backend: req_str(v, "backend")?,
+            cores: req_usize(v, "cores")?,
+            l2_kb: req_u64(v, "l2_kb")?,
+            layers: crate::util::FromJson::from_json(layers)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

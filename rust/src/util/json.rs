@@ -240,6 +240,68 @@ impl<T: ToJson> ToJson for Vec<T> {
     }
 }
 
+/// Types that can rebuild themselves from a [`Value`] (replacement for
+/// serde's `Deserialize` in the offline build) — the shared decode boundary
+/// of the server's typed requests and the disk cache's record payloads.
+/// Decoders must accept exactly what the type's [`ToJson`] emits, so a
+/// `to_json -> from_json -> to_json` round trip is byte-identical (the
+/// writer prints `f64`s in shortest-round-trip form, so numeric fields
+/// survive exactly).
+pub trait FromJson: Sized {
+    /// Decode from a parsed value. Missing or mistyped fields produce a
+    /// [`JsonError`] naming the field (`pos` is 0: field errors have no
+    /// meaningful byte offset).
+    fn from_json(v: &Value) -> Result<Self, JsonError>;
+}
+
+impl<T: FromJson> FromJson for Vec<T> {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| field_err("expected an array"))?;
+        arr.iter().map(T::from_json).collect()
+    }
+}
+
+/// A field-level decode error (no byte offset).
+pub fn field_err(msg: impl Into<String>) -> JsonError {
+    JsonError {
+        pos: 0,
+        msg: msg.into(),
+    }
+}
+
+/// `obj.<key>` as a string, or a decode error naming the field.
+pub fn req_str(v: &Value, key: &str) -> Result<String, JsonError> {
+    v.str_field(key)
+        .map(str::to_string)
+        .ok_or_else(|| field_err(format!("missing or non-string field `{key}`")))
+}
+
+/// `obj.<key>` as a u64, or a decode error naming the field.
+pub fn req_u64(v: &Value, key: &str) -> Result<u64, JsonError> {
+    v.u64_field(key)
+        .ok_or_else(|| field_err(format!("missing or non-integer field `{key}`")))
+}
+
+/// `obj.<key>` as a usize, or a decode error naming the field.
+pub fn req_usize(v: &Value, key: &str) -> Result<usize, JsonError> {
+    v.usize_field(key)
+        .ok_or_else(|| field_err(format!("missing or non-integer field `{key}`")))
+}
+
+/// `obj.<key>` as an f64, or a decode error naming the field.
+pub fn req_f64(v: &Value, key: &str) -> Result<f64, JsonError> {
+    v.f64_field(key)
+        .ok_or_else(|| field_err(format!("missing or non-numeric field `{key}`")))
+}
+
+/// `obj.<key>` as a bool, or a decode error naming the field.
+pub fn req_bool(v: &Value, key: &str) -> Result<bool, JsonError> {
+    v.bool_field(key)
+        .ok_or_else(|| field_err(format!("missing or non-boolean field `{key}`")))
+}
+
 // ---- parser ----------------------------------------------------------------
 
 struct Parser<'a> {

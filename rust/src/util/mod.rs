@@ -13,6 +13,6 @@ pub mod tempdir;
 pub mod yamlish;
 
 pub use hash::StableHasher;
-pub use json::{ToJson, Value};
+pub use json::{FromJson, ToJson, Value};
 pub use omap::OrderedMap;
 pub use prng::{check_property, Prng};

@@ -437,6 +437,118 @@ fn backend_swap_invalidates_exactly_the_platform_half_of_the_cache() {
 }
 
 #[test]
+fn sharded_memo_stress_computes_each_key_exactly_once_across_threads() {
+    // 8 threads hammer the same 64 keys; the sharded map must behave
+    // exactly like the old single-lock memo: one compute per key, every
+    // other access a hit, values bit-identical to a sequential reference
+    use aladin::dse::ShardedMemo;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    const KEYS: u64 = 64;
+    const THREADS: usize = 8;
+    let value_of = |k: u64| -> u64 { k.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (k >> 7) };
+    // reference: the single-lock shape, built sequentially
+    let mut reference: HashMap<u64, u64> = HashMap::new();
+    for k in 0..KEYS {
+        reference.insert(k, value_of(k));
+    }
+
+    let memo: ShardedMemo<u64> = ShardedMemo::new();
+    let computed = AtomicUsize::new(0);
+    let observed: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for k in 0..KEYS {
+                    let v = memo
+                        .get_or_compute(k, || {
+                            computed.fetch_add(1, Ordering::SeqCst);
+                            Ok(value_of(k))
+                        })
+                        .unwrap();
+                    observed.lock().unwrap().push((k, *v));
+                }
+            });
+        }
+    });
+    assert_eq!(computed.load(Ordering::SeqCst), KEYS as usize, "exactly-once compute per key");
+    assert_eq!(memo.computed(), KEYS as usize);
+    assert_eq!(memo.hits(), THREADS * KEYS as usize - KEYS as usize);
+    let observed = observed.lock().unwrap();
+    assert_eq!(observed.len(), THREADS * KEYS as usize);
+    for (k, v) in observed.iter() {
+        assert_eq!(v, &reference[k], "key {k} diverged from the single-lock reference");
+    }
+}
+
+#[test]
+fn distinct_key_computations_overlap_even_within_one_shard() {
+    // the bugfix invariant: no shard lock is held while a stage evaluates.
+    // Keys 0 and 16 land in the same shard of the 16-way map; were the
+    // lock held across the compute, these two slow evaluations would
+    // serialize to >= 2x the injected stage latency
+    use aladin::dse::ShardedMemo;
+    use std::time::{Duration, Instant};
+
+    let memo: ShardedMemo<u64> = ShardedMemo::new();
+    let slow = Duration::from_millis(150);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for key in [0u64, 16] {
+            let memo = &memo;
+            s.spawn(move || {
+                memo.get_or_compute(key, || {
+                    std::thread::sleep(slow);
+                    Ok(key + 1)
+                })
+                .unwrap();
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    assert_eq!(memo.computed(), 2);
+    assert!(
+        elapsed < slow * 2,
+        "same-shard evaluations must overlap, took {elapsed:?} for 2x {slow:?} stages"
+    );
+}
+
+#[test]
+fn engines_sharing_one_cache_replay_each_others_stages() {
+    // the serve topology in miniature: two independent engines built on
+    // one SharedCache — the second engine's identical job is served from
+    // the first one's stages, and the per-job story is told by the
+    // delta_since snapshots
+    use aladin::dse::SharedCache;
+    let cache = SharedCache::new();
+    let vector = DesignVector {
+        quant: Some(QuantAxis::uniform(4, BlockImpl::Im2col, 10)),
+        hw: Some(HwAxis { cores: 4, l2_kb: 320, backend: None }),
+    };
+    let a = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+        .with_cache(cache.clone());
+    let before = a.stats();
+    let r0 = a.evaluate(&vector).unwrap();
+    let cold = a.stats().delta_since(&before);
+    assert_eq!(cold.impl_computed, 1);
+    assert_eq!(cold.sim_computed, 1);
+    assert_eq!(cold.sim_hits, 0);
+
+    let b = EvalEngine::for_mobilenet(small(models::case2()), presets::gap8())
+        .with_cache(cache.clone());
+    let before = b.stats();
+    let r1 = b.evaluate(&vector).unwrap();
+    let warm = b.stats().delta_since(&before);
+    assert_eq!(warm.impl_computed, 0, "second engine must not re-decorate");
+    assert_eq!(warm.sim_computed, 0, "second engine must not re-simulate");
+    assert_eq!(warm.impl_hits, 1);
+    assert_eq!(warm.sim_hits, 1);
+    assert_records_bit_identical(&r0, &r1);
+}
+
+#[test]
 fn grid_search_results_unchanged_by_engine_port() {
     // the ported GridSearch must agree with a hand-driven Pipeline run
     let (g, cfg) = small(models::case2()).build();
