@@ -1,0 +1,295 @@
+//! Bench: DOM QONNX ingest vs the zero-allocation streaming pull path.
+//!
+//! Measures the full analyze-flow ingest — bytes on disk to a validated
+//! [`Graph`](aladin::graph::ir::Graph) — three ways: the DOM path
+//! (`Value::parse` + `QonnxModel::from_json`), streaming with lazy
+//! payloads (`qonnx_stream::from_slice(_, DataPolicy::Lazy)`, initializer
+//! `data` arrays recorded as byte spans and never decoded), and streaming
+//! with eager payload decode. Throughput is reported in MB/s over the
+//! document size.
+//!
+//! Three gates run in-bench; a violation panics, which fails the CI smoke
+//! job:
+//! 1. **Zero-allocation tokenizer**: a full pull-event scan of the
+//!    document may heap-allocate at most a handful of times (scratch
+//!    buffer growth on escaped strings) — never per token.
+//! 2. **Allocation proportionality**: lazy ingest allocates roughly one
+//!    source buffer plus model structure; the DOM path allocates a value
+//!    tree per payload element. Lazy must stay far below DOM on both
+//!    counters (an RSS proxy without OS-specific probes).
+//! 3. **Bit-identity**: the eagerly streamed model must equal the DOM
+//!    model (`PartialEq` decodes lazy spans, so payloads are compared by
+//!    value).
+//!
+//! Document source: `BENCH_INGEST_MODEL=<path>` (CI generates a
+//! ResNet-50-scale file via `python/compile/export_qonnx.py
+//! --synthetic-scale`); without it a synthetic fallback is built
+//! in-process from the exported LeNet with filled initializer payloads
+//! plus an unknown-key calibration blob that streaming skips and DOM must
+//! parse. `BENCH_TINY=1` shrinks the fallback; `BENCH_INGEST_JSON_OUT`
+//! writes `BENCH_ingest.json`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use aladin::graph::qonnx::{export, QonnxModel, TensorData};
+use aladin::graph::qonnx_stream::{self, DataPolicy};
+use aladin::models;
+use aladin::util::bench::{bench, black_box, BenchStats};
+use aladin::util::json::pull::{Event, PullParser};
+use aladin::util::json::Value;
+
+// ---- counting allocator: allocation-call / byte / peak instrumentation ----
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static CURRENT_BYTES: AtomicI64 = AtomicI64::new(0);
+static PEAK_BYTES: AtomicI64 = AtomicI64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            note_alloc(layout.size() as i64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        CURRENT_BYTES.fetch_sub(layout.size() as i64, Ordering::Relaxed);
+        System.dealloc(ptr, layout);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            note_alloc(new_size as i64 - layout.size() as i64);
+        }
+        p
+    }
+}
+
+fn note_alloc(delta: i64) {
+    ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+    if delta > 0 {
+        ALLOC_BYTES.fetch_add(delta as u64, Ordering::Relaxed);
+    }
+    let cur = CURRENT_BYTES.fetch_add(delta, Ordering::Relaxed) + delta;
+    PEAK_BYTES.fetch_max(cur, Ordering::Relaxed);
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[derive(Debug, Clone, Copy)]
+struct AllocStats {
+    calls: u64,
+    bytes: u64,
+    peak_above_start: u64,
+}
+
+/// Run `f` once and report its allocator activity (single-threaded bench,
+/// so the counters attribute cleanly).
+fn measure_alloc<T>(f: impl FnOnce() -> T) -> (T, AllocStats) {
+    let calls0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let bytes0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    let start = CURRENT_BYTES.load(Ordering::Relaxed);
+    PEAK_BYTES.store(start, Ordering::Relaxed);
+    let out = f();
+    let stats = AllocStats {
+        calls: ALLOC_CALLS.load(Ordering::Relaxed) - calls0,
+        bytes: ALLOC_BYTES.load(Ordering::Relaxed) - bytes0,
+        peak_above_start: (PEAK_BYTES.load(Ordering::Relaxed) - start).max(0) as u64,
+    };
+    (out, stats)
+}
+
+// ---- synthetic fallback document -------------------------------------------
+
+/// Exported LeNet with deterministic initializer payloads, padded to
+/// roughly `target_bytes` with an unknown-key numeric blob (streaming
+/// skips it structurally; the DOM path must build value nodes for it).
+fn synthetic_doc(target_bytes: usize) -> String {
+    let (g, _cfg) = models::lenet(8, (3, 32, 32), 10);
+    let mut doc = export(&g);
+    for t in doc.tensors.iter_mut() {
+        if t.initializer {
+            let n: usize = t.dims.iter().product();
+            t.data =
+                Some(TensorData::Inline((0..n).map(|i| (i as i64 % 251) - 125).collect()));
+        }
+    }
+    let mut v = doc.to_json().expect("serialize synthetic model");
+    let base_len = v.to_string_pretty().len();
+    // each padded entry costs ~8 bytes of pretty-printed text
+    let pad = target_bytes.saturating_sub(base_len) / 8;
+    if let Value::Obj(fields) = &mut v {
+        let blob: Vec<Value> = (0..pad).map(|i| Value::Num((i % 977) as f64)).collect();
+        fields.push(("calibration_blob".to_string(), Value::Arr(blob)));
+    }
+    v.to_string_pretty()
+}
+
+fn stats_json(s: &BenchStats) -> Value {
+    Value::obj()
+        .with("name", s.name.clone())
+        .with("iters", s.iters)
+        .with("min_us", s.min.as_micros() as u64)
+        .with("median_us", s.median.as_micros() as u64)
+        .with("mean_us", s.mean.as_micros() as u64)
+        .with("max_us", s.max.as_micros() as u64)
+}
+
+fn alloc_json(a: &AllocStats) -> Value {
+    Value::obj()
+        .with("calls", a.calls)
+        .with("bytes", a.bytes)
+        .with("peak_above_start_bytes", a.peak_above_start)
+}
+
+fn mb_per_s(bytes: usize, s: &BenchStats) -> f64 {
+    bytes as f64 / 1e6 / s.median.as_secs_f64().max(1e-12)
+}
+
+fn main() {
+    let tiny =
+        std::env::var("BENCH_TINY").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let (source, text) = match std::env::var("BENCH_INGEST_MODEL") {
+        Ok(path) => {
+            let text = std::fs::read_to_string(&path).expect("read BENCH_INGEST_MODEL");
+            (path, text)
+        }
+        Err(_) => {
+            let target = if tiny { 3 << 20 } else { 48 << 20 };
+            ("synthetic".to_string(), synthetic_doc(target))
+        }
+    };
+    let bytes = text.as_bytes();
+    let total = bytes.len();
+    let iters = if tiny { 5 } else { 3 };
+    println!(
+        "=== ingest: DOM vs streaming pull parser ({source}, {:.2} MB{}) ===",
+        total as f64 / 1e6,
+        if tiny { ", tiny" } else { "" }
+    );
+
+    // gate 1: a pure event scan never allocates per token
+    let (events, scan_alloc) = measure_alloc(|| {
+        let mut p = PullParser::new(bytes);
+        let mut n = 0u64;
+        loop {
+            match p.next_event().expect("scan document") {
+                Event::End => break,
+                _ => n += 1,
+            }
+        }
+        n
+    });
+    println!(
+        "pull scan: {events} events, {} allocator calls ({} bytes)",
+        scan_alloc.calls, scan_alloc.bytes
+    );
+    assert!(
+        scan_alloc.calls <= 64,
+        "tokenizer allocated {} times over {events} events — not zero-allocation",
+        scan_alloc.calls
+    );
+
+    let dom_ingest = || {
+        let v = Value::parse(&text).expect("DOM parse");
+        let doc = QonnxModel::from_json(&v).expect("DOM decode");
+        doc.to_graph().expect("analyze entry").nodes.len()
+    };
+    let lazy_ingest = || {
+        let doc = qonnx_stream::from_slice(bytes, DataPolicy::Lazy).expect("stream lazy");
+        doc.to_graph().expect("analyze entry").nodes.len()
+    };
+    let eager_ingest = || {
+        let doc = qonnx_stream::from_slice(bytes, DataPolicy::Eager).expect("stream eager");
+        doc.to_graph().expect("analyze entry").nodes.len()
+    };
+
+    let dom = bench("ingest/dom_value_tree", 1, iters, dom_ingest);
+    let lazy = bench("ingest/stream_lazy", 1, iters, lazy_ingest);
+    let eager = bench("ingest/stream_eager", 1, iters, eager_ingest);
+
+    // gate 2: allocation proportionality (peak-RSS proxy)
+    let (_, dom_alloc) = measure_alloc(|| black_box(dom_ingest()));
+    let (_, lazy_alloc) = measure_alloc(|| black_box(lazy_ingest()));
+    println!(
+        "allocations: dom {} calls / {:.1} MB peak, lazy {} calls / {:.1} MB peak",
+        dom_alloc.calls,
+        dom_alloc.peak_above_start as f64 / 1e6,
+        lazy_alloc.calls,
+        lazy_alloc.peak_above_start as f64 / 1e6
+    );
+    assert!(
+        lazy_alloc.calls < dom_alloc.calls,
+        "lazy ingest made {} allocator calls vs DOM {} — expected fewer",
+        lazy_alloc.calls,
+        dom_alloc.calls
+    );
+    // lazy holds one owned copy of the source (from_slice -> Vec, moved
+    // into the Arc without copying) plus model structure; the DOM value
+    // tree dwarfs that on payload-heavy documents
+    assert!(
+        lazy_alloc.peak_above_start < total as u64 + total as u64 / 4 + (1 << 22),
+        "lazy ingest peaked at {} bytes over a {total}-byte document",
+        lazy_alloc.peak_above_start
+    );
+    assert!(
+        lazy_alloc.peak_above_start * 2 < dom_alloc.peak_above_start,
+        "lazy peak {} not well below DOM peak {} — payload is being materialized",
+        lazy_alloc.peak_above_start,
+        dom_alloc.peak_above_start
+    );
+
+    // gate 3: bit-identity between the DOM and streamed models
+    let v = Value::parse(&text).expect("DOM parse");
+    let dom_model = QonnxModel::from_json(&v).expect("DOM decode");
+    let eager_model =
+        qonnx_stream::from_slice(bytes, DataPolicy::Eager).expect("stream eager");
+    let lazy_model = qonnx_stream::from_slice(bytes, DataPolicy::Lazy).expect("stream lazy");
+    assert_eq!(dom_model, eager_model, "eager streamed model diverged from DOM");
+    assert_eq!(dom_model, lazy_model, "lazy streamed model diverged from DOM");
+
+    let dom_rate = mb_per_s(total, &dom);
+    let lazy_rate = mb_per_s(total, &lazy);
+    let eager_rate = mb_per_s(total, &eager);
+    let speedup = lazy_rate / dom_rate.max(1e-12);
+    println!(
+        "\nthroughput: dom {dom_rate:.1} MB/s, stream-lazy {lazy_rate:.1} MB/s \
+         ({speedup:.1}x), stream-eager {eager_rate:.1} MB/s, models bit-identical"
+    );
+    if total >= 1 << 20 {
+        assert!(
+            speedup >= 5.0,
+            "streaming lazy ingest is only {speedup:.2}x over DOM (need >=5x)"
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_INGEST_JSON_OUT") {
+        let doc = Value::obj()
+            .with("bench", "ingest")
+            .with("tiny", tiny)
+            .with("source", source)
+            .with("bytes", total as u64)
+            .with("events", events)
+            .with("dom_mb_per_s", dom_rate)
+            .with("stream_lazy_mb_per_s", lazy_rate)
+            .with("stream_eager_mb_per_s", eager_rate)
+            .with("speedup", speedup)
+            .with("bit_identical", true)
+            .with("scan_alloc_calls", scan_alloc.calls)
+            .with("dom_alloc", alloc_json(&dom_alloc))
+            .with("lazy_alloc", alloc_json(&lazy_alloc))
+            .with(
+                "runs",
+                Value::Arr(vec![stats_json(&dom), stats_json(&lazy), stats_json(&eager)]),
+            );
+        std::fs::write(&path, doc.to_string_pretty()).expect("write ingest bench json");
+        println!("wrote ingest bench timings to {path}");
+    }
+}

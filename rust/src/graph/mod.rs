@@ -4,6 +4,7 @@
 pub mod builder;
 pub mod ir;
 pub mod qonnx;
+pub mod qonnx_stream;
 pub mod tensor;
 pub mod topo;
 pub mod validate;

@@ -1,0 +1,555 @@
+//! Streaming QONNX ingest: event-driven decoding of production-size
+//! documents without a DOM tree.
+//!
+//! [`QonnxModel::from_json`] decodes a parsed [`Value`] — which means a
+//! ResNet-50-class file with hundreds of MB of initializer payload first
+//! materializes hundreds of millions of `Value` nodes. This module
+//! decodes the same dialect straight from the
+//! [`pull`](crate::util::json::pull) event stream: tensors, nodes and
+//! attributes are built as events arrive, and initializer `data` arrays
+//! are handled per [`DataPolicy`] — recorded as byte spans (`Lazy`),
+//! decoded in place (`Eager`), or dropped (`Skip`). The analyze/eval/DSE
+//! flows never read weight payloads, so the default file ingest
+//! ([`QonnxModel::from_file`]) uses `Lazy` and the parse cost of the
+//! payload collapses to a structural skip.
+//!
+//! Decode semantics are identical to the DOM path — same required
+//! fields, same defaults, same rejection of mistyped entries and
+//! duplicate keys — and `tests/qonnx_stream.rs` holds the two paths
+//! bit-identical over a randomized document corpus. One documented
+//! exception: regions this decoder *skips* (unknown keys, lazy payloads)
+//! are validated structurally but not re-checked for duplicate keys or
+//! UTF-8, exactly the deferral that makes lazy ingest cheap.
+
+use super::qonnx::{
+    check_data_len, num_to_i64, parse_err, QonnxModel, QonnxNode, QonnxTensor, TensorData,
+};
+use crate::error::Result;
+use crate::util::json::pull::{Event, PullParser};
+use crate::util::json::{pull, Value};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// What to do with initializer `data` payloads during ingest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPolicy {
+    /// Decode payloads into [`TensorData::Inline`] as they stream past.
+    Eager,
+    /// Record payloads as [`TensorData::Lazy`] byte spans into the shared
+    /// source buffer; decode happens on first access (if ever).
+    Lazy,
+    /// Drop payloads entirely (`data: None`) — the cheapest ingest for
+    /// flows that only need shapes, precisions and topology.
+    Skip,
+}
+
+/// Read and decode a QONNX-dialect JSON file with the given policy.
+pub fn from_file(path: impl AsRef<Path>, policy: DataPolicy) -> Result<QonnxModel> {
+    from_bytes(std::fs::read(path)?, policy)
+}
+
+/// Decode an owned document buffer. For [`DataPolicy::Lazy`] the buffer
+/// is moved (not copied) into the shared `Arc` that lazy spans index.
+pub fn from_bytes(bytes: Vec<u8>, policy: DataPolicy) -> Result<QonnxModel> {
+    let source = Arc::new(bytes);
+    parse_model(&source, policy, Some(&source))
+}
+
+/// Decode a borrowed document window. [`DataPolicy::Lazy`] needs an owned
+/// source for its spans to outlive the call, so that policy copies the
+/// window once; `Eager`/`Skip` decode in place with no copy.
+pub fn from_slice(bytes: &[u8], policy: DataPolicy) -> Result<QonnxModel> {
+    if policy == DataPolicy::Lazy {
+        from_bytes(bytes.to_vec(), policy)
+    } else {
+        parse_model(bytes, policy, None)
+    }
+}
+
+/// Top-level document fields (anything else is skipped).
+enum Field {
+    Name,
+    GraphInputs,
+    GraphOutputs,
+    Tensors,
+    Nodes,
+    Other,
+}
+
+impl Field {
+    fn of(key: &str) -> Field {
+        match key {
+            "name" => Field::Name,
+            "graph_inputs" => Field::GraphInputs,
+            "graph_outputs" => Field::GraphOutputs,
+            "tensors" => Field::Tensors,
+            "nodes" => Field::Nodes,
+            _ => Field::Other,
+        }
+    }
+}
+
+fn no_dup<T>(slot: &Option<T>, key: &str) -> Result<()> {
+    if slot.is_some() {
+        Err(parse_err(format!("duplicate key `{key}`")))
+    } else {
+        Ok(())
+    }
+}
+
+fn parse_model(
+    bytes: &[u8],
+    policy: DataPolicy,
+    source: Option<&Arc<Vec<u8>>>,
+) -> Result<QonnxModel> {
+    let mut p = PullParser::new(bytes);
+    if p.next_event()? != Event::BeginObject {
+        return Err(parse_err("expected a QONNX document object"));
+    }
+    let mut name: Option<String> = None;
+    let mut graph_inputs: Option<Vec<String>> = None;
+    let mut graph_outputs: Option<Vec<String>> = None;
+    let mut tensors: Option<Vec<QonnxTensor>> = None;
+    let mut nodes: Option<Vec<QonnxNode>> = None;
+    loop {
+        let field = match p.next_event()? {
+            Event::Key(k) => Field::of(k),
+            Event::EndObject => break,
+            _ => return Err(parse_err("malformed document object")),
+        };
+        match field {
+            Field::Name => {
+                no_dup(&name, "name")?;
+                name = Some(expect_str(&mut p, "`name` must be a string")?);
+            }
+            Field::GraphInputs => {
+                no_dup(&graph_inputs, "graph_inputs")?;
+                graph_inputs = Some(read_string_array(&mut p, "graph_inputs")?);
+            }
+            Field::GraphOutputs => {
+                no_dup(&graph_outputs, "graph_outputs")?;
+                graph_outputs = Some(read_string_array(&mut p, "graph_outputs")?);
+            }
+            Field::Tensors => {
+                no_dup(&tensors, "tensors")?;
+                tensors = Some(read_tensors(&mut p, policy, source)?);
+            }
+            Field::Nodes => {
+                no_dup(&nodes, "nodes")?;
+                nodes = Some(read_nodes(&mut p)?);
+            }
+            Field::Other => {
+                p.skip_value()?;
+            }
+        }
+    }
+    // only trailing whitespace may remain
+    if p.next_event()? != Event::End {
+        return Err(parse_err("trailing characters"));
+    }
+    Ok(QonnxModel {
+        name: name.unwrap_or_else(|| "model".to_string()),
+        graph_inputs: graph_inputs.ok_or_else(|| parse_err("missing `graph_inputs` array"))?,
+        graph_outputs: graph_outputs.ok_or_else(|| parse_err("missing `graph_outputs` array"))?,
+        tensors: tensors.ok_or_else(|| parse_err("missing `tensors`"))?,
+        nodes: nodes.ok_or_else(|| parse_err("missing `nodes`"))?,
+    })
+}
+
+fn expect_str(p: &mut PullParser<'_>, msg: &str) -> Result<String> {
+    match p.next_event()? {
+        Event::Str(s) => Ok(s.to_string()),
+        _ => Err(parse_err(msg)),
+    }
+}
+
+fn expect_bool(p: &mut PullParser<'_>, msg: &str) -> Result<bool> {
+    match p.next_event()? {
+        Event::Bool(b) => Ok(b),
+        _ => Err(parse_err(msg)),
+    }
+}
+
+fn read_string_array(p: &mut PullParser<'_>, key: &str) -> Result<Vec<String>> {
+    if p.next_event()? != Event::BeginArray {
+        return Err(parse_err(format!("missing `{key}` array")));
+    }
+    let mut out = Vec::new();
+    loop {
+        let item = match p.next_event()? {
+            Event::Str(s) => Some(s.to_string()),
+            Event::EndArray => None,
+            _ => return Err(parse_err(format!("`{key}` entries must be strings"))),
+        };
+        match item {
+            Some(s) => out.push(s),
+            None => return Ok(out),
+        }
+    }
+}
+
+// ---- tensors ----------------------------------------------------------------
+
+/// Tensor object fields (anything else is skipped).
+enum TField {
+    Name,
+    Dims,
+    Bits,
+    Signed,
+    Initializer,
+    Data,
+    Other,
+}
+
+impl TField {
+    fn of(key: &str) -> TField {
+        match key {
+            "name" => TField::Name,
+            "dims" => TField::Dims,
+            "bits" => TField::Bits,
+            "signed" => TField::Signed,
+            "initializer" => TField::Initializer,
+            "data" => TField::Data,
+            _ => TField::Other,
+        }
+    }
+}
+
+fn read_tensors(
+    p: &mut PullParser<'_>,
+    policy: DataPolicy,
+    source: Option<&Arc<Vec<u8>>>,
+) -> Result<Vec<QonnxTensor>> {
+    if p.next_event()? != Event::BeginArray {
+        return Err(parse_err("missing `tensors`"));
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next_event()? {
+            Event::BeginObject => {}
+            Event::EndArray => return Ok(out),
+            _ => return Err(parse_err("tensor entries must be objects")),
+        }
+        out.push(read_tensor(p, policy, source)?);
+    }
+}
+
+fn read_tensor(
+    p: &mut PullParser<'_>,
+    policy: DataPolicy,
+    source: Option<&Arc<Vec<u8>>>,
+) -> Result<QonnxTensor> {
+    let mut name: Option<String> = None;
+    let mut dims: Option<Vec<usize>> = None;
+    let mut bits: Option<u64> = None;
+    let mut signed: Option<bool> = None;
+    let mut initializer: Option<bool> = None;
+    let mut data: Option<TensorData> = None;
+    let mut data_seen = false;
+    loop {
+        let field = match p.next_event()? {
+            Event::Key(k) => TField::of(k),
+            Event::EndObject => break,
+            _ => return Err(parse_err("malformed tensor object")),
+        };
+        match field {
+            TField::Name => {
+                no_dup(&name, "name")?;
+                name = Some(expect_str(p, "tensor missing name")?);
+            }
+            TField::Dims => {
+                no_dup(&dims, "dims")?;
+                dims = Some(read_dims(p)?);
+            }
+            TField::Bits => {
+                no_dup(&bits, "bits")?;
+                let b = match p.next_event()? {
+                    Event::Num(n) if n >= 0.0 && n.fract() == 0.0 => n as u64,
+                    _ => return Err(parse_err("tensor missing bits")),
+                };
+                if b == 0 || b > u64::from(u8::MAX) {
+                    return Err(parse_err(format!("tensor bits {b} out of range 1..=255")));
+                }
+                bits = Some(b);
+            }
+            TField::Signed => {
+                no_dup(&signed, "signed")?;
+                signed = Some(expect_bool(p, "tensor signed must be a boolean")?);
+            }
+            TField::Initializer => {
+                no_dup(&initializer, "initializer")?;
+                initializer = Some(expect_bool(p, "tensor initializer must be a boolean")?);
+            }
+            TField::Data => {
+                if data_seen {
+                    return Err(parse_err("duplicate key `data`"));
+                }
+                data_seen = true;
+                data = match policy {
+                    DataPolicy::Skip => {
+                        p.skip_value()?;
+                        None
+                    }
+                    DataPolicy::Lazy => {
+                        let span = p.skip_value()?;
+                        let src = source
+                            .ok_or_else(|| parse_err("lazy ingest requires an owned source"))?;
+                        Some(TensorData::Lazy {
+                            span,
+                            source: src.clone(),
+                        })
+                    }
+                    DataPolicy::Eager => Some(TensorData::Inline(read_data_eager(p)?)),
+                };
+            }
+            TField::Other => {
+                p.skip_value()?;
+            }
+        }
+    }
+    let name = name.ok_or_else(|| parse_err("tensor missing name"))?;
+    let dims = dims.ok_or_else(|| parse_err(format!("tensor `{name}` missing dims")))?;
+    let bits = bits.ok_or_else(|| parse_err(format!("tensor `{name}` missing bits")))?;
+    if let Some(TensorData::Inline(vals)) = &data {
+        check_data_len(&name, &dims, vals.len())?;
+    }
+    Ok(QonnxTensor {
+        name,
+        dims,
+        bits: bits as u8,
+        signed: signed.unwrap_or(true),
+        initializer: initializer.unwrap_or(false),
+        data,
+    })
+}
+
+fn read_dims(p: &mut PullParser<'_>) -> Result<Vec<usize>> {
+    if p.next_event()? != Event::BeginArray {
+        return Err(parse_err("tensor missing dims"));
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next_event()? {
+            // mirror of `Value::as_usize`: non-negative integers only
+            Event::Num(n) if n >= 0.0 && n.fract() == 0.0 => out.push(n as u64 as usize),
+            Event::EndArray => return Ok(out),
+            _ => {
+                return Err(parse_err("tensor dims entries must be non-negative integers"));
+            }
+        }
+    }
+}
+
+fn read_data_eager(p: &mut PullParser<'_>) -> Result<Vec<i64>> {
+    if p.next_event()? != Event::BeginArray {
+        return Err(parse_err("tensor data must be an array of integers"));
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next_event()? {
+            Event::Num(n) => out.push(num_to_i64(n)?),
+            Event::EndArray => return Ok(out),
+            _ => return Err(parse_err("tensor data entries must be integers")),
+        }
+    }
+}
+
+// ---- nodes ------------------------------------------------------------------
+
+/// Node object fields (anything else is skipped).
+enum NField {
+    Name,
+    OpType,
+    Inputs,
+    Outputs,
+    Attributes,
+    Other,
+}
+
+impl NField {
+    fn of(key: &str) -> NField {
+        match key {
+            "name" => NField::Name,
+            "op_type" => NField::OpType,
+            "inputs" => NField::Inputs,
+            "outputs" => NField::Outputs,
+            "attributes" => NField::Attributes,
+            _ => NField::Other,
+        }
+    }
+}
+
+fn read_nodes(p: &mut PullParser<'_>) -> Result<Vec<QonnxNode>> {
+    if p.next_event()? != Event::BeginArray {
+        return Err(parse_err("missing `nodes`"));
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next_event()? {
+            Event::BeginObject => {}
+            Event::EndArray => return Ok(out),
+            _ => return Err(parse_err("node entries must be objects")),
+        }
+        out.push(read_node(p)?);
+    }
+}
+
+fn read_node(p: &mut PullParser<'_>) -> Result<QonnxNode> {
+    let mut name: Option<String> = None;
+    let mut op_type: Option<String> = None;
+    let mut inputs: Option<Vec<String>> = None;
+    let mut outputs: Option<Vec<String>> = None;
+    let mut attributes: Option<HashMap<String, Value>> = None;
+    loop {
+        let field = match p.next_event()? {
+            Event::Key(k) => NField::of(k),
+            Event::EndObject => break,
+            _ => return Err(parse_err("malformed node object")),
+        };
+        match field {
+            NField::Name => {
+                no_dup(&name, "name")?;
+                name = Some(expect_str(p, "node missing name")?);
+            }
+            NField::OpType => {
+                no_dup(&op_type, "op_type")?;
+                op_type = Some(expect_str(p, "node missing op_type")?);
+            }
+            NField::Inputs => {
+                no_dup(&inputs, "inputs")?;
+                inputs = Some(read_string_array(p, "inputs")?);
+            }
+            NField::Outputs => {
+                no_dup(&outputs, "outputs")?;
+                outputs = Some(read_string_array(p, "outputs")?);
+            }
+            NField::Attributes => {
+                no_dup(&attributes, "attributes")?;
+                attributes = Some(read_attributes(p)?);
+            }
+            NField::Other => {
+                p.skip_value()?;
+            }
+        }
+    }
+    Ok(QonnxNode {
+        name: name.ok_or_else(|| parse_err("node missing name"))?,
+        op_type: op_type.ok_or_else(|| parse_err("node missing op_type"))?,
+        inputs: inputs.unwrap_or_default(),
+        outputs: outputs.unwrap_or_default(),
+        attributes: attributes.unwrap_or_default(),
+    })
+}
+
+fn read_attributes(p: &mut PullParser<'_>) -> Result<HashMap<String, Value>> {
+    if p.next_event()? != Event::BeginObject {
+        return Err(parse_err("node attributes must be an object"));
+    }
+    let mut map = HashMap::new();
+    loop {
+        let key = match p.next_event()? {
+            Event::Key(k) => Some(k.to_string()),
+            Event::EndObject => None,
+            _ => return Err(parse_err("malformed attributes object")),
+        };
+        let Some(key) = key else {
+            return Ok(map);
+        };
+        // attribute values are small islands in a big document: rebuild
+        // them as DOM values so downstream op parsing stays unchanged
+        let v = pull::read_value(p)?;
+        if map.insert(key.clone(), v).is_some() {
+            return Err(parse_err(format!("duplicate key `{key}`")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "name": "tiny",
+      "future_proof": {"ignored": [1, 2, {"deep": true}]},
+      "graph_inputs": ["in"],
+      "graph_outputs": ["out"],
+      "tensors": [
+        {"name": "in", "dims": [1, 4], "bits": 8},
+        {"name": "w", "dims": [2, 4], "bits": 4, "signed": true,
+         "initializer": true, "data": [1, -2, 3, -4, 5, -6, 7, -8]},
+        {"name": "out", "dims": [1, 2], "bits": 32, "signed": true}
+      ],
+      "nodes": [
+        {"name": "fc", "op_type": "Gemm", "inputs": ["in", "w"],
+         "outputs": ["out"], "attributes": {"alpha": 1.0, "note": "a\nb"}}
+      ]
+    }"#;
+
+    #[test]
+    fn streaming_matches_dom_on_sample() {
+        let dom = QonnxModel::from_json(&Value::parse(DOC).unwrap()).unwrap();
+        let eager = from_slice(DOC.as_bytes(), DataPolicy::Eager).unwrap();
+        assert_eq!(dom, eager);
+        // lazy differs only in payload representation, compares equal
+        let lazy = from_slice(DOC.as_bytes(), DataPolicy::Lazy).unwrap();
+        assert!(lazy.tensors[1].data.as_ref().unwrap().is_lazy());
+        assert_eq!(dom, lazy);
+    }
+
+    #[test]
+    fn skip_policy_drops_payloads() {
+        let skipped = from_slice(DOC.as_bytes(), DataPolicy::Skip).unwrap();
+        assert!(skipped.tensors[1].data.is_none());
+        // everything else survives
+        assert_eq!(skipped.nodes.len(), 1);
+        assert_eq!(skipped.tensors.len(), 3);
+        assert_eq!(
+            skipped.nodes[0].attributes.get("note").unwrap().as_str(),
+            Some("a\nb")
+        );
+    }
+
+    #[test]
+    fn lazy_payload_decodes_on_demand() {
+        let lazy = from_slice(DOC.as_bytes(), DataPolicy::Lazy).unwrap();
+        let data = lazy.tensors[1].data.as_ref().unwrap();
+        assert_eq!(
+            data.values().unwrap().as_ref(),
+            &[1, -2, 3, -4, 5, -6, 7, -8]
+        );
+    }
+
+    #[test]
+    fn streamed_model_drives_the_analyze_entry() {
+        let model = from_slice(DOC.as_bytes(), DataPolicy::Lazy).unwrap();
+        model.to_graph().unwrap();
+    }
+
+    #[test]
+    fn malformed_documents_error_on_both_paths() {
+        let cases = [
+            r#"{"name": "x"}"#,                       // missing sections
+            r#"{"graph_inputs": [1]}"#,               // non-string entries
+            r#"{"graph_inputs": ["a"], "graph_outputs": [], "tensors": [{"name": "t", "dims": [2], "bits": 8, "data": [1]}], "nodes": []}"#, // length mismatch
+            r#"{"graph_inputs": ["a"], "graph_outputs": [], "tensors": [{"name": "t", "dims": [1], "bits": 300}], "nodes": []}"#, // bits out of range
+            r#"{"graph_inputs": ["a"], "graph_outputs": [], "tensors": [{"name": "t", "dims": [1], "bits": 8, "data": [1.5]}], "nodes": []}"#, // fractional data
+            r#"{"tensors": [], "tensors": []}"#,      // duplicate key
+        ];
+        for doc in cases {
+            let dom = Value::parse(doc).map(|v| QonnxModel::from_json(&v));
+            let dom_ok = matches!(dom, Ok(Ok(_)));
+            assert!(!dom_ok, "DOM accepted: {doc}");
+            assert!(
+                from_slice(doc.as_bytes(), DataPolicy::Eager).is_err(),
+                "stream accepted: {doc}"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let doc = format!("{DOC} extra");
+        assert!(from_slice(doc.as_bytes(), DataPolicy::Eager).is_err());
+    }
+}

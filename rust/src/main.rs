@@ -53,6 +53,8 @@ USAGE:
                   [--width-mult <f64>] [--json] [--out <file.json>]
   aladin export   [--model case1|case2|case3|lenet] [--width-mult <f64>]
                   [--out model.qonnx.json]
+  aladin ingest   --model <file.qonnx.json> [--policy lazy|eager|skip]
+                  [--dom] [--json]
   aladin eval     [--model case1|case2|case3|lenet|<file.qonnx.json>]
                   [--impl-config <file.yaml>] [--vectors <n>]
                   [--threads <n>] [--scalar]
@@ -928,6 +930,79 @@ fn cmd_export(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Diagnostic for the streaming QONNX ingest path: parse a model file,
+/// report throughput and how much initializer payload stayed undecoded.
+/// `--dom` routes through the DOM parser instead for an A/B comparison.
+fn cmd_ingest(args: &Args) -> Result<()> {
+    use aladin::graph::qonnx::QonnxModel;
+    use aladin::graph::qonnx_stream::{self, DataPolicy};
+
+    let model = args
+        .get("model")
+        .ok_or_else(|| io_err("--model <file.qonnx.json> is required".into()))?
+        .to_string();
+    let policy = match args.get_or("policy", "lazy").as_str() {
+        "lazy" => DataPolicy::Lazy,
+        "eager" => DataPolicy::Eager,
+        "skip" => DataPolicy::Skip,
+        other => {
+            return Err(io_err(format!(
+                "unknown --policy `{other}` (expected lazy|eager|skip)"
+            )))
+        }
+    };
+    let bytes = std::fs::read(&model)?;
+    let total = bytes.len();
+    let start = std::time::Instant::now();
+    let (doc, path) = if args.flag("dom") {
+        let text = String::from_utf8(bytes)
+            .map_err(|_| io_err(format!("{model} is not valid UTF-8")))?;
+        (QonnxModel::from_json(&Value::parse(&text)?)?, "dom")
+    } else {
+        (qonnx_stream::from_bytes(bytes, policy)?, "stream")
+    };
+    let secs = start.elapsed().as_secs_f64();
+    let mb_per_s = total as f64 / 1e6 / secs.max(1e-9);
+    let lazy_bytes: usize = doc
+        .tensors
+        .iter()
+        .filter_map(|t| t.data.as_ref())
+        .map(|d| d.lazy_bytes())
+        .sum();
+    let graph = doc.to_graph()?;
+    if args.flag("json") {
+        let out = Value::Obj(vec![
+            ("model".into(), Value::Str(model)),
+            ("path".into(), Value::Str(path.into())),
+            ("bytes".into(), Value::Num(total as f64)),
+            ("parse_ms".into(), Value::Num(secs * 1e3)),
+            ("mb_per_s".into(), Value::Num(mb_per_s)),
+            ("tensors".into(), Value::Num(doc.tensors.len() as f64)),
+            ("qonnx_nodes".into(), Value::Num(doc.nodes.len() as f64)),
+            ("lazy_payload_bytes".into(), Value::Num(lazy_bytes as f64)),
+            ("graph_nodes".into(), Value::Num(graph.nodes.len() as f64)),
+            ("graph_edges".into(), Value::Num(graph.edges.len() as f64)),
+        ]);
+        println!("{}", out.to_string_pretty());
+    } else {
+        println!(
+            "{model}: {:.2} MB via {path} in {:.1} ms ({mb_per_s:.0} MB/s)",
+            total as f64 / 1e6,
+            secs * 1e3
+        );
+        println!(
+            "  {} tensors, {} nodes -> graph with {} nodes / {} edges; \
+             {:.2} MB payload left undecoded",
+            doc.tensors.len(),
+            doc.nodes.len(),
+            graph.nodes.len(),
+            graph.edges.len(),
+            lazy_bytes as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
 /// Export a Chrome-trace JSON of the simulated execution timeline (the
 /// exact per-tile resource spans recorded by the simulator).
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -1237,6 +1312,7 @@ fn main() {
         "no-delta",
         "cache-stats",
         "shutdown",
+        "dom",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -1254,6 +1330,7 @@ fn main() {
         Some("submit") => cmd_submit(&args),
         Some("screen") => cmd_screen(&args),
         Some("export") => cmd_export(&args),
+        Some("ingest") => cmd_ingest(&args),
         Some("trace") => cmd_trace(&args),
         Some("table1") => {
             cmd_table1();

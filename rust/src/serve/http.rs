@@ -4,6 +4,7 @@
 //! in, fixed or close-delimited (streaming) responses out. Every response
 //! carries `Connection: close`; one connection serves one request.
 
+use crate::util::json::Value;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
@@ -146,5 +147,18 @@ pub fn write_stream_head(stream: &mut TcpStream) -> std::io::Result<()> {
 pub fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
     stream.write_all(line.as_bytes())?;
     stream.write_all(b"\n")?;
+    stream.flush()
+}
+
+/// Write one NDJSON frame by serializing `v` straight onto the socket
+/// ([`Value::write_compact`]) — no intermediate `String` per frame, which
+/// matters for high-frequency per-generation progress streams.
+pub fn write_chunk_value(stream: &mut TcpStream, v: &Value) -> std::io::Result<()> {
+    // buffer the many small serializer writes into one socket write
+    let mut w = std::io::BufWriter::new(&mut *stream);
+    v.write_compact(&mut w)?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    drop(w);
     stream.flush()
 }

@@ -337,16 +337,18 @@ fn run_evo_streaming(state: &Arc<ServerState>, stream: &mut TcpStream, body: &Va
     let (job_id, cancel) = state.register_job();
     if http::write_stream_head(stream).is_ok() {
         let result = api::run_evo(&job, &state.cache, state.threads, &cancel, |stat| {
-            let line = stat.to_json().to_string_compact();
-            if http::write_chunk(stream, &line).is_err() {
+            if http::write_chunk_value(stream, &stat.to_json()).is_err() {
                 cancel.store(true, Ordering::Relaxed);
             }
         });
-        let last = match result {
-            Ok(v) => v.to_string_compact(),
-            Err(e) => error_body(&e.to_string()),
-        };
-        let _ = http::write_chunk(stream, &last);
+        match result {
+            Ok(v) => {
+                let _ = http::write_chunk_value(stream, &v);
+            }
+            Err(e) => {
+                let _ = http::write_chunk(stream, &error_body(&e.to_string()));
+            }
+        }
     }
     state.unregister_job(job_id);
 }

@@ -5,8 +5,36 @@
 //! in-tree, like the other substrates this reproduction needs. Object key
 //! order is preserved (insertion order), which keeps exported QONNX
 //! documents and reports deterministic and diff-able.
+//!
+//! Two parsing front-ends share the same grammar and limits:
+//!
+//! * [`Value::parse`] — the DOM path: builds the full tree in memory.
+//!   Right-sized for config files, server payloads, and cache records.
+//! * [`pull`] — the streaming path: a zero-allocation, non-recursive
+//!   pull-parser that yields borrowed events over a byte window. This is
+//!   what production-size QONNX ingest rides on (`graph::qonnx_stream`).
+//!
+//! Both enforce the same hard limits ([`MAX_DEPTH`], [`MAX_NUMBER_LEN`],
+//! [`MAX_STRING_LEN`]) and reject duplicate object keys, so a document
+//! accepted by one is accepted by the other with identical semantics.
+
+pub mod pull;
 
 use std::fmt;
+use std::io;
+
+/// Maximum container nesting depth accepted by both parsers. Deeper
+/// documents produce a [`JsonError`] instead of exhausting the call stack
+/// (DOM path) or the bitstack (pull path).
+pub const MAX_DEPTH: usize = 128;
+
+/// Maximum byte length of a single number token. Anything longer is
+/// rejected outright — no silent truncation to an approximate `f64`.
+pub const MAX_NUMBER_LEN: usize = 64;
+
+/// Maximum decoded byte length of a single string. Tensor payloads are
+/// numbers, not strings, so real documents sit far below this.
+pub const MAX_STRING_LEN: usize = 1 << 20;
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -131,7 +159,7 @@ impl Value {
             pos: 0,
         };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
             return Err(p.err("trailing characters"));
@@ -139,18 +167,39 @@ impl Value {
         Ok(v)
     }
 
+    /// Compact serialization into any [`io::Write`] sink. This is the
+    /// streaming path: NDJSON frames and large exports go straight to the
+    /// socket / file without assembling the whole document in a `String`.
+    pub fn write_compact<W: io::Write>(&self, out: &mut W) -> io::Result<()> {
+        write_value(self, out, None, 0)
+    }
+
+    /// Pretty (2-space indented) serialization into any [`io::Write`] sink.
+    pub fn write_pretty<W: io::Write>(&self, out: &mut W) -> io::Result<()> {
+        write_value(self, out, Some(2), 0)
+    }
+
+    /// Pretty serialization as if this value sat `depth` containers deep in
+    /// a larger document — continuation lines are indented by
+    /// `2 * (depth + 1)` spaces. Lets composite writers (e.g. the streaming
+    /// QONNX exporter) emit a document skeleton by hand and splice
+    /// sub-values in, byte-identical to serializing the assembled tree.
+    pub fn write_pretty_depth<W: io::Write>(&self, out: &mut W, depth: usize) -> io::Result<()> {
+        write_value(self, out, Some(2), depth)
+    }
+
     /// Compact serialization.
     pub fn to_string_compact(&self) -> String {
-        let mut s = String::new();
-        write_value(self, &mut s, None, 0);
-        s
+        let mut buf = Vec::new();
+        self.write_compact(&mut buf).expect("write to Vec cannot fail");
+        String::from_utf8(buf).expect("writer emits valid utf-8")
     }
 
     /// Pretty (2-space indented) serialization.
     pub fn to_string_pretty(&self) -> String {
-        let mut s = String::new();
-        write_value(self, &mut s, Some(2), 0);
-        s
+        let mut buf = Vec::new();
+        self.write_pretty(&mut buf).expect("write to Vec cannot fail");
+        String::from_utf8(buf).expect("writer emits valid utf-8")
     }
 }
 
@@ -336,11 +385,21 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Value, JsonError> {
+    fn value(&mut self, depth: usize) -> Result<Value, JsonError> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => {
+                if depth >= MAX_DEPTH {
+                    return Err(self.err("document exceeds maximum nesting depth"));
+                }
+                self.object(depth)
+            }
+            Some(b'[') => {
+                if depth >= MAX_DEPTH {
+                    return Err(self.err("document exceeds maximum nesting depth"));
+                }
+                self.array(depth)
+            }
             Some(b'"') => Ok(Value::Str(self.string()?)),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
@@ -359,9 +418,9 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Value, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Value, JsonError> {
         self.expect(b'{')?;
-        let mut pairs = Vec::new();
+        let mut pairs: Vec<(String, Value)> = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
@@ -370,9 +429,12 @@ impl<'a> Parser<'a> {
         loop {
             self.skip_ws();
             let key = self.string()?;
+            if pairs.iter().any(|(k, _)| *k == key) {
+                return Err(self.err(&format!("duplicate key `{key}`")));
+            }
             self.skip_ws();
             self.expect(b':')?;
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             pairs.push((key, val));
             self.skip_ws();
             match self.peek() {
@@ -386,7 +448,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Value, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Value, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -395,7 +457,7 @@ impl<'a> Parser<'a> {
             return Ok(Value::Arr(items));
         }
         loop {
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.pos += 1,
@@ -412,6 +474,9 @@ impl<'a> Parser<'a> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
+            if s.len() > MAX_STRING_LEN {
+                return Err(self.err("string exceeds maximum length"));
+            }
             match self.peek() {
                 None => return Err(self.err("unterminated string")),
                 Some(b'"') => {
@@ -467,6 +532,9 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
+        if self.pos - start > MAX_NUMBER_LEN {
+            return Err(self.err("number exceeds maximum length"));
+        }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Value::Num)
@@ -476,84 +544,113 @@ impl<'a> Parser<'a> {
 
 // ---- writer ----------------------------------------------------------------
 
-fn escape_into(s: &str, out: &mut String) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
+/// Write `s` as a quoted, escaped JSON string directly into an
+/// [`io::Write`] sink — the allocation-free building block composite
+/// writers (streaming QONNX export) use alongside [`Value::write_compact`].
+pub fn write_escaped_str<W: io::Write>(out: &mut W, s: &str) -> io::Result<()> {
+    out.write_all(b"\"")?;
+    let bytes = s.as_bytes();
+    let mut clean_from = 0;
+    for (i, &b) in bytes.iter().enumerate() {
+        let esc: Option<&[u8]> = match b {
+            b'"' => Some(b"\\\""),
+            b'\\' => Some(b"\\\\"),
+            b'\n' => Some(b"\\n"),
+            b'\t' => Some(b"\\t"),
+            b'\r' => Some(b"\\r"),
+            b if b < 0x20 => None, // \u escape rendered below
+            _ => continue,         // clean byte (incl. UTF-8 continuations)
+        };
+        out.write_all(&bytes[clean_from..i])?;
+        match esc {
+            Some(e) => out.write_all(e)?,
+            None => write!(out, "\\u{b:04x}")?,
         }
+        clean_from = i + 1;
     }
-    out.push('"');
+    out.write_all(&bytes[clean_from..])?;
+    out.write_all(b"\"")
 }
 
-fn write_num(n: f64, out: &mut String) {
+/// Write a number the way the serializer prints `Value::Num`: integers in
+/// the exact-`i64` window render without a decimal point, everything else
+/// in shortest-round-trip `f64` form.
+pub fn write_num<W: io::Write>(out: &mut W, n: f64) -> io::Result<()> {
     if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
-        out.push_str(&format!("{}", n as i64));
+        write!(out, "{}", n as i64)
     } else {
-        out.push_str(&format!("{n}"));
+        write!(out, "{n}")
     }
 }
 
-fn write_value(v: &Value, out: &mut String, indent: Option<usize>, depth: usize) {
+fn write_indent<W: io::Write>(out: &mut W, n: usize) -> io::Result<()> {
+    const PAD: [u8; 64] = [b' '; 64];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(PAD.len());
+        out.write_all(&PAD[..take])?;
+        left -= take;
+    }
+    Ok(())
+}
+
+fn write_value<W: io::Write>(
+    v: &Value,
+    out: &mut W,
+    indent: Option<usize>,
+    depth: usize,
+) -> io::Result<()> {
     match v {
-        Value::Null => out.push_str("null"),
-        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-        Value::Num(n) => write_num(*n, out),
-        Value::Str(s) => escape_into(s, out),
+        Value::Null => out.write_all(b"null"),
+        Value::Bool(b) => out.write_all(if *b { b"true" } else { b"false" }),
+        Value::Num(n) => write_num(out, *n),
+        Value::Str(s) => write_escaped_str(out, s),
         Value::Arr(items) => {
             if items.is_empty() {
-                out.push_str("[]");
-                return;
+                return out.write_all(b"[]");
             }
-            out.push('[');
+            out.write_all(b"[")?;
             for (i, item) in items.iter().enumerate() {
                 if i > 0 {
-                    out.push(',');
+                    out.write_all(b",")?;
                 }
                 if let Some(w) = indent {
-                    out.push('\n');
-                    out.push_str(&" ".repeat(w * (depth + 1)));
+                    out.write_all(b"\n")?;
+                    write_indent(out, w * (depth + 1))?;
                 }
-                write_value(item, out, indent, depth + 1);
+                write_value(item, out, indent, depth + 1)?;
             }
             if let Some(w) = indent {
-                out.push('\n');
-                out.push_str(&" ".repeat(w * depth));
+                out.write_all(b"\n")?;
+                write_indent(out, w * depth)?;
             }
-            out.push(']');
+            out.write_all(b"]")
         }
         Value::Obj(pairs) => {
             if pairs.is_empty() {
-                out.push_str("{}");
-                return;
+                return out.write_all(b"{}");
             }
-            out.push('{');
+            out.write_all(b"{")?;
             for (i, (k, val)) in pairs.iter().enumerate() {
                 if i > 0 {
-                    out.push(',');
+                    out.write_all(b",")?;
                 }
                 if let Some(w) = indent {
-                    out.push('\n');
-                    out.push_str(&" ".repeat(w * (depth + 1)));
+                    out.write_all(b"\n")?;
+                    write_indent(out, w * (depth + 1))?;
                 }
-                escape_into(k, out);
-                out.push(':');
+                write_escaped_str(out, k)?;
+                out.write_all(b":")?;
                 if indent.is_some() {
-                    out.push(' ');
+                    out.write_all(b" ")?;
                 }
-                write_value(val, out, indent, depth + 1);
+                write_value(val, out, indent, depth + 1)?;
             }
             if let Some(w) = indent {
-                out.push('\n');
-                out.push_str(&" ".repeat(w * depth));
+                out.write_all(b"\n")?;
+                write_indent(out, w * depth)?;
             }
-            out.push('}');
+            out.write_all(b"}")
         }
     }
 }
@@ -639,6 +736,61 @@ mod tests {
         v.set("a", 2u64);
         assert_eq!(v.u64_field("a"), Some(2));
         assert_eq!(v.as_obj().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn depth_bomb_rejected_without_stack_overflow() {
+        // regression: the recursive DOM parser used to have no depth limit,
+        // so a 10k-deep array posted to the server could blow the stack
+        let text = format!("{}1{}", "[".repeat(10_000), "]".repeat(10_000));
+        let err = Value::parse(&text).unwrap_err();
+        assert!(err.msg.contains("nesting depth"), "{}", err.msg);
+    }
+
+    #[test]
+    fn max_depth_boundary_is_exact() {
+        // exactly MAX_DEPTH nested containers parse; one more errors
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Value::parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Value::parse(&over).is_err());
+    }
+
+    #[test]
+    fn overlong_number_rejected() {
+        let text = format!("[1{}]", "0".repeat(MAX_NUMBER_LEN + 8));
+        let err = Value::parse(&text).unwrap_err();
+        assert!(err.msg.contains("number"), "{}", err.msg);
+    }
+
+    #[test]
+    fn overlong_string_rejected() {
+        let text = format!("\"{}\"", "x".repeat(MAX_STRING_LEN + 8));
+        let err = Value::parse(&text).unwrap_err();
+        assert!(err.msg.contains("string"), "{}", err.msg);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = Value::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate"), "{}", err.msg);
+        // nested objects are checked too
+        assert!(Value::parse(r#"{"o": {"k": 1, "k": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn write_compact_streams_identically() {
+        let v = Value::obj()
+            .with("s", "tab\t nl\n unicode é")
+            .with("n", -2.5f64)
+            .with("arr", vec![1u64, 2, 3])
+            .with("empty", Value::obj());
+        let mut buf = Vec::new();
+        v.write_compact(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), v.to_string_compact());
+        let mut buf = Vec::new();
+        v.write_pretty(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), v.to_string_pretty());
     }
 
     #[test]

@@ -1,0 +1,802 @@
+//! Zero-allocation, non-recursive JSON pull-parser.
+//!
+//! The DOM parser in [`super`] materializes the whole document as a
+//! [`Value`] tree — fine for config files and server payloads, a wall for
+//! production-size QONNX documents whose initializer payloads run to
+//! hundreds of MB. This module provides the streaming alternative: an
+//! event stream over a caller-provided `&[u8]` window.
+//!
+//! Design (after the picojson idiom):
+//!
+//! * **Non-recursive.** Nesting is tracked by a fixed-size bitstack — one
+//!   bit per level (`1` = object, `0` = array) — so hostile depth cannot
+//!   touch the call stack. Depth is capped at [`MAX_DEPTH`], the same
+//!   limit the DOM parser enforces.
+//! * **Zero per-token allocation.** String events borrow directly from
+//!   the input window; only strings that actually contain escapes are
+//!   unescaped into a single reusable scratch buffer. Numbers, literals,
+//!   and structural events never allocate.
+//! * **Skippable values.** [`PullParser::skip_value`] fast-forwards over
+//!   the next value without unescaping or UTF-8-validating its interior
+//!   and returns the raw [`ByteSpan`] — the mechanism behind lazy
+//!   initializer extraction in `graph::qonnx_stream`.
+//!
+//! Both parsers accept exactly the same documents: identical grammar
+//! quirks, identical limits ([`MAX_DEPTH`], [`MAX_NUMBER_LEN`],
+//! [`MAX_STRING_LEN`]), and [`read_value`] reconstructs a [`Value`]
+//! bit-identical to [`Value::parse`] (property-tested in
+//! `tests/qonnx_stream.rs`).
+
+use super::{JsonError, Value, MAX_DEPTH, MAX_NUMBER_LEN, MAX_STRING_LEN};
+
+/// A half-open byte range `[start, end)` into the parsed input, as
+/// recorded by [`PullParser::skip_value`]. Spans are stable identifiers
+/// for lazily-extracted regions: re-parsing `&bytes[span.start..span.end]`
+/// yields exactly the skipped value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ByteSpan {
+    /// Offset of the first byte of the value (after leading whitespace).
+    pub start: usize,
+    /// Offset one past the last byte of the value.
+    pub end: usize,
+}
+
+impl ByteSpan {
+    /// Length of the span in bytes.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the span is empty (never produced by a successful skip).
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// One parse event. Borrowed string events (`Key`, `Str`) point either
+/// into the input window or into the parser's scratch buffer and are valid
+/// until the next call on the parser.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'p> {
+    /// `{` — an object opens.
+    BeginObject,
+    /// `}` — the innermost object closes.
+    EndObject,
+    /// `[` — an array opens.
+    BeginArray,
+    /// `]` — the innermost array closes.
+    EndArray,
+    /// An object key (the `:` is consumed with it; a value event follows).
+    Key(&'p str),
+    /// A string value.
+    Str(&'p str),
+    /// A number value.
+    Num(f64),
+    /// A boolean value.
+    Bool(bool),
+    /// A `null` value.
+    Null,
+    /// The root value is complete and only trailing whitespace remained.
+    End,
+}
+
+/// Fixed-size container-kind stack: one bit per nesting level.
+struct BitStack {
+    words: [u64; MAX_DEPTH.div_ceil(64)],
+    depth: usize,
+}
+
+impl BitStack {
+    fn new() -> BitStack {
+        BitStack {
+            words: [0; MAX_DEPTH.div_ceil(64)],
+            depth: 0,
+        }
+    }
+
+    /// Push a level; returns false when [`MAX_DEPTH`] is exceeded.
+    fn push(&mut self, is_object: bool) -> bool {
+        if self.depth >= MAX_DEPTH {
+            return false;
+        }
+        let (w, b) = (self.depth / 64, self.depth % 64);
+        if is_object {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+        self.depth += 1;
+        true
+    }
+
+    fn pop(&mut self) {
+        debug_assert!(self.depth > 0);
+        self.depth -= 1;
+    }
+
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Kind of the innermost open container. Callers guarantee depth > 0.
+    fn top_is_object(&self) -> bool {
+        let d = self.depth - 1;
+        (self.words[d / 64] >> (d % 64)) & 1 == 1
+    }
+}
+
+/// Where the parser is in the grammar.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// A value is required (root, after `:`, after `,` in an array).
+    Value,
+    /// A value or `]` (immediately after `[`).
+    ValueOrEnd,
+    /// A key or `}` (immediately after `{`).
+    FirstKey,
+    /// A key is required (after `,` in an object).
+    Key,
+    /// `,` or the closing bracket of the current container.
+    CommaOrEnd,
+    /// The root value is complete; only trailing whitespace is legal.
+    Done,
+    /// [`Event::End`] has been emitted; further calls keep returning it.
+    Ended,
+}
+
+/// Internal string result: indices into the input, or "use the scratch
+/// buffer" — carried instead of `&str` so the tokenizer can keep mutating
+/// the parser before the event is materialized.
+#[derive(Debug, Clone, Copy)]
+enum StrRef {
+    Bytes(usize, usize),
+    Scratch,
+}
+
+/// Internal token — `Event` with unresolved string references.
+enum Tok {
+    BeginObject,
+    EndObject,
+    BeginArray,
+    EndArray,
+    Key(StrRef),
+    Str(StrRef),
+    Num(f64),
+    Bool(bool),
+    Null,
+    End,
+}
+
+/// Streaming JSON parser over a byte window. See the module docs for the
+/// allocation and depth guarantees.
+///
+/// ```
+/// use aladin::util::json::pull::{Event, PullParser};
+///
+/// let mut p = PullParser::new(br#"{"n": [1, 2]}"#);
+/// assert_eq!(p.next_event().unwrap(), Event::BeginObject);
+/// assert_eq!(p.next_event().unwrap(), Event::Key("n"));
+/// assert_eq!(p.next_event().unwrap(), Event::BeginArray);
+/// assert_eq!(p.next_event().unwrap(), Event::Num(1.0));
+/// assert_eq!(p.next_event().unwrap(), Event::Num(2.0));
+/// assert_eq!(p.next_event().unwrap(), Event::EndArray);
+/// assert_eq!(p.next_event().unwrap(), Event::EndObject);
+/// assert_eq!(p.next_event().unwrap(), Event::End);
+/// ```
+pub struct PullParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    stack: BitStack,
+    state: State,
+    scratch: String,
+}
+
+impl<'a> PullParser<'a> {
+    /// Start parsing `bytes` as one JSON document.
+    pub fn new(bytes: &'a [u8]) -> PullParser<'a> {
+        PullParser {
+            bytes,
+            pos: 0,
+            stack: BitStack::new(),
+            state: State::Value,
+            scratch: String::new(),
+        }
+    }
+
+    /// Current byte offset (for error reporting and span bookkeeping).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Current container nesting depth.
+    pub fn depth(&self) -> usize {
+        self.stack.depth()
+    }
+
+    /// Produce the next event. After [`Event::End`] further calls keep
+    /// returning `End`.
+    pub fn next_event(&mut self) -> Result<Event<'_>, JsonError> {
+        let tok = self.token(true)?;
+        Ok(match tok {
+            Tok::BeginObject => Event::BeginObject,
+            Tok::EndObject => Event::EndObject,
+            Tok::BeginArray => Event::BeginArray,
+            Tok::EndArray => Event::EndArray,
+            Tok::Num(n) => Event::Num(n),
+            Tok::Bool(b) => Event::Bool(b),
+            Tok::Null => Event::Null,
+            Tok::End => Event::End,
+            Tok::Key(r) => Event::Key(self.resolve(r)?),
+            Tok::Str(r) => Event::Str(self.resolve(r)?),
+        })
+    }
+
+    /// Fast-forward over the next value (must be called where a value is
+    /// expected, i.e. right after a [`Event::Key`]) and return its raw
+    /// byte span. The interior is validated structurally — matched
+    /// brackets, legal escapes, in-range numbers — but strings are neither
+    /// unescaped nor UTF-8-validated, which is what makes skipping
+    /// initializer payloads cheap.
+    pub fn skip_value(&mut self) -> Result<ByteSpan, JsonError> {
+        if self.state != State::Value {
+            return Err(self.err("skip_value called outside a value position"));
+        }
+        self.skip_ws();
+        let start = self.pos;
+        let base = self.stack.depth();
+        loop {
+            match self.token(false)? {
+                Tok::BeginObject | Tok::BeginArray | Tok::Key(_) => {}
+                Tok::EndObject | Tok::EndArray | Tok::Num(_) | Tok::Str(_) | Tok::Bool(_)
+                | Tok::Null => {
+                    if self.stack.depth() == base {
+                        break;
+                    }
+                }
+                Tok::End => return Err(self.err("unexpected end of input")),
+            }
+        }
+        Ok(ByteSpan {
+            start,
+            end: self.pos,
+        })
+    }
+
+    // ---- tokenizer ---------------------------------------------------------
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError {
+            pos: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Core state machine. `materialize` controls whether strings are
+    /// unescaped/validated (event path) or merely scanned (skip path).
+    fn token(&mut self, materialize: bool) -> Result<Tok, JsonError> {
+        loop {
+            self.skip_ws();
+            match self.state {
+                State::Done | State::Ended => {
+                    if self.pos != self.bytes.len() {
+                        return Err(self.err("trailing characters"));
+                    }
+                    self.state = State::Ended;
+                    return Ok(Tok::End);
+                }
+                State::FirstKey | State::Key => {
+                    if self.state == State::FirstKey && self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        return Ok(self.close(true));
+                    }
+                    if self.peek() != Some(b'"') {
+                        return Err(self.err("expected object key"));
+                    }
+                    let sref = self.scan_string(materialize)?;
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(self.err("expected `:`"));
+                    }
+                    self.pos += 1;
+                    self.state = State::Value;
+                    return Ok(Tok::Key(sref));
+                }
+                State::Value | State::ValueOrEnd => {
+                    if self.state == State::ValueOrEnd && self.peek() == Some(b']') {
+                        self.pos += 1;
+                        return Ok(self.close(false));
+                    }
+                    return self.value_token(materialize);
+                }
+                State::CommaOrEnd => {
+                    let in_object = self.stack.top_is_object();
+                    match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                            self.state = if in_object { State::Key } else { State::Value };
+                            // a comma is not an event: loop for the next token
+                        }
+                        Some(b'}') if in_object => {
+                            self.pos += 1;
+                            return Ok(self.close(true));
+                        }
+                        Some(b']') if !in_object => {
+                            self.pos += 1;
+                            return Ok(self.close(false));
+                        }
+                        _ => {
+                            return Err(self.err(if in_object {
+                                "expected `,` or `}`"
+                            } else {
+                                "expected `,` or `]`"
+                            }));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pop the container whose closing bracket was just consumed. The
+    /// caller's state guarantees the top-of-stack kind matches `object`.
+    fn close(&mut self, object: bool) -> Tok {
+        self.stack.pop();
+        self.state = if self.stack.depth() == 0 {
+            State::Done
+        } else {
+            State::CommaOrEnd
+        };
+        if object {
+            Tok::EndObject
+        } else {
+            Tok::EndArray
+        }
+    }
+
+    fn after_scalar(&mut self) {
+        self.state = if self.stack.depth() == 0 {
+            State::Done
+        } else {
+            State::CommaOrEnd
+        };
+    }
+
+    fn value_token(&mut self, materialize: bool) -> Result<Tok, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                if !self.stack.push(true) {
+                    return Err(self.err("document exceeds maximum nesting depth"));
+                }
+                self.pos += 1;
+                self.state = State::FirstKey;
+                Ok(Tok::BeginObject)
+            }
+            Some(b'[') => {
+                if !self.stack.push(false) {
+                    return Err(self.err("document exceeds maximum nesting depth"));
+                }
+                self.pos += 1;
+                self.state = State::ValueOrEnd;
+                Ok(Tok::BeginArray)
+            }
+            Some(b'"') => {
+                let sref = self.scan_string(materialize)?;
+                self.after_scalar();
+                Ok(Tok::Str(sref))
+            }
+            Some(b't') => {
+                self.lit(b"true")?;
+                self.after_scalar();
+                Ok(Tok::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit(b"false")?;
+                self.after_scalar();
+                Ok(Tok::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit(b"null")?;
+                self.after_scalar();
+                Ok(Tok::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_scalar();
+                Ok(Tok::Num(n))
+            }
+            None => Err(self.err("unexpected end of input")),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn lit(&mut self, word: &[u8]) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    /// Number scan — byte-for-byte the DOM parser's greedy loop, so both
+    /// paths accept and reject exactly the same spellings.
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        if self.pos - start > MAX_NUMBER_LEN {
+            return Err(self.err("number exceeds maximum length"));
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+
+    /// Scan a string. Escape-free strings resolve to a borrowed input
+    /// slice; strings with escapes are unescaped into the scratch buffer
+    /// (only when `materialize` — the skip path just validates escapes
+    /// structurally and moves on).
+    fn scan_string(&mut self, materialize: bool) -> Result<StrRef, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let start = self.pos;
+        let mut i = start;
+        while i < self.bytes.len() {
+            let b = self.bytes[i];
+            if b == b'"' {
+                if i - start > MAX_STRING_LEN {
+                    self.pos = i;
+                    return Err(self.err("string exceeds maximum length"));
+                }
+                self.pos = i + 1;
+                return Ok(StrRef::Bytes(start, i));
+            }
+            if b == b'\\' {
+                break;
+            }
+            i += 1;
+        }
+        if i >= self.bytes.len() {
+            self.pos = i;
+            return Err(self.err("unterminated string"));
+        }
+        // escape found: switch to the scratch (unescape) path
+        self.scratch.clear();
+        if materialize {
+            let prefix = std::str::from_utf8(&self.bytes[start..i]).map_err(|_| JsonError {
+                pos: start,
+                msg: "invalid utf-8".to_string(),
+            })?;
+            self.scratch.push_str(prefix);
+        }
+        self.pos = i;
+        loop {
+            if self.scratch.len() > MAX_STRING_LEN {
+                return Err(self.err("string exceeds maximum length"));
+            }
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(StrRef::Scratch);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let c = match self.peek() {
+                        Some(b'"') => '"',
+                        Some(b'\\') => '\\',
+                        Some(b'/') => '/',
+                        Some(b'n') => '\n',
+                        Some(b't') => '\t',
+                        Some(b'r') => '\r',
+                        Some(b'b') => '\u{8}',
+                        Some(b'f') => '\u{c}',
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.bytes.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            char::from_u32(code).unwrap_or('\u{fffd}')
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    };
+                    if materialize {
+                        self.scratch.push(c);
+                    }
+                    self.pos += 1;
+                }
+                Some(b) => {
+                    if !materialize {
+                        // raw skip: UTF-8 continuation bytes can never be
+                        // `"` or `\`, so byte-at-a-time is structurally safe
+                        self.pos += 1;
+                    } else if b < 0x80 {
+                        self.scratch.push(b as char);
+                        self.pos += 1;
+                    } else {
+                        let len = match b {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            0xF0..=0xF7 => 4,
+                            _ => return Err(self.err("invalid utf-8")),
+                        };
+                        if self.pos + len > self.bytes.len() {
+                            return Err(self.err("invalid utf-8"));
+                        }
+                        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + len])
+                            .map_err(|_| self.err("invalid utf-8"))?;
+                        self.scratch.push_str(s);
+                        self.pos += len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn resolve(&self, r: StrRef) -> Result<&str, JsonError> {
+        match r {
+            StrRef::Bytes(start, end) => {
+                std::str::from_utf8(&self.bytes[start..end]).map_err(|_| JsonError {
+                    pos: start,
+                    msg: "invalid utf-8".to_string(),
+                })
+            }
+            StrRef::Scratch => Ok(&self.scratch),
+        }
+    }
+}
+
+/// Build the next complete value from the event stream as a DOM
+/// [`Value`] — non-recursively, with an explicit frame stack. Duplicate
+/// object keys are rejected exactly like [`Value::parse`]. Used for the
+/// "small island in a big document" cases (QONNX node attributes) and for
+/// the differential tests proving pull/DOM equivalence.
+pub fn read_value(p: &mut PullParser<'_>) -> Result<Value, JsonError> {
+    enum Frame {
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>, Option<String>),
+    }
+    let mut stack: Vec<Frame> = Vec::new();
+    loop {
+        let completed = match p.next_event()? {
+            Event::BeginObject => {
+                stack.push(Frame::Obj(Vec::new(), None));
+                None
+            }
+            Event::BeginArray => {
+                stack.push(Frame::Arr(Vec::new()));
+                None
+            }
+            Event::Key(k) => {
+                let key = k.to_string();
+                match stack.last_mut() {
+                    Some(Frame::Obj(pairs, slot)) => {
+                        if pairs.iter().any(|(ek, _)| *ek == key) {
+                            return Err(JsonError {
+                                pos: p.pos(),
+                                msg: format!("duplicate key `{key}`"),
+                            });
+                        }
+                        *slot = Some(key);
+                    }
+                    _ => {
+                        return Err(JsonError {
+                            pos: p.pos(),
+                            msg: "key outside object".to_string(),
+                        })
+                    }
+                }
+                None
+            }
+            Event::EndObject => match stack.pop() {
+                Some(Frame::Obj(pairs, _)) => Some(Value::Obj(pairs)),
+                _ => {
+                    return Err(JsonError {
+                        pos: p.pos(),
+                        msg: "mismatched `}`".to_string(),
+                    })
+                }
+            },
+            Event::EndArray => match stack.pop() {
+                Some(Frame::Arr(items)) => Some(Value::Arr(items)),
+                _ => {
+                    return Err(JsonError {
+                        pos: p.pos(),
+                        msg: "mismatched `]`".to_string(),
+                    })
+                }
+            },
+            Event::Str(s) => Some(Value::Str(s.to_string())),
+            Event::Num(n) => Some(Value::Num(n)),
+            Event::Bool(b) => Some(Value::Bool(b)),
+            Event::Null => Some(Value::Null),
+            Event::End => {
+                return Err(JsonError {
+                    pos: p.pos(),
+                    msg: "unexpected end of input".to_string(),
+                })
+            }
+        };
+        if let Some(v) = completed {
+            match stack.last_mut() {
+                None => return Ok(v),
+                Some(Frame::Arr(items)) => items.push(v),
+                Some(Frame::Obj(pairs, slot)) => match slot.take() {
+                    Some(k) => pairs.push((k, v)),
+                    None => {
+                        return Err(JsonError {
+                            pos: p.pos(),
+                            msg: "value without key".to_string(),
+                        })
+                    }
+                },
+            }
+        }
+    }
+}
+
+/// Parse one complete JSON document from a byte window into a DOM
+/// [`Value`] via the pull parser — semantically interchangeable with
+/// [`Value::parse`], used to decode lazily-recorded spans and in the
+/// differential test suite.
+pub fn to_value(bytes: &[u8]) -> Result<Value, JsonError> {
+    let mut p = PullParser::new(bytes);
+    let v = read_value(&mut p)?;
+    match p.next_event()? {
+        Event::End => Ok(v),
+        _ => Err(JsonError {
+            pos: p.pos(),
+            msg: "trailing characters".to_string(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(text: &str) -> Vec<String> {
+        let mut p = PullParser::new(text.as_bytes());
+        let mut out = Vec::new();
+        loop {
+            let ev = p.next_event().unwrap();
+            let done = ev == Event::End;
+            out.push(format!("{ev:?}"));
+            if done {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_roots() {
+        assert_eq!(events("true"), ["Bool(true)", "End"]);
+        assert_eq!(events(" null "), ["Null", "End"]);
+        assert_eq!(events("-2.5e1"), ["Num(-25.0)", "End"]);
+        assert_eq!(events("\"a\""), ["Str(\"a\")", "End"]);
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(events("{}"), ["BeginObject", "EndObject", "End"]);
+        assert_eq!(events("[]"), ["BeginArray", "EndArray", "End"]);
+        assert_eq!(
+            events("[{}]"),
+            ["BeginArray", "BeginObject", "EndObject", "EndArray", "End"]
+        );
+    }
+
+    #[test]
+    fn object_stream() {
+        assert_eq!(
+            events(r#"{"a": 1, "b": [true, "x"]}"#),
+            [
+                "BeginObject",
+                "Key(\"a\")",
+                "Num(1.0)",
+                "Key(\"b\")",
+                "BeginArray",
+                "Bool(true)",
+                "Str(\"x\")",
+                "EndArray",
+                "EndObject",
+                "End"
+            ]
+        );
+    }
+
+    #[test]
+    fn escaped_strings_unescape_into_scratch() {
+        let text = r#""a\néb""#;
+        let mut p = PullParser::new(text.as_bytes());
+        assert_eq!(p.next_event().unwrap(), Event::Str("a\néb"));
+    }
+
+    #[test]
+    fn end_is_idempotent() {
+        let mut p = PullParser::new(b"1");
+        assert_eq!(p.next_event().unwrap(), Event::Num(1.0));
+        assert_eq!(p.next_event().unwrap(), Event::End);
+        assert_eq!(p.next_event().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn depth_bomb_rejected() {
+        let text = format!("{}1{}", "[".repeat(10_000), "]".repeat(10_000));
+        let mut p = PullParser::new(text.as_bytes());
+        let err = loop {
+            match p.next_event() {
+                Ok(Event::End) => panic!("depth bomb accepted"),
+                Ok(_) => {}
+                Err(e) => break e,
+            }
+        };
+        assert!(err.msg.contains("nesting depth"), "{}", err.msg);
+    }
+
+    #[test]
+    fn truncated_inputs_error_not_panic() {
+        let doc = r#"{"a": [1, {"b": "cA"}], "d": -1.5e3}"#;
+        for cut in 0..doc.len() {
+            let res = to_value(doc[..cut].as_bytes());
+            assert!(res.is_err(), "accepted truncated prefix of len {cut}");
+        }
+        assert!(to_value(doc.as_bytes()).is_ok());
+    }
+
+    #[test]
+    fn skip_value_spans_are_exact() {
+        let doc = br#"{"keep": 1, "skip": [10, {"x": "\" ]"}, [2]], "tail": true}"#;
+        let mut p = PullParser::new(doc);
+        assert_eq!(p.next_event().unwrap(), Event::BeginObject);
+        assert_eq!(p.next_event().unwrap(), Event::Key("keep"));
+        assert_eq!(p.next_event().unwrap(), Event::Num(1.0));
+        assert_eq!(p.next_event().unwrap(), Event::Key("skip"));
+        let span = p.skip_value().unwrap();
+        let skipped = &doc[span.start..span.end];
+        assert_eq!(skipped[0], b'[');
+        assert_eq!(skipped[skipped.len() - 1], b']');
+        // the recorded span re-parses to exactly the skipped value
+        let v = to_value(skipped).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 3);
+        // and the stream continues seamlessly after the skip
+        assert_eq!(p.next_event().unwrap(), Event::Key("tail"));
+        assert_eq!(p.next_event().unwrap(), Event::Bool(true));
+        assert_eq!(p.next_event().unwrap(), Event::EndObject);
+        assert_eq!(p.next_event().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn read_value_matches_dom_parser() {
+        let doc = r#"{"s": "q\"\\\n€", "n": [0.5, -3e-2, 9007199254740991], "b": {"t": true, "f": false, "z": null}}"#;
+        let dom = Value::parse(doc).unwrap();
+        let pulled = to_value(doc.as_bytes()).unwrap();
+        assert_eq!(dom, pulled);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_like_dom() {
+        let doc = r#"{"k": 1, "k": 2}"#;
+        assert!(Value::parse(doc).is_err());
+        assert!(to_value(doc.as_bytes()).is_err());
+    }
+}

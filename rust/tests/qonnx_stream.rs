@@ -1,0 +1,355 @@
+//! Differential tests holding the two JSON front-ends bit-identical: the
+//! DOM parser (`Value::parse`) and the streaming pull parser
+//! (`util::json::pull`), plus the QONNX decoders built on each
+//! (`QonnxModel::from_json` vs `graph::qonnx_stream`).
+//!
+//! Three suites:
+//! - random JSON documents (escapes, unicode, exponents, deep nesting)
+//!   must produce identical `Value` trees and identical re-serializations
+//!   on both paths;
+//! - random QONNX-dialect documents must decode to equal models across
+//!   the DOM path and every streaming [`DataPolicy`];
+//! - a malformed corpus (truncations, bad escapes, depth bombs, duplicate
+//!   keys, overlong numbers, bad payloads) must error — never panic — on
+//!   both paths.
+
+use aladin::graph::qonnx::{QonnxModel, QonnxNode, QonnxTensor, TensorData};
+use aladin::graph::qonnx_stream::{self, DataPolicy};
+use aladin::util::json::{pull, Value};
+use aladin::util::prng::{check_property, Prng};
+use std::collections::HashMap;
+
+// ---- random document generators ---------------------------------------------
+
+/// Random string stressing the escape and unicode paths: quotes,
+/// backslashes, control characters, multi-byte code points.
+fn random_string(rng: &mut Prng) -> String {
+    let len = rng.range(0, 12);
+    let mut s = String::new();
+    for _ in 0..len {
+        match rng.range(0, 9) {
+            0 => s.push('"'),
+            1 => s.push('\\'),
+            2 => s.push('\n'),
+            3 => s.push('\t'),
+            4 => s.push('\u{1}'),
+            5 => s.push('é'),
+            6 => s.push('\u{1F600}'),
+            _ => s.push(char::from(b'a' + rng.range(0, 25) as u8)),
+        }
+    }
+    s
+}
+
+/// Random number whose decimal round-trip is exact: integers, dyadic
+/// fractions, and power-of-two exponent scalings.
+fn random_num(rng: &mut Prng) -> f64 {
+    match rng.range(0, 3) {
+        0 => rng.range_i64(-1_000_000, 1_000_000) as f64,
+        1 => rng.range_i64(-4096, 4096) as f64 / 8.0,
+        2 => rng.range_i64(-100, 100) as f64 * 1e6,
+        _ => rng.range_i64(0, 1) as f64 * 0.5,
+    }
+}
+
+fn random_value(rng: &mut Prng, depth: usize) -> Value {
+    let scalar = depth == 0 || rng.chance(0.4);
+    if scalar {
+        match rng.range(0, 3) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Num(random_num(rng)),
+            _ => Value::Str(random_string(rng)),
+        }
+    } else if rng.chance(0.5) {
+        let n = rng.range(0, 4);
+        Value::Arr((0..n).map(|_| random_value(rng, depth - 1)).collect())
+    } else {
+        let n = rng.range(0, 4);
+        Value::Obj(
+            (0..n)
+                // index prefix keeps keys unique (both parsers reject dups)
+                .map(|i| (format!("k{i}_{}", random_string(rng)), random_value(rng, depth - 1)))
+                .collect(),
+        )
+    }
+}
+
+/// Random QONNX-dialect model. Op names and wiring are arbitrary — the
+/// decoders under test do not validate graph semantics, only document
+/// structure.
+fn random_model(rng: &mut Prng) -> QonnxModel {
+    let nt = rng.range(1, 4);
+    let tensors: Vec<QonnxTensor> = (0..nt)
+        .map(|i| {
+            let dims: Vec<usize> = (0..rng.range(1, 3)).map(|_| rng.range(1, 4)).collect();
+            let data = if rng.chance(0.5) {
+                let n: usize = dims.iter().product();
+                Some(TensorData::Inline(
+                    (0..n).map(|_| rng.range_i64(-128, 127)).collect(),
+                ))
+            } else {
+                None
+            };
+            QonnxTensor {
+                name: format!("t{i}_{}", random_string(rng)),
+                dims,
+                bits: *rng.choice(&[2u8, 4, 8, 16]),
+                signed: rng.chance(0.8),
+                initializer: rng.chance(0.5),
+                data,
+            }
+        })
+        .collect();
+    let nn = rng.range(0, 3);
+    let nodes: Vec<QonnxNode> = (0..nn)
+        .map(|i| {
+            let mut attributes = HashMap::new();
+            for a in 0..rng.range(0, 3) {
+                attributes.insert(format!("a{a}_{}", random_string(rng)), random_value(rng, 2));
+            }
+            QonnxNode {
+                name: format!("n{i}_{}", random_string(rng)),
+                op_type: rng.choice(&["Conv", "Relu", "Quant", "Custom"]).to_string(),
+                inputs: vec![tensors[rng.range(0, nt - 1)].name.clone()],
+                outputs: vec![tensors[rng.range(0, nt - 1)].name.clone()],
+                attributes,
+            }
+        })
+        .collect();
+    QonnxModel {
+        name: random_string(rng),
+        graph_inputs: vec![tensors[0].name.clone()],
+        graph_outputs: vec![tensors[nt - 1].name.clone()],
+        tensors,
+        nodes,
+    }
+}
+
+// ---- suite 1: DOM vs pull over random JSON ------------------------------------
+
+#[test]
+fn pull_and_dom_agree_on_random_documents() {
+    check_property("pull_vs_dom_random_json", 300, |rng| {
+        let v = random_value(rng, 4);
+        let text = if rng.chance(0.5) {
+            v.to_string_pretty()
+        } else {
+            v.to_string_compact()
+        };
+        let dom = Value::parse(&text).expect("DOM reparse");
+        let streamed = pull::to_value(text.as_bytes()).expect("pull reparse");
+        assert_eq!(dom, streamed, "value trees diverged for {text}");
+        assert_eq!(
+            dom.to_string_compact(),
+            streamed.to_string_compact(),
+            "re-serializations diverged"
+        );
+        assert_eq!(dom, v, "round-trip lost information for {text}");
+    });
+}
+
+#[test]
+fn pull_and_dom_agree_on_exponent_and_escape_corpus() {
+    // raw text the in-memory generator cannot produce: exponent forms,
+    // \u escapes (incl. replacement-char fallbacks), mixed whitespace
+    let corpus = [
+        r#"[1e3, -2.5E-2, 0.125, 1.5e+2, -0e0, 123456789012345]"#,
+        r#"{"a": "Aé☃", "b": "\ud83d! \"q\""}"#,
+        "\t{ \"x\" :\n[ true,false , null ] }\r\n",
+        r#"["\\\\", "\/", "\b\f\n\r\t"]"#,
+        r#"[0.0001220703125, 9007199254740991, -9007199254740991]"#,
+    ];
+    for text in corpus {
+        let dom = Value::parse(text).expect("DOM parse");
+        let streamed = pull::to_value(text.as_bytes()).expect("pull parse");
+        assert_eq!(dom, streamed, "diverged on {text}");
+        assert_eq!(dom.to_string_compact(), streamed.to_string_compact());
+    }
+}
+
+// ---- suite 2: QONNX decoders over random models -------------------------------
+
+#[test]
+fn qonnx_decoders_agree_on_random_models() {
+    check_property("qonnx_dom_vs_stream", 200, |rng| {
+        let model = random_model(rng);
+        let text = model.to_json().unwrap().to_string_pretty();
+
+        // the streamed serializer must agree with the DOM serializer too
+        let mut streamed_text = Vec::new();
+        model.write_pretty(&mut streamed_text).unwrap();
+        assert_eq!(text.as_bytes(), &streamed_text[..], "serializers diverged");
+
+        let dom = QonnxModel::from_json(&Value::parse(&text).unwrap()).expect("DOM decode");
+        let eager =
+            qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Eager).expect("eager decode");
+        let lazy =
+            qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Lazy).expect("lazy decode");
+        assert_eq!(dom, model, "DOM round-trip changed the model");
+        assert_eq!(dom, eager, "eager stream diverged from DOM");
+        assert_eq!(dom, lazy, "lazy stream diverged from DOM");
+        for t in &lazy.tensors {
+            if let Some(d) = &t.data {
+                assert!(d.is_lazy(), "lazy policy produced inline data");
+            }
+        }
+
+        let skip =
+            qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Skip).expect("skip decode");
+        assert!(skip.tensors.iter().all(|t| t.data.is_none()));
+        assert_eq!(skip.nodes, dom.nodes);
+    });
+}
+
+#[test]
+fn unknown_keys_are_ignored_identically() {
+    check_property("qonnx_unknown_keys", 100, |rng| {
+        let model = random_model(rng);
+        let mut v = model.to_json().unwrap();
+        if let Value::Obj(fields) = &mut v {
+            fields.push(("x_doc_extra".into(), random_value(rng, 3)));
+            for (key, val) in fields.iter_mut() {
+                if key == "tensors" || key == "nodes" {
+                    if let Value::Arr(items) = val {
+                        for item in items.iter_mut() {
+                            if let Value::Obj(f) = item {
+                                f.push(("x_extra".into(), random_value(rng, 2)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let text = v.to_string_pretty();
+        let dom = QonnxModel::from_json(&Value::parse(&text).unwrap()).expect("DOM decode");
+        let eager =
+            qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Eager).expect("eager decode");
+        assert_eq!(dom, model);
+        assert_eq!(dom, eager);
+    });
+}
+
+// ---- suite 3: malformed corpus -------------------------------------------------
+
+/// Both front-ends must report an error (never panic) on `text`.
+fn assert_both_reject(text: &str, label: &str) {
+    let dom_ok = matches!(
+        Value::parse(text).map(|v| QonnxModel::from_json(&v)),
+        Ok(Ok(_))
+    );
+    assert!(!dom_ok, "DOM accepted {label}: {text:.120}");
+    for policy in [DataPolicy::Eager, DataPolicy::Lazy, DataPolicy::Skip] {
+        assert!(
+            qonnx_stream::from_slice(text.as_bytes(), policy).is_err(),
+            "stream ({policy:?}) accepted {label}: {text:.120}"
+        );
+    }
+}
+
+#[test]
+fn truncated_documents_error_on_both_paths() {
+    let model = QonnxModel {
+        name: "trunc \"x\"\n".into(),
+        graph_inputs: vec!["a".into()],
+        graph_outputs: vec!["a".into()],
+        tensors: vec![QonnxTensor {
+            name: "a".into(),
+            dims: vec![2, 2],
+            bits: 8,
+            signed: true,
+            initializer: true,
+            data: Some(TensorData::Inline(vec![1, -2, 3, -4])),
+        }],
+        nodes: vec![QonnxNode {
+            name: "n".into(),
+            op_type: "Relu".into(),
+            inputs: vec!["a".into()],
+            outputs: vec!["a".into()],
+            attributes: HashMap::new(),
+        }],
+    };
+    let text = model.to_json().unwrap().to_string_pretty();
+    // the full document parses on both paths
+    assert!(QonnxModel::from_json(&Value::parse(&text).unwrap()).is_ok());
+    assert!(qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Eager).is_ok());
+    // every strict prefix is malformed: both paths must error, never panic
+    for cut in 0..text.len() {
+        if !text.is_char_boundary(cut) {
+            continue;
+        }
+        assert_both_reject(&text[..cut], "truncation");
+    }
+}
+
+#[test]
+fn malformed_corpus_errors_on_both_paths() {
+    let depth_bomb = "[".repeat(10_000);
+    let overlong_number = format!("{{\"name\": {}}}", "1".repeat(65));
+    let cases: Vec<(&str, String)> = vec![
+        ("bad escape", r#"{"name": "a\qb"}"#.to_string()),
+        ("truncated \\u escape", r#"{"name": "\u12"}"#.to_string()),
+        ("invalid \\u digits", r#"{"name": "\uZZZZ"}"#.to_string()),
+        ("depth bomb", depth_bomb),
+        ("duplicate top-level key", r#"{"tensors": [], "tensors": []}"#.to_string()),
+        (
+            "duplicate tensor key",
+            r#"{"graph_inputs": [], "graph_outputs": [], "nodes": [],
+               "tensors": [{"name": "t", "name": "t", "dims": [1], "bits": 8}]}"#
+                .to_string(),
+        ),
+        ("overlong number", overlong_number),
+        (
+            "fractional payload",
+            r#"{"graph_inputs": [], "graph_outputs": [], "nodes": [],
+               "tensors": [{"name": "t", "dims": [1], "bits": 8, "data": [0.5]}]}"#
+                .to_string(),
+        ),
+        (
+            "payload length mismatch",
+            r#"{"graph_inputs": [], "graph_outputs": [], "nodes": [],
+               "tensors": [{"name": "t", "dims": [3], "bits": 8, "data": [1]}]}"#
+                .to_string(),
+        ),
+        (
+            "bits out of range",
+            r#"{"graph_inputs": [], "graph_outputs": [], "nodes": [],
+               "tensors": [{"name": "t", "dims": [1], "bits": 300}]}"#
+                .to_string(),
+        ),
+        ("non-object root", "[1, 2, 3]".to_string()),
+        ("trailing garbage", r#"{"graph_inputs": [], "graph_outputs": [], "tensors": [], "nodes": []} x"#.to_string()),
+        ("missing sections", r#"{"name": "only"}"#.to_string()),
+        ("mistyped nodes", r#"{"graph_inputs": [], "graph_outputs": [], "tensors": [], "nodes": [42]}"#.to_string()),
+    ];
+    for (label, text) in &cases {
+        assert_both_reject(text, label);
+    }
+}
+
+#[test]
+fn deep_attribute_nesting_errors_identically() {
+    // a depth bomb hiding inside a node attribute: both paths must reject
+    // it via the shared depth limit, not the process stack
+    let bomb = format!(
+        r#"{{"graph_inputs": [], "graph_outputs": [], "tensors": [],
+            "nodes": [{{"name": "n", "op_type": "Relu",
+                        "attributes": {{"deep": {}1{}}}}}]}}"#,
+        "[".repeat(5_000),
+        "]".repeat(5_000)
+    );
+    assert_both_reject(&bomb, "attribute depth bomb");
+}
+
+#[test]
+fn lazy_payload_errors_surface_on_decode() {
+    // structurally valid but semantically bad payload: lazy ingest accepts
+    // the document (validation deferred), the decode reports the error
+    let text = r#"{"graph_inputs": [], "graph_outputs": [], "nodes": [],
+                   "tensors": [{"name": "t", "dims": [2], "bits": 8,
+                                "data": ["oops", 1]}]}"#;
+    assert!(qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Eager).is_err());
+    let lazy = qonnx_stream::from_slice(text.as_bytes(), DataPolicy::Lazy).expect("lazy accepts");
+    let data = lazy.tensors[0].data.as_ref().expect("span recorded");
+    assert!(data.values().is_err(), "bad payload must fail on decode");
+}
